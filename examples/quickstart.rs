@@ -1,0 +1,50 @@
+//! Quickstart: sample one image with ParaTAA and verify it matches the
+//! sequential sampler (Remark 5.3), on either backend.
+//!
+//!   cargo run --release --example quickstart              # analytic GMM
+//!   cargo run --release --example quickstart -- dit       # trained DiT (needs `make artifacts`)
+
+use parataa::figures::common::{method_config, ModelChoice, Scenario};
+use parataa::metrics::{match_rmse, psnr};
+use parataa::model::Cond;
+use parataa::schedule::SamplerKind;
+use parataa::solver::{self, Method, Problem};
+
+fn main() {
+    let model = std::env::args()
+        .nth(1)
+        .map(|s| ModelChoice::parse(&s))
+        .unwrap_or(ModelChoice::Gmm);
+    let steps = 100;
+    let scenario = Scenario::new(model, SamplerKind::Ddim, steps);
+    let coeffs = scenario.coeffs();
+    println!("scenario: {} (guidance {})", scenario.label(), scenario.guidance);
+
+    let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(0), 42);
+
+    // Sequential baseline: 100 serial denoiser calls.
+    let t0 = std::time::Instant::now();
+    let seq = solver::sample_sequential(&problem, scenario.guidance);
+    let seq_time = t0.elapsed();
+
+    // ParaTAA: a handful of parallel rounds.
+    let cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+    let t0 = std::time::Instant::now();
+    let par = solver::solve(&problem, &cfg);
+    let par_time = t0.elapsed();
+
+    println!("sequential: {} steps in {seq_time:?}", seq.nfe);
+    println!(
+        "ParaTAA:    {} parallel rounds ({} NFE) in {par_time:?}  [{}x fewer steps]",
+        par.iterations,
+        par.total_nfe,
+        steps / par.iterations.max(1)
+    );
+    let rmse = match_rmse(par.xs.row(0), seq.xs.row(0));
+    println!("match: RMSE {rmse:.2e}, PSNR {:.1} dB — same image as sequential", psnr(par.xs.row(0), seq.xs.row(0)));
+    assert!(par.converged, "solver did not converge");
+    assert!(rmse < 0.05, "parallel/sequential mismatch too large");
+
+    parataa::util::image::write_pgm("results/quickstart.pgm", par.xs.row(0), 16, 16).unwrap();
+    println!("wrote results/quickstart.pgm");
+}

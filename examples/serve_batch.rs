@@ -1,0 +1,99 @@
+//! End-to-end serving driver (the DESIGN.md E2E validation run):
+//! boot the coordinator over the trained DiT-tiny PJRT artifact (falls back
+//! to the analytic GMM without artifacts), submit a mixed concurrent load,
+//! and report latency/throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//!   cargo run --release --example serve_batch -- [dit|gmm] [n_requests]
+
+use parataa::coordinator::{
+    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
+};
+use parataa::figures::common::{ModelChoice, Scenario};
+use parataa::model::Cond;
+use parataa::schedule::SamplerKind;
+use parataa::solver::Method;
+use parataa::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn main() {
+    let model = std::env::args()
+        .nth(1)
+        .map(|s| ModelChoice::parse(&s))
+        .unwrap_or(ModelChoice::Gmm);
+    let n_requests: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let steps = 50;
+    let scenario = Scenario::new(model, SamplerKind::Ddim, steps);
+    println!("serving {} requests on {}", n_requests, scenario.label());
+
+    // Stack: model -> dynamic batcher -> coordinator worker pool.
+    let batcher = Batcher::spawn(scenario.model.clone(), BatcherConfig::default());
+    let eps = Arc::new(batcher.eps_handle(scenario.model.dim(), "batched"));
+    let coord = Coordinator::start(
+        eps,
+        CoordinatorConfig { workers: 4, slot_budget: 4 * steps, ..Default::default() },
+    );
+
+    let mut rng = Pcg64::seeded(7);
+    let t0 = std::time::Instant::now();
+
+    // Phase 1: fresh prompts (concurrent).
+    let phase1 = n_requests - n_requests / 4;
+    let phase1_conds: Vec<Cond> =
+        (0..phase1).map(|_| Cond::Class(rng.below(8) as usize)).collect();
+    let handles: Vec<_> = (0..phase1)
+        .map(|i| {
+            let mut req = SampleRequest::parataa(
+                phase1_conds[i].clone(),
+                1000 + i as u64,
+                SamplerSpec::ddim(steps),
+            );
+            req.guidance = scenario.guidance;
+            req.use_trajectory_cache = true;
+            // Mix methods: mostly ParaTAA, some FP for contrast.
+            if i % 8 == 7 {
+                req.method = Method::FixedPoint;
+            }
+            coord.submit(req)
+        })
+        .collect();
+    let mut total_rounds = 0usize;
+    let mut warm = 0usize;
+    for h in handles {
+        let r = h.wait().expect("request failed");
+        assert!(r.converged);
+        total_rounds += r.rounds;
+        warm += r.warm_started as usize;
+    }
+
+    // Phase 2: the "user iterates on the prompt" pattern — same seeds,
+    // slightly tweaked conditions; these hit the trajectory cache (§4.2).
+    let handles: Vec<_> = (0..n_requests / 4)
+        .map(|i| {
+            let donor = i % phase1;
+            let tweak = Cond::Class(rng.below(8) as usize);
+            let mut req = SampleRequest::parataa(
+                phase1_conds[donor].lerp(&tweak, 0.1, 8),
+                1000 + donor as u64,
+                SamplerSpec::ddim(steps),
+            );
+            req.guidance = scenario.guidance;
+            req.use_trajectory_cache = true;
+            coord.submit(req)
+        })
+        .collect();
+    for h in handles {
+        let r = h.wait().expect("request failed");
+        assert!(r.converged);
+        total_rounds += r.rounds;
+        warm += r.warm_started as usize;
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    println!("--- E2E results ---");
+    println!("{}", m.report());
+    println!(
+        "wall {wall:?} | {:.2} samples/s | mean rounds {:.1} | warm starts {warm}",
+        n_requests as f64 / wall.as_secs_f64(),
+        total_rounds as f64 / n_requests as f64,
+    );
+}

@@ -1,0 +1,272 @@
+"""AOT export: train (or reuse) DiT-tiny, lower the L2 graphs (with their L1
+Pallas kernels) to HLO text, and emit cross-language test vectors.
+
+Run once via ``make artifacts``; the Rust binary is self-contained afterwards.
+
+Artifacts
+---------
+  dit_weights.npz            trained DiT-tiny parameters
+  loss_curve.csv             training loss log (EXPERIMENTS.md)
+  eps_batch_{N}.hlo.txt      CFG denoiser: (x[N,256], t[N], y[N], g) -> eps
+  solver_step_{T}.hlo.txt    one ParaTAA round: combine + residuals + TAA
+  testvec_schedule.json      DDIM/DDPM coefficients (pins rust/schedule)
+  testvec_gmm.json           analytic GMM eps cases (pins rust/model/gmm)
+  testvec_taa.json           TAA update cases (pins rust/solver/update)
+  testvec_dit.json           trained-model eps cases (pins rust/runtime)
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, gmm, model, schedule, solver_ref, train
+from .kernels import ref
+from .kernels.banded_combine import banded_combine
+from .kernels.taa_update import row_grams, taa_apply
+
+EPS_BATCH_SIZES = [1, 5, 10, 25, 50, 100]
+SOLVER_STEPS = [25, 50, 100]
+HIST_COLS = 2  # paper m=3 => 2 difference columns
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the trained weights are
+    # baked into the graph as constants, and the default printer elides
+    # them as `constant({...})`, silently corrupting the artifact.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_eps_batch(params, out_dir: str) -> None:
+    def fn(x, t, y, guidance):
+        return (model.eps_cfg(params, x, t, y, guidance),)
+
+    for n in EPS_BATCH_SIZES:
+        spec_x = jax.ShapeDtypeStruct((n, model.DIM), jnp.float32)
+        spec_t = jax.ShapeDtypeStruct((n,), jnp.int32)
+        spec_y = jax.ShapeDtypeStruct((n,), jnp.int32)
+        spec_g = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = jax.jit(fn).lower(spec_x, spec_t, spec_y, spec_g)
+        path = os.path.join(out_dir, f"eps_batch_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"  wrote {path}")
+
+
+def solver_step_fn(xs_ext, eps_ext, x_win, s_mat, b_mat, xi_comb,
+                   s1_mat, b1_mat, xi1_comb, dX, dF, mask, fp_mask, lam):
+    """One parallel update round (L2 graph around the L1 kernels).
+
+    Shapes: xs_ext/eps_ext [T+1, D]; x_win/xi_comb/xi1_comb [W, D];
+    s/b matrices [W, T+1]; dX/dF [mc, W, D]; mask/fp_mask [W]; lam scalar.
+    Returns (x_new [W, D], R [W, D], r1 [W]).
+    """
+    f_k = banded_combine(s_mat, xs_ext, b_mat, eps_ext, xi_comb)
+    f_1 = banded_combine(s1_mat, xs_ext, b1_mat, eps_ext, xi1_comb)
+    r_vec = (f_k - x_win) * mask[:, None]
+    r1 = jnp.sum((x_win - f_1) ** 2 * mask[:, None], axis=1)
+    g_rows, b_rows = row_grams(dF, r_vec)
+    G, Bv = ref.suffix_scan_ref(g_rows, b_rows)
+    gamma = ref.cramer_solve_ref(G, Bv, lam)
+    gamma = gamma * (1.0 - fp_mask)[:, None]
+    x_new = taa_apply(x_win, r_vec, dX, dF, gamma, mask)
+    return x_new, r_vec, r1
+
+
+def export_solver_step(out_dir: str) -> None:
+    d = model.DIM
+    for t_steps in SOLVER_STEPS:
+        w = t_steps
+        c = t_steps + 1
+        f32 = jnp.float32
+        specs = [
+            jax.ShapeDtypeStruct((c, d), f32),            # xs_ext
+            jax.ShapeDtypeStruct((c, d), f32),            # eps_ext
+            jax.ShapeDtypeStruct((w, d), f32),            # x_win
+            jax.ShapeDtypeStruct((w, c), f32),            # s_mat
+            jax.ShapeDtypeStruct((w, c), f32),            # b_mat
+            jax.ShapeDtypeStruct((w, d), f32),            # xi_comb
+            jax.ShapeDtypeStruct((w, c), f32),            # s1_mat
+            jax.ShapeDtypeStruct((w, c), f32),            # b1_mat
+            jax.ShapeDtypeStruct((w, d), f32),            # xi1_comb
+            jax.ShapeDtypeStruct((HIST_COLS, w, d), f32),  # dX
+            jax.ShapeDtypeStruct((HIST_COLS, w, d), f32),  # dF
+            jax.ShapeDtypeStruct((w,), f32),              # mask
+            jax.ShapeDtypeStruct((w,), f32),              # fp_mask
+            jax.ShapeDtypeStruct((), f32),                # lam
+        ]
+        lowered = jax.jit(solver_step_fn).lower(*specs)
+        path = os.path.join(out_dir, f"solver_step_{t_steps}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"  wrote {path}")
+
+
+def export_testvec_schedule(out_dir: str) -> None:
+    out = {}
+    for steps, eta, name in [(10, 0.0, "ddim10"), (10, 1.0, "ddpm10"), (25, 0.0, "ddim25")]:
+        cs = schedule.sampler_coeffs(steps, eta)
+        out[name] = {
+            "steps": steps,
+            "eta": eta,
+            "a": cs["a"].tolist(),
+            "b": cs["b"].tolist(),
+            "c": cs["c"].tolist(),
+            "train_t": cs["train_t"].tolist(),
+            "g2": cs["g2"].tolist(),
+        }
+    betas = schedule.linear_betas()
+    abars = schedule.alpha_bars(betas)
+    out["schedule"] = {
+        "betas_sample": {str(i): betas[i] for i in [0, 1, 499, 999]},
+        "abars_sample": {str(i): abars[i] for i in [0, 1, 499, 999]},
+    }
+    _write_json(os.path.join(out_dir, "testvec_schedule.json"), out)
+
+
+def export_testvec_gmm(out_dir: str) -> None:
+    rng = np.random.default_rng(1234)
+    k, d = 3, 6
+    means = (2.0 * rng.random((k, d)) - 1.0).astype(np.float32)
+    data_std = 0.2
+    betas = schedule.linear_betas()
+    abars = schedule.alpha_bars(betas)
+    cases = []
+    for t in [0, 100, 500, 999]:
+        for guidance in [1.0, 5.0]:
+            x = rng.standard_normal(d).astype(np.float32)
+            weights = np.zeros(k, np.float32)
+            weights[t % k] = 1.0
+            e = gmm.eps_cfg(x, abars[t], weights, means, data_std, guidance)
+            cases.append(
+                {
+                    "x": x.tolist(),
+                    "train_t": t,
+                    "weights": weights.tolist(),
+                    "guidance": guidance,
+                    "eps": e.tolist(),
+                }
+            )
+    _write_json(
+        os.path.join(out_dir, "testvec_gmm.json"),
+        {"means": means.tolist(), "data_std": data_std, "cases": cases},
+    )
+
+
+def export_testvec_taa(out_dir: str) -> None:
+    rng = np.random.default_rng(77)
+    w, d, mc = 5, 4, 2
+    dX = rng.standard_normal((mc, w, d)).astype(np.float32)
+    dF = rng.standard_normal((mc, w, d)).astype(np.float32)
+    x = rng.standard_normal((w, d)).astype(np.float32)
+    R = rng.standard_normal((w, d)).astype(np.float32)
+    lam = 1e-4
+    # numpy mirror of the TAA update (same math as rust solver/update.rs).
+    g_rows = np.einsum("awd,bwd->wab", dF.astype(np.float64), dF.astype(np.float64))
+    b_rows = np.einsum("awd,wd->wa", dF.astype(np.float64), R.astype(np.float64))
+    G = np.cumsum(g_rows[::-1], axis=0)[::-1]
+    Bv = np.cumsum(b_rows[::-1], axis=0)[::-1]
+    gamma = np.zeros((w, mc))
+    for p in range(w):
+        A = G[p] + lam * (1.0 + np.trace(G[p]) / mc) * np.eye(mc)
+        gamma[p] = np.linalg.solve(A, Bv[p])
+    x_new = x + R - np.einsum("wm,mwd->wd", gamma, (dX + dF).astype(np.float64)).astype(np.float32)
+    _write_json(
+        os.path.join(out_dir, "testvec_taa.json"),
+        {
+            "w": w,
+            "d": d,
+            "mc": mc,
+            "lam": lam,
+            "dX": dX.reshape(-1).tolist(),
+            "dF": dF.reshape(-1).tolist(),
+            "x": x.reshape(-1).tolist(),
+            "R": R.reshape(-1).tolist(),
+            "gamma": gamma.reshape(-1).tolist(),
+            "x_new": x_new.reshape(-1).tolist(),
+        },
+    )
+
+
+def export_testvec_dit(params, out_dir: str) -> None:
+    rng = np.random.default_rng(4321)
+    fn = jax.jit(lambda x, t, y, g: model.eps_cfg(params, x, t, y, g))
+    cases = []
+    for t, y, guidance in [(0, 0, 1.0), (500, 3, 5.0), (999, 7, 2.0), (250, 8, 1.0)]:
+        x = rng.standard_normal((1, model.DIM)).astype(np.float32)
+        e = np.asarray(fn(jnp.asarray(x), jnp.array([t], jnp.int32), jnp.array([y], jnp.int32), jnp.float32(guidance)))
+        cases.append(
+            {
+                "x": x[0].tolist(),
+                "train_t": t,
+                "y": y,
+                "guidance": guidance,
+                "eps": e[0].tolist(),
+            }
+        )
+    _write_json(os.path.join(out_dir, "testvec_dit.json"), {"cases": cases})
+
+
+def _write_json(path: str, obj) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    print(f"  wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=3000)
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    weights_path = os.path.join(out_dir, "dit_weights.npz")
+    if os.path.exists(weights_path) and not args.retrain:
+        print(f"loading cached weights from {weights_path}")
+        params = train.load_params(weights_path)
+    else:
+        print(f"training DiT-tiny for {args.train_steps} steps ...")
+        t0 = time.time()
+        params, log = train.train(steps=args.train_steps, verbose=True)
+        print(f"training done in {time.time()-t0:.0f}s, final loss {log[-1][1]:.5f}")
+        train.save_params(weights_path, params)
+        with open(os.path.join(out_dir, "loss_curve.csv"), "w") as f:
+            f.write("step,loss\n")
+            for s, l in log:
+                f.write(f"{s},{l}\n")
+        print(f"  wrote {weights_path}")
+
+    print("exporting eps_batch artifacts ...")
+    export_eps_batch(params, out_dir)
+    print("exporting solver_step artifacts ...")
+    export_solver_step(out_dir)
+    print("exporting test vectors ...")
+    export_testvec_schedule(out_dir)
+    export_testvec_gmm(out_dir)
+    export_testvec_taa(out_dir)
+    export_testvec_dit(params, out_dir)
+    # Stamp for make's incremental check.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print("AOT export complete.")
+
+
+if __name__ == "__main__":
+    main()

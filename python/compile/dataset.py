@@ -1,0 +1,70 @@
+"""Synthetic 16x16 shape dataset — build-time substrate.
+
+The template generation rule is integer-exact and mirrored bit-for-bit by
+``rust/src/model/templates.rs``; the cross-language test vectors pin the two.
+
+Training samples are ``template(class) + data_std * N(0, I)`` — i.e. exactly
+the template-GMM that ``compile/gmm.py`` (and ``rust/src/model/gmm.rs``)
+scores analytically. DiT-tiny therefore *learns* the distribution whose score
+we also know in closed form, which gives the experiments an absolute
+reference for every quality metric.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SIDE = 16
+DIM = SIDE * SIDE
+N_CLASSES = 8
+FG = 0.8
+BG = -0.8
+DATA_STD = 0.15
+
+CLASS_NAMES = [
+    "circle", "square", "cross", "hstripes", "vstripes", "diag", "ring", "checker",
+]
+
+
+def template(class_id: int) -> np.ndarray:
+    """Template image for a class (row-major float32, length DIM)."""
+    c = class_id % N_CLASSES
+    img = np.full(DIM, BG, dtype=np.float32)
+    s = SIDE
+    for y in range(s):
+        for x in range(s):
+            cx = 2 * x - (s - 1)
+            cy = 2 * y - (s - 1)
+            r2 = cx * cx + cy * cy
+            if c == 0:
+                on = r2 <= 121
+            elif c == 1:
+                on = abs(cx) <= 9 and abs(cy) <= 9
+            elif c == 2:
+                on = abs(cx) <= 3 or abs(cy) <= 3
+            elif c == 3:
+                on = (y // 2) % 2 == 0
+            elif c == 4:
+                on = (x // 2) % 2 == 0
+            elif c == 5:
+                on = abs(x - y) <= 2 or abs(x + y - (s - 1)) <= 2
+            elif c == 6:
+                on = 49 <= r2 <= 169
+            else:  # 7
+                on = ((x // 4) + (y // 4)) % 2 == 0
+            if on:
+                img[y * s + x] = FG
+    return img
+
+
+def all_templates() -> np.ndarray:
+    """``[N_CLASSES, DIM]`` stack of all templates."""
+    return np.stack([template(c) for c in range(N_CLASSES)])
+
+
+def make_batch(rng: np.random.Generator, batch: int) -> tuple[np.ndarray, np.ndarray]:
+    """Draw a training batch: (images [batch, DIM], labels [batch])."""
+    labels = rng.integers(0, N_CLASSES, size=batch)
+    temps = all_templates()[labels]
+    noise = rng.standard_normal((batch, DIM)).astype(np.float32)
+    return temps + DATA_STD * noise, labels.astype(np.int32)

@@ -1,0 +1,59 @@
+"""Template-GMM analytic score — mirror of ``rust/src/model/gmm.rs``.
+
+Data: p0(x | w) = sum_i w_i N(mu_i, s^2 I) with template means. Under the VP
+forward process at signal level abar:
+
+    p_t(x | w) = sum_i w_i N(sqrt(abar) mu_i, (abar s^2 + 1 - abar) I)
+    eps(x, t, w) = sqrt(1-abar)/v * (x - sum_i post_i(x) sqrt(abar) mu_i)
+
+Used to (a) emit cross-language test vectors pinning the Rust GMM, and
+(b) serve as the exact-score reference in the python solver tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import dataset
+
+
+def log_posterior(x, abar, weights, means, data_std):
+    """Component log-posteriors and marginal log-likelihood (up to const).
+
+    x: [D]; weights: [K]; means: [K, D]. Returns (log_post [K], lse).
+    """
+    v = abar * data_std**2 + (1.0 - abar)
+    diff = x[None, :] - np.sqrt(abar) * means  # [K, D]
+    d2 = np.sum(diff * diff, axis=1)
+    with np.errstate(divide="ignore"):
+        logits = np.where(weights > 0, np.log(np.maximum(weights, 1e-300)), -np.inf) - d2 / (2 * v)
+    mx = np.max(logits)
+    lse = mx + np.log(np.sum(np.exp(logits - mx)))
+    return logits - lse, lse
+
+
+def eps_single(x, abar, weights, means, data_std):
+    """Exact eps for one item under dense component weights."""
+    v = abar * data_std**2 + (1.0 - abar)
+    log_post, _ = log_posterior(x, abar, weights, means, data_std)
+    post = np.exp(log_post)
+    mean_mu = np.sqrt(abar) * (post @ means)
+    return (np.sqrt(1.0 - abar) / v * (x - mean_mu)).astype(np.float32)
+
+
+def eps_cfg(x, abar, weights, means, data_std, guidance):
+    """Classifier-free-guided eps (uncond = uniform weights)."""
+    k = means.shape[0]
+    e_c = eps_single(x, abar, weights, means, data_std)
+    if abs(guidance - 1.0) < 1e-9:
+        return e_c
+    e_u = eps_single(x, abar, np.full(k, 1.0 / k), means, data_std)
+    return e_u + guidance * (e_c - e_u)
+
+
+def sd_analog_means() -> np.ndarray:
+    """The SD-analog component means (the shape templates)."""
+    return dataset.all_templates()
+
+
+SD_ANALOG_STD = 0.15

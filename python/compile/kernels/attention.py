@@ -1,0 +1,97 @@
+"""Pallas fused attention kernel (L1) — the DiT-tiny compute hot-spot.
+
+GPU papers fuse QK^T->softmax->V into one CUDA kernel over threadblocks; the
+TPU/Pallas rethink (DESIGN.md §Hardware-Adaptation) tiles the (batch*heads)
+axis over the Pallas grid and keeps each tile's [TB, N, Dh] blocks resident
+in VMEM. At DiT-tiny sizes (N=16, Dh=16, TB=64) a tile is ~200 KB — well
+under the ~16 MB VMEM budget — and both matmuls are MXU-shaped.
+
+PERF (EXPERIMENTS.md §Perf, L1 iteration 1): interpret-mode pallas_call costs
+~0.35 ms of interpreter overhead *per grid step*, so the original
+one-(batch,head)-per-step layout made eps_batch_100 cost 570 ms (1600 grid
+steps). Tiling TB=64 pairs per step cuts the grid to ~25 steps for the same
+math. On real TPU hardware the same change improves MXU occupancy: a single
+[16,16]x[16,16] matmul underfills the 128x128 systolic array, while the
+batched tile keeps 64 of them in flight per step.
+
+Lowered with ``interpret=True``: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md), so the kernel runs through
+the Pallas interpreter while keeping the identical block structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# (batch*heads) pairs processed per grid step.
+TILE_BH = 64
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps the grid exact)."""
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    # One grid step = TB (batch, head) pairs; refs are [TB, N, Dh] in VMEM.
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    dh = q.shape[-1]
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(dh))
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.einsum("bnm,bmd->bnd", probs, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Fused attention. q,k,v: [B, H, N, Dh] float32 -> [B, H, N, Dh].
+
+    Forward runs the Pallas kernel; the backward pass (training only — the
+    AOT inference artifacts never differentiate) uses the jnp reference via
+    custom_vjp, since interpret-mode pallas_call does not support
+    reverse-mode autodiff.
+    """
+    return _attention_pallas(q, k, v)
+
+
+def _attention_pallas(q, k, v):
+    b, h, n, dh = q.shape
+    bh = b * h
+    tb = _pick_block(bh, TILE_BH)
+    grid = (bh // tb,)
+    qf = q.reshape(bh, n, dh)
+    kf = k.reshape(bh, n, dh)
+    vf = v.reshape(bh, n, dh)
+    spec = pl.BlockSpec((tb, n, dh), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        _attn_kernel,
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), q.dtype),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, n, dh)
+
+
+def _attention_fwd(q, k, v):
+    return _attention_pallas(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

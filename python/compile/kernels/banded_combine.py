@@ -1,0 +1,61 @@
+"""Pallas banded order-k combine kernel (L1) — eq. (9) as dense matmuls.
+
+Computes F = S·x_ext + B·eps + ξ̄ over the window. Because S and B carry the
+order-k band structure as *data*, one compiled artifact serves every k and
+every boundary position (DESIGN.md §Hardware-Adaptation).
+
+Tiling: grid over (window rows / BW, feature lanes / BD); each step loads an
+[BW, C] strip of both banded matrices and a [C, BD] panel of the state/eps
+stacks — the HBM→VMEM schedule a GPU implementation would express with
+threadblocks. At W=100, C=101, D=256 the per-step VMEM footprint is
+2·BW·C + 2·C·BD + 3·BW·BD floats ≈ 214 KB for BW=25, BD=128 — comfortably
+inside VMEM, with BD=128 matching the MXU lane width.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(s_ref, x_ref, b_ref, e_ref, xi_ref, o_ref):
+    s = s_ref[...]
+    x = x_ref[...]
+    b = b_ref[...]
+    e = e_ref[...]
+    o_ref[...] = jnp.dot(s, x) + jnp.dot(b, e) + xi_ref[...]
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (keeps the grid exact)."""
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def banded_combine(s_mat, x_ext, b_mat, eps, xi_comb):
+    """F = S @ x_ext + B @ eps + xi_comb.
+
+    s_mat, b_mat: [W, C]; x_ext, eps: [C, D]; xi_comb: [W, D] -> [W, D].
+    """
+    w, c = s_mat.shape
+    d = x_ext.shape[1]
+    bw = _pick_block(w, 32)
+    bd = _pick_block(d, 128)
+    grid = (w // bw, d // bd)
+    return pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((w, d), s_mat.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw, c), lambda i, j: (i, 0)),  # S strip
+            pl.BlockSpec((c, bd), lambda i, j: (0, j)),  # x_ext panel
+            pl.BlockSpec((bw, c), lambda i, j: (i, 0)),  # B strip
+            pl.BlockSpec((c, bd), lambda i, j: (0, j)),  # eps panel
+            pl.BlockSpec((bw, bd), lambda i, j: (i, j)),  # xi tile
+        ],
+        out_specs=pl.BlockSpec((bw, bd), lambda i, j: (i, j)),
+        interpret=True,
+    )(s_mat, x_ext, b_mat, eps, xi_comb)

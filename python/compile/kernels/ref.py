@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the mathematical definition the corresponding kernel
+in this package must reproduce; ``python/tests/test_kernels.py`` sweeps
+shapes with hypothesis and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v):
+    """Scaled-dot-product attention. q,k,v: [B, H, N, Dh] -> [B, H, N, Dh]."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(dh))
+    probs = _softmax(scores)
+    return jnp.einsum("bhnm,bhmd->bhnd", probs, v)
+
+
+def banded_combine_ref(s_mat, x_ext, b_mat, eps, xi_comb):
+    """Order-k combine (eq. 9 as dense banded matrices):
+
+    F = S @ x_ext + B @ eps + xi_comb
+    s_mat,b_mat: [W, C]; x_ext,eps: [C, D]; xi_comb: [W, D] -> [W, D].
+    """
+    return s_mat @ x_ext + b_mat @ eps + xi_comb
+
+
+def row_grams_ref(dF, R):
+    """Per-row history Grams and projections (pre-suffix-scan):
+
+    g[w] = dF[:, w, :] @ dF[:, w, :].T   (m x m)
+    b[w] = dF[:, w, :] @ R[w]            (m)
+    dF: [m, W, D]; R: [W, D] -> (g: [W, m, m], b: [W, m]).
+    """
+    g = jnp.einsum("awd,bwd->wab", dF, dF)
+    b = jnp.einsum("awd,wd->wa", dF, R)
+    return g, b
+
+
+def suffix_scan_ref(g, b):
+    """Reverse (suffix) cumulative sums over the window axis:
+
+    G[t] = sum_{j>=t} g[j];  Bv[t] = sum_{j>=t} b[j].
+    """
+    G = jnp.cumsum(g[::-1], axis=0)[::-1]
+    Bv = jnp.cumsum(b[::-1], axis=0)[::-1]
+    return G, Bv
+
+
+def taa_apply_ref(x, R, dX, dF, gamma, mask):
+    """The TAA state update given per-row coefficients γ (Thm 3.2):
+
+    x_new[w] = x[w] + mask[w] * (R[w] - sum_h gamma[w,h]*(dX[h,w]+dF[h,w]))
+    x,R: [W, D]; dX,dF: [m, W, D]; gamma: [W, m]; mask: [W].
+    """
+    corr = jnp.einsum("wm,mwd->wd", gamma, dX + dF)
+    return x + mask[:, None] * (R - corr)
+
+
+def cramer_solve_ref(G, b, lam):
+    """Batched ridge solve (G + scale*I) γ = b for m ≤ 3 via Cramer's rule
+    (no LAPACK custom-calls — keeps the lowered HLO loadable by XLA 0.5.1).
+    Ridge is scale-aware: lam * (1 + trace(G)/m), matching the Rust solver.
+    G: [W, m, m]; b: [W, m] -> [W, m].
+    """
+    m = G.shape[-1]
+    tr = jnp.trace(G, axis1=-2, axis2=-1)
+    scale = lam * (1.0 + tr / m)
+    A = G + scale[:, None, None] * jnp.eye(m, dtype=G.dtype)[None]
+    if m == 1:
+        return b / A[:, 0, 0][:, None]
+    if m == 2:
+        det = A[:, 0, 0] * A[:, 1, 1] - A[:, 0, 1] * A[:, 1, 0]
+        g0 = (b[:, 0] * A[:, 1, 1] - b[:, 1] * A[:, 0, 1]) / det
+        g1 = (A[:, 0, 0] * b[:, 1] - A[:, 1, 0] * b[:, 0]) / det
+        return jnp.stack([g0, g1], axis=-1)
+    if m == 3:
+        def det3(M):
+            return (
+                M[:, 0, 0] * (M[:, 1, 1] * M[:, 2, 2] - M[:, 1, 2] * M[:, 2, 1])
+                - M[:, 0, 1] * (M[:, 1, 0] * M[:, 2, 2] - M[:, 1, 2] * M[:, 2, 0])
+                + M[:, 0, 2] * (M[:, 1, 0] * M[:, 2, 1] - M[:, 1, 1] * M[:, 2, 0])
+            )
+
+        det = det3(A)
+        cols = []
+        for i in range(3):
+            Ai = A.at[:, :, i].set(b)
+            cols.append(det3(Ai) / det)
+        return jnp.stack(cols, axis=-1)
+    raise NotImplementedError(f"cramer_solve_ref supports m<=3, got {m}")

@@ -1,0 +1,128 @@
+"""Pallas kernels for the Triangular Anderson Acceleration update (L1).
+
+The TAA update (Theorem 3.2) needs, per window row t, the *suffix* Gram
+G_t = Σ_{j≥t} ΔF_jᵀΔF_j and projection b_t = Σ_{j≥t} ΔF_jᵀR_j. We split the
+work into the two shapes that map well onto the TPU:
+
+1. ``row_grams`` — per-row m×m Grams and m-projections, embarrassingly
+   parallel over the window (Pallas grid over W-tiles, D reduced in-tile).
+   m ≤ 3, so a whole tile of Grams is a few hundred bytes of VMEM.
+2. the reverse cumulative (suffix) sum — a bandwidth-trivial O(W·m²) scan
+   left to XLA (`jnp.cumsum` on the reversed axis), which fuses with the
+   surrounding graph; putting a sequential carry inside a Pallas grid would
+   serialize the kernel for no bandwidth win at these sizes.
+3. ``taa_apply`` — the masked state update
+   x ← x + mask·(R − Σ_h γ_h(ΔX_h + ΔF_h)), elementwise over [W, D]
+   (Pallas grid over W×D tiles).
+
+The m×m ridge solve between (2) and (3) uses Cramer's rule in plain jnp
+(`ref.cramer_solve_ref`) — deliberately *not* `jnp.linalg.solve`, whose
+LAPACK custom-calls the XLA 0.5.1 text loader cannot resolve.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(n: int, target: int) -> int:
+    for cand in range(min(n, target), 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+# --- 1. per-row Grams -------------------------------------------------------
+
+
+def _row_gram_kernel(df_ref, r_ref, g_ref, b_ref):
+    # df_ref: [m, BW, D], r_ref: [BW, D] -> g_ref: [BW, m, m], b_ref: [BW, m]
+    df = df_ref[...]
+    r = r_ref[...]
+    g_ref[...] = jnp.einsum("awd,bwd->wab", df, df)
+    b_ref[...] = jnp.einsum("awd,wd->wa", df, r)
+
+
+def row_grams(dF, R):
+    """Per-row Grams. dF: [m, W, D]; R: [W, D] -> ([W, m, m], [W, m])."""
+    m, w, d = dF.shape
+    bw = _pick_block(w, 32)
+    grid = (w // bw,)
+    return pl.pallas_call(
+        _row_gram_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w, m, m), dF.dtype),
+            jax.ShapeDtypeStruct((w, m), dF.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bw, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((bw, d), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bw, m, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bw, m), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(dF, R)
+
+
+# --- 3. masked state update --------------------------------------------------
+
+
+def _apply_kernel(x_ref, r_ref, dx_ref, df_ref, gamma_ref, mask_ref, o_ref):
+    x = x_ref[...]
+    r = r_ref[...]
+    hist = dx_ref[...] + df_ref[...]  # [m, BW, BD]
+    gamma = gamma_ref[...]  # [BW, m]
+    corr = jnp.einsum("wm,mwd->wd", gamma, hist)
+    mask = mask_ref[...][:, None]
+    o_ref[...] = x + mask * (r - corr)
+
+
+def taa_apply(x, R, dX, dF, gamma, mask):
+    """x + mask·(R − Σ_h γ_h(ΔX_h+ΔF_h)).
+
+    x, R: [W, D]; dX, dF: [m, W, D]; gamma: [W, m]; mask: [W] -> [W, D].
+    """
+    m, w, d = dX.shape
+    bw = _pick_block(w, 32)
+    bd = _pick_block(d, 128)
+    grid = (w // bw, d // bd)
+    return pl.pallas_call(
+        _apply_kernel,
+        out_shape=jax.ShapeDtypeStruct((w, d), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bw, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((m, bw, bd), lambda i, j: (0, i, j)),
+            pl.BlockSpec((m, bw, bd), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bw, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((bw,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bw, bd), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, R, dX, dF, gamma, mask)
+
+
+# --- full update (kernels + scan + solve composed) ---------------------------
+
+
+def taa_update(x, R, dX, dF, mask, lam, safeguard_row=None):
+    """Complete TAA update over a window.
+
+    x, R: [W, D]; dX, dF: [m, W, D]; mask: [W] (1.0 = active row);
+    lam: ridge; safeguard_row: optional row index forced to the plain FP
+    step (Theorem 3.6).  Returns x_new [W, D].
+    """
+    g, b = row_grams(dF, R)
+    G, Bv = ref.suffix_scan_ref(g, b)
+    gamma = ref.cramer_solve_ref(G, Bv, lam)
+    if safeguard_row is not None:
+        gamma = gamma * (1.0 - jax.nn.one_hot(safeguard_row, gamma.shape[0], dtype=gamma.dtype))[:, None]
+    return taa_apply(x, R, dX, dF, gamma, mask)

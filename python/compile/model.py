@@ -1,0 +1,159 @@
+"""L2: DiT-tiny — a small diffusion transformer in pure JAX.
+
+Architecture (a faithfully scaled-down DiT, Peebles & Xie 2023):
+  16x16x1 image -> 4x4 patchify -> 16 tokens x dim 64
+  -> N_BLOCKS adaLN-zero transformer blocks (4 heads, Pallas attention)
+  -> adaLN final layer -> unpatchify -> eps prediction [B, 256].
+
+Conditioning: sinusoidal timestep embedding + class embedding table
+(N_CLASSES + 1 entries; the last is the CFG null class). Classifier-free
+guidance is applied *inside* the exported graph (two batched forward passes),
+so the Rust hot path makes exactly one device call per parallel round.
+
+Everything is pure functions over a params pytree (no flax), which keeps the
+AOT export trivial: ``jax.jit(lambda x,t,y,g: eps_cfg(params, ...))`` closes
+over the trained weights and bakes them into the HLO as constants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention
+
+SIDE = 16
+PATCH = 4
+N_TOKENS = (SIDE // PATCH) ** 2          # 16
+PATCH_DIM = PATCH * PATCH                # 16
+DIM = SIDE * SIDE                        # 256
+HIDDEN = 64
+HEADS = 4
+HEAD_DIM = HIDDEN // HEADS               # 16
+MLP_HIDDEN = 4 * HIDDEN                  # 256
+N_BLOCKS = 2
+N_CLASSES = 8
+NULL_CLASS = N_CLASSES                   # CFG null token
+FREQ_DIM = 64
+
+
+def _dense_init(key, fan_in, fan_out, scale=1.0):
+    w = jax.random.normal(key, (fan_in, fan_out)) * scale / np.sqrt(fan_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros(fan_out, jnp.float32)}
+
+
+def init_params(seed: int = 0):
+    """Initialize the DiT-tiny parameter pytree."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 64)
+    ki = iter(keys)
+    params = {
+        "patch_embed": _dense_init(next(ki), PATCH_DIM, HIDDEN),
+        "pos_embed": jax.random.normal(next(ki), (N_TOKENS, HIDDEN)) * 0.02,
+        "class_embed": jax.random.normal(next(ki), (N_CLASSES + 1, HIDDEN)) * 0.02,
+        "time_mlp1": _dense_init(next(ki), FREQ_DIM, HIDDEN),
+        "time_mlp2": _dense_init(next(ki), HIDDEN, HIDDEN),
+        "blocks": [],
+        "final_mod": _dense_init(next(ki), HIDDEN, 2 * HIDDEN, scale=0.0),
+        "final_out": _dense_init(next(ki), HIDDEN, PATCH_DIM, scale=0.0),
+    }
+    for _ in range(N_BLOCKS):
+        params["blocks"].append(
+            {
+                # adaLN-zero modulation: (shift, scale, gate) x 2 sublayers,
+                # zero-init so each block starts as identity.
+                "mod": _dense_init(next(ki), HIDDEN, 6 * HIDDEN, scale=0.0),
+                "qkv": _dense_init(next(ki), HIDDEN, 3 * HIDDEN),
+                "proj": _dense_init(next(ki), HIDDEN, HIDDEN),
+                "mlp1": _dense_init(next(ki), HIDDEN, MLP_HIDDEN),
+                "mlp2": _dense_init(next(ki), MLP_HIDDEN, HIDDEN),
+            }
+        )
+    return params
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _layernorm(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+def _timestep_embedding(t):
+    """Sinusoidal embedding of integer training timesteps. t: [B] -> [B, FREQ_DIM]."""
+    half = FREQ_DIM // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _patchify(x):
+    """[B, 256] image -> [B, 16 tokens, 16 patch-dim]."""
+    b = x.shape[0]
+    img = x.reshape(b, SIDE, SIDE)
+    img = img.reshape(b, SIDE // PATCH, PATCH, SIDE // PATCH, PATCH)
+    img = img.transpose(0, 1, 3, 2, 4)  # [B, gh, gw, PATCH, PATCH]
+    return img.reshape(b, N_TOKENS, PATCH_DIM)
+
+
+def _unpatchify(tok):
+    """[B, 16, 16] tokens -> [B, 256] image."""
+    b = tok.shape[0]
+    g = SIDE // PATCH
+    img = tok.reshape(b, g, g, PATCH, PATCH)
+    img = img.transpose(0, 1, 3, 2, 4)  # [B, g, PATCH, g, PATCH]
+    return img.reshape(b, DIM)
+
+
+def _block(p, x, c):
+    """One adaLN-zero DiT block. x: [B, N, H]; c: [B, H] conditioning."""
+    mod = _dense(p["mod"], jax.nn.silu(c))  # [B, 6H]
+    sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mod, 6, axis=-1)
+    # Attention sublayer.
+    h = _layernorm(x) * (1 + sc_a[:, None, :]) + sh_a[:, None, :]
+    qkv = _dense(p["qkv"], h)  # [B, N, 3H]
+    b, n, _ = qkv.shape
+    qkv = qkv.reshape(b, n, 3, HEADS, HEAD_DIM).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]  # [B, heads, N, head_dim]
+    att = attention(q, k, v)  # Pallas kernel (L1)
+    att = att.transpose(0, 2, 1, 3).reshape(b, n, HIDDEN)
+    x = x + g_a[:, None, :] * _dense(p["proj"], att)
+    # MLP sublayer.
+    h = _layernorm(x) * (1 + sc_m[:, None, :]) + sh_m[:, None, :]
+    h = _dense(p["mlp2"], jax.nn.gelu(_dense(p["mlp1"], h)))
+    return x + g_m[:, None, :] * h
+
+
+def eps_raw(params, x, t, y):
+    """Unguided eps prediction. x: [B, 256]; t, y: [B] int32 -> [B, 256]."""
+    tok = _dense(params["patch_embed"], _patchify(x)) + params["pos_embed"][None]
+    temb = _dense(
+        params["time_mlp2"],
+        jax.nn.silu(_dense(params["time_mlp1"], _timestep_embedding(t))),
+    )
+    yemb = params["class_embed"][y]
+    c = temb + yemb
+    for bp in params["blocks"]:
+        tok = _block(bp, tok, c)
+    mod = _dense(params["final_mod"], jax.nn.silu(c))
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    tok = _layernorm(tok) * (1 + sc[:, None, :]) + sh[:, None, :]
+    return _unpatchify(_dense(params["final_out"], tok))
+
+
+def eps_cfg(params, x, t, y, guidance):
+    """Classifier-free-guided eps: one fused graph with a doubled batch.
+
+    eps = eps_null + guidance * (eps_y - eps_null). guidance is a traced
+    scalar, so the same artifact serves every guidance strength.
+    """
+    b = x.shape[0]
+    x2 = jnp.concatenate([x, x], axis=0)
+    t2 = jnp.concatenate([t, t], axis=0)
+    y2 = jnp.concatenate([y, jnp.full_like(y, NULL_CLASS)], axis=0)
+    both = eps_raw(params, x2, t2, y2)
+    eps_c, eps_u = both[:b], both[b:]
+    return eps_u + guidance * (eps_c - eps_u)

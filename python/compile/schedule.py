@@ -1,0 +1,70 @@
+"""Noise schedule + DDIM(eta) sampler coefficients — mirror of
+``rust/src/schedule/``. Used by training (forward process), by the AOT
+export, and to emit the cross-language test vectors that pin the Rust
+implementation to this one.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TRAIN_STEPS = 1000
+
+
+def linear_betas(train_steps: int = TRAIN_STEPS) -> np.ndarray:
+    lo, hi = 1e-4, 0.02
+    n = train_steps
+    return (lo + (hi - lo) * np.arange(n) / (n - 1)).astype(np.float64)
+
+
+def alpha_bars(betas: np.ndarray) -> np.ndarray:
+    return np.cumprod(1.0 - betas)
+
+
+def subset_timesteps(train_steps: int, steps: int) -> np.ndarray:
+    stride = train_steps // steps
+    return np.arange(steps) * stride
+
+
+def g2(betas: np.ndarray, t: np.ndarray | int) -> np.ndarray:
+    """VP-SDE diffusion coefficient g^2 at training timestep(s) t."""
+    return betas[t] * len(betas)
+
+
+def sampler_coeffs(steps: int, eta: float, train_steps: int = TRAIN_STEPS):
+    """DDIM(eta) coefficients a[t], b[t] (t=1..T; index 0 unused), c[t]
+    (t=0..T-1), train_t[t] (t=1..T), matching the Rust convention exactly.
+
+    Returns a dict of float64 numpy arrays.
+    """
+    betas = linear_betas(train_steps)
+    abars = alpha_bars(betas)
+    taus = subset_timesteps(train_steps, steps)
+    a = np.zeros(steps + 1)
+    b = np.zeros(steps + 1)
+    c = np.zeros(steps)
+    train_t = np.zeros(steps + 1, dtype=np.int64)
+    g2v = np.zeros(steps)
+    for t in range(1, steps + 1):
+        tau_hi = taus[t - 1]
+        ab_hi = abars[tau_hi]
+        ab_lo = abars[taus[t - 2]] if t >= 2 else 1.0
+        a_t = np.sqrt(ab_lo / ab_hi)
+        if t >= 2:
+            sigma = eta * np.sqrt((1 - ab_lo) / (1 - ab_hi)) * np.sqrt(1 - ab_hi / ab_lo)
+        else:
+            sigma = 0.0
+        b_t = np.sqrt(max(1 - ab_lo - sigma * sigma, 0.0)) - a_t * np.sqrt(1 - ab_hi)
+        a[t] = a_t
+        b[t] = b_t
+        c[t - 1] = sigma
+        train_t[t] = tau_hi
+        g2v[t - 1] = g2(betas, tau_hi)
+    return {"a": a, "b": b, "c": c, "train_t": train_t, "g2": g2v}
+
+
+def abar_products(a: np.ndarray, i: int, s: int) -> float:
+    """ā_{i,s} = prod_{j=i}^{s} a_j (1 when s < i)."""
+    if s < i:
+        return 1.0
+    return float(np.prod(a[i : s + 1]))

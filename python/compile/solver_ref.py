@@ -1,0 +1,145 @@
+"""Reference (numpy) implementation of the parallel solvers — the oracle
+mirroring ``rust/src/solver/``: sequential rollout, order-k fixed point,
+and Triangular Anderson Acceleration with safeguard and boundary clamping.
+
+Semantics are kept in lockstep with the Rust driver so that the exported
+test vectors (``aot.py``) pin both sides:
+  * equations clamp t_k at the frozen boundary (first frozen state),
+  * thresholds are eps_p = tol^2 * g2[p] * d,
+  * paper's m counts the iterate window => m-1 difference columns,
+  * the safeguard forces the top unconverged row to a plain FP step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sequential(coeffs, eps_fn, xi):
+    """Roll out eq. (6). xi: [T+1, D]; returns xs: [T+1, D]."""
+    a, b, c = coeffs["a"], coeffs["b"], coeffs["c"]
+    train_t = coeffs["train_t"]
+    steps = len(a) - 1
+    d = xi.shape[1]
+    xs = np.zeros((steps + 1, d), np.float32)
+    xs[steps] = xi[steps]
+    for t in range(steps, 0, -1):
+        e = eps_fn(xs[t][None, :], np.array([train_t[t]]))[0]
+        xs[t - 1] = a[t] * xs[t] + b[t] * e + c[t - 1] * xi[t - 1]
+    return xs
+
+
+def _abar(a, i, s):
+    return 1.0 if s < i else float(np.prod(a[i : s + 1]))
+
+
+def eval_fk(coeffs, xs, eps, xi, k, boundary, p):
+    """F_p^{(k)} with boundary clamp — mirror of equations::eval_fk."""
+    a, b, c = coeffs["a"], coeffs["b"], coeffs["c"]
+    t = p + 1
+    tk = min(t + k - 1, boundary)
+    out = _abar(a, t, tk) * xs[tk].astype(np.float64)
+    for j in range(t, tk + 1):
+        ab = _abar(a, t, j - 1)
+        out = out + (ab * b[j]) * eps[j] + (ab * c[j - 1]) * xi[j - 1]
+    return out.astype(np.float32)
+
+
+def solve_parallel(
+    coeffs,
+    eps_fn,
+    xi,
+    x_init,
+    k,
+    method="taa",
+    m=3,
+    lam=1e-4,
+    tol=1e-3,
+    s_max=200,
+    safeguard=True,
+):
+    """Full-window parallel solve. Returns (xs, iterations, records).
+
+    eps_fn(batch_x [N, D], batch_t [N]) -> [N, D].
+    method: "fp" | "taa".
+    """
+    a, b, c = coeffs["a"], coeffs["b"], coeffs["c"]
+    train_t, g2 = coeffs["train_t"], coeffs["g2"]
+    steps = len(a) - 1
+    d = xi.shape[1]
+    xs = np.zeros((steps + 1, d), np.float32)
+    xs[steps] = xi[steps]
+    xs[:steps] = x_init
+    eps = np.zeros((steps + 1, d), np.float32)
+    thresholds = tol * tol * g2 * d
+
+    hist_cols = 0 if method == "fp" else max(m - 1, 0)
+    dX: list[np.ndarray] = []
+    dF: list[np.ndarray] = []
+    prev_x = None
+    prev_r = None
+
+    t2 = steps - 1
+    records = []
+    for it in range(1, s_max + 1):
+        # One parallel round of eps.
+        idx = np.arange(1, t2 + 2)
+        eps[idx] = eps_fn(xs[idx], train_t[idx])
+        # Residuals + front.
+        r = xs[: t2 + 1] - (
+            a[1 : t2 + 2, None] * xs[1 : t2 + 2]
+            + b[1 : t2 + 2, None] * eps[1 : t2 + 2]
+            + c[: t2 + 1, None] * xi[: t2 + 1]
+        )
+        rsq = np.sum(r.astype(np.float64) ** 2, axis=1)
+        records.append(float(np.sum(rsq)))
+        unconverged = np.nonzero(rsq > thresholds[: t2 + 1])[0]
+        if len(unconverged) == 0:
+            return xs, it, records
+        t2 = int(unconverged[-1])
+        boundary = t2 + 1
+
+        # F^{(k)} and R over the active rows.
+        f_vals = np.zeros((steps, d), np.float32)
+        r_vals = np.zeros((steps, d), np.float32)
+        for p in range(0, t2 + 1):
+            f_vals[p] = eval_fk(coeffs, xs, eps, xi, k, boundary, p)
+            r_vals[p] = f_vals[p] - xs[p]
+
+        # History push.
+        if hist_cols > 0 and prev_x is not None:
+            dX.append(xs[:steps] - prev_x)
+            dF.append(r_vals - prev_r)
+            if len(dX) > hist_cols:
+                dX.pop(0)
+                dF.pop(0)
+        if hist_cols > 0:
+            prev_x = xs[:steps].copy()
+            prev_r = r_vals.copy()
+
+        # Update.
+        if method == "fp" or not dX:
+            xs[: t2 + 1] = f_vals[: t2 + 1]
+        else:
+            mcols = len(dX)
+            dXs = np.stack(dX)  # [mcols, steps, d]
+            dFs = np.stack(dF)
+            # Suffix Grams (float64 accumulation like the Rust side).
+            g_rows = np.einsum("awd,bwd->wab", dFs.astype(np.float64), dFs.astype(np.float64))
+            b_rows = np.einsum("awd,wd->wa", dFs.astype(np.float64), r_vals.astype(np.float64))
+            G = np.cumsum(g_rows[::-1], axis=0)[::-1]
+            Bv = np.cumsum(b_rows[::-1], axis=0)[::-1]
+            for p in range(0, t2 + 1):
+                if safeguard and p == t2:
+                    xs[p] = f_vals[p]
+                    continue
+                tr = np.trace(G[p])
+                A = G[p] + lam * (1.0 + tr / mcols) * np.eye(mcols)
+                try:
+                    gamma = np.linalg.solve(A, Bv[p])
+                except np.linalg.LinAlgError:
+                    xs[p] = f_vals[p]
+                    continue
+                corr = np.einsum("m,md->d", gamma, (dXs[:, p] + dFs[:, p]).astype(np.float64))
+                xs[p] = (xs[p] + r_vals[p] - corr).astype(np.float32)
+    return xs, s_max, records

@@ -1,0 +1,38 @@
+"""Template/dataset invariants (mirrors rust/src/model/templates.rs tests)."""
+
+import numpy as np
+
+from compile import dataset
+
+
+def test_templates_binary_and_distinct():
+    ts = dataset.all_templates()
+    assert ts.shape == (8, 256)
+    for i, t in enumerate(ts):
+        assert set(np.unique(t)) <= {np.float32(dataset.FG), np.float32(dataset.BG)}
+        fg = np.sum(t == dataset.FG)
+        assert 10 < fg < 246, f"class {i}"
+    for i in range(8):
+        for j in range(i + 1, 8):
+            assert np.sum(ts[i] != ts[j]) > 8
+
+
+def test_circle_symmetry():
+    t = dataset.template(0).reshape(16, 16)
+    np.testing.assert_array_equal(t, t[:, ::-1])
+    np.testing.assert_array_equal(t, t[::-1, :])
+
+
+def test_make_batch_shapes_and_noise():
+    rng = np.random.default_rng(0)
+    x, y = dataset.make_batch(rng, 64)
+    assert x.shape == (64, 256) and y.shape == (64,)
+    assert y.min() >= 0 and y.max() < 8
+    # samples should be near their templates
+    temps = dataset.all_templates()
+    d = np.linalg.norm(x - temps[y], axis=1)
+    assert np.all(d < 5.0)  # E[d] = sqrt(256)*0.15 = 2.4
+
+
+def test_class_wraps():
+    np.testing.assert_array_equal(dataset.template(0), dataset.template(8))

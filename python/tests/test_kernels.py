@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, swept with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.banded_combine import banded_combine
+from compile.kernels.taa_update import row_grams, taa_apply, taa_update
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    n=st.sampled_from([4, 8, 16]),
+    dh=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, n, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, b, h, n, dh) for _ in range(3))
+    out = attention(q, k, v)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.sampled_from([1, 7, 10, 25]),
+    c=st.integers(1, 30),
+    d=st.sampled_from([1, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_banded_combine_matches_ref(w, c, d, seed):
+    rng = np.random.default_rng(seed)
+    s, b = rand(rng, w, c), rand(rng, w, c)
+    x, e = rand(rng, c, d), rand(rng, c, d)
+    xi = rand(rng, w, d)
+    out = banded_combine(s, x, b, e, xi)
+    expect = ref.banded_combine_ref(s, x, b, e, xi)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 3),
+    w=st.sampled_from([1, 5, 12]),
+    d=st.sampled_from([1, 4, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_grams_matches_ref(m, w, d, seed):
+    rng = np.random.default_rng(seed)
+    dF = rand(rng, m, w, d)
+    R = rand(rng, w, d)
+    g, b = row_grams(dF, R)
+    ge, be = ref.row_grams_ref(dF, R)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ge), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(be), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 3),
+    w=st.sampled_from([1, 6, 10]),
+    d=st.sampled_from([1, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_taa_apply_matches_ref(m, w, d, seed):
+    rng = np.random.default_rng(seed)
+    x, R = rand(rng, w, d), rand(rng, w, d)
+    dX, dF = rand(rng, m, w, d), rand(rng, m, w, d)
+    gamma = rand(rng, w, m)
+    mask = jnp.asarray(rng.integers(0, 2, w), jnp.float32)
+    out = taa_apply(x, R, dX, dF, gamma, mask)
+    expect = ref.taa_apply_ref(x, R, dX, dF, gamma, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 3), w=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_cramer_solve_is_a_solve(m, w, seed):
+    rng = np.random.default_rng(seed)
+    # SPD Gram + ridge: verify (G + scale I) gamma == b.
+    base = rng.standard_normal((w, m, m + 2))
+    G = jnp.asarray(np.einsum("wmk,wnk->wmn", base, base), jnp.float32)
+    b = rand(rng, w, m)
+    lam = 1e-3
+    gamma = ref.cramer_solve_ref(G, b, lam)
+    tr = np.trace(np.asarray(G), axis1=-2, axis2=-1)
+    scale = lam * (1 + tr / m)
+    A = np.asarray(G) + scale[:, None, None] * np.eye(m)
+    recon = np.einsum("wmn,wn->wm", A, np.asarray(gamma))
+    np.testing.assert_allclose(recon, np.asarray(b), atol=1e-3, rtol=1e-3)
+
+
+def test_attention_mask_free_softmax_rows_sum():
+    # soft sanity: output of attention is a convex combination of v rows.
+    rng = np.random.default_rng(0)
+    q, k = rand(rng, 1, 1, 8, 4), rand(rng, 1, 1, 8, 4)
+    v = jnp.ones((1, 1, 8, 4), jnp.float32)
+    out = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.ones((1, 1, 8, 4)), atol=1e-5)
+
+
+def test_taa_update_zero_history_is_fp():
+    rng = np.random.default_rng(1)
+    w, d, m = 6, 8, 2
+    x, R = rand(rng, w, d), rand(rng, w, d)
+    zeros = jnp.zeros((m, w, d), jnp.float32)
+    mask = jnp.ones((w,), jnp.float32)
+    out = taa_update(x, R, zeros, zeros, mask, 1e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x + R), atol=1e-5)
+
+
+def test_taa_update_safeguard_row_is_fp():
+    rng = np.random.default_rng(2)
+    w, d, m = 5, 4, 2
+    x, R = rand(rng, w, d), rand(rng, w, d)
+    dX, dF = rand(rng, m, w, d), rand(rng, m, w, d)
+    mask = jnp.ones((w,), jnp.float32)
+    out = taa_update(x, R, dX, dF, mask, 1e-4, safeguard_row=w - 1)
+    np.testing.assert_allclose(
+        np.asarray(out)[w - 1], np.asarray(x + R)[w - 1], atol=1e-5
+    )

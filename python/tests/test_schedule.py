@@ -1,0 +1,56 @@
+"""Schedule/coefficient identities (mirrors rust/src/schedule tests)."""
+
+import numpy as np
+
+from compile import schedule
+
+
+def test_linear_betas_endpoints():
+    b = schedule.linear_betas()
+    assert abs(b[0] - 1e-4) < 1e-12
+    assert abs(b[-1] - 0.02) < 1e-12
+    assert np.all(np.diff(b) > 0)
+
+
+def test_alpha_bar_telescopes():
+    b = schedule.linear_betas()
+    ab = schedule.alpha_bars(b)
+    acc = 1.0
+    for i in [0, 1, 10, 500, 999]:
+        acc = np.prod(1.0 - b[: i + 1])
+        assert abs(ab[i] - acc) < 1e-14
+
+
+def test_ddim_signal_preservation():
+    cs = schedule.sampler_coeffs(50, eta=0.0)
+    b = schedule.linear_betas()
+    ab = schedule.alpha_bars(b)
+    taus = schedule.subset_timesteps(1000, 50)
+    for t in range(1, 51):
+        hi = ab[taus[t - 1]]
+        lo = ab[taus[t - 2]] if t >= 2 else 1.0
+        assert abs(cs["a"][t] * np.sqrt(hi) - np.sqrt(lo)) < 1e-12
+        assert abs(cs["a"][t] * np.sqrt(1 - hi) + cs["b"][t] - np.sqrt(1 - lo)) < 1e-12
+
+
+def test_ddpm_variance_preservation():
+    cs = schedule.sampler_coeffs(100, eta=1.0)
+    b = schedule.linear_betas()
+    ab = schedule.alpha_bars(b)
+    taus = schedule.subset_timesteps(1000, 100)
+    for t in range(2, 101):
+        hi, lo = ab[taus[t - 1]], ab[taus[t - 2]]
+        direction = cs["a"][t] * np.sqrt(1 - hi) + cs["b"][t]
+        total = direction**2 + cs["c"][t - 1] ** 2
+        assert abs(total - (1 - lo)) < 1e-10
+
+
+def test_eta_scales_noise():
+    half = schedule.sampler_coeffs(50, eta=0.5)
+    full = schedule.sampler_coeffs(50, eta=1.0)
+    np.testing.assert_allclose(half["c"], 0.5 * full["c"], atol=1e-14)
+
+
+def test_ddim_is_deterministic():
+    cs = schedule.sampler_coeffs(25, eta=0.0)
+    assert np.all(cs["c"] == 0.0)

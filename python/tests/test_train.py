@@ -1,0 +1,21 @@
+"""Training smoke: loss decreases, save/load roundtrip."""
+
+import numpy as np
+
+from compile import train
+
+
+def test_short_training_decreases_loss(tmp_path):
+    params, log = train.train(steps=40, batch=32, lr=2e-3, verbose=False, log_every=10)
+    losses = [l for _, l in log]
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+    # save/load roundtrip preserves every tensor bit-exactly.
+    p = tmp_path / "w.npz"
+    train.save_params(str(p), params)
+    loaded = train.load_params(str(p))
+    flat_a = train.flatten_params(params)
+    flat_b = train.flatten_params(loaded)
+    assert flat_a.keys() == flat_b.keys()
+    for k in flat_a:
+        np.testing.assert_array_equal(flat_a[k], flat_b[k])

@@ -1,0 +1,73 @@
+//! PJRT runtime benchmarks: eps_batch latency per compiled variant and the
+//! fused solver_step artifact. Skipped when artifacts are absent.
+//!
+//! These are the numbers behind Remark 5.1: on CPU a batch-N ε call costs
+//! ~N× a batch-1 call (no parallel hardware), so wall-clock speedup comes
+//! from *round reduction* only; the per-variant latencies quantify that.
+
+use parataa::runtime::{default_artifacts_dir, DeviceActor, EPS_BATCH_SIZES};
+use parataa::util::rng::Pcg64;
+use parataa::util::stats::bench;
+use std::time::Duration;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("eps_batch_1.hlo.txt").exists() {
+        println!("bench_runtime: artifacts missing, skipping (run `make artifacts`)");
+        return;
+    }
+    println!("=== bench_runtime ===");
+    let actor = DeviceActor::spawn(&dir, 256).unwrap();
+    let handle = actor.handle();
+    let mut rng = Pcg64::seeded(2);
+
+    for &n in EPS_BATCH_SIZES {
+        let x = rng.gaussian_vec(n * 256);
+        let t: Vec<i32> = (0..n as i32).map(|i| i * (999 / n.max(1) as i32)).collect();
+        let y: Vec<i32> = (0..n as i32).map(|i| i % 8).collect();
+        // warm (compiles on first call)
+        let _ = handle.eps_batch(&x, &t, &y, 5.0).unwrap();
+        let r = bench(
+            &format!("pjrt eps_batch_{n}"),
+            Duration::from_millis(100),
+            Duration::from_millis(800),
+            || {
+                std::hint::black_box(handle.eps_batch(&x, &t, &y, 5.0).unwrap());
+            },
+        );
+        println!("{}  ({:.1} items/ms)", r.report(), n as f64 / (r.mean.as_secs_f64() * 1e3));
+    }
+
+    // Fused solver-step artifact.
+    if dir.join("solver_step_100.hlo.txt").exists() {
+        use parataa::runtime::device::{SolverStepInputs, SOLVER_HIST_COLS};
+        let (w, d) = (100usize, 256usize);
+        let c = w + 1;
+        let inputs = || SolverStepInputs {
+            xs_ext: vec![0.1; c * d],
+            eps_ext: vec![0.1; c * d],
+            x_win: vec![0.1; w * d],
+            s_mat: vec![0.01; w * c],
+            b_mat: vec![0.01; w * c],
+            xi_comb: vec![0.0; w * d],
+            s1_mat: vec![0.01; w * c],
+            b1_mat: vec![0.01; w * c],
+            xi1_comb: vec![0.0; w * d],
+            dx: vec![0.01; SOLVER_HIST_COLS * w * d],
+            df: vec![0.01; SOLVER_HIST_COLS * w * d],
+            mask: vec![1.0; w],
+            fp_mask: vec![0.0; w],
+            lam: 1e-4,
+        };
+        let _ = handle.solver_step(w, inputs()).unwrap();
+        let r = bench(
+            "pjrt solver_step_100 (fused round)",
+            Duration::from_millis(100),
+            Duration::from_millis(800),
+            || {
+                std::hint::black_box(handle.solver_step(w, inputs()).unwrap());
+            },
+        );
+        println!("{}", r.report());
+    }
+}

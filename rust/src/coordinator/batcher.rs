@@ -1,0 +1,241 @@
+//! Dynamic batcher — coalesces ε jobs across concurrent solves.
+//!
+//! Each in-flight ParaTAA solve emits one ε job per parallel round (its
+//! active window). With many requests in flight, executing those jobs one
+//! by one wastes device occupancy; the batcher drains the job queue,
+//! groups jobs by guidance scale (a scalar graph input), concatenates their
+//! items, runs ONE backing `eps_batch` call per group, and scatters the
+//! results back. This is the cross-request analog of the paper's
+//! within-request window parallelism, and the moral equivalent of vLLM's
+//! continuous batching for diffusion rounds.
+
+use crate::model::{Cond, EpsModel};
+use crate::util::channel::{bounded, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One ε job (a whole window from one solve round).
+struct EpsJob {
+    x: Vec<f32>,
+    t: Vec<usize>,
+    conds: Vec<Cond>,
+    guidance: f32,
+    reply: Sender<Vec<f32>>,
+}
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum items (window rows) per merged device call.
+    pub max_items: usize,
+    /// How long to linger for more jobs once one is pending.
+    pub linger: Duration,
+    /// Job queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_items: 100,
+            linger: Duration::from_micros(200),
+            queue_capacity: 256,
+        }
+    }
+}
+
+/// The batcher thread + its submission handle.
+pub struct Batcher {
+    tx: Sender<EpsJob>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn over a backing model (typically [`crate::runtime::PjrtEps`] or
+    /// [`crate::model::gmm::GmmEps`]).
+    pub fn spawn(model: Arc<dyn EpsModel>, cfg: BatcherConfig) -> Self {
+        let (tx, rx) = bounded::<EpsJob>(cfg.queue_capacity);
+        let join = std::thread::Builder::new()
+            .name("parataa-batcher".to_string())
+            .spawn(move || run_batcher(model, rx, cfg))
+            .expect("spawn batcher");
+        Batcher { tx, join: Some(join) }
+    }
+
+    /// An [`EpsModel`] handle that submits through this batcher.
+    pub fn eps_handle(&self, dim: usize, name: &str) -> BatchedEps {
+        BatchedEps { tx: self.tx.clone(), dim, name: name.to_string() }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.tx.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn run_batcher(model: Arc<dyn EpsModel>, rx: Receiver<EpsJob>, cfg: BatcherConfig) {
+    let d = model.dim();
+    while let Some(first) = rx.recv() {
+        // Collect: the first job plus whatever arrives within the linger
+        // window, up to max_items.
+        let mut jobs = vec![first];
+        let mut items: usize = jobs[0].t.len();
+        let deadline = std::time::Instant::now() + cfg.linger;
+        while items < cfg.max_items {
+            let now = std::time::Instant::now();
+            let job = if now < deadline {
+                match rx.recv_timeout(deadline - now) {
+                    Ok(Some(j)) => j,
+                    _ => break,
+                }
+            } else {
+                match rx.try_recv() {
+                    Some(j) => j,
+                    None => break,
+                }
+            };
+            items += job.t.len();
+            jobs.push(job);
+        }
+
+        // Group by guidance (bit-exact: it is a scalar input of the graph).
+        let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
+        for (i, j) in jobs.iter().enumerate() {
+            let key = j.guidance.to_bits();
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+
+        for (gbits, idxs) in groups {
+            let guidance = f32::from_bits(gbits);
+            let total: usize = idxs.iter().map(|&i| jobs[i].t.len()).sum();
+            let mut x = Vec::with_capacity(total * d);
+            let mut t = Vec::with_capacity(total);
+            let mut conds = Vec::with_capacity(total);
+            for &i in &idxs {
+                x.extend_from_slice(&jobs[i].x);
+                t.extend_from_slice(&jobs[i].t);
+                conds.extend_from_slice(&jobs[i].conds);
+            }
+            let mut out = vec![0.0f32; total * d];
+            model.eps_batch(&x, &t, &conds, guidance, &mut out);
+            // Scatter back.
+            let mut off = 0;
+            for &i in &idxs {
+                let n = jobs[i].t.len();
+                let slice = out[off * d..(off + n) * d].to_vec();
+                off += n;
+                let _ = jobs[i].reply.send(slice);
+            }
+        }
+    }
+}
+
+/// `EpsModel` handle submitting through a [`Batcher`]. Clonable, Send+Sync.
+#[derive(Clone)]
+pub struct BatchedEps {
+    tx: Sender<EpsJob>,
+    dim: usize,
+    name: String,
+}
+
+impl EpsModel for BatchedEps {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) {
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .send(EpsJob {
+                x: xs.to_vec(),
+                t: train_ts.to_vec(),
+                conds: conds.to_vec(),
+                guidance,
+                reply: rtx,
+            })
+            .ok()
+            .expect("batcher is down");
+        let eps = rrx.recv().expect("batcher dropped reply");
+        out.copy_from_slice(&eps);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::schedule::{BetaSchedule, NoiseSchedule};
+    use crate::util::rng::Pcg64;
+
+    fn gmm() -> Arc<GmmEps> {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(1);
+        let d = 6;
+        let means: Vec<f32> = (0..3 * d).map(|_| rng.next_f32()).collect();
+        Arc::new(GmmEps::new(means, d, 0.2, ns.alpha_bars.clone()))
+    }
+
+    #[test]
+    fn batched_matches_direct() {
+        let model = gmm();
+        let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
+        let handle = batcher.eps_handle(6, "gmm-batched");
+        let mut rng = Pcg64::seeded(2);
+        let xs: Vec<f32> = (0..4 * 6).map(|_| rng.next_f32()).collect();
+        let ts = vec![10usize, 200, 500, 900];
+        let conds = vec![Cond::Class(0), Cond::Class(1), Cond::Class(2), Cond::Uncond];
+        let mut via_batch = vec![0.0f32; 4 * 6];
+        handle.eps_batch(&xs, &ts, &conds, 2.0, &mut via_batch);
+        let mut direct = vec![0.0f32; 4 * 6];
+        model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
+        assert_eq!(via_batch, direct);
+    }
+
+    #[test]
+    fn concurrent_jobs_all_answered() {
+        let model = gmm();
+        let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let handle = batcher.eps_handle(6, "gmm-batched");
+                let model = model.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Pcg64::seeded(100 + i);
+                    let n = 3;
+                    let xs: Vec<f32> = (0..n * 6).map(|_| rng.next_f32()).collect();
+                    let ts = vec![50usize * (i as usize + 1); n];
+                    let conds = vec![Cond::Class(i as usize % 3); n];
+                    // mix of two guidance scales exercises grouping
+                    let g = if i % 2 == 0 { 1.0 } else { 3.0 };
+                    let mut out = vec![0.0f32; n * 6];
+                    handle.eps_batch(&xs, &ts, &conds, g, &mut out);
+                    let mut expect = vec![0.0f32; n * 6];
+                    model.eps_batch(&xs, &ts, &conds, g, &mut expect);
+                    assert_eq!(out, expect);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Trajectory cache — §4.2 as a serving feature.
+//!
+//! The paper observes that users iterate on prompts, so solved trajectories
+//! for *similar* conditions are plentiful and make excellent warm starts
+//! (Fig. 5/13/14). The coordinator keeps an LRU of recent trajectories keyed
+//! by (sampler scenario, condition weights, seed) and serves the nearest
+//! donor within a similarity threshold.
+
+use crate::equations::States;
+use crate::model::Cond;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A cached solve.
+#[derive(Clone)]
+pub struct CachedTrajectory {
+    /// Scenario key, e.g. "DDIM-50" — trajectories are only comparable
+    /// within the same sampler/step grid.
+    pub scenario: String,
+    /// Noise seed of the solve (the donor's ξ must be reused for the warm
+    /// start to be meaningful).
+    pub seed: u64,
+    /// Dense condition weights.
+    pub weights: Vec<f32>,
+    /// Full trajectory x_0..x_T.
+    pub trajectory: States,
+    /// The ξ draws of the solve.
+    pub xi: States,
+}
+
+/// LRU trajectory cache (thread-safe).
+pub struct TrajectoryCache {
+    capacity: usize,
+    n_components: usize,
+    entries: Mutex<VecDeque<CachedTrajectory>>,
+}
+
+impl TrajectoryCache {
+    pub fn new(capacity: usize, n_components: usize) -> Self {
+        TrajectoryCache { capacity, n_components, entries: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a solved trajectory (evicting the oldest beyond capacity).
+    pub fn insert(&self, entry: CachedTrajectory) {
+        let mut e = self.entries.lock().unwrap();
+        e.push_back(entry);
+        while e.len() > self.capacity {
+            e.pop_front();
+        }
+    }
+
+    /// Find the closest donor for `cond` in `scenario` with the same seed,
+    /// within L2 distance `max_dist` on condition weights. Exact-condition
+    /// matches are preferred (distance 0).
+    pub fn lookup(
+        &self,
+        scenario: &str,
+        seed: u64,
+        cond: &Cond,
+        max_dist: f32,
+    ) -> Option<CachedTrajectory> {
+        let w = cond.to_weights(self.n_components);
+        let e = self.entries.lock().unwrap();
+        let mut best: Option<(f32, &CachedTrajectory)> = None;
+        for entry in e.iter() {
+            if entry.scenario != scenario || entry.seed != seed {
+                continue;
+            }
+            let d2: f32 = entry
+                .weights
+                .iter()
+                .zip(w.iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let d = d2.sqrt();
+            if d <= max_dist && best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                best = Some((d, entry));
+            }
+        }
+        best.map(|(_, e)| e.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(scenario: &str, seed: u64, weights: Vec<f32>) -> CachedTrajectory {
+        CachedTrajectory {
+            scenario: scenario.to_string(),
+            seed,
+            weights,
+            trajectory: States::zeros(4, 2),
+            xi: States::zeros(4, 2),
+        }
+    }
+
+    #[test]
+    fn lookup_prefers_closest() {
+        let c = TrajectoryCache::new(8, 4);
+        c.insert(entry("DDIM-50", 1, vec![1.0, 0.0, 0.0, 0.0]));
+        c.insert(entry("DDIM-50", 1, vec![0.5, 0.5, 0.0, 0.0]));
+        let got = c
+            .lookup("DDIM-50", 1, &Cond::Weights(vec![0.6, 0.4, 0.0, 0.0]), 1.0)
+            .unwrap();
+        assert_eq!(got.weights, vec![0.5, 0.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scenario_and_seed_must_match() {
+        let c = TrajectoryCache::new(8, 4);
+        c.insert(entry("DDIM-50", 1, vec![1.0, 0.0, 0.0, 0.0]));
+        assert!(c.lookup("DDIM-25", 1, &Cond::Class(0), 10.0).is_none());
+        assert!(c.lookup("DDIM-50", 2, &Cond::Class(0), 10.0).is_none());
+        assert!(c.lookup("DDIM-50", 1, &Cond::Class(0), 10.0).is_some());
+    }
+
+    #[test]
+    fn distance_threshold_applies() {
+        let c = TrajectoryCache::new(8, 2);
+        c.insert(entry("DDPM-100", 3, vec![1.0, 0.0]));
+        // Class(1) is weights [0,1]: distance sqrt(2) ≈ 1.41
+        assert!(c.lookup("DDPM-100", 3, &Cond::Class(1), 1.0).is_none());
+        assert!(c.lookup("DDPM-100", 3, &Cond::Class(1), 1.5).is_some());
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let c = TrajectoryCache::new(2, 2);
+        c.insert(entry("s", 1, vec![1.0, 0.0]));
+        c.insert(entry("s", 2, vec![1.0, 0.0]));
+        c.insert(entry("s", 3, vec![1.0, 0.0]));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup("s", 1, &Cond::Class(0), 10.0).is_none(), "oldest evicted");
+        assert!(c.lookup("s", 3, &Cond::Class(0), 10.0).is_some());
+    }
+}

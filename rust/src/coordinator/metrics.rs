@@ -1,0 +1,127 @@
+//! Service metrics: counters + latency/round distributions.
+
+use crate::util::stats::percentile;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Aggregated service metrics (interior-mutable, shared by workers).
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+#[derive(Default)]
+struct Inner {
+    completed: u64,
+    failed: u64,
+    warm_starts: u64,
+    latencies_ms: Vec<f64>,
+    rounds: Vec<f64>,
+    nfes: Vec<f64>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub failed: u64,
+    pub warm_starts: u64,
+    pub uptime: Duration,
+    pub throughput_rps: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    pub mean_rounds: f64,
+    pub mean_nfe: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+
+    pub fn record_success(&self, latency: Duration, rounds: usize, nfe: usize, warm: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        if warm {
+            m.warm_starts += 1;
+        }
+        m.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        m.rounds.push(rounds as f64);
+        m.nfes.push(nfe as f64);
+    }
+
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed();
+        let mean = |v: &[f64]| {
+            if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
+        };
+        MetricsSnapshot {
+            completed: m.completed,
+            failed: m.failed,
+            warm_starts: m.warm_starts,
+            uptime,
+            throughput_rps: m.completed as f64 / uptime.as_secs_f64().max(1e-9),
+            latency_ms_p50: percentile(&m.latencies_ms, 0.50),
+            latency_ms_p95: percentile(&m.latencies_ms, 0.95),
+            latency_ms_p99: percentile(&m.latencies_ms, 0.99),
+            mean_rounds: mean(&m.rounds),
+            mean_nfe: mean(&m.nfes),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} failed={} warm={} | {:.2} req/s | latency ms p50={:.1} p95={:.1} p99={:.1} | rounds μ={:.1} | nfe μ={:.0}",
+            self.completed,
+            self.failed,
+            self.warm_starts,
+            self.throughput_rps,
+            self.latency_ms_p50,
+            self.latency_ms_p95,
+            self.latency_ms_p99,
+            self.mean_rounds,
+            self.mean_nfe,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_success(Duration::from_millis(10), 7, 700, false);
+        m.record_success(Duration::from_millis(30), 9, 900, true);
+        m.record_failure();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.warm_starts, 1);
+        assert!((s.mean_rounds - 8.0).abs() < 1e-9);
+        assert!(s.latency_ms_p50 >= 10.0 && s.latency_ms_p99 <= 30.5);
+        assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn empty_snapshot_is_finite() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.mean_rounds, 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Serving coordinator — the L3 system layer (vLLM-router-shaped).
+//!
+//! ParaTAA turns one sampling request into a *sequence of parallel rounds*,
+//! each of which is a batched ε_θ evaluation. A serving deployment has many
+//! such requests in flight; this layer provides what the paper's multi-GPU
+//! testbed provided implicitly:
+//!
+//! - [`request`]  — request/response types and handles;
+//! - [`batcher`]  — dynamic batching: ε jobs from concurrent solves are
+//!   coalesced into single device calls (the cross-request analog of the
+//!   paper's within-request window parallelism);
+//! - [`scheduler`] — a slot budget bounding total in-flight window rows
+//!   (the "GPU memory" the paper's window size w trades against, §5.2);
+//! - [`cache`]    — trajectory cache: solved trajectories are kept and
+//!   donated as initializations for similar conditions (§4.2 as a serving
+//!   feature — the paper's "users adjust prompts" scenario);
+//! - [`metrics`]  — latency/throughput/round accounting;
+//! - [`server`]   — worker pool tying it together.
+
+pub mod batcher;
+pub mod cache;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchedEps, Batcher, BatcherConfig};
+pub use cache::TrajectoryCache;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{SampleRequest, SampleResponse, SamplerSpec};
+pub use scheduler::SlotBudget;
+pub use server::{Coordinator, CoordinatorConfig};

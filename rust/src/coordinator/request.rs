@@ -1,0 +1,133 @@
+//! Request/response types for the sampling service.
+
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{Method, SolverConfig};
+use std::time::Duration;
+
+/// Which sequential algorithm (and how many steps) the request wants to
+/// reproduce in parallel.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplerSpec {
+    pub kind: SamplerKind,
+    pub steps: usize,
+}
+
+impl SamplerSpec {
+    pub fn ddim(steps: usize) -> Self {
+        SamplerSpec { kind: SamplerKind::Ddim, steps }
+    }
+    pub fn ddpm(steps: usize) -> Self {
+        SamplerSpec { kind: SamplerKind::Ddpm, steps }
+    }
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.kind.label(), self.steps)
+    }
+}
+
+/// One sampling request.
+#[derive(Debug, Clone)]
+pub struct SampleRequest {
+    /// Condition ("class" or "prompt embedding").
+    pub cond: Cond,
+    /// Noise seed (determines the image; parallel == sequential per seed).
+    pub seed: u64,
+    pub sampler: SamplerSpec,
+    pub guidance: f32,
+    /// Solver method (ParaTAA by default).
+    pub method: Method,
+    /// Order k; `None` = coordinator default for the scenario.
+    pub k: Option<usize>,
+    /// Anderson history size m.
+    pub m: usize,
+    /// Sliding window size; `None` = full window.
+    pub window: Option<usize>,
+    /// Early-stop cap on parallel rounds; `None` = run to the criterion.
+    pub max_rounds: Option<usize>,
+    /// Consult/populate the trajectory cache (§4.2 warm starts).
+    pub use_trajectory_cache: bool,
+}
+
+impl SampleRequest {
+    /// A ParaTAA request with the paper's defaults.
+    pub fn parataa(cond: Cond, seed: u64, sampler: SamplerSpec) -> Self {
+        SampleRequest {
+            cond,
+            seed,
+            sampler,
+            guidance: 5.0,
+            method: Method::Taa,
+            k: None,
+            m: 3,
+            window: None,
+            max_rounds: None,
+            use_trajectory_cache: false,
+        }
+    }
+
+    /// Materialize the solver configuration for this request.
+    pub fn solver_config(&self) -> SolverConfig {
+        let steps = self.sampler.steps;
+        let mut cfg = SolverConfig::parataa(steps);
+        cfg.method = self.method;
+        cfg.m = self.m;
+        cfg.guidance = self.guidance;
+        if let Some(k) = self.k {
+            cfg.k = k;
+        }
+        if self.method == Method::FixedPoint && self.k.is_none() {
+            cfg.k = steps; // Shih et al. baseline default
+        }
+        if let Some(w) = self.window {
+            cfg.window = w;
+        }
+        if let Some(s) = self.max_rounds {
+            cfg.s_max = s;
+        } else {
+            cfg.s_max = 4 * steps;
+        }
+        cfg
+    }
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct SampleResponse {
+    /// The sample x_0 (a 16×16 image for the shipped models).
+    pub sample: Vec<f32>,
+    /// Parallel rounds used (the paper's "Steps").
+    pub rounds: usize,
+    /// Total ε_θ evaluations.
+    pub nfe: usize,
+    /// Whether the stopping criterion was met.
+    pub converged: bool,
+    /// Whether a cached trajectory seeded this solve.
+    pub warm_started: bool,
+    /// End-to-end latency (queue + solve).
+    pub latency: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_labels() {
+        assert_eq!(SamplerSpec::ddim(50).label(), "DDIM-50");
+        assert_eq!(SamplerSpec::ddpm(100).label(), "DDPM-100");
+    }
+
+    #[test]
+    fn request_materializes_config() {
+        let r = SampleRequest::parataa(Cond::Class(1), 7, SamplerSpec::ddim(50));
+        let cfg = r.solver_config();
+        assert_eq!(cfg.method, Method::Taa);
+        assert_eq!(cfg.window, 50);
+        assert_eq!(cfg.s_max, 200);
+        let fp = SampleRequest {
+            method: Method::FixedPoint,
+            ..SampleRequest::parataa(Cond::Class(1), 7, SamplerSpec::ddim(50))
+        };
+        assert_eq!(fp.solver_config().k, 50, "FP defaults to k = w (PL iteration)");
+    }
+}

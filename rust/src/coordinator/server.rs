@@ -1,0 +1,314 @@
+//! The coordinator server: request queue → worker pool → parallel solves.
+//!
+//! Wiring (see module docs in `coordinator/mod.rs`):
+//!
+//! ```text
+//!   submit() ──► bounded queue ──► worker pool ──► solver::solve
+//!                                   │  ▲               │ one ε job / round
+//!                                   │  └─ slot budget  ▼
+//!                                   │            dynamic batcher ──► device
+//!                                   └─ trajectory cache (warm starts)
+//! ```
+
+use super::cache::{CachedTrajectory, TrajectoryCache};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{SampleRequest, SampleResponse};
+use super::scheduler::SlotBudget;
+use crate::model::EpsModel;
+use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
+use crate::solver::{self, init::init_from_trajectory, Problem};
+use crate::util::channel::{bounded, Receiver, Sender};
+use anyhow::Result;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator tuning.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads (concurrent solves).
+    pub workers: usize,
+    /// Total window-row slots in flight (the "device memory" budget).
+    pub slot_budget: usize,
+    /// Request queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Trajectory cache entries.
+    pub cache_capacity: usize,
+    /// Max condition-weight distance for a warm-start donor.
+    pub cache_max_dist: f32,
+    /// T_init = ceil(frac · steps) when warm-starting (§4.2).
+    pub cache_t_init_frac: f64,
+    /// Number of condition components (for densifying `Cond`s).
+    pub n_components: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            slot_budget: 400,
+            queue_capacity: 128,
+            cache_capacity: 64,
+            cache_max_dist: 0.5,
+            cache_t_init_frac: 0.7,
+            n_components: 8,
+        }
+    }
+}
+
+struct Job {
+    req: SampleRequest,
+    reply: Sender<Result<SampleResponse>>,
+    enqueued: Instant,
+}
+
+/// Handle to an in-flight request.
+pub struct ResponseHandle {
+    rx: Receiver<Result<SampleResponse>>,
+}
+
+impl ResponseHandle {
+    /// Block until the sample is ready.
+    pub fn wait(self) -> Result<SampleResponse> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|| Err(anyhow::anyhow!("coordinator shut down")))
+    }
+}
+
+/// The sampling service.
+pub struct Coordinator {
+    tx: Sender<Job>,
+    metrics: Arc<Metrics>,
+    cache: Arc<TrajectoryCache>,
+    budget: Arc<SlotBudget>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the service over a model (direct or batcher-wrapped).
+    pub fn start(model: Arc<dyn EpsModel>, cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(TrajectoryCache::new(cfg.cache_capacity, cfg.n_components));
+        let budget = Arc::new(SlotBudget::new(cfg.slot_budget));
+        let schedule = Arc::new(NoiseSchedule::new(BetaSchedule::Linear, 1000));
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let model = model.clone();
+                let metrics = metrics.clone();
+                let cache = cache.clone();
+                let budget = budget.clone();
+                let schedule = schedule.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("parataa-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            let res =
+                                handle_job(&job, &*model, &schedule, &cache, &budget, &cfg);
+                            match &res {
+                                Ok(r) => metrics.record_success(
+                                    r.latency,
+                                    r.rounds,
+                                    r.nfe,
+                                    r.warm_started,
+                                ),
+                                Err(_) => metrics.record_failure(),
+                            }
+                            let _ = job.reply.send(res);
+                        }
+                    })
+                    .expect("spawn coordinator worker")
+            })
+            .collect();
+        Coordinator { tx, metrics, cache, budget, workers }
+    }
+
+    /// Enqueue a request (blocking if the queue is full — backpressure).
+    pub fn submit(&self, req: SampleRequest) -> ResponseHandle {
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .send(Job { req, reply: rtx, enqueued: Instant::now() })
+            .ok()
+            .expect("coordinator is down");
+        ResponseHandle { rx: rrx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn sample(&self, req: SampleRequest) -> Result<SampleResponse> {
+        self.submit(req).wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Trajectory-cache size (diagnostic).
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Free slots (diagnostic).
+    pub fn slots_available(&self) -> usize {
+        self.budget.available()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn handle_job(
+    job: &Job,
+    model: &dyn EpsModel,
+    schedule: &NoiseSchedule,
+    cache: &TrajectoryCache,
+    budget: &SlotBudget,
+    cfg: &CoordinatorConfig,
+) -> Result<SampleResponse> {
+    let req = &job.req;
+    let steps = req.sampler.steps;
+    let coeffs = SamplerCoeffs::new(schedule, req.sampler.kind, steps);
+    let solver_cfg = req.solver_config();
+    let scenario = req.sampler.label();
+
+    let mut problem = Problem::new(&coeffs, model, req.cond.clone(), req.seed);
+    let mut warm = false;
+    if req.use_trajectory_cache {
+        if let Some(donor) = cache.lookup(&scenario, req.seed, &req.cond, cfg.cache_max_dist)
+        {
+            let t_init =
+                ((cfg.cache_t_init_frac * steps as f64).ceil() as usize).clamp(1, steps);
+            init_from_trajectory(&mut problem, donor.trajectory, donor.xi, t_init);
+            warm = true;
+        }
+    }
+
+    // Hold window-row slots for the duration of the solve.
+    let _slots = budget.acquire(solver_cfg.window.min(steps));
+    let result = solver::solve(&problem, &solver_cfg);
+
+    if req.use_trajectory_cache && result.converged {
+        cache.insert(CachedTrajectory {
+            scenario,
+            seed: req.seed,
+            weights: req.cond.to_weights(cfg.n_components),
+            trajectory: result.xs.clone(),
+            xi: problem.xi.clone(),
+        });
+    }
+
+    Ok(SampleResponse {
+        sample: result.xs.row(0).to_vec(),
+        rounds: result.iterations,
+        nfe: result.total_nfe,
+        converged: result.converged,
+        warm_started: warm,
+        latency: job.enqueued.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplerSpec;
+    use crate::model::gmm::GmmEps;
+    use crate::model::Cond;
+    use crate::solver::Method;
+    use crate::util::rng::Pcg64;
+
+    fn gmm_model() -> Arc<GmmEps> {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(7);
+        let d = 8;
+        let means: Vec<f32> = (0..8 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        Arc::new(GmmEps::new(means, d, 0.25, ns.alpha_bars.clone()))
+    }
+
+    fn basic_req(seed: u64) -> SampleRequest {
+        let mut r = SampleRequest::parataa(Cond::Class(1), seed, SamplerSpec::ddim(16));
+        r.guidance = 2.0;
+        r
+    }
+
+    #[test]
+    fn serves_a_request() {
+        let coord = Coordinator::start(gmm_model(), CoordinatorConfig::default());
+        let resp = coord.sample(basic_req(1)).unwrap();
+        assert!(resp.converged);
+        assert!(resp.rounds < 16);
+        assert_eq!(resp.sample.len(), 8);
+        let m = coord.metrics();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn parallel_result_matches_sequential_through_service() {
+        let model = gmm_model();
+        let coord = Coordinator::start(model.clone(), CoordinatorConfig::default());
+        let mut req = basic_req(5);
+        req.method = Method::Taa;
+        let resp = coord.sample(req).unwrap();
+        // sequential oracle
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        let p = Problem::new(&coeffs, &*model, Cond::Class(1), 5);
+        let seq = crate::solver::sample_sequential(&p, 2.0);
+        crate::util::proplite::assert_close(&resp.sample, seq.xs.row(0), 5e-3, 5e-2, "service")
+            .unwrap();
+    }
+
+    #[test]
+    fn concurrent_load_all_complete() {
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 3, slot_budget: 48, ..Default::default() },
+        );
+        let handles: Vec<_> = (0..12).map(|i| coord.submit(basic_req(i))).collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(r.converged);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.failed, 0);
+        assert_eq!(coord.slots_available(), 48);
+    }
+
+    #[test]
+    fn warm_start_reduces_rounds() {
+        let coord = Coordinator::start(gmm_model(), CoordinatorConfig::default());
+        let mut cold = basic_req(9);
+        cold.use_trajectory_cache = true;
+        let r1 = coord.sample(cold.clone()).unwrap();
+        assert!(!r1.warm_started);
+        assert_eq!(coord.cache_len(), 1);
+        // Same seed, nearby condition: should warm start and converge faster.
+        let mut near = cold.clone();
+        near.cond = Cond::Class(1).lerp(&Cond::Class(2), 0.05, 8);
+        let r2 = coord.sample(near).unwrap();
+        assert!(r2.warm_started);
+        assert!(r2.rounds <= r1.rounds, "warm {} vs cold {}", r2.rounds, r1.rounds);
+    }
+
+    #[test]
+    fn batched_model_through_coordinator() {
+        use crate::coordinator::batcher::{Batcher, BatcherConfig};
+        let model = gmm_model();
+        let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
+        let handle = Arc::new(batcher.eps_handle(8, "gmm-batched"));
+        let coord = Coordinator::start(handle, CoordinatorConfig::default());
+        let handles: Vec<_> = (0..6).map(|i| coord.submit(basic_req(100 + i))).collect();
+        for h in handles {
+            assert!(h.wait().unwrap().converged);
+        }
+        drop(coord); // shut down workers before the batcher drops
+    }
+}

@@ -1,0 +1,413 @@
+//! The triangular nonlinear system (Definition 2.1) and its residuals.
+//!
+//! Unknowns are x_0..x_{T-1} with x_T = ξ_T fixed. The k-th order equation
+//! producing row p = t−1 (for t = 1..T) is
+//!
+//!   x_p = F_p^{(k)} = ā_{t,t_k}·x_{t_k}
+//!       + Σ_{j=t}^{t_k} ā_{t,j-1}·b_j·ε_θ(x_j, j)
+//!       + Σ_{j=t}^{t_k} ā_{t,j-1}·c_{j-1}·ξ_{j-1},      t_k = min(t+k−1, B)
+//!
+//! (eq. 9). `B` is the *boundary*: the first frozen state. For the full
+//! system B = T (Definition 2.1 verbatim). When the sliding window (§2.2)
+//! freezes states ≥ B at tolerance-level accuracy, the window's equations
+//! must clamp t_k to B — reaching past the boundary would couple the window
+//! to several mutually-inconsistent frozen states, leaving a permanent
+//! first-order residual floor that stalls the convergence front. Clamped to
+//! the single boundary state, the sub-system's unique solution is exactly
+//! the sequential rollout from x_B, so residuals can always reach zero.
+//! (This also matches Remark 2.4: the PL iteration of Shih et al. integrates
+//! from the window's base state only.)
+//!
+//! All orders k are equivalent and share the unique solution of the
+//! sequential procedure (Theorem 2.2) — property-tested in this module.
+//!
+//! Two evaluation paths exist:
+//! - the direct loop form (this module) used by the native solver, and
+//! - dense banded matrices (`build_s_matrix`/`build_b_matrix`) with
+//!   identical semantics, which feed the AOT HLO artifact
+//!   (`python/compile/kernels/banded_combine.py`) so that the *order k is
+//!   runtime data, not a compiled shape*.
+
+use crate::schedule::SamplerCoeffs;
+
+/// Flat storage for the T+1 solver states x_0..x_T, each of dimension `d`.
+#[derive(Debug, Clone)]
+pub struct States {
+    pub d: usize,
+    /// Row-major `[(T+1) * d]`; row index = solver state index.
+    pub data: Vec<f32>,
+}
+
+impl States {
+    pub fn zeros(t_count: usize, d: usize) -> Self {
+        States { d, data: vec![0.0; (t_count + 1) * d] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    #[inline]
+    pub fn row(&self, t: usize) -> &[f32] {
+        &self.data[t * self.d..(t + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, t: usize) -> &mut [f32] {
+        &mut self.data[t * self.d..(t + 1) * self.d]
+    }
+
+    pub fn set_row(&mut self, t: usize, v: &[f32]) {
+        self.row_mut(t).copy_from_slice(v);
+    }
+}
+
+/// Effective upper index t_k = min(t + k − 1, boundary).
+#[inline]
+pub fn t_k(t: usize, k: usize, boundary: usize) -> usize {
+    (t + k - 1).min(boundary)
+}
+
+/// Evaluate F_p^{(k)} for producing row `p` with frozen boundary `boundary`,
+/// writing into `out`.
+///
+/// `eps` must hold ε_θ(x_j, ·) at state-row j for every j ∈ [p+1, t_k]
+/// (the caller guarantees freshness: active rows recomputed this iteration,
+/// the boundary row served from the cache).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_fk(
+    coeffs: &SamplerCoeffs,
+    xs: &States,
+    eps: &States,
+    xi: &States,
+    k: usize,
+    boundary: usize,
+    p: usize,
+    out: &mut [f32],
+) {
+    let t = p + 1;
+    let tk = t_k(t, k, boundary);
+    let d = xs.d;
+    debug_assert!(boundary <= coeffs.steps);
+    debug_assert!(t <= boundary, "row {p} at/above the boundary {boundary}");
+    debug_assert_eq!(out.len(), d);
+
+    // ā_{t,t_k}·x_{t_k}
+    let lead = coeffs.abar(t, tk) as f32;
+    let x_tk = xs.row(tk);
+    for (o, &v) in out.iter_mut().zip(x_tk.iter()) {
+        *o = lead * v;
+    }
+    // Σ ā_{t,j-1}·b_j·ε_j  +  Σ ā_{t,j-1}·c_{j-1}·ξ_{j-1}
+    for j in t..=tk {
+        let ab = coeffs.abar(t, j - 1);
+        let ce = (ab * coeffs.b[j]) as f32;
+        let e = eps.row(j);
+        let cx = (ab * coeffs.c[j - 1]) as f32;
+        if cx != 0.0 {
+            let xr = xi.row(j - 1);
+            for i in 0..d {
+                out[i] += ce * e[i] + cx * xr[i];
+            }
+        } else {
+            for (o, &v) in out.iter_mut().zip(e.iter()) {
+                *o += ce * v;
+            }
+        }
+    }
+}
+
+/// First-order residual r_p = ‖x_p − a_{p+1}x_{p+1} − b_{p+1}ε_{p+1} −
+/// c_p ξ_p‖² (eq. 11) — the universal stopping criterion for every order k.
+pub fn residual_sq(
+    coeffs: &SamplerCoeffs,
+    xs: &States,
+    eps: &States,
+    xi: &States,
+    p: usize,
+) -> f64 {
+    let t = p + 1;
+    let a = coeffs.a[t] as f32;
+    let b = coeffs.b[t] as f32;
+    let c = coeffs.c[p] as f32;
+    let xp = xs.row(p);
+    let xt = xs.row(t);
+    let e = eps.row(t);
+    let xi_p = xi.row(p);
+    let mut acc = 0.0f64;
+    for i in 0..xs.d {
+        let r = xp[i] - a * xt[i] - b * e[i] - c * xi_p[i];
+        acc += (r as f64) * (r as f64);
+    }
+    acc
+}
+
+/// Combined noise vectors ξ̄_p = Σ_j ā_{t,j-1}·c_{j-1}·ξ_{j-1} for rows
+/// `p0..p0+w` — one of the three inputs of the AOT `solver_step` artifact.
+pub fn build_xi_comb(
+    coeffs: &SamplerCoeffs,
+    xi: &States,
+    k: usize,
+    boundary: usize,
+    p0: usize,
+    w: usize,
+) -> Vec<f32> {
+    let d = xi.d;
+    let mut data = vec![0.0f32; w * d];
+    for r in 0..w {
+        let p = p0 + r;
+        let t = p + 1;
+        let tk = t_k(t, k, boundary);
+        let row = &mut data[r * d..(r + 1) * d];
+        for j in t..=tk {
+            let coeff = (coeffs.abar(t, j - 1) * coeffs.c[j - 1]) as f32;
+            if coeff != 0.0 {
+                let xi_row = xi.row(j - 1);
+                for (o, &v) in row.iter_mut().zip(xi_row.iter()) {
+                    *o += coeff * v;
+                }
+            }
+        }
+    }
+    data
+}
+
+/// Dense selector matrix S ∈ R^{W × (T+1)}: row p has ā_{t,t_k} at column
+/// t_k. Multiplying the full state stack reproduces the x_{t_k} term.
+/// Used to feed the HLO `banded_combine` artifact (order k as data).
+pub fn build_s_matrix(
+    coeffs: &SamplerCoeffs,
+    k: usize,
+    boundary: usize,
+    p0: usize,
+    w: usize,
+) -> Vec<f32> {
+    let t_count = coeffs.steps;
+    let cols = t_count + 1;
+    let mut s = vec![0.0f32; w * cols];
+    for r in 0..w {
+        let p = p0 + r;
+        let t = p + 1;
+        let tk = t_k(t, k, boundary);
+        s[r * cols + tk] = coeffs.abar(t, tk) as f32;
+    }
+    s
+}
+
+/// Dense banded matrix B ∈ R^{W × (T+1)}: row p has ā_{t,j-1}·b_j at column
+/// j for j ∈ [t, t_k]. Multiplying the eps stack reproduces the ε sum.
+pub fn build_b_matrix(
+    coeffs: &SamplerCoeffs,
+    k: usize,
+    boundary: usize,
+    p0: usize,
+    w: usize,
+) -> Vec<f32> {
+    let t_count = coeffs.steps;
+    let cols = t_count + 1;
+    let mut bm = vec![0.0f32; w * cols];
+    for r in 0..w {
+        let p = p0 + r;
+        let t = p + 1;
+        let tk = t_k(t, k, boundary);
+        for j in t..=tk {
+            bm[r * cols + j] = (coeffs.abar(t, j - 1) * coeffs.b[j]) as f32;
+        }
+    }
+    bm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerKind};
+    use crate::util::proplite::{self, forall, size_in};
+    use crate::util::rng::Pcg64;
+
+    fn setup(steps: usize, kind: SamplerKind) -> SamplerCoeffs {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        SamplerCoeffs::new(&ns, kind, steps)
+    }
+
+    fn random_states(rng: &mut Pcg64, rows: usize, d: usize) -> States {
+        let mut s = States::zeros(rows - 1, d);
+        rng.fill_gaussian(&mut s.data);
+        s
+    }
+
+    /// Sequential rollout with a fixed eps table (treated as the true ε_θ).
+    fn rollout(coeffs: &SamplerCoeffs, eps: &States, xi: &States, d: usize) -> States {
+        let steps = coeffs.steps;
+        let mut xs = States::zeros(steps, d);
+        xs.set_row(steps, xi.row(steps));
+        for t in (1..=steps).rev() {
+            let row: Vec<f32> = (0..d)
+                .map(|i| {
+                    coeffs.a[t] as f32 * xs.row(t)[i]
+                        + coeffs.b[t] as f32 * eps.row(t)[i]
+                        + coeffs.c[t - 1] as f32 * xi.row(t - 1)[i]
+                })
+                .collect();
+            xs.set_row(t - 1, &row);
+        }
+        xs
+    }
+
+    #[test]
+    fn first_order_fk_is_sequential_step() {
+        // k=1: F_p^{(1)} must equal a_{p+1}x_{p+1} + b_{p+1}ε_{p+1} + c_pξ_p.
+        forall("fk1_sequential", 16, |rng, _| {
+            let steps = size_in(rng, 2, 12);
+            let d = size_in(rng, 1, 6);
+            let coeffs = setup(steps, SamplerKind::Ddpm);
+            let xs = random_states(rng, steps + 1, d);
+            let eps = random_states(rng, steps + 1, d);
+            let xi = random_states(rng, steps + 1, d);
+            for p in 0..steps {
+                let mut out = vec![0.0f32; d];
+                eval_fk(&coeffs, &xs, &eps, &xi, 1, steps, p, &mut out);
+                let t = p + 1;
+                let expect: Vec<f32> = (0..d)
+                    .map(|i| {
+                        coeffs.a[t] as f32 * xs.row(t)[i]
+                            + coeffs.b[t] as f32 * eps.row(t)[i]
+                            + coeffs.c[p] as f32 * xi.row(p)[i]
+                    })
+                    .collect();
+                proplite::assert_close(&out, &expect, 1e-5, 1e-4, "F^(1)")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn orders_agree_on_exact_solution() {
+        // Theorem 2.2: on the exact sequential solution every F_p^{(k)} must
+        // reproduce x_p for every order k.
+        forall("orders_equivalent", 16, |rng, _| {
+            let steps = size_in(rng, 3, 10);
+            let d = size_in(rng, 1, 5);
+            let coeffs = setup(steps, SamplerKind::Ddpm);
+            let eps = random_states(rng, steps + 1, d);
+            let xi = random_states(rng, steps + 1, d);
+            let xs = rollout(&coeffs, &eps, &xi, d);
+            for k in 1..=steps {
+                for p in 0..steps {
+                    let mut out = vec![0.0f32; d];
+                    eval_fk(&coeffs, &xs, &eps, &xi, k, steps, p, &mut out);
+                    proplite::assert_close(
+                        out.as_slice(),
+                        xs.row(p),
+                        2e-4,
+                        2e-3,
+                        &format!("k={k} p={p}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clamped_boundary_subsystem_solves_exactly() {
+        // With an arbitrary (inconsistent) frozen boundary state x_B, the
+        // clamped order-k sub-system below B must be solved exactly by the
+        // sequential rollout from x_B — the property that keeps the sliding
+        // window from stalling.
+        forall("boundary_clamp", 12, |rng, _| {
+            let steps = size_in(rng, 4, 10);
+            let d = size_in(rng, 1, 4);
+            let b = size_in(rng, 2, steps); // boundary state index
+            let k = size_in(rng, 1, steps);
+            let coeffs = setup(steps, SamplerKind::Ddpm);
+            let eps = random_states(rng, steps + 1, d);
+            let xi = random_states(rng, steps + 1, d);
+            // xs: arbitrary garbage above b is fine — clamp must not read it.
+            let mut xs = random_states(rng, steps + 1, d);
+            // Sequential rollout below the boundary only.
+            for t in (1..=b).rev() {
+                let row: Vec<f32> = (0..d)
+                    .map(|i| {
+                        coeffs.a[t] as f32 * xs.row(t)[i]
+                            + coeffs.b[t] as f32 * eps.row(t)[i]
+                            + coeffs.c[t - 1] as f32 * xi.row(t - 1)[i]
+                    })
+                    .collect();
+                xs.set_row(t - 1, &row);
+            }
+            for p in 0..b {
+                let mut out = vec![0.0f32; d];
+                eval_fk(&coeffs, &xs, &eps, &xi, k, b, p, &mut out);
+                proplite::assert_close(
+                    out.as_slice(),
+                    xs.row(p),
+                    2e-4,
+                    2e-3,
+                    &format!("boundary={b} k={k} p={p}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_zero_on_solution() {
+        let mut rng = Pcg64::seeded(3);
+        let steps = 8;
+        let d = 4;
+        let coeffs = setup(steps, SamplerKind::Ddim);
+        let eps = random_states(&mut rng, steps + 1, d);
+        let xi = random_states(&mut rng, steps + 1, d);
+        let mut xs = rollout(&coeffs, &eps, &xi, d);
+        for p in 0..steps {
+            assert!(residual_sq(&coeffs, &xs, &eps, &xi, p) < 1e-10);
+        }
+        // Perturb one row -> its residual becomes positive.
+        xs.row_mut(2)[0] += 0.5;
+        assert!(residual_sq(&coeffs, &xs, &eps, &xi, 2) > 0.01);
+    }
+
+    #[test]
+    fn matrix_path_matches_direct() {
+        // S·x_stack + B·eps_stack + ξ̄ == eval_fk for every row, order, and
+        // boundary — the contract the HLO artifact path relies on.
+        forall("banded_matches_direct", 12, |rng, _| {
+            let steps = size_in(rng, 3, 9);
+            let d = size_in(rng, 1, 4);
+            let k = size_in(rng, 1, steps);
+            let b = size_in(rng, 2, steps);
+            let coeffs = setup(steps, SamplerKind::Ddpm);
+            let xs = random_states(rng, steps + 1, d);
+            let eps = random_states(rng, steps + 1, d);
+            let xi = random_states(rng, steps + 1, d);
+            let w = b; // window covers all rows below the boundary
+            let s_mat = build_s_matrix(&coeffs, k, b, 0, w);
+            let b_mat = build_b_matrix(&coeffs, k, b, 0, w);
+            let xi_comb = build_xi_comb(&coeffs, &xi, k, b, 0, w);
+            let cols = steps + 1;
+            let mut sx = vec![0.0f32; w * d];
+            matmul(&s_mat, &xs.data, &mut sx, w, cols, d);
+            let mut be = vec![0.0f32; w * d];
+            matmul(&b_mat, &eps.data, &mut be, w, cols, d);
+            for p in 0..w {
+                let via_mat: Vec<f32> = (0..d)
+                    .map(|i| sx[p * d + i] + be[p * d + i] + xi_comb[p * d + i])
+                    .collect();
+                let mut direct = vec![0.0f32; d];
+                eval_fk(&coeffs, &xs, &eps, &xi, k, b, p, &mut direct);
+                proplite::assert_close(&via_mat, &direct, 1e-4, 1e-3, &format!("row {p}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ddim_xicomb_is_zero() {
+        let mut rng = Pcg64::seeded(4);
+        let coeffs = setup(10, SamplerKind::Ddim);
+        let xi = random_states(&mut rng, 11, 3);
+        let xic = build_xi_comb(&coeffs, &xi, 4, 10, 0, 10);
+        assert!(xic.iter().all(|&v| v == 0.0), "ODE sampler has no noise term");
+    }
+}

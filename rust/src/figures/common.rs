@@ -1,0 +1,180 @@
+//! Shared scaffolding for the figure/table generators: scenario builders,
+//! snapshot-capturing solves, and quality evaluation against the analytic
+//! reference.
+
+use crate::model::gmm::GmmEps;
+use crate::model::{Cond, EpsModel};
+use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+use crate::solver::{self, Method, Problem, SolveResult, SolverConfig};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Which denoiser backs a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelChoice {
+    /// Trained DiT-tiny via PJRT artifacts (the paper's DiT column).
+    Dit,
+    /// Analytic template-GMM (the paper's SD column — "SDa").
+    Gmm,
+}
+
+impl ModelChoice {
+    pub fn parse(s: &str) -> ModelChoice {
+        match s {
+            "dit" => ModelChoice::Dit,
+            "gmm" | "sda" => ModelChoice::Gmm,
+            other => panic!("unknown model '{other}' (use dit|gmm)"),
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelChoice::Dit => "DiT-tiny",
+            ModelChoice::Gmm => "SDa(GMM)",
+        }
+    }
+}
+
+/// A scenario = model × sampler × steps (one column group of Table 1).
+pub struct Scenario {
+    pub model_choice: ModelChoice,
+    pub kind: SamplerKind,
+    pub steps: usize,
+    pub guidance: f32,
+    /// The eps model used by solves.
+    pub model: Arc<dyn EpsModel>,
+    /// The analytic GMM (always available — the quality classifier).
+    pub classifier: Arc<GmmEps>,
+    pub schedule: NoiseSchedule,
+}
+
+/// Keep one device actor alive for all DiT scenarios in a process.
+static DEVICE: std::sync::OnceLock<crate::runtime::DeviceActor> = std::sync::OnceLock::new();
+
+impl Scenario {
+    pub fn new(model_choice: ModelChoice, kind: SamplerKind, steps: usize) -> Scenario {
+        let schedule = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let classifier = Arc::new(GmmEps::sd_analog(schedule.alpha_bars.clone()));
+        let (model, guidance): (Arc<dyn EpsModel>, f32) = match model_choice {
+            ModelChoice::Gmm => {
+                // CFG 2.0 for the analytic model: its exact posterior makes
+                // g=5 extrapolation far stiffer than a trained network (the
+                // score is piecewise-near-discrete at low noise). Documented
+                // in DESIGN.md §Substitutions.
+                (classifier.clone(), 2.0)
+            }
+            ModelChoice::Dit => {
+                let actor = DEVICE.get_or_init(|| {
+                    let actor = crate::runtime::DeviceActor::spawn(
+                        crate::runtime::default_artifacts_dir(),
+                        256,
+                    )
+                    .expect("artifacts missing — run `make artifacts`");
+                    // Warm every batch variant once so lazy XLA compilation
+                    // never contaminates a timed solve.
+                    let h = actor.handle();
+                    for &n in crate::runtime::EPS_BATCH_SIZES {
+                        let _ = h.eps_batch(&vec![0.0; n * 256], &vec![0; n], &vec![0; n], 1.0);
+                    }
+                    actor
+                });
+                (Arc::new(crate::runtime::PjrtEps::new(actor.handle())), 5.0)
+            }
+        };
+        Scenario { model_choice, kind, steps, guidance, model, classifier, schedule }
+    }
+
+    pub fn coeffs(&self) -> SamplerCoeffs {
+        SamplerCoeffs::new(&self.schedule, self.kind, self.steps)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} {}-{}", self.model_choice.label(), self.kind.label(), self.steps)
+    }
+
+    /// Draw a random condition the way the paper draws prompts/classes.
+    pub fn random_cond(&self, rng: &mut Pcg64) -> Cond {
+        Cond::Class(rng.below(8) as usize)
+    }
+}
+
+/// A solve that also captured the x₀ estimate after every round.
+pub struct SnapshotSolve {
+    pub result: SolveResult,
+    /// `snapshots[i]` = x₀ after round i+1.
+    pub snapshots: Vec<Vec<f32>>,
+}
+
+/// Run a solve capturing per-round x₀ snapshots (for quality-vs-rounds
+/// curves — the Fig. 3/4/14 x-axis).
+pub fn solve_with_snapshots(problem: &Problem, cfg: &SolverConfig) -> SnapshotSolve {
+    let mut snapshots = Vec::new();
+    let result = solver::driver::solve_with(problem, cfg, |_, xs| {
+        snapshots.push(xs.row(0).to_vec());
+        false
+    });
+    SnapshotSolve { result, snapshots }
+}
+
+/// Default solver config for a method within a scenario (paper settings).
+pub fn method_config(method: Method, steps: usize, k: Option<usize>, guidance: f32) -> SolverConfig {
+    let mut cfg = match method {
+        Method::FixedPoint => SolverConfig::fp_baseline(steps),
+        _ => SolverConfig { method, ..SolverConfig::parataa(steps) },
+    };
+    if let Some(k) = k {
+        cfg.k = k;
+    }
+    cfg.guidance = guidance;
+    cfg.s_max = 4 * steps;
+    cfg
+}
+
+/// Tuned order k for "FP+" (grid-searched; see `parataa fig7`).
+pub fn fp_plus_k(steps: usize) -> usize {
+    (steps / 4).max(2)
+}
+
+/// Ground-truth reference set: n samples from the data distribution.
+pub fn reference_samples(classifier: &GmmEps, n: usize, seed: u64) -> (Vec<f32>, Vec<Cond>) {
+    let mut rng = Pcg64::new(seed, 0xda7a);
+    let mut xs = Vec::with_capacity(n * classifier.d);
+    let mut conds = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cond = Cond::Class(rng.below(8) as usize);
+        xs.extend_from_slice(&classifier.sample_data(&cond, &mut rng));
+        conds.push(cond);
+    }
+    (xs, conds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_gmm_builds() {
+        let s = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 10);
+        assert_eq!(s.label(), "SDa(GMM) DDIM-10");
+        assert_eq!(s.coeffs().steps, 10);
+        assert_eq!(s.model.dim(), 256);
+    }
+
+    #[test]
+    fn snapshots_track_rounds() {
+        let s = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 8);
+        let coeffs = s.coeffs();
+        let problem = Problem::new(&coeffs, &*s.model, Cond::Class(0), 3);
+        let cfg = method_config(Method::Taa, 8, None, s.guidance);
+        let out = solve_with_snapshots(&problem, &cfg);
+        assert_eq!(out.snapshots.len(), out.result.iterations);
+        assert!(out.result.converged);
+    }
+
+    #[test]
+    fn reference_samples_shape() {
+        let s = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 8);
+        let (xs, conds) = reference_samples(&s.classifier, 16, 0);
+        assert_eq!(xs.len(), 16 * 256);
+        assert_eq!(conds.len(), 16);
+    }
+}

@@ -1,0 +1,133 @@
+//! Fig. 7 — hyperparameter grid search over (order k, history m).
+//!
+//! Metric: mean parallel rounds to reach the stopping criterion over many
+//! seeds, per (k, m) cell, for the four §5.1 scenarios. m = 1 degenerates
+//! to plain fixed-point (the paper's Appendix C observation); the optimal m
+//! should land in 2–4 and the optimum should be robust to large-enough k.
+
+use super::common::{method_config, ModelChoice, Scenario};
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{self, Method, Problem};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::Table;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+pub fn fig7(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "gmm"));
+    let seeds = args.usize_or("seeds", 32);
+    let seed0 = args.u64_or("seed", 700);
+    let ms = args.usize_list("ms", &[1, 2, 3, 4, 5]);
+    let pool = ThreadPool::with_available_parallelism();
+
+    let scenarios: Vec<(SamplerKind, usize)> = vec![
+        (SamplerKind::Ddim, 25),
+        (SamplerKind::Ddim, 50),
+        (SamplerKind::Ddim, 100),
+        (SamplerKind::Ddpm, 100),
+    ];
+
+    let mut t = Table::new(
+        "Figure 7: grid search over (k, m) — mean rounds to criterion",
+        &["scenario", "k", "m", "mean_rounds", "converged_frac"],
+    );
+    for (kind, steps) in scenarios {
+        let scenario = Scenario::new(model, kind, steps);
+        let ks: Vec<usize> = args.usize_list(
+            "ks",
+            &[1, 2, 3, 4, 6, 8, 12, steps / 4, steps / 2, steps]
+                .iter()
+                .copied()
+                .filter(|&k| k >= 1 && k <= steps)
+                .collect::<Vec<_>>()
+                .as_slice(),
+        );
+        let mut ks = ks;
+        ks.sort_unstable();
+        ks.dedup();
+        for &k in &ks {
+            for &m in &ms {
+                let coeffs = Arc::new(scenario.coeffs());
+                let modelref = scenario.model.clone();
+                let guidance = scenario.guidance;
+                let jobs: Vec<u64> = (0..seeds as u64).map(|i| seed0 + i).collect();
+                let outs = pool.map(jobs, move |seed| {
+                    let mut rng = Pcg64::new(seed, 0x717);
+                    let cond = Cond::Class(rng.below(8) as usize);
+                    let problem = Problem::new(&coeffs, &*modelref, cond, seed);
+                    let mut cfg = method_config(
+                        if m <= 1 { Method::FixedPoint } else { Method::Taa },
+                        steps,
+                        Some(k),
+                        guidance,
+                    );
+                    cfg.m = m;
+                    cfg.s_max = 4 * steps;
+                    let r = solver::solve(&problem, &cfg);
+                    (r.iterations, r.converged)
+                });
+                let mean =
+                    outs.iter().map(|&(i, _)| i).sum::<usize>() as f64 / outs.len() as f64;
+                let conv =
+                    outs.iter().filter(|&&(_, c)| c).count() as f64 / outs.len() as f64;
+                t.push_row(vec![
+                    scenario.label(),
+                    k.to_string(),
+                    m.to_string(),
+                    format!("{mean:.2}"),
+                    format!("{conv:.2}"),
+                ]);
+            }
+        }
+        eprintln!("  {} grid done", scenario.label());
+    }
+    t
+}
+
+/// Summarize a fig7 table: best (k, m) per scenario.
+pub fn best_cells(t: &Table) -> Vec<(String, usize, usize, f64)> {
+    let mut best: Vec<(String, usize, usize, f64)> = Vec::new();
+    for row in &t.rows {
+        let scen = row[0].clone();
+        let k: usize = row[1].parse().unwrap();
+        let m: usize = row[2].parse().unwrap();
+        let rounds: f64 = row[3].parse().unwrap();
+        let conv: f64 = row[4].parse().unwrap();
+        if conv < 0.99 {
+            continue;
+        }
+        match best.iter_mut().find(|(s, _, _, _)| *s == scen) {
+            Some(entry) if rounds < entry.3 => *entry = (scen, k, m, rounds),
+            Some(_) => {}
+            None => best.push((scen, k, m, rounds)),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_grid_runs() {
+        let args = Args::parse(
+            ["f", "--model", "gmm", "--seeds", "2", "--ks", "2,4", "--ms", "1,3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        // Shrink scenarios via small steps is not exposed; instead just
+        // verify the full function on the smallest configuration would be
+        // slow — so test best_cells on a synthetic table.
+        let mut t = Table::new("g", &["scenario", "k", "m", "mean_rounds", "converged_frac"]);
+        t.push_row(vec!["A".into(), "2".into(), "1".into(), "20.0".into(), "1.00".into()]);
+        t.push_row(vec!["A".into(), "4".into(), "3".into(), "9.0".into(), "1.00".into()]);
+        t.push_row(vec!["A".into(), "8".into(), "3".into(), "7.0".into(), "0.50".into()]);
+        let best = best_cells(&t);
+        assert_eq!(best.len(), 1);
+        assert_eq!((best[0].1, best[0].2), (4, 3), "unconverged cells excluded");
+        let _ = args;
+    }
+}

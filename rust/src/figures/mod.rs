@@ -1,0 +1,51 @@
+//! Experiment harness — one generator per paper figure/table.
+//!
+//! Every generator returns a [`crate::util::table::Table`] which the CLI
+//! writes to `results/<name>.csv` and prints as ASCII. See DESIGN.md §4 for
+//! the experiment ↔ module index and EXPERIMENTS.md for recorded runs.
+
+pub mod ablate;
+pub mod common;
+pub mod grid;
+pub mod qualitative;
+pub mod quality;
+pub mod residuals;
+pub mod table1;
+
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+/// Run a named experiment, returning (csv name, table) pairs.
+pub fn run(name: &str, args: &Args) -> Vec<(String, Table)> {
+    match name {
+        "fig1" => vec![("fig1".into(), residuals::fig1(args))],
+        "fig2" => vec![("fig2".into(), residuals::fig2(args))],
+        "fig3" => vec![("fig3".into(), quality::fig3(args))],
+        "fig4" => vec![("fig4".into(), quality::fig4(args))],
+        "fig5" => vec![("fig5".into(), qualitative::fig5(args))],
+        "fig6" => {
+            let (a, b, c) = residuals::fig6(args);
+            vec![("fig6a".into(), a), ("fig6b".into(), b), ("fig6c".into(), c)]
+        }
+        "fig7" => {
+            let t = grid::fig7(args);
+            let mut best = Table::new(
+                "Figure 7 summary: best (k, m) per scenario",
+                &["scenario", "k", "m", "mean_rounds"],
+            );
+            for (s, k, m, r) in grid::best_cells(&t) {
+                best.push_row(vec![s, k.to_string(), m.to_string(), format!("{r:.2}")]);
+            }
+            vec![("fig7".into(), t), ("fig7_best".into(), best)]
+        }
+        "fig14" => vec![("fig14".into(), quality::fig14(args))],
+        "table1" => vec![("table1".into(), table1::table1(args))],
+        "ablate" => vec![("ablate".into(), ablate::ablate(args))],
+        other => panic!("unknown experiment '{other}'"),
+    }
+}
+
+/// All experiment names in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig14", "table1", "ablate",
+];

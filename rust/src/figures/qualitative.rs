@@ -1,0 +1,99 @@
+//! Fig. 5/13 — qualitative iteration strips and trajectory-init
+//! interpolation, emitted as PGM images under `results/fig5/`.
+
+use super::common::{method_config, ModelChoice, Scenario};
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{init::init_from_trajectory, Method, Problem};
+use crate::util::cli::Args;
+use crate::util::image::{hstack, write_pgm};
+use crate::util::table::Table;
+
+/// Generate the four §5.3 rows: P1 random-init, P2 random-init, P2 from
+/// P1's trajectory (two T_init values). Each row is a strip of the x₀
+/// estimate after rounds 1, 2, 3, 5, 7, plus the converged image.
+pub fn fig5(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "gmm"));
+    let steps = args.usize_or("steps", 50);
+    let seed = args.u64_or("seed", 11);
+    let out_dir = args.get_or("out", "results/fig5");
+    let scenario = Scenario::new(model, SamplerKind::Ddim, steps);
+    let coeffs = scenario.coeffs();
+    let probe_rounds = [1usize, 2, 3, 5, 7];
+
+    // P1 / P2: "a horse photo" vs "an oil painting of a horse" becomes a
+    // pair of nearby template blends.
+    let p1 = Cond::Class(0);
+    let p2 = Cond::Class(0).lerp(&Cond::Class(6), 0.45, 8);
+
+    let donor_cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+    let donor_problem = Problem::new(&coeffs, &*scenario.model, p1.clone(), seed);
+    let donor = crate::solver::solve(&donor_problem, &donor_cfg);
+
+    let mut t = Table::new(
+        "Figure 5: qualitative trajectory-init strips (PGM files)",
+        &["row", "setting", "file", "rounds_to_criterion"],
+    );
+    let settings: Vec<(String, Cond, Option<usize>)> = vec![
+        ("p1-random".into(), p1.clone(), None),
+        ("p2-random".into(), p2.clone(), None),
+        (format!("p2-traj-tinit{}", steps), p2.clone(), Some(steps)),
+        (format!("p2-traj-tinit{}", 7 * steps / 10), p2.clone(), Some(7 * steps / 10)),
+    ];
+    for (i, (label, cond, t_init)) in settings.into_iter().enumerate() {
+        let mut problem = Problem::new(&coeffs, &*scenario.model, cond, seed);
+        if let Some(ti) = t_init {
+            init_from_trajectory(&mut problem, donor.xs.clone(), donor_problem.xi.clone(), ti);
+        }
+        let mut cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+        cfg.s_max = 3 * steps;
+        let mut frames: Vec<Vec<f32>> = Vec::new();
+        let result = crate::solver::driver::solve_with(&problem, &cfg, |rec, xs| {
+            if probe_rounds.contains(&rec.iter) {
+                frames.push(xs.row(0).to_vec());
+            }
+            false
+        });
+        frames.push(result.xs.row(0).to_vec()); // converged frame
+        let (strip, w, h) = hstack(&frames, 16, 16, 2);
+        let file = format!("{out_dir}/row{}_{label}.pgm", i + 1);
+        write_pgm(&file, &strip, w, h).expect("write pgm");
+        t.push_row(vec![
+            (i + 1).to_string(),
+            label,
+            file,
+            result.iterations.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_writes_strips() {
+        let dir = std::env::temp_dir().join("parataa_fig5_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = Args::parse(
+            [
+                "f",
+                "--model",
+                "gmm",
+                "--steps",
+                "10",
+                "--out",
+                dir.to_str().unwrap(),
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let t = fig5(&args);
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            assert!(std::path::Path::new(&row[2]).exists(), "missing {}", row[2]);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

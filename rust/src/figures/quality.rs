@@ -1,0 +1,290 @@
+//! Quality-vs-rounds figures: Fig. 3 (method comparison across scenarios),
+//! Fig. 4 (window-size trade-off), and Fig. 14 (trajectory-init CS curves).
+//!
+//! Each generator runs batches of solves while snapshotting the x₀ estimate
+//! after every parallel round, then evaluates FID/IS/CS proxies at each
+//! round — exactly the early-stopping evidence of §4.1.
+
+use super::common::{
+    fp_plus_k, method_config, reference_samples, solve_with_snapshots, ModelChoice, Scenario,
+};
+use crate::metrics::{cs_proxy, fid_proxy, is_proxy};
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{init::init_from_trajectory, Method, Problem};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::Table;
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+/// Per-round stacked snapshots for a batch of solves (padded by repeating
+/// each solve's final sample once it converged).
+pub struct BatchCurves {
+    /// `samples_at[r]` = all x₀ estimates after round r+1, stacked.
+    pub samples_at: Vec<Vec<f32>>,
+    pub conds: Vec<Cond>,
+    /// Per-solve rounds-to-criterion.
+    pub rounds: Vec<usize>,
+    /// Sequential reference samples (same seeds/conds).
+    pub sequential: Vec<f32>,
+    /// Wall-clock per parallel solve (seconds).
+    pub solve_secs: Vec<f64>,
+    /// Wall-clock per sequential rollout (seconds).
+    pub seq_secs: Vec<f64>,
+}
+
+/// Run `n` solves of `method` in a scenario, collecting snapshot stacks.
+pub fn batch_curves(
+    scenario: &Scenario,
+    method: Method,
+    k: Option<usize>,
+    n: usize,
+    max_rounds: usize,
+    seed0: u64,
+    pool: &ThreadPool,
+) -> BatchCurves {
+    let coeffs = Arc::new(scenario.coeffs());
+    let model = scenario.model.clone();
+    let guidance = scenario.guidance;
+    let steps = scenario.steps;
+
+    let jobs: Vec<u64> = (0..n as u64).map(|i| seed0 + i).collect();
+    let outs = pool.map(jobs, move |seed| {
+        let mut rng = Pcg64::new(seed, 0xc0d);
+        let cond = Cond::Class(rng.below(8) as usize);
+        let problem = Problem::new(&coeffs, &*model, cond.clone(), seed);
+        let mut cfg = method_config(method, steps, k, guidance);
+        cfg.s_max = max_rounds;
+        let t0 = std::time::Instant::now();
+        let snap = solve_with_snapshots(&problem, &cfg);
+        let solve_s = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let seq = crate::solver::sample_sequential(&problem, guidance);
+        let seq_s = t1.elapsed().as_secs_f64();
+        (snap, cond, seq.xs.row(0).to_vec(), solve_s, seq_s)
+    });
+
+    let d = scenario.model.dim();
+    let mut samples_at = vec![Vec::with_capacity(n * d); max_rounds];
+    let mut conds = Vec::with_capacity(n);
+    let mut rounds = Vec::with_capacity(n);
+    let mut sequential = Vec::with_capacity(n * d);
+    let mut solve_secs = Vec::with_capacity(n);
+    let mut seq_secs = Vec::with_capacity(n);
+    for (snap, cond, seq, solve_s, seq_s) in outs {
+        for r in 0..max_rounds {
+            let idx = r.min(snap.snapshots.len() - 1);
+            samples_at[r].extend_from_slice(&snap.snapshots[idx]);
+        }
+        conds.push(cond);
+        rounds.push(snap.result.iterations);
+        sequential.extend_from_slice(&seq);
+        solve_secs.push(solve_s);
+        seq_secs.push(seq_s);
+    }
+    BatchCurves { samples_at, conds, rounds, sequential, solve_secs, seq_secs }
+}
+
+/// Evaluate the scenario's quality metrics on a sample stack.
+pub fn quality_row(scenario: &Scenario, samples: &[f32], conds: &[Cond], reference: &[f32]) -> (f64, f64, f64) {
+    let fid = fid_proxy(samples, reference, scenario.classifier.d);
+    let is = is_proxy(samples, &scenario.classifier);
+    let cs = cs_proxy(samples, conds, &scenario.classifier);
+    (fid, is, cs)
+}
+
+/// Fig. 3 — quality vs s_max for FP / FP+ / ParaTAA across scenarios.
+pub fn fig3(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let n = args.usize_or("samples", 64);
+    let seed0 = args.u64_or("seed", 100);
+    let pool = ThreadPool::with_available_parallelism();
+
+    let scenarios: Vec<(SamplerKind, usize)> = vec![
+        (SamplerKind::Ddim, 25),
+        (SamplerKind::Ddim, 50),
+        (SamplerKind::Ddim, 100),
+        (SamplerKind::Ddpm, 100),
+    ];
+    let mut t = Table::new(
+        "Figure 3: quality vs max rounds (sequential reference in last rows)",
+        &["scenario", "method", "round", "fid_proxy", "is_proxy", "cs_proxy"],
+    );
+    for (kind, steps) in scenarios {
+        let scenario = Scenario::new(model, kind, steps);
+        let (reference, _) = reference_samples(&scenario.classifier, 512, 9);
+        let max_rounds = (steps / 2).max(12);
+        for (label, method, k) in [
+            ("FP", Method::FixedPoint, Some(steps)),
+            ("FP+", Method::FixedPoint, Some(fp_plus_k(steps))),
+            ("ParaTAA", Method::Taa, None),
+        ] {
+            let curves = batch_curves(&scenario, method, k, n, max_rounds, seed0, &pool);
+            let mean_rounds =
+                curves.rounds.iter().sum::<usize>() as f64 / curves.rounds.len() as f64;
+            eprintln!("  {} {label}: mean rounds {mean_rounds:.1}", scenario.label());
+            for (r, samples) in curves.samples_at.iter().enumerate() {
+                let (fid, is, cs) = quality_row(&scenario, samples, &curves.conds, &reference);
+                t.push_row(vec![
+                    scenario.label(),
+                    label.to_string(),
+                    (r + 1).to_string(),
+                    format!("{fid:.4}"),
+                    format!("{is:.3}"),
+                    format!("{cs:.3}"),
+                ]);
+            }
+            // Sequential reference line (round = 0 sentinel).
+            let (fid, is, cs) =
+                quality_row(&scenario, &curves.sequential, &curves.conds, &reference);
+            t.push_row(vec![
+                scenario.label(),
+                format!("{label}/sequential"),
+                "0".to_string(),
+                format!("{fid:.4}"),
+                format!("{is:.3}"),
+                format!("{cs:.3}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 4 — ParaTAA quality vs rounds under different window sizes.
+pub fn fig4(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let steps = args.usize_or("steps", 100);
+    let n = args.usize_or("samples", 32);
+    let windows = args.usize_list("windows", &[10, 20, 50, 100]);
+    let seed0 = args.u64_or("seed", 300);
+    let pool = ThreadPool::with_available_parallelism();
+
+    let scenario = Scenario::new(model, SamplerKind::Ddim, steps);
+    let (reference, _) = reference_samples(&scenario.classifier, 512, 9);
+    let mut t = Table::new(
+        "Figure 4: ParaTAA under different window sizes (DDIM-100)",
+        &["window", "round", "cs_proxy", "fid_proxy", "mean_rounds_to_criterion"],
+    );
+    for &w in &windows {
+        let coeffs = Arc::new(scenario.coeffs());
+        let modelref = scenario.model.clone();
+        let guidance = scenario.guidance;
+        let jobs: Vec<u64> = (0..n as u64).map(|i| seed0 + i).collect();
+        let max_rounds = 3 * steps;
+        let outs = pool.map(jobs, move |seed| {
+            let mut rng = Pcg64::new(seed, 0xc0d);
+            let cond = Cond::Class(rng.below(8) as usize);
+            let problem = Problem::new(&coeffs, &*modelref, cond.clone(), seed);
+            let mut cfg = method_config(Method::Taa, steps, None, guidance);
+            cfg.window = w;
+            cfg.s_max = max_rounds;
+            (solve_with_snapshots(&problem, &cfg), cond)
+        });
+        let mean_rounds: f64 =
+            outs.iter().map(|(s, _)| s.result.iterations).sum::<usize>() as f64 / n as f64;
+        eprintln!("  w={w}: mean rounds {mean_rounds:.1}");
+        let d = scenario.model.dim();
+        let probe: Vec<usize> = (0..max_rounds).step_by(2).collect();
+        for &r in &probe {
+            let mut stack = Vec::with_capacity(n * d);
+            let mut conds = Vec::with_capacity(n);
+            for (s, cond) in &outs {
+                let idx = r.min(s.snapshots.len() - 1);
+                stack.extend_from_slice(&s.snapshots[idx]);
+                conds.push(cond.clone());
+            }
+            let (fid, _is, cs) = quality_row(&scenario, &stack, &conds, &reference);
+            t.push_row(vec![
+                w.to_string(),
+                (r + 1).to_string(),
+                format!("{cs:.3}"),
+                format!("{fid:.4}"),
+                format!("{mean_rounds:.1}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 14 — CS-proxy vs rounds for the three §5.3 init settings.
+pub fn fig14(args: &Args) -> Table {
+    let steps = args.usize_or("steps", 50);
+    let n = args.usize_or("samples", 24);
+    let seed0 = args.u64_or("seed", 500);
+    let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, steps);
+    let coeffs = scenario.coeffs();
+    let max_rounds = 12;
+
+    // P1/P2: nearby "prompts" = blended conditions over templates.
+    let p1 = |_: &mut Pcg64| Cond::Class(0);
+    let p2 = Cond::Class(0).lerp(&Cond::Class(6), 0.35, 8);
+
+    let mut t = Table::new(
+        "Figure 14: CS-proxy vs rounds for three initialization settings",
+        &["setting", "round", "cs_proxy"],
+    );
+    let settings: Vec<(String, Option<usize>)> = vec![
+        ("random-init".to_string(), None),
+        (format!("traj-init Tinit={steps}"), Some(steps)),
+        (format!("traj-init Tinit={}", 7 * steps / 10), Some(7 * steps / 10)),
+    ];
+    let d = scenario.model.dim();
+    for (label, t_init) in settings {
+        let mut stacks: Vec<Vec<f32>> = vec![Vec::with_capacity(n * d); max_rounds];
+        let mut conds = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            let seed = seed0 + i;
+            let mut rng = Pcg64::new(seed, 0x1417);
+            // Solve P1 first (the donor trajectory).
+            let p1c = p1(&mut rng);
+            let donor_problem = Problem::new(&coeffs, &*scenario.model, p1c, seed);
+            let donor_cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+            let donor = crate::solver::solve(&donor_problem, &donor_cfg);
+            // Solve P2 with the chosen init.
+            let mut problem = Problem::new(&coeffs, &*scenario.model, p2.clone(), seed);
+            if let Some(ti) = t_init {
+                init_from_trajectory(&mut problem, donor.xs.clone(), donor_problem.xi.clone(), ti);
+            }
+            let mut cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+            cfg.s_max = max_rounds;
+            let snap = solve_with_snapshots(&problem, &cfg);
+            for r in 0..max_rounds {
+                let idx = r.min(snap.snapshots.len() - 1);
+                stacks[r].extend_from_slice(&snap.snapshots[idx]);
+            }
+            conds.push(p2.clone());
+        }
+        for (r, stack) in stacks.iter().enumerate() {
+            let cs = cs_proxy(stack, &conds, &scenario.classifier);
+            t.push_row(vec![label.clone(), (r + 1).to_string(), format!("{cs:.3}")]);
+        }
+        eprintln!("  {label}: done");
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_curves_shapes() {
+        let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 8);
+        let pool = ThreadPool::new(2);
+        let c = batch_curves(&scenario, Method::Taa, None, 3, 6, 42, &pool);
+        assert_eq!(c.samples_at.len(), 6);
+        assert_eq!(c.samples_at[0].len(), 3 * 256);
+        assert_eq!(c.conds.len(), 3);
+        assert_eq!(c.sequential.len(), 3 * 256);
+    }
+
+    #[test]
+    fn fig14_tiny() {
+        let args = Args::parse(
+            ["f", "--steps", "10", "--samples", "2"].iter().map(|s| s.to_string()),
+        );
+        let t = fig14(&args);
+        assert_eq!(t.rows.len(), 3 * 12);
+    }
+}

@@ -1,0 +1,222 @@
+//! Residual-convergence figures: Fig. 1 (FP vs order k), Fig. 2 (FP vs AA
+//! vs TAA), and Fig. 6 (per-timestep convergence, safeguard ablation,
+//! AA+ comparison, stability stress).
+//!
+//! All plot Σ_t r_{t-1} (or per-row r) against the parallel round index.
+
+use super::common::{method_config, ModelChoice, Scenario};
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{self, Method, Problem, SolverConfig};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+use crate::util::table::Table;
+
+fn residual_curve(
+    scenario: &Scenario,
+    cfg: &SolverConfig,
+    seed: u64,
+) -> (Vec<f64>, usize, bool) {
+    let coeffs = scenario.coeffs();
+    let mut rng = Pcg64::new(seed, 0xf16);
+    let cond = scenario.random_cond(&mut rng);
+    let problem = Problem::new(&coeffs, &*scenario.model, cond, seed);
+    let r = solver::solve(&problem, cfg);
+    let curve: Vec<f64> = r.records.iter().map(|rec| rec.residual_sum).collect();
+    (curve, r.iterations, r.converged)
+}
+
+/// Fig. 1 — FP residual convergence under different orders k.
+pub fn fig1(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let steps = args.usize_or("steps", 100);
+    let ks = args.usize_list("ks", &[1, 2, 4, 8, 20, steps]);
+    let seed = args.u64_or("seed", 1);
+    let s_max = args.usize_or("smax", 40);
+
+    let mut t = Table::new(
+        "Figure 1: FP residual convergence vs order k",
+        &["sampler", "k", "iter", "residual_sum"],
+    );
+    for kind in [SamplerKind::Ddim, SamplerKind::Ddpm] {
+        let scenario = Scenario::new(model, kind, steps);
+        for &k in &ks {
+            let mut cfg = method_config(Method::FixedPoint, steps, Some(k), scenario.guidance);
+            cfg.s_max = s_max;
+            let (curve, iters, conv) = residual_curve(&scenario, &cfg, seed);
+            eprintln!(
+                "  {} k={k}: {} rounds{}",
+                scenario.label(),
+                iters,
+                if conv { "" } else { " (cap)" }
+            );
+            for (i, r) in curve.iter().enumerate() {
+                t.push_row(vec![
+                    format!("{}-{}", kind.label(), steps),
+                    k.to_string(),
+                    (i + 1).to_string(),
+                    format!("{r:.6e}"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 2 — FP vs AA vs TAA under different k.
+pub fn fig2(args: &Args) -> Table {
+    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let steps = args.usize_or("steps", 100);
+    let ks = args.usize_list("ks", &[steps / 4, steps]);
+    let seed = args.u64_or("seed", 1);
+    let s_max = args.usize_or("smax", 40);
+
+    let mut t = Table::new(
+        "Figure 2: convergence of FP, AA, TAA under different k",
+        &["sampler", "method", "k", "iter", "residual_sum"],
+    );
+    for kind in [SamplerKind::Ddim, SamplerKind::Ddpm] {
+        let scenario = Scenario::new(model, kind, steps);
+        for &k in &ks {
+            for method in [Method::FixedPoint, Method::AndersonStd, Method::Taa] {
+                let mut cfg = method_config(method, steps, Some(k), scenario.guidance);
+                cfg.s_max = s_max;
+                let (curve, iters, _) = residual_curve(&scenario, &cfg, seed);
+                eprintln!("  {} {} k={k}: {} rounds", scenario.label(), method.label(), iters);
+                for (i, r) in curve.iter().enumerate() {
+                    t.push_row(vec![
+                        format!("{}-{}", kind.label(), steps),
+                        method.label().to_string(),
+                        k.to_string(),
+                        (i + 1).to_string(),
+                        format!("{r:.6e}"),
+                    ]);
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 6 — (a) per-timestep residuals under FP; (b) safeguard on/off;
+/// (c) AA vs AA+ vs TAA, plus a conditioning stress test (λ → 0).
+pub fn fig6(args: &Args) -> (Table, Table, Table) {
+    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let steps = args.usize_or("steps", 100);
+    let seed = args.u64_or("seed", 1);
+    let scenario = Scenario::new(model, SamplerKind::Ddpm, steps);
+    let coeffs = scenario.coeffs();
+
+    // (a) per-timestep residual convergence under FP.
+    let mut ta = Table::new(
+        "Figure 6a: per-timestep residual convergence (FP, DDPM)",
+        &["row", "iter", "residual"],
+    );
+    {
+        let mut cfg = method_config(Method::FixedPoint, steps, Some(steps / 4), scenario.guidance);
+        cfg.s_max = 50;
+        let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(2), seed);
+        let r = solver::solve(&problem, &cfg);
+        let probe_rows: Vec<usize> =
+            [0usize, steps / 5, 2 * steps / 5, 3 * steps / 5, 4 * steps / 5, steps - 1]
+                .to_vec();
+        for rec in &r.records {
+            for &row in &probe_rows {
+                let v = rec.row_residuals[row];
+                if v.is_finite() {
+                    ta.push_row(vec![
+                        row.to_string(),
+                        rec.iter.to_string(),
+                        format!("{v:.6e}"),
+                    ]);
+                }
+            }
+        }
+    }
+
+    // (b) safeguard ablation on TAA.
+    let mut tb = Table::new(
+        "Figure 6b: TAA with/without the Theorem 3.6 safeguard",
+        &["safeguard", "iter", "residual_sum"],
+    );
+    for sg in [true, false] {
+        let mut cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+        cfg.safeguard = sg;
+        cfg.s_max = 50;
+        let (curve, iters, _) = residual_curve(&scenario, &cfg, seed);
+        eprintln!("  safeguard={sg}: {iters} rounds");
+        for (i, r) in curve.iter().enumerate() {
+            t_push3(&mut tb, sg.to_string(), i + 1, *r);
+        }
+    }
+
+    // (c) AA vs AA+ vs TAA, at the paper ridge and at λ→0 (stress).
+    let mut tc = Table::new(
+        "Figure 6c: AA vs AA+ vs TAA (ridge and near-singular stress)",
+        &["method", "lambda", "iter", "residual_sum"],
+    );
+    for method in [Method::AndersonStd, Method::AndersonUpperTri, Method::Taa] {
+        for lambda in [1e-4f32, 1e-10] {
+            let mut cfg = method_config(method, steps, None, scenario.guidance);
+            cfg.lambda = lambda;
+            cfg.s_max = 50;
+            let (curve, iters, conv) = residual_curve(&scenario, &cfg, seed);
+            eprintln!(
+                "  {} λ={lambda:.0e}: {} rounds{}",
+                method.label(),
+                iters,
+                if conv { "" } else { " (cap)" }
+            );
+            for (i, r) in curve.iter().enumerate() {
+                tc.push_row(vec![
+                    method.label().to_string(),
+                    format!("{lambda:.0e}"),
+                    (i + 1).to_string(),
+                    format!("{r:.6e}"),
+                ]);
+            }
+        }
+    }
+    (ta, tb, tc)
+}
+
+fn t_push3(t: &mut Table, a: String, iter: usize, r: f64) {
+    t.push_row(vec![a, iter.to_string(), format!("{r:.6e}")]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_args(extra: &[&str]) -> Args {
+        let mut v = vec!["fig".to_string()];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        Args::parse(v)
+    }
+
+    #[test]
+    fn fig1_runs_on_gmm() {
+        let t = fig1(&tiny_args(&[
+            "--model", "gmm", "--steps", "12", "--ks", "1,4,12", "--smax", "15",
+        ]));
+        assert!(t.rows.len() > 20);
+        assert_eq!(t.header.len(), 4);
+    }
+
+    #[test]
+    fn fig2_runs_on_gmm() {
+        let t = fig2(&tiny_args(&[
+            "--model", "gmm", "--steps", "10", "--ks", "3", "--smax", "12",
+        ]));
+        // 2 samplers × 1 k × 3 methods, ≥1 row each
+        assert!(t.rows.len() >= 6);
+    }
+
+    #[test]
+    fn fig6_runs_on_gmm() {
+        let (a, b, c) = fig6(&tiny_args(&["--model", "gmm", "--steps", "10"]));
+        assert!(!a.rows.is_empty());
+        assert!(!b.rows.is_empty());
+        assert!(!c.rows.is_empty());
+    }
+}

@@ -1,0 +1,175 @@
+//! Table 1 — the headline comparison: Sequential vs FP vs FP+ vs ParaTAA
+//! across the eight scenario columns ({DiT-tiny, SDa} × {DDIM-25/50/100,
+//! DDPM-100}), reporting parallel Steps, wall-clock Time and quality.
+//!
+//! Early-stopping protocol (paper, Table 1 caption): FP reports the mean
+//! rounds to the stopping criterion; FP+ and ParaTAA report the first round
+//! at which batch quality matches the sequential batch (the Fig. 3 insight),
+//! with Time prorated to that round.
+
+use super::common::{fp_plus_k, reference_samples, ModelChoice, Scenario};
+use super::quality::{batch_curves, quality_row, BatchCurves};
+use crate::schedule::SamplerKind;
+use crate::solver::Method;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::util::threadpool::ThreadPool;
+
+/// One method's Table-1 cell.
+pub struct Cell {
+    pub steps: f64,
+    pub time_s: f64,
+    pub fid: f64,
+    pub is: f64,
+    pub cs: f64,
+}
+
+fn mean(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>() / v.len().max(1) as f64
+}
+
+/// Find the early-stop round: first round whose quality matches the
+/// sequential batch (CS within 0.3 absolute AND FID within 15% relative +
+/// a small absolute floor). Falls back to mean rounds-to-criterion.
+fn early_stop_round(
+    scenario: &Scenario,
+    curves: &BatchCurves,
+    reference: &[f32],
+    seq_q: (f64, f64, f64),
+) -> usize {
+    let (seq_fid, _seq_is, seq_cs) = seq_q;
+    for (r, stack) in curves.samples_at.iter().enumerate() {
+        let (fid, _is, cs) = quality_row(scenario, stack, &curves.conds, reference);
+        let fid_ok = fid <= seq_fid * 1.15 + 0.05;
+        let cs_ok = (cs - seq_cs).abs() <= 0.3;
+        if fid_ok && cs_ok {
+            return r + 1;
+        }
+    }
+    mean(&curves.rounds.iter().map(|&r| r as f64).collect::<Vec<_>>()).round() as usize
+}
+
+/// Compute one scenario's four rows.
+pub fn scenario_rows(
+    scenario: &Scenario,
+    n: usize,
+    seed0: u64,
+    pool: &ThreadPool,
+) -> Vec<(String, Cell)> {
+    let steps = scenario.steps;
+    let (reference, _) = reference_samples(&scenario.classifier, 1024, 9);
+    let max_rounds = steps + 1;
+
+    let mut rows = Vec::new();
+    // Run the three parallel methods (the sequential rollout rides along in
+    // each batch; use the first one for the Sequential row).
+    let mut seq_cell: Option<Cell> = None;
+    for (label, method, k) in [
+        ("FP", Method::FixedPoint, Some(steps)),
+        ("FP+", Method::FixedPoint, Some(fp_plus_k(steps))),
+        ("ParaTAA", Method::Taa, None),
+    ] {
+        let curves = batch_curves(scenario, method, k, n, max_rounds, seed0, pool);
+        let seq_q = quality_row(scenario, &curves.sequential, &curves.conds, &reference);
+        if seq_cell.is_none() {
+            seq_cell = Some(Cell {
+                steps: steps as f64,
+                time_s: mean(&curves.seq_secs),
+                fid: seq_q.0,
+                is: seq_q.1,
+                cs: seq_q.2,
+            });
+        }
+        let mean_rounds = mean(&curves.rounds.iter().map(|&r| r as f64).collect::<Vec<_>>());
+        let mean_time = mean(&curves.solve_secs);
+        let (est_steps, time_s, qr) = if label == "FP" {
+            // No early stopping for the FP baseline (paper protocol).
+            let q = quality_row(
+                scenario,
+                curves.samples_at.last().unwrap(),
+                &curves.conds,
+                &reference,
+            );
+            (mean_rounds, mean_time, q)
+        } else {
+            let stop = early_stop_round(scenario, &curves, &reference, seq_q);
+            let per_round = mean_time / mean_rounds.max(1.0);
+            let q = quality_row(
+                scenario,
+                &curves.samples_at[(stop - 1).min(curves.samples_at.len() - 1)],
+                &curves.conds,
+                &reference,
+            );
+            (stop as f64, per_round * stop as f64, q)
+        };
+        rows.push((
+            label.to_string(),
+            Cell { steps: est_steps, time_s, fid: qr.0, is: qr.1, cs: qr.2 },
+        ));
+        eprintln!("  {} {label}: steps {est_steps:.1}, {time_s:.3}s", scenario.label());
+    }
+    rows.insert(0, ("Sequential".to_string(), seq_cell.unwrap()));
+    rows
+}
+
+/// Generate the full Table 1.
+pub fn table1(args: &Args) -> Table {
+    let n = args.usize_or("samples", 32);
+    let seed0 = args.u64_or("seed", 1000);
+    let models: Vec<ModelChoice> = match args.get("model") {
+        Some(m) => vec![ModelChoice::parse(m)],
+        None => vec![ModelChoice::Dit, ModelChoice::Gmm],
+    };
+    let pool = ThreadPool::with_available_parallelism();
+
+    let mut t = Table::new(
+        "Table 1: parallel sampling methods across scenarios",
+        &["scenario", "method", "steps", "time_s", "fid_proxy", "is_proxy", "cs_proxy", "speedup_x"],
+    );
+    for model in models {
+        for (kind, steps) in [
+            (SamplerKind::Ddim, 25),
+            (SamplerKind::Ddim, 50),
+            (SamplerKind::Ddim, 100),
+            (SamplerKind::Ddpm, 100),
+        ] {
+            let scenario = Scenario::new(model, kind, steps);
+            let rows = scenario_rows(&scenario, n, seed0, &pool);
+            let seq_time = rows[0].1.time_s;
+            for (label, cell) in rows {
+                let speedup = seq_time / cell.time_s.max(1e-12);
+                t.push_row(vec![
+                    scenario.label(),
+                    label,
+                    format!("{:.1}", cell.steps),
+                    format!("{:.4}", cell.time_s),
+                    format!("{:.3}", cell.fid),
+                    format!("{:.3}", cell.is),
+                    format!("{:.3}", cell.cs),
+                    format!("{:.2}", speedup),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_rows_tiny() {
+        let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 10);
+        let pool = ThreadPool::new(2);
+        let rows = scenario_rows(&scenario, 4, 42, &pool);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].0, "Sequential");
+        assert_eq!(rows[0].1.steps, 10.0);
+        // Parallel methods should not exceed sequential steps by more than
+        // the final verification round (tiny T: parallelism has no headroom).
+        for (label, cell) in &rows[1..] {
+            assert!(cell.steps <= 11.5, "{label} steps {}", cell.steps);
+        }
+    }
+}

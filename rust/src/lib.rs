@@ -1,0 +1,25 @@
+//! # ParaTAA — Accelerating Parallel Sampling of Diffusion Models
+//!
+//! A full-system reproduction of Tang et al., ICML 2024: diffusion sampling
+//! reformulated as a triangular nonlinear system solved by (safeguarded,
+//! Triangular-Anderson-accelerated) fixed-point iteration, with every window
+//! of denoiser evaluations executed in parallel as one batched device call.
+//!
+//! Architecture (see `DESIGN.md`):
+//! - **L3 (this crate)** — solver + serving coordinator, pure Rust.
+//! - **L2** — JAX model (`python/compile/model.py`) AOT-lowered to HLO text.
+//! - **L1** — Pallas kernels (`python/compile/kernels/`), lowered into L2.
+//!
+//! The hot path loads `artifacts/*.hlo.txt` through the PJRT CPU client
+//! (`runtime`); Python never runs at request time.
+
+pub mod coordinator;
+pub mod equations;
+pub mod figures;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod schedule;
+pub mod solver;
+pub mod util;

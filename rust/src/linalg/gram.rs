@@ -1,0 +1,167 @@
+//! Suffix-Gram scan — the core linear algebra of Triangular Anderson
+//! Acceleration (Theorem 3.2).
+//!
+//! For window rows `t = 0..W` (row 0 = earliest timestep in the active
+//! window) and Anderson history depth `m`, TAA needs, for every `t`,
+//!
+//!   G_t = Σ_{j ≥ t} ΔF_jᵀ ΔF_j   ∈ R^{m×m}     (Gram of history residuals)
+//!   b_t = Σ_{j ≥ t} ΔF_jᵀ R_j    ∈ R^{m}       (projection of the residual)
+//!
+//! where ΔF_j stacks the `m` history residual-differences restricted to row
+//! `j` (each of dimension D). Because the sums are *suffixes* over j, all W
+//! of them are computed in one reverse scan: per-row Grams first (O(W·m²·D)),
+//! then a reverse cumulative sum (O(W·m²)). This mirrors the Pallas kernel
+//! `python/compile/kernels/taa_update.py`, and the cross-language test
+//! vectors pin the two implementations together.
+
+/// Per-row suffix Grams and projections.
+pub struct SuffixGrams {
+    /// `grams[t]` is the m×m matrix G_t (row-major), length W.
+    pub grams: Vec<Vec<f32>>,
+    /// `proj[t]` is the m-vector b_t, length W.
+    pub proj: Vec<Vec<f32>>,
+}
+
+/// Compute suffix Grams.
+///
+/// Layout: `delta_f[h]` is history slot `h` (h = 0..m), a `[W*D]` row-major
+/// window; `residual` is `[W*D]`. Only rows `t0..W` participate (rows below
+/// the active window are skipped by callers passing `t0`).
+pub fn suffix_grams(
+    delta_f: &[&[f32]],
+    residual: &[f32],
+    w: usize,
+    d: usize,
+    t0: usize,
+) -> SuffixGrams {
+    let m = delta_f.len();
+    for h in delta_f {
+        assert_eq!(h.len(), w * d, "history slot shape");
+    }
+    assert_eq!(residual.len(), w * d, "residual shape");
+    assert!(t0 <= w);
+
+    let mut grams = vec![vec![0.0f32; m * m]; w];
+    let mut proj = vec![vec![0.0f32; m]; w];
+
+    // Accumulators carried down the reverse scan, in f64: the suffix sums
+    // telescope over up to W=100 rows and the Gram conditioning matters.
+    let mut acc_g = vec![0.0f64; m * m];
+    let mut acc_b = vec![0.0f64; m];
+
+    for t in (t0..w).rev() {
+        let row = t * d..(t + 1) * d;
+        // Per-row Gram contribution (symmetric — compute upper, mirror).
+        for a in 0..m {
+            let fa = &delta_f[a][row.clone()];
+            for b in a..m {
+                let fb = &delta_f[b][row.clone()];
+                let mut s = 0.0f64;
+                for (x, y) in fa.iter().zip(fb.iter()) {
+                    s += (*x as f64) * (*y as f64);
+                }
+                acc_g[a * m + b] += s;
+                if a != b {
+                    acc_g[b * m + a] += s;
+                }
+            }
+            let r = &residual[row.clone()];
+            let mut s = 0.0f64;
+            for (x, y) in fa.iter().zip(r.iter()) {
+                s += (*x as f64) * (*y as f64);
+            }
+            acc_b[a] += s;
+        }
+        for (o, &v) in grams[t].iter_mut().zip(acc_g.iter()) {
+            *o = v as f32;
+        }
+        for (o, &v) in proj[t].iter_mut().zip(acc_b.iter()) {
+            *o = v as f32;
+        }
+    }
+
+    SuffixGrams { grams, proj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::{self, forall, size_in};
+
+    /// Naive reference: recompute each suffix sum from scratch.
+    fn naive(delta_f: &[&[f32]], residual: &[f32], w: usize, d: usize, t0: usize) -> SuffixGrams {
+        let m = delta_f.len();
+        let mut grams = vec![vec![0.0f32; m * m]; w];
+        let mut proj = vec![vec![0.0f32; m]; w];
+        for t in t0..w {
+            for a in 0..m {
+                for b in 0..m {
+                    let mut s = 0.0f64;
+                    for j in t..w {
+                        for i in 0..d {
+                            s += delta_f[a][j * d + i] as f64 * delta_f[b][j * d + i] as f64;
+                        }
+                    }
+                    grams[t][a * m + b] = s as f32;
+                }
+                let mut s = 0.0f64;
+                for j in t..w {
+                    for i in 0..d {
+                        s += delta_f[a][j * d + i] as f64 * residual[j * d + i] as f64;
+                    }
+                }
+                proj[t][a] = s as f32;
+            }
+        }
+        SuffixGrams { grams, proj }
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        forall("suffix_gram_naive", 24, |rng, _| {
+            let w = size_in(rng, 1, 12);
+            let d = size_in(rng, 1, 9);
+            let m = size_in(rng, 1, 4);
+            let t0 = size_in(rng, 0, w - 1);
+            let slots: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..w * d).map(|_| rng.next_f32() - 0.5).collect())
+                .collect();
+            let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+            let res: Vec<f32> = (0..w * d).map(|_| rng.next_f32() - 0.5).collect();
+            let fast = suffix_grams(&refs, &res, w, d, t0);
+            let slow = naive(&refs, &res, w, d, t0);
+            for t in t0..w {
+                proplite::assert_close(&fast.grams[t], &slow.grams[t], 1e-4, 1e-4, "gram")?;
+                proplite::assert_close(&fast.proj[t], &slow.proj[t], 1e-4, 1e-4, "proj")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn suffix_monotone_diagonal() {
+        // Gram diagonals are sums of squares, so suffix sums must be
+        // non-increasing in t.
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        let (w, d) = (10, 4);
+        let slot: Vec<f32> = (0..w * d).map(|_| rng.next_f32()).collect();
+        let res = vec![0.0f32; w * d];
+        let g = suffix_grams(&[&slot], &res, w, d, 0);
+        for t in 1..w {
+            assert!(g.grams[t][0] <= g.grams[t - 1][0] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn last_row_is_single_gram() {
+        let (w, d) = (3, 2);
+        let slot = vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0];
+        let res = vec![1.0; w * d];
+        let g = suffix_grams(&[&slot], &res, w, d, 0);
+        // row 2 suffix = just row 2: [3,4] -> gram 25, proj 7
+        assert!((g.grams[2][0] - 25.0).abs() < 1e-6);
+        assert!((g.proj[2][0] - 7.0).abs() < 1e-6);
+        // row 0 suffix = all rows: 1+4+0+0+9+16 = 30
+        assert!((g.grams[0][0] - 30.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,153 @@
+//! Dense row-major matrix/vector primitives.
+
+/// `c = a @ b` for row-major `a: [m,k]`, `b: [k,n]`, `c: [m,n]`.
+/// ikj loop order keeps the innermost loop contiguous over both `b` and `c`.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // banded matrices are mostly zero — skip rows cheaply
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aik * bj;
+            }
+        }
+    }
+}
+
+/// `y = A @ x` for row-major `A: [m,n]`, `x: [n]`.
+pub fn matvec(a: &[f32], x: &[f32], y: &mut [f32], m: usize, n: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] = dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// Inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // f64 accumulator: the residual norms steer the stopping criterion, so
+    // keep accumulation error well below the threshold τ²g²d.
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += (x as f64) * (y as f64);
+    }
+    acc as f32
+}
+
+/// Squared L2 norm with f64 accumulation.
+#[inline]
+pub fn l2_norm_sq(a: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in a {
+        acc += (x as f64) * (x as f64);
+    }
+    acc
+}
+
+/// `out += alpha * x` elementwise.
+#[inline]
+pub fn add_scaled(out: &mut [f32], x: &[f32], alpha: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o += alpha * v;
+    }
+}
+
+/// `out = a - b` elementwise.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+        *o = x - y;
+    }
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::{self, forall, size_in};
+
+    #[test]
+    fn matmul_identity() {
+        // 3x3 identity times arbitrary matrix.
+        let eye = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let mut c = [0.0; 9];
+        matmul(&eye, &b, &mut c, 3, 3, 3);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular_matches_naive() {
+        forall("matmul_naive", 32, |rng, _| {
+            let (m, k, n) = (size_in(rng, 1, 8), size_in(rng, 1, 8), size_in(rng, 1, 8));
+            let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut c = vec![0.0; m * n];
+            matmul(&a, &b, &mut c, m, k, n);
+            // naive ijk reference
+            let mut r = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for kk in 0..k {
+                        acc += a[i * k + kk] * b[kk * n + j];
+                    }
+                    r[i * n + j] = acc;
+                }
+            }
+            proplite::assert_close(&c, &r, 1e-5, 1e-5, "matmul")
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [1.0, -1.0, 2.0];
+        let mut y = [0.0; 2];
+        matvec(&a, &x, &mut y, 2, 3);
+        assert_eq!(y, [5.0, 11.0]);
+    }
+
+    #[test]
+    fn norms_and_axpy() {
+        assert_eq!(l2_norm_sq(&[3.0, 4.0]), 25.0);
+        let mut o = vec![1.0, 1.0];
+        add_scaled(&mut o, &[2.0, -2.0], 0.5);
+        assert_eq!(o, vec![2.0, 0.0]);
+        let mut d = vec![0.0; 2];
+        sub(&[3.0, 1.0], &[1.0, 1.0], &mut d);
+        assert_eq!(d, vec![2.0, 0.0]);
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 5.0]), 0.5);
+    }
+}

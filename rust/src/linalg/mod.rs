@@ -1,0 +1,21 @@
+//! Small dense linear algebra for the triangular-system solvers.
+//!
+//! Everything here operates on row-major `f32` slices. Shapes are tiny by
+//! BLAS standards — `W ≤ 100` window rows, `D ≤ 1024` feature columns,
+//! `m ≤ 8` Anderson history — so clarity and cache-friendly loops beat
+//! hand-vectorization; the compiler auto-vectorizes the inner `D` loops.
+//!
+//! Submodules:
+//! - [`mat`]: dense matmul / axpy / norms,
+//! - [`solve`]: Cholesky and LU factorizations for the m×m Gram systems,
+//! - [`gram`]: the suffix-Gram scan at the core of Triangular Anderson
+//!   Acceleration (native mirror of the Pallas kernel in
+//!   `python/compile/kernels/taa_update.py`).
+
+pub mod gram;
+pub mod mat;
+pub mod solve;
+
+pub use gram::{suffix_grams, SuffixGrams};
+pub use mat::{add_scaled, dot, l2_norm_sq, matmul, matvec, sub};
+pub use solve::{cholesky_solve, lu_solve};

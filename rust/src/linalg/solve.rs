@@ -1,0 +1,161 @@
+//! Small symmetric / general linear solves.
+//!
+//! The TAA update (Theorem 3.2, Remark 3.3) solves
+//! `(Fᵀ_{t:t₂} F_{t:t₂} + λI) γ = b` where the Gram matrix is `m×m` with
+//! `m ≤ 8`. Cholesky is the natural factorization (SPD after the λ ridge);
+//! LU with partial pivoting is kept as a fallback for the standard-AA path
+//! where the post-processed matrix can lose symmetry.
+
+/// Solve `A x = b` for symmetric positive-definite `A` (n×n, row-major)
+/// via Cholesky. Returns `None` if the matrix is not (numerically) SPD.
+pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    // Factor in f64 for stability: the Gram matrices can be ill-conditioned
+    // when Anderson histories become nearly collinear near convergence.
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    // Forward substitution: L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    // Back substitution: Lᵀ x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    Some(x.iter().map(|&v| v as f32).collect())
+}
+
+/// Solve `A x = b` for general square `A` via LU with partial pivoting.
+/// Returns `None` on (numerical) singularity.
+pub fn lu_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut lu: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+    let mut x: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for col in 0..n {
+        // pivot
+        let (mut best, mut best_abs) = (col, lu[piv[col] * n + col].abs());
+        for r in col + 1..n {
+            let v = lu[piv[r] * n + col].abs();
+            if v > best_abs {
+                best = r;
+                best_abs = v;
+            }
+        }
+        if best_abs < 1e-300 || !best_abs.is_finite() {
+            return None;
+        }
+        piv.swap(col, best);
+        let prow = piv[col];
+        let pval = lu[prow * n + col];
+        for r in col + 1..n {
+            let row = piv[r];
+            let factor = lu[row * n + col] / pval;
+            lu[row * n + col] = factor;
+            for c in col + 1..n {
+                lu[row * n + c] -= factor * lu[prow * n + c];
+            }
+            x[row] -= factor * x[prow];
+        }
+    }
+    // Back substitution on the permuted upper triangle.
+    let mut out = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let row = piv[i];
+        let mut sum = x[row];
+        for c in i + 1..n {
+            sum -= lu[row * n + c] * out[c];
+        }
+        out[i] = sum / lu[row * n + i];
+    }
+    Some(out.iter().map(|&v| v as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::matvec;
+    use crate::util::proplite::{self, forall, size_in};
+
+    #[test]
+    fn cholesky_known_system() {
+        // A = [[4,2],[2,3]], b = [2, 1] -> x = [0.5, 0]
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let x = cholesky_solve(&a, &[2.0, 1.0], 2).unwrap();
+        assert!((x[0] - 0.5).abs() < 1e-6 && x[1].abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert!(lu_solve(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn solvers_agree_on_random_spd() {
+        forall("spd_solvers_agree", 48, |rng, _| {
+            let n = size_in(rng, 1, 8);
+            // A = M Mᵀ + ridge: guaranteed SPD.
+            let m: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut a = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        acc += m[i * n + k] * m[j * n + k];
+                    }
+                    a[i * n + j] = acc + if i == j { 0.1 } else { 0.0 };
+                }
+            }
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let xc = cholesky_solve(&a, &b, n).ok_or("chol failed")?;
+            let xl = lu_solve(&a, &b, n).ok_or("lu failed")?;
+            proplite::assert_close(&xc, &xl, 1e-4, 1e-3, "chol vs lu")?;
+            // verify residual A x - b ≈ 0
+            let mut ax = vec![0.0f32; n];
+            matvec(&a, &xc, &mut ax, n, n);
+            proplite::assert_close(&ax, &b, 1e-3, 1e-3, "Ax=b")
+        });
+    }
+
+    #[test]
+    fn lu_solves_nonsymmetric() {
+        // A = [[0,1],[2,0]] requires pivoting; x = [b1/2, b0].
+        let a = [0.0, 1.0, 2.0, 0.0];
+        let x = lu_solve(&a, &[3.0, 8.0], 2).unwrap();
+        assert!((x[0] - 4.0).abs() < 1e-6 && (x[1] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,166 @@
+//! ParaTAA CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   sample        solve one sampling request and write the image
+//!   serve         run the coordinator demo under synthetic load
+//!   fig1..fig7, fig14, table1
+//!                 regenerate a paper figure/table (CSV + ASCII)
+//!   all-figures   regenerate everything into results/
+//!
+//! Common options: --model dit|gmm, --steps N, --samples N, --seed N.
+//! DiT scenarios need `make artifacts` (PJRT HLO + trained weights).
+
+use parataa::figures;
+use parataa::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "help" | "--help" => help(),
+        "sample" => cmd_sample(&args),
+        "serve" => cmd_serve(&args),
+        "all-figures" => {
+            for name in figures::ALL {
+                run_experiment(name, &args);
+            }
+        }
+        name if figures::ALL.contains(&name) => run_experiment(name, &args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn help() {
+    println!(
+        "parataa — Accelerating Parallel Sampling of Diffusion Models (ICML 2024)\n\n\
+         usage: parataa <subcommand> [--options]\n\n\
+         subcommands:\n\
+           sample      solve one request    (--model dit|gmm --steps N --seed N\n\
+                       --method taa|fp|aa|aa+ --class C --out img.pgm)\n\
+           serve       coordinator demo under synthetic load (--requests N --workers N)\n\
+           fig1        FP residual convergence vs order k\n\
+           fig2        FP vs AA vs TAA\n\
+           fig3        quality vs rounds across scenarios\n\
+           fig4        window-size trade-off\n\
+           fig5        qualitative trajectory-init strips (PGM)\n\
+           fig6        per-timestep residuals / safeguard / AA+ stress\n\
+           fig7        (k, m) grid search\n\
+           fig14       trajectory-init CS curves\n\
+           table1      the headline table\n\
+           all-figures regenerate everything into results/\n\n\
+         common options: --model dit|gmm  --samples N  --seed N  --steps N"
+    );
+}
+
+fn run_experiment(name: &str, args: &Args) {
+    eprintln!("=== {name} ===");
+    let t0 = std::time::Instant::now();
+    for (csv_name, table) in figures::run(name, args) {
+        let path = format!("results/{csv_name}.csv");
+        table.write_csv(&path).expect("write csv");
+        println!("{}", table.to_ascii());
+        println!("wrote {path}");
+    }
+    eprintln!("=== {name} done in {:?} ===\n", t0.elapsed());
+}
+
+fn cmd_sample(args: &Args) {
+    use parataa::figures::common::{method_config, ModelChoice, Scenario};
+    use parataa::model::Cond;
+    use parataa::schedule::SamplerKind;
+    use parataa::solver::{self, Method, Problem};
+
+    let model = ModelChoice::parse(&args.get_or("model", "gmm"));
+    let steps = args.usize_or("steps", 50);
+    let kind = match args.get_or("sampler", "ddim").as_str() {
+        "ddim" => SamplerKind::Ddim,
+        "ddpm" => SamplerKind::Ddpm,
+        other => panic!("unknown sampler '{other}'"),
+    };
+    let method = match args.get_or("method", "taa").as_str() {
+        "taa" => Method::Taa,
+        "fp" => Method::FixedPoint,
+        "aa" => Method::AndersonStd,
+        "aa+" => Method::AndersonUpperTri,
+        other => panic!("unknown method '{other}'"),
+    };
+    let seed = args.u64_or("seed", 0);
+    let class = args.usize_or("class", 0);
+    let scenario = Scenario::new(model, kind, steps);
+    let coeffs = scenario.coeffs();
+    let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(class), seed);
+    let cfg = method_config(method, steps, args.get("k").map(|v| v.parse().unwrap()), scenario.guidance);
+    let t0 = std::time::Instant::now();
+    let result = solver::solve(&problem, &cfg);
+    let dt = t0.elapsed();
+    let seq = solver::sample_sequential(&problem, scenario.guidance);
+    let rmse = parataa::metrics::match_rmse(result.xs.row(0), seq.xs.row(0));
+    println!(
+        "{} {} {}: {} parallel rounds (seq {} steps), nfe {}, converged {}, {dt:?}",
+        scenario.label(),
+        method.label(),
+        seed,
+        result.iterations,
+        steps,
+        result.total_nfe,
+        result.converged,
+    );
+    println!("parallel-vs-sequential RMSE: {rmse:.2e} (Remark 5.3)");
+    let out = args.get_or("out", "results/sample.pgm");
+    parataa::util::image::write_pgm(&out, result.xs.row(0), 16, 16).expect("write image");
+    println!("wrote {out}");
+}
+
+fn cmd_serve(args: &Args) {
+    use parataa::coordinator::{
+        Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
+    };
+    use parataa::figures::common::{ModelChoice, Scenario};
+    use parataa::model::Cond;
+    use parataa::schedule::SamplerKind;
+    use parataa::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    let model_choice = ModelChoice::parse(&args.get_or("model", "gmm"));
+    let steps = args.usize_or("steps", 50);
+    let n_requests = args.usize_or("requests", 32);
+    let workers = args.usize_or("workers", 4);
+    let scenario = Scenario::new(model_choice, SamplerKind::Ddim, steps);
+
+    let batcher = Batcher::spawn(scenario.model.clone(), BatcherConfig::default());
+    let eps = Arc::new(batcher.eps_handle(scenario.model.dim(), "batched"));
+    let coord = Coordinator::start(
+        eps,
+        CoordinatorConfig { workers, ..Default::default() },
+    );
+
+    eprintln!("serving {n_requests} requests ({}) ...", scenario.label());
+    let mut rng = Pcg64::seeded(args.u64_or("seed", 0));
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let mut req = SampleRequest::parataa(
+                Cond::Class(rng.below(8) as usize),
+                i as u64,
+                SamplerSpec::ddim(steps),
+            );
+            req.guidance = scenario.guidance;
+            req.use_trajectory_cache = true;
+            coord.submit(req)
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().expect("request failed");
+        if i < 4 || !r.converged {
+            println!(
+                "req {i}: rounds={} nfe={} warm={} conv={} latency={:?}",
+                r.rounds, r.nfe, r.warm_started, r.converged, r.latency
+            );
+        }
+    }
+    println!("{}", coord.metrics().report());
+    drop(coord);
+}

@@ -1,0 +1,203 @@
+//! Quality metrics — the evaluation column of Table 1 / Fig. 3.
+//!
+//! The paper reports FID + Inception Score (DiT) and CLIP score (SD). Our
+//! testbed has no Inception/CLIP networks; DESIGN.md §Substitutions maps
+//! each to an analytically-grounded proxy with the same functional form:
+//!
+//! - **FID-proxy** — Fréchet distance between Gaussian fits of generated
+//!   vs reference samples in pixel space (diagonal covariance);
+//! - **IS-proxy**  — exp E[KL(p(y|x) ‖ p(y))] with the exact template-GMM
+//!   posterior as the classifier;
+//! - **CS-proxy**  — mean posterior probability of the *target* condition
+//!   (monotone in prompt alignment, like CLIP score);
+//! - **match error** — RMSE between parallel and sequential samples for the
+//!   same seed (Remark 5.3's "same image" claim, quantified).
+
+use crate::model::gmm::GmmEps;
+use crate::model::Cond;
+
+/// Fréchet distance between diagonal-Gaussian fits of two sample sets.
+/// `a`, `b` are row-major `[n, d]` stacks.
+pub fn fid_proxy(a: &[f32], b: &[f32], d: usize) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let (mu_a, var_a) = moments(a, d);
+    let (mu_b, var_b) = moments(b, d);
+    // Fréchet distance for diagonal Gaussians:
+    //   |mu_a - mu_b|^2 + Σ_i (var_a + var_b - 2*sqrt(var_a*var_b))
+    let mut acc = 0.0;
+    for i in 0..d {
+        let dm = mu_a[i] - mu_b[i];
+        acc += dm * dm;
+        acc += var_a[i] + var_b[i] - 2.0 * (var_a[i] * var_b[i]).max(0.0).sqrt();
+    }
+    acc
+}
+
+fn moments(xs: &[f32], d: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = xs.len() / d;
+    let mut mu = vec![0.0f64; d];
+    for row in xs.chunks(d) {
+        for (m, &v) in mu.iter_mut().zip(row.iter()) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mu {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; d];
+    for row in xs.chunks(d) {
+        for i in 0..d {
+            let r = row[i] as f64 - mu[i];
+            var[i] += r * r;
+        }
+    }
+    for v in &mut var {
+        *v /= (n as f64 - 1.0).max(1.0);
+    }
+    (mu, var)
+}
+
+/// IS-proxy: exp( E_x[ KL( p(y|x) ‖ p(y) ) ] ) using the GMM posterior at
+/// ᾱ≈1 (clean images) as the classifier. Higher = sharper + more diverse.
+pub fn is_proxy(samples: &[f32], model: &GmmEps) -> f64 {
+    let d = model.d;
+    let n = samples.len() / d;
+    let k = model.n_components;
+    let uniform = vec![1.0f32 / k as f32; k];
+    // p(y|x) per sample, then the marginal p(y).
+    let mut posts: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut marginal = vec![0.0f64; k];
+    for row in samples.chunks(d) {
+        let (lp, _) = model.log_posterior(row, 0.9999, &uniform);
+        let p: Vec<f64> = lp.iter().map(|&l| l.exp()).collect();
+        for (m, &v) in marginal.iter_mut().zip(p.iter()) {
+            *m += v / n as f64;
+        }
+        posts.push(p);
+    }
+    let mut kl_sum = 0.0;
+    for p in &posts {
+        for i in 0..k {
+            if p[i] > 1e-12 && marginal[i] > 1e-12 {
+                kl_sum += p[i] * (p[i] / marginal[i]).ln();
+            }
+        }
+    }
+    (kl_sum / n as f64).exp()
+}
+
+/// CS-proxy: mean posterior probability of the target condition under the
+/// GMM classifier, scaled to a CLIP-like 0–30 range (paper's CS ≈ 24).
+pub fn cs_proxy(samples: &[f32], conds: &[Cond], model: &GmmEps) -> f64 {
+    let d = model.d;
+    let n = samples.len() / d;
+    assert_eq!(conds.len(), n);
+    let k = model.n_components;
+    let uniform = vec![1.0f32 / k as f32; k];
+    let mut acc = 0.0;
+    for (row, cond) in samples.chunks(d).zip(conds.iter()) {
+        let (lp, _) = model.log_posterior(row, 0.9999, &uniform);
+        let w = cond.to_weights(k);
+        let p: f64 = lp
+            .iter()
+            .zip(w.iter())
+            .map(|(&l, &wi)| l.exp() * wi as f64)
+            .sum();
+        acc += p;
+    }
+    30.0 * acc / n as f64
+}
+
+/// RMSE between two samples (the parallel-vs-sequential match error).
+pub fn match_rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let acc: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    (acc / a.len() as f64).sqrt()
+}
+
+/// PSNR (dB) for [-1, 1]-ranged images — the qualitative-match number.
+pub fn psnr(a: &[f32], b: &[f32]) -> f64 {
+    let rmse = match_rmse(a, b);
+    if rmse <= 1e-12 {
+        return f64::INFINITY;
+    }
+    20.0 * (2.0 / rmse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::templates;
+    use crate::schedule::{BetaSchedule, NoiseSchedule};
+    use crate::util::rng::Pcg64;
+
+    fn sd_model() -> GmmEps {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        GmmEps::sd_analog(ns.alpha_bars.clone())
+    }
+
+    #[test]
+    fn fid_zero_on_identical_sets() {
+        let mut rng = Pcg64::seeded(1);
+        let xs: Vec<f32> = (0..50 * 4).map(|_| rng.next_f32()).collect();
+        assert!(fid_proxy(&xs, &xs, 4) < 1e-9);
+    }
+
+    #[test]
+    fn fid_grows_with_mean_shift() {
+        let mut rng = Pcg64::seeded(2);
+        let a: Vec<f32> = (0..200 * 4).map(|_| rng.next_f32()).collect();
+        let b_small: Vec<f32> = a.iter().map(|&v| v + 0.1).collect();
+        let b_large: Vec<f32> = a.iter().map(|&v| v + 1.0).collect();
+        let f_small = fid_proxy(&a, &b_small, 4);
+        let f_large = fid_proxy(&a, &b_large, 4);
+        assert!(f_small < f_large);
+        assert!((f_small - 0.04).abs() < 0.02); // 4 dims * 0.01
+    }
+
+    #[test]
+    fn is_proxy_ordering() {
+        // Samples at distinct templates = diverse + sharp => IS near K.
+        // All samples at one template => IS near 1.
+        let model = sd_model();
+        let mut rng = Pcg64::seeded(3);
+        let diverse: Vec<f32> = (0..8)
+            .flat_map(|c| {
+                let mut t = templates::template(c);
+                for v in &mut t {
+                    *v += 0.05 * (rng.next_f32() - 0.5);
+                }
+                t
+            })
+            .collect();
+        let collapsed: Vec<f32> = (0..8).flat_map(|_| templates::template(0)).collect();
+        let is_div = is_proxy(&diverse, &model);
+        let is_col = is_proxy(&collapsed, &model);
+        assert!(is_div > 6.0, "diverse IS {is_div}");
+        assert!(is_col < 1.1, "collapsed IS {is_col}");
+    }
+
+    #[test]
+    fn cs_proxy_prefers_matching_condition() {
+        let model = sd_model();
+        let samples: Vec<f32> = templates::template(2);
+        let right = cs_proxy(&samples, &[Cond::Class(2)], &model);
+        let wrong = cs_proxy(&samples, &[Cond::Class(5)], &model);
+        assert!(right > 25.0, "right {right}");
+        assert!(wrong < 5.0, "wrong {wrong}");
+    }
+
+    #[test]
+    fn match_metrics() {
+        let a = vec![0.0f32, 1.0, -1.0];
+        assert_eq!(match_rmse(&a, &a), 0.0);
+        assert!(psnr(&a, &a).is_infinite());
+        let b = vec![0.1f32, 1.1, -0.9];
+        assert!((match_rmse(&a, &b) - 0.1).abs() < 1e-6);
+        assert!((psnr(&a, &b) - 26.02).abs() < 0.1);
+    }
+}

@@ -1,0 +1,293 @@
+//! Analytic template-GMM diffusion model — the SD-analog substrate.
+//!
+//! Data distribution: an isotropic Gaussian mixture p₀(x|cond) =
+//! Σ_i w_i(cond)·N(μ_i, s²I) whose means μ_i are the shape templates.
+//! Under the discrete VP forward process with signal level ᾱ(τ):
+//!
+//!   p_τ(x|cond) = Σ_i w_i · N(√ᾱ·μ_i, (ᾱ·s² + 1−ᾱ)·I)
+//!
+//! which yields the *exact* noise predictor in closed form:
+//!
+//!   ε(x, τ, cond) = −√(1−ᾱ)·∇ log p_τ(x|cond)
+//!                 = √(1−ᾱ)/v · (x − Σ_i γ_i(x)·√ᾱ·μ_i),
+//!
+//! v = ᾱs² + 1−ᾱ and γ = softmax over components of
+//! log w_i − ‖x−√ᾱμ_i‖²/(2v). Classifier-free guidance mixes the
+//! conditional and marginal predictors exactly as a trained model would.
+//!
+//! This gives the reproduction a denoiser that is (a) exact, (b) cheap, and
+//! (c) has a *known* posterior — which powers the IS- and CLIP-score proxies.
+//! Mirrored by `python/compile/gmm.py`; pinned by cross-language vectors.
+
+use super::{Cond, EpsModel};
+
+/// Analytic GMM noise predictor.
+#[derive(Debug, Clone)]
+pub struct GmmEps {
+    /// Component means, row-major `[n_components, d]`.
+    pub means: Vec<f32>,
+    pub n_components: usize,
+    pub d: usize,
+    /// Isotropic component std-dev `s` of the data distribution.
+    pub data_std: f64,
+    /// ᾱ per training timestep (copied from the noise schedule).
+    pub alpha_bars: Vec<f64>,
+    name: String,
+}
+
+impl GmmEps {
+    pub fn new(means: Vec<f32>, d: usize, data_std: f64, alpha_bars: Vec<f64>) -> Self {
+        assert!(!means.is_empty() && means.len() % d == 0);
+        let n_components = means.len() / d;
+        GmmEps {
+            means,
+            n_components,
+            d,
+            data_std,
+            alpha_bars,
+            name: "gmm".to_string(),
+        }
+    }
+
+    /// The SD-analog model: template images as component means.
+    pub fn sd_analog(alpha_bars: Vec<f64>) -> Self {
+        use super::templates;
+        let means: Vec<f32> = templates::all_templates().concat();
+        let mut m = Self::new(means, templates::DIM, 0.15, alpha_bars);
+        m.name = "sda".to_string();
+        m
+    }
+
+    #[inline]
+    fn mean(&self, i: usize) -> &[f32] {
+        &self.means[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Component log-posteriors γ_i(x) at noise level ᾱ under `weights`.
+    /// Returns (log γ normalized, marginal log-likelihood up to a constant).
+    pub fn log_posterior(&self, x: &[f32], abar: f64, weights: &[f32]) -> (Vec<f64>, f64) {
+        let v = abar * self.data_std * self.data_std + (1.0 - abar);
+        let sqrt_ab = abar.sqrt();
+        let mut logits = vec![f64::NEG_INFINITY; self.n_components];
+        for i in 0..self.n_components {
+            if weights[i] <= 0.0 {
+                continue;
+            }
+            let mu = self.mean(i);
+            let mut d2 = 0.0f64;
+            for (&xj, &mj) in x.iter().zip(mu.iter()) {
+                let r = xj as f64 - sqrt_ab * mj as f64;
+                d2 += r * r;
+            }
+            logits[i] = (weights[i] as f64).ln() - d2 / (2.0 * v);
+        }
+        // logsumexp-normalize
+        let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + logits.iter().map(|&l| (l - mx).exp()).sum::<f64>().ln();
+        let log_post: Vec<f64> = logits.iter().map(|&l| l - lse).collect();
+        (log_post, lse)
+    }
+
+    /// Exact ε for a single item under dense component weights.
+    fn eps_single(&self, x: &[f32], abar: f64, weights: &[f32], out: &mut [f32]) {
+        let v = abar * self.data_std * self.data_std + (1.0 - abar);
+        let sqrt_ab = abar.sqrt();
+        let sqrt_1mab = (1.0 - abar).sqrt();
+        let (log_post, _) = self.log_posterior(x, abar, weights);
+        // posterior mean of √ᾱ·μ
+        let mut mean_mu = vec![0.0f64; self.d];
+        for i in 0..self.n_components {
+            let g = log_post[i].exp();
+            if g < 1e-300 {
+                continue;
+            }
+            let mu = self.mean(i);
+            for (mm, &mj) in mean_mu.iter_mut().zip(mu.iter()) {
+                *mm += g * sqrt_ab * mj as f64;
+            }
+        }
+        let scale = sqrt_1mab / v;
+        for j in 0..self.d {
+            out[j] = (scale * (x[j] as f64 - mean_mu[j])) as f32;
+        }
+    }
+
+    /// Draw a ground-truth sample x₀ ~ p₀(·|cond) (for metric references).
+    pub fn sample_data(&self, cond: &Cond, rng: &mut crate::util::rng::Pcg64) -> Vec<f32> {
+        let w = cond.to_weights(self.n_components);
+        // categorical draw
+        let u = rng.next_f64();
+        let mut acc = 0.0f64;
+        let mut comp = self.n_components - 1;
+        for (i, &wi) in w.iter().enumerate() {
+            acc += wi as f64;
+            if u < acc {
+                comp = i;
+                break;
+            }
+        }
+        let mu = self.mean(comp).to_vec();
+        let mut out = vec![0.0f32; self.d];
+        rng.fill_gaussian(&mut out);
+        for (o, &m) in out.iter_mut().zip(mu.iter()) {
+            *o = m + *o * self.data_std as f32;
+        }
+        out
+    }
+}
+
+impl EpsModel for GmmEps {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) {
+        let n = train_ts.len();
+        assert_eq!(xs.len(), n * self.d);
+        assert_eq!(out.len(), n * self.d);
+        assert_eq!(conds.len(), n);
+        let uniform = vec![1.0 / self.n_components as f32; self.n_components];
+        let mut eps_u = vec![0.0f32; self.d];
+        for i in 0..n {
+            let x = &xs[i * self.d..(i + 1) * self.d];
+            let o = &mut out[i * self.d..(i + 1) * self.d];
+            let abar = self.alpha_bars[train_ts[i]];
+            let w = conds[i].to_weights(self.n_components);
+            self.eps_single(x, abar, &w, o);
+            if (guidance - 1.0).abs() > 1e-9 && !matches!(conds[i], Cond::Uncond) {
+                // ε_cfg = ε_u + g·(ε_c − ε_u)
+                self.eps_single(x, abar, &uniform, &mut eps_u);
+                for (oj, &uj) in o.iter_mut().zip(eps_u.iter()) {
+                    *oj = uj + guidance * (*oj - uj);
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{BetaSchedule, NoiseSchedule};
+    use crate::util::proplite::{self, forall, size_in};
+    use crate::util::rng::Pcg64;
+
+    fn tiny_gmm(rng: &mut Pcg64, n_comp: usize, d: usize) -> GmmEps {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let means: Vec<f32> = (0..n_comp * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        GmmEps::new(means, d, 0.2, ns.alpha_bars.clone())
+    }
+
+    #[test]
+    fn single_component_eps_is_exact_gaussian_score() {
+        // With one component the ε predictor has the closed form
+        // ε = √(1−ᾱ)·(x − √ᾱ·μ)/v, v = ᾱs²+1−ᾱ — check directly.
+        forall("gmm_single_component", 24, |rng, _| {
+            let d = size_in(rng, 1, 8);
+            let m = tiny_gmm(rng, 1, d);
+            let tt = size_in(rng, 0, 999);
+            let abar = m.alpha_bars[tt];
+            let x: Vec<f32> = (0..d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+            let mut out = vec![0.0f32; d];
+            m.eps_batch(&x, &[tt], &[Cond::Class(0)], 1.0, &mut out);
+            let v = abar * 0.2 * 0.2 + (1.0 - abar);
+            let expect: Vec<f32> = (0..d)
+                .map(|j| {
+                    ((1.0 - abar).sqrt() * (x[j] as f64 - abar.sqrt() * m.means[j] as f64) / v)
+                        as f32
+                })
+                .collect();
+            proplite::assert_close(&out, &expect, 1e-5, 1e-4, "single-comp eps")
+        });
+    }
+
+    #[test]
+    fn eps_at_high_noise_is_nearly_whitening() {
+        // As ᾱ→0, p_τ → N(0, I), so ε(x) → x.
+        let mut rng = Pcg64::seeded(2);
+        let m = tiny_gmm(&mut rng, 4, 6);
+        let tt = 999; // ᾱ ≈ 4e-5
+        let x: Vec<f32> = (0..6).map(|_| rng.next_f32() - 0.5).collect();
+        let mut out = vec![0.0f32; 6];
+        m.eps_batch(&x, &[tt], &[Cond::Uncond], 1.0, &mut out);
+        proplite::assert_close(&out, &x, 0.05, 0.05, "whitening").unwrap();
+    }
+
+    #[test]
+    fn guidance_one_equals_conditional() {
+        let mut rng = Pcg64::seeded(3);
+        let m = tiny_gmm(&mut rng, 3, 4);
+        let x: Vec<f32> = vec![0.3, -0.2, 0.5, 0.0];
+        let mut a = vec![0.0f32; 4];
+        let mut b = vec![0.0f32; 4];
+        m.eps_batch(&x, &[500], &[Cond::Class(1)], 1.0, &mut a);
+        m.eps_batch(&x, &[500], &[Cond::Class(1)], 1.0 + 1e-12, &mut b);
+        proplite::assert_close(&a, &b, 1e-5, 1e-5, "g=1").unwrap();
+    }
+
+    #[test]
+    fn guidance_extrapolates_beyond_conditional() {
+        // ε_cfg − ε_u = g·(ε_c − ε_u): check the affine relation at g=5.
+        let mut rng = Pcg64::seeded(4);
+        let m = tiny_gmm(&mut rng, 3, 4);
+        let x = vec![0.1f32, 0.7, -0.3, 0.2];
+        let (mut ec, mut eu, mut eg) = (vec![0.0f32; 4], vec![0.0f32; 4], vec![0.0f32; 4]);
+        m.eps_batch(&x, &[300], &[Cond::Class(2)], 1.0, &mut ec);
+        m.eps_batch(&x, &[300], &[Cond::Uncond], 1.0, &mut eu);
+        m.eps_batch(&x, &[300], &[Cond::Class(2)], 5.0, &mut eg);
+        let expect: Vec<f32> = (0..4).map(|j| eu[j] + 5.0 * (ec[j] - eu[j])).collect();
+        proplite::assert_close(&eg, &expect, 1e-5, 1e-4, "cfg affine").unwrap();
+    }
+
+    #[test]
+    fn posterior_sums_to_one_and_prefers_own_class() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let m = GmmEps::sd_analog(ns.alpha_bars.clone());
+        let t0 = crate::model::templates::template(3);
+        let (lp, _) = m.log_posterior(&t0, 0.999, &vec![1.0 / 8.0; 8]);
+        let total: f64 = lp.iter().map(|&l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        let best = lp
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best, 3, "template 3 should classify as class 3");
+    }
+
+    #[test]
+    fn sample_data_concentrates_near_mean() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let m = GmmEps::sd_analog(ns.alpha_bars);
+        let mut rng = Pcg64::seeded(9);
+        let s = m.sample_data(&Cond::Class(1), &mut rng);
+        let mu = crate::model::templates::template(1);
+        let dist2: f64 = s
+            .iter()
+            .zip(mu.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        // E[dist²] = d·s² = 256·0.0225 = 5.76; allow generous slack.
+        assert!(dist2 < 12.0, "sample too far from its component mean: {dist2}");
+    }
+
+    #[test]
+    fn cond_lerp_blends_weights() {
+        let a = Cond::Class(0);
+        let b = Cond::Class(1);
+        let mid = a.lerp(&b, 0.5, 4);
+        assert_eq!(mid.to_weights(4), vec![0.5, 0.5, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Denoiser models ε_θ(x_t, t, cond).
+//!
+//! The solver is generic over [`EpsModel`]: any batched map from a stack of
+//! noisy states (plus per-item training timestep and condition) to predicted
+//! noise. Two implementations ship:
+//!
+//! - [`gmm::GmmEps`] — the analytic template-GMM score (exact ε, no network),
+//!   used for the SD-analog scenarios, for fast property tests, and as the
+//!   ground truth behind the IS/CS quality proxies;
+//! - `runtime::PjrtEps` — the trained DiT-tiny loaded from an AOT HLO
+//!   artifact and executed on the PJRT CPU client (the production hot path).
+
+pub mod gmm;
+pub mod templates;
+
+/// A sampling condition ("class label" for DiT, "prompt embedding" — a
+/// weighting over template components — for the SD analog).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cond {
+    /// Unconditional (the CFG null condition).
+    Uncond,
+    /// A discrete class id.
+    Class(usize),
+    /// A continuous embedding: non-negative weights over GMM components
+    /// (need not be normalized; the model normalizes).
+    Weights(Vec<f32>),
+}
+
+impl Cond {
+    /// Blend two conditions: (1−α)·self + α·other, the "similar prompt"
+    /// construction used by the trajectory-initialization experiments (§5.3).
+    pub fn lerp(&self, other: &Cond, alpha: f32, n_components: usize) -> Cond {
+        let wa = self.to_weights(n_components);
+        let wb = other.to_weights(n_components);
+        Cond::Weights(
+            wa.iter()
+                .zip(wb.iter())
+                .map(|(&a, &b)| (1.0 - alpha) * a + alpha * b)
+                .collect(),
+        )
+    }
+
+    /// Densify to component weights (uniform for `Uncond`).
+    pub fn to_weights(&self, n_components: usize) -> Vec<f32> {
+        match self {
+            Cond::Uncond => vec![1.0 / n_components as f32; n_components],
+            Cond::Class(c) => {
+                let mut w = vec![0.0; n_components];
+                w[*c % n_components] = 1.0;
+                w
+            }
+            Cond::Weights(w) => {
+                assert_eq!(w.len(), n_components);
+                let s: f32 = w.iter().sum();
+                if s > 0.0 {
+                    w.iter().map(|&x| x / s).collect()
+                } else {
+                    vec![1.0 / n_components as f32; n_components]
+                }
+            }
+        }
+    }
+}
+
+/// A batched denoiser. `xs`/`out` are `[n, d]` row-major stacks; item `i`
+/// is evaluated at training timestep `train_ts[i]` under `conds[i]` with
+/// classifier-free guidance scale `guidance` (1.0 = conditional only).
+pub trait EpsModel: Send + Sync {
+    /// Feature dimension d.
+    fn dim(&self) -> usize;
+
+    /// Batched ε evaluation — **one call = one parallel round** (the unit the
+    /// paper counts as a single inference step).
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    );
+
+    /// Human-readable model name for reports.
+    fn name(&self) -> &str;
+}

@@ -1,0 +1,123 @@
+//! Synthetic 16×16 template images — the dataset substrate.
+//!
+//! Eight procedurally-generated grayscale shape classes in [-1, 1] pixel
+//! space. The generation rule is integer-exact and mirrored bit-for-bit by
+//! `python/compile/dataset.py` (pure threshold logic on integer coordinates,
+//! then a fixed scale), so Rust and Python agree on every pixel and the
+//! cross-language test vectors can pin the two sides together.
+//!
+//! The templates serve three roles:
+//! 1. class prototypes of the synthetic training set for DiT-tiny,
+//! 2. component means of the analytic template-GMM (the SD-analog model),
+//! 3. the classifier behind the IS/CS quality proxies.
+
+/// Image side length.
+pub const SIDE: usize = 16;
+/// Flattened image dimension.
+pub const DIM: usize = SIDE * SIDE;
+/// Number of shape classes.
+pub const N_CLASSES: usize = 8;
+
+/// Foreground / background pixel values.
+pub const FG: f32 = 0.8;
+pub const BG: f32 = -0.8;
+
+/// Class names, index-aligned with [`template`].
+pub const CLASS_NAMES: [&str; N_CLASSES] = [
+    "circle", "square", "cross", "hstripes", "vstripes", "diag", "ring", "checker",
+];
+
+/// Generate the template image for a class (row-major, length [`DIM`]).
+pub fn template(class: usize) -> Vec<f32> {
+    let c = class % N_CLASSES;
+    let mut img = vec![BG; DIM];
+    let s = SIDE as i64;
+    for y in 0..s {
+        for x in 0..s {
+            // Centered integer coordinates scaled by 2 to keep everything
+            // integral: cx, cy in {-15, -13, ..., 15}.
+            let cx = 2 * x - (s - 1);
+            let cy = 2 * y - (s - 1);
+            let r2 = cx * cx + cy * cy;
+            let on = match c {
+                0 => r2 <= 121,                            // circle, radius 5.5px
+                1 => cx.abs() <= 9 && cy.abs() <= 9,       // square
+                2 => cx.abs() <= 3 || cy.abs() <= 3,       // cross
+                3 => (y / 2) % 2 == 0,                     // horizontal stripes
+                4 => (x / 2) % 2 == 0,                     // vertical stripes
+                5 => (x - y).abs() <= 2 || (x + y - (s - 1)).abs() <= 2, // diagonals
+                6 => (49..=169).contains(&r2),             // ring
+                7 => ((x / 4) + (y / 4)) % 2 == 0,         // checkerboard
+                _ => unreachable!(),
+            };
+            if on {
+                img[(y * s + x) as usize] = FG;
+            }
+        }
+    }
+    img
+}
+
+/// All templates stacked `[N_CLASSES, DIM]`.
+pub fn all_templates() -> Vec<Vec<f32>> {
+    (0..N_CLASSES).map(template).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_have_expected_sizes() {
+        for c in 0..N_CLASSES {
+            let t = template(c);
+            assert_eq!(t.len(), DIM);
+            let fg = t.iter().filter(|&&p| p == FG).count();
+            // every class draws something, but not everything
+            assert!(fg > 10, "class {c} too empty ({fg})");
+            assert!(fg < DIM - 10, "class {c} too full ({fg})");
+            assert!(t.iter().all(|&p| p == FG || p == BG));
+        }
+    }
+
+    #[test]
+    fn classes_are_distinct() {
+        let ts = all_templates();
+        for i in 0..N_CLASSES {
+            for j in i + 1..N_CLASSES {
+                let diff: usize = ts[i]
+                    .iter()
+                    .zip(ts[j].iter())
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert!(diff > 8, "classes {i} and {j} nearly identical ({diff} px)");
+            }
+        }
+    }
+
+    #[test]
+    fn circle_is_symmetric() {
+        let t = template(0);
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let m = t[y * SIDE + x];
+                assert_eq!(m, t[y * SIDE + (SIDE - 1 - x)], "h-mirror at {x},{y}");
+                assert_eq!(m, t[(SIDE - 1 - y) * SIDE + x], "v-mirror at {x},{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn class_wraps() {
+        assert_eq!(template(0), template(N_CLASSES));
+    }
+
+    #[test]
+    fn checker_period() {
+        let t = template(7);
+        // 4x4 blocks: (0,0) and (4,4) same parity-sum difference
+        assert_eq!(t[0], FG);
+        assert_eq!(t[4], BG);
+        assert_eq!(t[4 * SIDE + 4], FG);
+    }
+}

@@ -1,0 +1,116 @@
+//! Artifact store: HLO-text loading and executable caching.
+//!
+//! Single-threaded by design (`PjRtClient` is `Rc`-based); lives inside the
+//! device-actor thread. One compiled executable per artifact name, compiled
+//! lazily on first use and cached for the process lifetime.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Lazily-compiled registry of `*.hlo.txt` artifacts.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    /// Open the store over an artifacts directory (no artifacts are loaded
+    /// until requested).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ArtifactStore { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// The PJRT client (for literal/buffer helpers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Directory backing the store.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// True if `<name>.hlo.txt` exists.
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parse HLO text {path_str}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile artifact {name}: {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Build an `f32` literal of the given dims from a slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n, "literal_f32: {} != prod{dims:?}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("create f32 literal: {e}"))
+}
+
+/// Build an `i32` literal of the given dims from a slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(data.len() == n, "literal_i32: {} != prod{dims:?}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("create i32 literal: {e}"))
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let ints = vec![7i32, 8, 9];
+        let lit = literal_i32(&ints, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), ints);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn store_reports_missing() {
+        let store = ArtifactStore::open("/nonexistent-dir-xyz").unwrap();
+        assert!(!store.has("eps_batch_1"));
+        assert_eq!(store.compiled_count(), 0);
+    }
+}

@@ -1,0 +1,284 @@
+//! Device actor — the single thread that owns the PJRT client.
+//!
+//! All device work flows through one bounded request channel, giving the
+//! process the shape of a one-accelerator serving node: submitters (solver
+//! threads, the coordinator's batcher, benches) enqueue work; the actor
+//! executes it in arrival order. One `EpsBatch` request = one parallel
+//! round = the unit the paper counts as an inference step.
+
+use super::artifacts::{literal_f32, literal_i32, literal_scalar, ArtifactStore};
+use super::pick_batch_size;
+use crate::util::channel::{bounded, Receiver, Sender};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One device request.
+pub enum DeviceRequest {
+    /// Batched ε_θ evaluation through an `eps_batch_{N}` artifact.
+    EpsBatch {
+        /// `[n, 256]` row-major states.
+        x: Vec<f32>,
+        /// Training timesteps, length n.
+        t: Vec<i32>,
+        /// Class ids (8 = CFG null), length n.
+        y: Vec<i32>,
+        guidance: f32,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    /// One full ParaTAA round through a `solver_step_{T}` artifact
+    /// (combine + residuals + TAA update fused into a single device call).
+    SolverStep {
+        steps: usize,
+        inputs: Box<SolverStepInputs>,
+        reply: Sender<Result<SolverStepOutputs>>,
+    },
+}
+
+/// Inputs of the fused solver-step artifact (see `python/compile/aot.py`).
+pub struct SolverStepInputs {
+    pub xs_ext: Vec<f32>,   // [T+1, D]
+    pub eps_ext: Vec<f32>,  // [T+1, D]
+    pub x_win: Vec<f32>,    // [W, D]
+    pub s_mat: Vec<f32>,    // [W, T+1]
+    pub b_mat: Vec<f32>,    // [W, T+1]
+    pub xi_comb: Vec<f32>,  // [W, D]
+    pub s1_mat: Vec<f32>,   // [W, T+1]
+    pub b1_mat: Vec<f32>,   // [W, T+1]
+    pub xi1_comb: Vec<f32>, // [W, D]
+    pub dx: Vec<f32>,       // [mc, W, D]
+    pub df: Vec<f32>,       // [mc, W, D]
+    pub mask: Vec<f32>,     // [W]
+    pub fp_mask: Vec<f32>,  // [W]
+    pub lam: f32,
+}
+
+/// Outputs of the fused solver-step artifact.
+pub struct SolverStepOutputs {
+    pub x_new: Vec<f32>, // [W, D]
+    pub r_vec: Vec<f32>, // [W, D]
+    pub r1: Vec<f32>,    // [W]
+}
+
+/// History columns compiled into the solver_step artifacts (paper m=3).
+pub const SOLVER_HIST_COLS: usize = 2;
+
+/// Counters shared with submitters (metrics surface).
+#[derive(Default)]
+pub struct DeviceStats {
+    pub eps_calls: AtomicU64,
+    pub eps_items: AtomicU64,
+    pub solver_calls: AtomicU64,
+}
+
+/// Handle to the device actor. Clonable, `Send + Sync`.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Sender<DeviceRequest>,
+    pub stats: Arc<DeviceStats>,
+    dim: usize,
+}
+
+impl DeviceHandle {
+    /// Synchronous batched ε call (pads up to the best-fit compiled variant;
+    /// splits batches larger than the largest variant).
+    pub fn eps_batch(
+        &self,
+        x: &[f32],
+        t: &[i32],
+        y: &[i32],
+        guidance: f32,
+    ) -> Result<Vec<f32>> {
+        let n = t.len();
+        anyhow::ensure!(x.len() == n * self.dim, "eps_batch: x shape");
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .send(DeviceRequest::EpsBatch {
+                x: x.to_vec(),
+                t: t.to_vec(),
+                y: y.to_vec(),
+                guidance,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("device actor is down"))?;
+        rrx.recv().ok_or_else(|| anyhow!("device actor dropped reply"))?
+    }
+
+    /// Synchronous fused solver round.
+    pub fn solver_step(
+        &self,
+        steps: usize,
+        inputs: SolverStepInputs,
+    ) -> Result<SolverStepOutputs> {
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .send(DeviceRequest::SolverStep { steps, inputs: Box::new(inputs), reply: rtx })
+            .map_err(|_| anyhow!("device actor is down"))?;
+        rrx.recv().ok_or_else(|| anyhow!("device actor dropped reply"))?
+    }
+
+    /// Feature dimension served by the eps artifacts.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// The actor: spawns the device thread and returns the handle.
+pub struct DeviceActor {
+    handle: DeviceHandle,
+    join: Option<JoinHandle<()>>,
+    shutdown: Sender<DeviceRequest>,
+}
+
+impl DeviceActor {
+    /// Spawn over an artifacts directory. `dim` is the model feature size
+    /// (256 for DiT-tiny).
+    pub fn spawn<P: AsRef<std::path::Path>>(dir: P, dim: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        // Fail fast if the directory is missing entirely.
+        anyhow::ensure!(
+            dir.exists(),
+            "artifacts directory {dir:?} not found — run `make artifacts`"
+        );
+        let (tx, rx) = bounded::<DeviceRequest>(64);
+        let stats = Arc::new(DeviceStats::default());
+        let stats2 = stats.clone();
+        let join = std::thread::Builder::new()
+            .name("parataa-device".to_string())
+            .spawn(move || {
+                let mut store = match ArtifactStore::open(&dir) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("device actor failed to open store: {e:#}");
+                        return;
+                    }
+                };
+                run_actor(&mut store, rx, &stats2, dim);
+            })?;
+        let handle = DeviceHandle { tx: tx.clone(), stats, dim };
+        Ok(DeviceActor { handle, join: Some(join), shutdown: tx })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DeviceActor {
+    fn drop(&mut self) {
+        self.shutdown.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn run_actor(
+    store: &mut ArtifactStore,
+    rx: Receiver<DeviceRequest>,
+    stats: &DeviceStats,
+    dim: usize,
+) {
+    while let Some(req) = rx.recv() {
+        match req {
+            DeviceRequest::EpsBatch { x, t, y, guidance, reply } => {
+                let res = exec_eps(store, &x, &t, &y, guidance, dim);
+                stats.eps_calls.fetch_add(1, Ordering::Relaxed);
+                stats.eps_items.fetch_add(t.len() as u64, Ordering::Relaxed);
+                let _ = reply.send(res);
+            }
+            DeviceRequest::SolverStep { steps, inputs, reply } => {
+                let res = exec_solver_step(store, steps, &inputs, dim);
+                stats.solver_calls.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn exec_eps(
+    store: &mut ArtifactStore,
+    x: &[f32],
+    t: &[i32],
+    y: &[i32],
+    guidance: f32,
+    dim: usize,
+) -> Result<Vec<f32>> {
+    let n = t.len();
+    let mut out = Vec::with_capacity(n * dim);
+    let max_var = *super::EPS_BATCH_SIZES.last().unwrap();
+    let mut off = 0;
+    while off < n {
+        let chunk = (n - off).min(max_var);
+        let var = pick_batch_size(chunk);
+        // Pad up to the compiled variant size.
+        let mut xb = vec![0.0f32; var * dim];
+        xb[..chunk * dim].copy_from_slice(&x[off * dim..(off + chunk) * dim]);
+        let mut tb = vec![0i32; var];
+        tb[..chunk].copy_from_slice(&t[off..off + chunk]);
+        let mut yb = vec![0i32; var];
+        yb[..chunk].copy_from_slice(&y[off..off + chunk]);
+
+        let exe = store.load(&format!("eps_batch_{var}"))?;
+        let lits = [
+            literal_f32(&xb, &[var, dim])?,
+            literal_i32(&tb, &[var])?,
+            literal_i32(&yb, &[var])?,
+            literal_scalar(guidance),
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute eps_batch_{var}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch eps result: {e}"))?;
+        let eps = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple eps result: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read eps result: {e}"))?;
+        out.extend_from_slice(&eps[..chunk * dim]);
+        off += chunk;
+    }
+    Ok(out)
+}
+
+fn exec_solver_step(
+    store: &mut ArtifactStore,
+    steps: usize,
+    i: &SolverStepInputs,
+    dim: usize,
+) -> Result<SolverStepOutputs> {
+    let w = steps;
+    let c = steps + 1;
+    let exe = store.load(&format!("solver_step_{steps}"))?;
+    let lits = [
+        literal_f32(&i.xs_ext, &[c, dim])?,
+        literal_f32(&i.eps_ext, &[c, dim])?,
+        literal_f32(&i.x_win, &[w, dim])?,
+        literal_f32(&i.s_mat, &[w, c])?,
+        literal_f32(&i.b_mat, &[w, c])?,
+        literal_f32(&i.xi_comb, &[w, dim])?,
+        literal_f32(&i.s1_mat, &[w, c])?,
+        literal_f32(&i.b1_mat, &[w, c])?,
+        literal_f32(&i.xi1_comb, &[w, dim])?,
+        literal_f32(&i.dx, &[SOLVER_HIST_COLS, w, dim])?,
+        literal_f32(&i.df, &[SOLVER_HIST_COLS, w, dim])?,
+        literal_f32(&i.mask, &[w])?,
+        literal_f32(&i.fp_mask, &[w])?,
+        literal_scalar(i.lam),
+    ];
+    let result = exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow!("execute solver_step_{steps}: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetch solver result: {e}"))?;
+    let (x_new, r_vec, r1) = result
+        .to_tuple3()
+        .map_err(|e| anyhow!("untuple solver result: {e}"))?;
+    Ok(SolverStepOutputs {
+        x_new: x_new.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        r_vec: r_vec.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        r1: r1.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+    })
+}

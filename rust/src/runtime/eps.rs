@@ -1,0 +1,84 @@
+//! `PjrtEps` — the trained DiT-tiny as an [`EpsModel`], served through the
+//! device actor. This is the production configuration: the solver calls
+//! `eps_batch` once per parallel round; the actor turns that into a single
+//! PJRT execution of the AOT artifact.
+
+use super::device::DeviceHandle;
+use crate::model::{Cond, EpsModel};
+
+/// Class id the DiT artifact uses for the CFG null condition.
+pub const NULL_CLASS: i32 = 8;
+
+/// DiT-tiny via PJRT.
+pub struct PjrtEps {
+    handle: DeviceHandle,
+    name: String,
+}
+
+impl PjrtEps {
+    pub fn new(handle: DeviceHandle) -> Self {
+        PjrtEps { handle, name: "dit-tiny(pjrt)".to_string() }
+    }
+
+    fn cond_to_class(cond: &Cond) -> i32 {
+        match cond {
+            Cond::Uncond => NULL_CLASS,
+            Cond::Class(c) => (*c % 8) as i32,
+            // The DiT artifact is class-conditional; continuous "prompt"
+            // embeddings are a GMM-model concept. Route them to their
+            // dominant component so mixed workloads still run.
+            Cond::Weights(w) => {
+                let mut best = 0;
+                for (i, &v) in w.iter().enumerate() {
+                    if v > w[best] {
+                        best = i;
+                    }
+                }
+                (best % 8) as i32
+            }
+        }
+    }
+}
+
+impl EpsModel for PjrtEps {
+    fn dim(&self) -> usize {
+        self.handle.dim()
+    }
+
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) {
+        let t: Vec<i32> = train_ts.iter().map(|&v| v as i32).collect();
+        let y: Vec<i32> = conds.iter().map(Self::cond_to_class).collect();
+        let eps = self
+            .handle
+            .eps_batch(xs, &t, &y, guidance)
+            .expect("PJRT eps_batch failed");
+        out.copy_from_slice(&eps);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cond_mapping() {
+        assert_eq!(PjrtEps::cond_to_class(&Cond::Uncond), NULL_CLASS);
+        assert_eq!(PjrtEps::cond_to_class(&Cond::Class(3)), 3);
+        assert_eq!(PjrtEps::cond_to_class(&Cond::Class(11)), 3);
+        assert_eq!(
+            PjrtEps::cond_to_class(&Cond::Weights(vec![0.1, 0.7, 0.2])),
+            1
+        );
+    }
+}

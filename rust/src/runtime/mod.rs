@@ -1,0 +1,61 @@
+//! PJRT runtime — loads and executes the AOT HLO artifacts (the hot path).
+//!
+//! Layering: Python lowers the L2 JAX graphs (with their L1 Pallas kernels)
+//! to **HLO text** at build time (`make artifacts`); this module loads the
+//! text through `HloModuleProto::from_text_file`, compiles it on the PJRT
+//! CPU client (`xla` crate 0.1.6), and executes it with zero Python on the
+//! request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so all
+//! device interaction lives on a dedicated **device-actor thread**
+//! ([`device::DeviceActor`]) that owns the client and compiled executables
+//! and serves requests over a bounded channel — the same shape as a real
+//! serving deployment (one executor per accelerator, submission queue in
+//! front). [`eps::PjrtEps`] is the cheap, clonable, `Send + Sync` handle
+//! that implements [`crate::model::EpsModel`] for the solver and the
+//! coordinator.
+
+pub mod artifacts;
+pub mod device;
+pub mod eps;
+pub mod pjrt_driver;
+
+pub use artifacts::ArtifactStore;
+pub use device::{DeviceActor, DeviceHandle};
+pub use eps::PjrtEps;
+
+/// Default artifacts directory, overridable with `PARATAA_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PARATAA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// The eps_batch_{N} variants exported by `python/compile/aot.py`, ascending.
+pub const EPS_BATCH_SIZES: &[usize] = &[1, 5, 10, 25, 50, 100];
+
+/// Pick the smallest exported batch variant that fits `n` items (the last
+/// variant if none fit — callers then split the batch).
+pub fn pick_batch_size(n: usize) -> usize {
+    for &s in EPS_BATCH_SIZES {
+        if s >= n {
+            return s;
+        }
+    }
+    *EPS_BATCH_SIZES.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_selection() {
+        assert_eq!(pick_batch_size(1), 1);
+        assert_eq!(pick_batch_size(2), 5);
+        assert_eq!(pick_batch_size(5), 5);
+        assert_eq!(pick_batch_size(26), 50);
+        assert_eq!(pick_batch_size(100), 100);
+        assert_eq!(pick_batch_size(1000), 100);
+    }
+}

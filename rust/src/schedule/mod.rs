@@ -1,0 +1,167 @@
+//! Diffusion noise schedules and sampler coefficients.
+//!
+//! Implements the discrete VP (DDPM-style) forward process and the
+//! first-order sampler coefficients of eq. (6) in the paper:
+//!
+//!   x_{t-1} = a_t x_t + b_t ε_θ(x_t, t) + c_{t-1} ξ_{t-1}
+//!
+//! for the DDIM(η) family (η=0 → DDIM/ODE with c ≡ 0; η=1 → DDPM/SDE),
+//! including timestep subsetting (running T ∈ {25,50,100} steps of a
+//! 1000-step training schedule) and the cumulative products ā_{i,s} used by
+//! the order-k equations (Definition 2.1).
+//!
+//! Cross-checked against `python/compile/schedule.py` via exported test
+//! vectors (`artifacts/testvec_schedule.json`).
+
+pub mod sampler;
+
+pub use sampler::{SamplerCoeffs, SamplerKind};
+
+/// β-schedule families used by common diffusion models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BetaSchedule {
+    /// DDPM's linear β ramp (1e-4 → 0.02 over `train_steps`).
+    Linear,
+    /// Stable-Diffusion's "scaled linear" (linear in √β).
+    ScaledLinear,
+    /// Nichol & Dhariwal cosine ᾱ schedule.
+    Cosine,
+}
+
+/// The discrete forward process: β_t, α_t, ᾱ_t for t = 0..train_steps-1.
+#[derive(Debug, Clone)]
+pub struct NoiseSchedule {
+    pub kind: BetaSchedule,
+    pub betas: Vec<f64>,
+    pub alphas: Vec<f64>,
+    pub alpha_bars: Vec<f64>,
+}
+
+impl NoiseSchedule {
+    pub fn new(kind: BetaSchedule, train_steps: usize) -> Self {
+        assert!(train_steps >= 2);
+        let n = train_steps as f64;
+        let betas: Vec<f64> = match kind {
+            BetaSchedule::Linear => {
+                let (lo, hi) = (1e-4, 0.02);
+                (0..train_steps)
+                    .map(|i| lo + (hi - lo) * i as f64 / (n - 1.0))
+                    .collect()
+            }
+            BetaSchedule::ScaledLinear => {
+                let (lo, hi) = (0.00085f64.sqrt(), 0.012f64.sqrt());
+                (0..train_steps)
+                    .map(|i| {
+                        let s = lo + (hi - lo) * i as f64 / (n - 1.0);
+                        s * s
+                    })
+                    .collect()
+            }
+            BetaSchedule::Cosine => {
+                let s = 0.008;
+                let f = |u: f64| ((u + s) / (1.0 + s) * std::f64::consts::FRAC_PI_2).cos().powi(2);
+                (0..train_steps)
+                    .map(|i| {
+                        let t0 = i as f64 / n;
+                        let t1 = (i as f64 + 1.0) / n;
+                        (1.0 - f(t1) / f(t0)).clamp(1e-8, 0.999)
+                    })
+                    .collect()
+            }
+        };
+        let alphas: Vec<f64> = betas.iter().map(|b| 1.0 - b).collect();
+        let mut alpha_bars = Vec::with_capacity(train_steps);
+        let mut acc = 1.0;
+        for &a in &alphas {
+            acc *= a;
+            alpha_bars.push(acc);
+        }
+        NoiseSchedule { kind, betas, alphas, alpha_bars }
+    }
+
+    /// Number of training timesteps.
+    pub fn train_steps(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// Evenly-spaced subset of `steps` training timesteps, ascending
+    /// (the DDIM "leading" spacing: 0, s, 2s, ...).
+    pub fn subset_timesteps(&self, steps: usize) -> Vec<usize> {
+        assert!(steps >= 1 && steps <= self.train_steps());
+        let stride = self.train_steps() / steps;
+        (0..steps).map(|i| i * stride).collect()
+    }
+
+    /// ᾱ at a training timestep.
+    pub fn alpha_bar(&self, t: usize) -> f64 {
+        self.alpha_bars[t]
+    }
+
+    /// Continuous-time diffusion coefficient g²(t) of the VP-SDE at the
+    /// training timestep `t`: g²(t) = β(t)·N (β discretized with dt = 1/N).
+    /// Used for the residual thresholds ε_t = τ²·g²(t)·d (§2.1).
+    pub fn g2(&self, t: usize) -> f64 {
+        self.betas[t] * self.train_steps() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_schedule_monotone() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        assert_eq!(ns.betas.len(), 1000);
+        assert!((ns.betas[0] - 1e-4).abs() < 1e-12);
+        assert!((ns.betas[999] - 0.02).abs() < 1e-12);
+        for i in 1..1000 {
+            assert!(ns.betas[i] > ns.betas[i - 1]);
+            assert!(ns.alpha_bars[i] < ns.alpha_bars[i - 1]);
+        }
+        // ᾱ telescopes: ᾱ_t = Π α_i
+        let mut acc = 1.0;
+        for i in 0..1000 {
+            acc *= ns.alphas[i];
+            assert!((ns.alpha_bars[i] - acc).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_bounded() {
+        let ns = NoiseSchedule::new(BetaSchedule::Cosine, 1000);
+        for &b in &ns.betas {
+            assert!(b > 0.0 && b <= 0.999);
+        }
+        // ᾱ decays to near zero by the end.
+        assert!(ns.alpha_bars[999] < 1e-3);
+    }
+
+    #[test]
+    fn scaled_linear_matches_sd_range() {
+        let ns = NoiseSchedule::new(BetaSchedule::ScaledLinear, 1000);
+        assert!((ns.betas[0] - 0.00085).abs() < 1e-9);
+        assert!((ns.betas[999] - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subset_spacing() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let ts = ns.subset_timesteps(100);
+        assert_eq!(ts.len(), 100);
+        assert_eq!(ts[0], 0);
+        assert_eq!(ts[99], 990);
+        for w in ts.windows(2) {
+            assert_eq!(w[1] - w[0], 10);
+        }
+        let ts25 = ns.subset_timesteps(25);
+        assert_eq!(ts25[24], 960);
+    }
+
+    #[test]
+    fn g2_positive_increasing_for_linear() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        assert!(ns.g2(0) > 0.0);
+        assert!(ns.g2(999) > ns.g2(0));
+    }
+}

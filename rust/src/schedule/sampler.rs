@@ -1,0 +1,234 @@
+//! First-order sampler coefficients (eq. 6): DDIM(η) family.
+//!
+//! Indexing convention (matches the paper): solver states are x_T .. x_0
+//! with x_T = ξ_T the initial Gaussian draw and x_0 the sample. State x_t
+//! for t ∈ {1..T} lives at training timestep `train_t(t)` = τ_{t-1} of the
+//! subsetted grid; x_0 is fully denoised (ᾱ ≡ 1). One solver step is
+//!
+//!   x_{t-1} = a_t·x_t + b_t·ε_θ(x_t, τ_{t-1}) + c_{t-1}·ξ_{t-1},  t = T..1.
+//!
+//! DDIM(η) coefficients over ᾱ_hi = ᾱ(τ_{t-1}), ᾱ_lo = ᾱ(τ_{t-2}) (1 for t=1):
+//!   a_t = √(ᾱ_lo/ᾱ_hi)
+//!   σ_t = η·√((1-ᾱ_lo)/(1-ᾱ_hi))·√(1-ᾱ_hi/ᾱ_lo)
+//!   b_t = √(1-ᾱ_lo-σ_t²) − a_t·√(1-ᾱ_hi)
+//!   c_{t-1} = σ_t
+//!
+//! η = 0 recovers the DDIM ODE solver (c ≡ 0); η = 1 the DDPM SDE sampler
+//! (footnote 4 of the paper treats DDIM(η=1) as the DDPM sampler).
+
+use super::NoiseSchedule;
+
+/// Which member of the DDIM(η) family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerKind {
+    /// Deterministic ODE sampler (η = 0).
+    Ddim,
+    /// Stochastic DDPM sampler (η = 1).
+    Ddpm,
+    /// General η ∈ [0, 1].
+    Eta(f64),
+}
+
+impl SamplerKind {
+    pub fn eta(&self) -> f64 {
+        match self {
+            SamplerKind::Ddim => 0.0,
+            SamplerKind::Ddpm => 1.0,
+            SamplerKind::Eta(e) => *e,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SamplerKind::Ddim => "DDIM".to_string(),
+            SamplerKind::Ddpm => "DDPM".to_string(),
+            SamplerKind::Eta(e) => format!("DDIM(eta={e})"),
+        }
+    }
+}
+
+/// All per-step coefficients of the autoregressive procedure (eq. 6) for a
+/// `steps`-step run of a sampler over a training schedule.
+#[derive(Debug, Clone)]
+pub struct SamplerCoeffs {
+    pub kind: SamplerKind,
+    /// T — number of solver steps.
+    pub steps: usize,
+    /// a[t], t ∈ 1..=T (index 0 unused, kept for paper-aligned indexing).
+    pub a: Vec<f64>,
+    /// b[t], t ∈ 1..=T (index 0 unused).
+    pub b: Vec<f64>,
+    /// c[t], t ∈ 0..T — coefficient of ξ_t in the step producing x_t.
+    pub c: Vec<f64>,
+    /// Training timestep fed to ε_θ for state x_t, t ∈ 1..=T (index 0 unused).
+    pub train_t: Vec<usize>,
+    /// g²(τ) at each state's training timestep, t ∈ 0..T used for the
+    /// residual-r_t threshold (g² of the step that *produces* x_t).
+    pub g2: Vec<f64>,
+}
+
+impl SamplerCoeffs {
+    /// Build coefficients for `steps` sampling steps over `schedule`.
+    pub fn new(schedule: &NoiseSchedule, kind: SamplerKind, steps: usize) -> Self {
+        let eta = kind.eta();
+        let taus = schedule.subset_timesteps(steps); // ascending, len = steps
+        let t_count = steps;
+        let mut a = vec![0.0; t_count + 1];
+        let mut b = vec![0.0; t_count + 1];
+        let mut c = vec![0.0; t_count];
+        let mut train_t = vec![0usize; t_count + 1];
+        let mut g2 = vec![0.0; t_count];
+        for t in 1..=t_count {
+            let tau_hi = taus[t - 1];
+            let abar_hi = schedule.alpha_bar(tau_hi);
+            let abar_lo = if t >= 2 { schedule.alpha_bar(taus[t - 2]) } else { 1.0 };
+            let a_t = (abar_lo / abar_hi).sqrt();
+            let sigma = if t >= 2 {
+                eta * ((1.0 - abar_lo) / (1.0 - abar_hi)).sqrt()
+                    * (1.0 - abar_hi / abar_lo).sqrt()
+            } else {
+                0.0 // final step to the clean sample is deterministic
+            };
+            let b_t = (1.0 - abar_lo - sigma * sigma).max(0.0).sqrt()
+                - a_t * (1.0 - abar_hi).sqrt();
+            a[t] = a_t;
+            b[t] = b_t;
+            c[t - 1] = sigma;
+            train_t[t] = tau_hi;
+            g2[t - 1] = schedule.g2(tau_hi);
+        }
+        SamplerCoeffs { kind, steps: t_count, a, b, c, train_t, g2 }
+    }
+
+    /// ā_{i,s} = Π_{j=i}^{s} a_j (1 when s < i) — Definition 2.1.
+    pub fn abar(&self, i: usize, s: usize) -> f64 {
+        if s < i {
+            return 1.0;
+        }
+        debug_assert!(i >= 1 && s <= self.steps);
+        let mut p = 1.0;
+        for j in i..=s {
+            p *= self.a[j];
+        }
+        p
+    }
+
+    /// Residual threshold ε_t = τ²·g²(t)·d for residual r_t (§2.1).
+    pub fn threshold(&self, t: usize, tol: f64, d: usize) -> f64 {
+        tol * tol * self.g2[t] * d as f64
+    }
+
+    /// True if the sampler is deterministic (all c ≡ 0).
+    pub fn is_ode(&self) -> bool {
+        self.c.iter().all(|&x| x == 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::BetaSchedule;
+
+    fn sched() -> NoiseSchedule {
+        NoiseSchedule::new(BetaSchedule::Linear, 1000)
+    }
+
+    #[test]
+    fn ddim_is_deterministic() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddim, 100);
+        assert!(sc.is_ode());
+        assert_eq!(sc.steps, 100);
+        assert_eq!(sc.a.len(), 101);
+        assert_eq!(sc.c.len(), 100);
+    }
+
+    #[test]
+    fn ddpm_has_noise_except_last_step() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddpm, 100);
+        assert!(!sc.is_ode());
+        // c_{t-1} for t=1 (the final denoise) is 0; all earlier are > 0.
+        assert_eq!(sc.c[0], 0.0);
+        for t in 1..100 {
+            assert!(sc.c[t] > 0.0, "c[{t}] should be positive");
+        }
+    }
+
+    #[test]
+    fn signal_preservation_identity() {
+        // If ε_θ were exact and x_t = √ᾱ_hi·x0 + √(1-ᾱ_hi)·ε, the DDIM update
+        // must produce exactly √ᾱ_lo·x0 + √(1-ᾱ_lo)·ε. On the coefficient
+        // level: a_t·√ᾱ_hi = √ᾱ_lo and a_t·√(1-ᾱ_hi) + b_t = √(1-ᾱ_lo).
+        let ns = sched();
+        let sc = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 50);
+        let taus = ns.subset_timesteps(50);
+        for t in 1..=50usize {
+            let abar_hi = ns.alpha_bar(taus[t - 1]);
+            let abar_lo = if t >= 2 { ns.alpha_bar(taus[t - 2]) } else { 1.0 };
+            let lhs_sig = sc.a[t] * abar_hi.sqrt();
+            assert!((lhs_sig - abar_lo.sqrt()).abs() < 1e-12, "signal at t={t}");
+            let lhs_eps = sc.a[t] * (1.0 - abar_hi).sqrt() + sc.b[t];
+            assert!((lhs_eps - (1.0 - abar_lo).sqrt()).abs() < 1e-12, "eps at t={t}");
+        }
+    }
+
+    #[test]
+    fn ddpm_variance_preservation() {
+        // For η=1: a_t²·(1-ᾱ_hi) + (a_t·√(1-ᾱ_hi)+b_t)² ... simpler identity:
+        // total noise variance after the step equals 1-ᾱ_lo:
+        // (a√(1-ᾱhi)+b)² + σ² = 1-ᾱ_lo.
+        let ns = sched();
+        let sc = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 100);
+        let taus = ns.subset_timesteps(100);
+        for t in 2..=100usize {
+            let abar_hi = ns.alpha_bar(taus[t - 1]);
+            let abar_lo = ns.alpha_bar(taus[t - 2]);
+            let dir = sc.a[t] * (1.0 - abar_hi).sqrt() + sc.b[t];
+            let total = dir * dir + sc.c[t - 1] * sc.c[t - 1];
+            assert!(
+                (total - (1.0 - abar_lo)).abs() < 1e-10,
+                "variance at t={t}: {total} vs {}",
+                1.0 - abar_lo
+            );
+        }
+    }
+
+    #[test]
+    fn abar_products() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddim, 10);
+        assert_eq!(sc.abar(5, 4), 1.0); // empty product
+        let direct = sc.a[3] * sc.a[4] * sc.a[5];
+        assert!((sc.abar(3, 5) - direct).abs() < 1e-15);
+        // telescoping: ā_{1,T} = Π all
+        let all: f64 = (1..=10).map(|j| sc.a[j]).product();
+        assert!((sc.abar(1, 10) - all).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_interpolates() {
+        let ns = sched();
+        let half = SamplerCoeffs::new(&ns, SamplerKind::Eta(0.5), 50);
+        let ddpm = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 50);
+        for t in 1..50 {
+            assert!((half.c[t] - 0.5 * ddpm.c[t]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn thresholds_scale_with_d() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddim, 25);
+        let e1 = sc.threshold(10, 1e-3, 256);
+        let e2 = sc.threshold(10, 1e-3, 512);
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn train_t_descends_with_solver_index() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddim, 25);
+        // Higher solver index = noisier state = later training timestep.
+        for t in 2..=25 {
+            assert!(sc.train_t[t] > sc.train_t[t - 1]);
+        }
+        assert_eq!(sc.train_t[1], 0);
+    }
+}

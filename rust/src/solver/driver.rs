@@ -1,0 +1,503 @@
+//! Algorithm 1 — the ParaTAA driver.
+//!
+//! One iteration = one *parallel round*: a single batched ε_θ call over the
+//! active window followed by the chosen update rule. The number of rounds is
+//! the paper's "Steps" metric (Table 1); it is hardware-independent, unlike
+//! wall-clock, and is what the reproduction pins against the paper.
+//!
+//! Window/stopping mechanics follow §2.1–2.2: first-order residuals with
+//! thresholds ε_t = τ²g²(t)d decide the convergence *front* (states freeze
+//! strictly from the top down — the triangular structure guarantees states
+//! above the front can no longer change), and the active window [t1, t2]
+//! slides down as the front advances.
+
+use super::history::History;
+use super::update::apply_update;
+use super::{Method, Problem, SolverConfig};
+use crate::equations::{eval_fk, residual_sq, States};
+use crate::model::Cond;
+
+/// Per-iteration diagnostics.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    /// 1-based parallel round index.
+    pub iter: usize,
+    /// Active window at this round (producing rows, inclusive).
+    pub t1: usize,
+    pub t2: usize,
+    /// ε_θ evaluations in this round (window + one-off frozen fills).
+    pub nfe: usize,
+    /// Σ over rows with known residuals of r_p (the Fig. 1/2 y-axis).
+    pub residual_sum: f64,
+    /// max over active rows of r_p / ε_p (≤ 1 ⇒ all active rows converged).
+    pub max_residual_ratio: f64,
+    /// Rows converged so far (T − front).
+    pub converged_rows: usize,
+    /// Per-row residuals r_p (NaN where never evaluated) — Fig. 6a data.
+    pub row_residuals: Vec<f64>,
+}
+
+/// Result of a parallel solve.
+pub struct SolveResult {
+    /// Final trajectory x_0..x_T.
+    pub xs: States,
+    /// Parallel rounds used (the paper's "Steps").
+    pub iterations: usize,
+    /// Total ε_θ evaluations (the compute-cost axis).
+    pub total_nfe: usize,
+    /// Whether the stopping criterion was met for every row.
+    pub converged: bool,
+    /// Per-iteration history.
+    pub records: Vec<IterationRecord>,
+}
+
+/// Solve with the default (no-op) observer.
+pub fn solve(problem: &Problem, cfg: &SolverConfig) -> SolveResult {
+    solve_with(problem, cfg, |_, _| false)
+}
+
+/// Solve, invoking `observer(record, xs)` after every round. Returning
+/// `true` stops early (the §4.1 "user accepts the image" trick).
+pub fn solve_with<F>(problem: &Problem, cfg: &SolverConfig, mut observer: F) -> SolveResult
+where
+    F: FnMut(&IterationRecord, &States) -> bool,
+{
+    let coeffs = problem.coeffs;
+    let model = problem.model;
+    let t_count = coeffs.steps;
+    let d = model.dim();
+    let k = cfg.k.clamp(1, t_count);
+    let w = cfg.window.clamp(1, t_count);
+    let t_init = problem.t_init.unwrap_or(t_count).clamp(1, t_count);
+
+    // --- State ------------------------------------------------------------
+    let mut xs = States::zeros(t_count, d);
+    xs.set_row(t_count, problem.xi.row(t_count));
+    match (&problem.init, t_init) {
+        (Some(init), _) => {
+            assert_eq!(init.d, d, "init trajectory dimension mismatch");
+            assert_eq!(init.rows(), t_count + 1, "init trajectory length mismatch");
+            xs.data[..t_count * d].copy_from_slice(&init.data[..t_count * d]);
+        }
+        (None, _) => {
+            // Standard-Gaussian initialization of all unknowns (§5.1).
+            let mut rng = crate::util::rng::Pcg64::new(problem.init_seed(), 0x1717_c0de);
+            rng.fill_gaussian(&mut xs.data[..t_count * d]);
+        }
+    }
+
+    let mut eps = States::zeros(t_count, d);
+    let mut eps_valid = vec![false; t_count + 1];
+
+    // Anderson history: paper's m counts the iterate window, so m−1
+    // difference columns (m = 1 ⇒ plain FP; Appendix C).
+    let hist_cols = if cfg.method == Method::FixedPoint { 0 } else { cfg.m.saturating_sub(1) };
+    let mut history = History::new(hist_cols, t_count, d);
+    let mut prev_x = vec![0.0f32; t_count * d];
+    let mut prev_r = vec![0.0f32; t_count * d];
+    let mut prev_active: Option<(usize, usize)> = None;
+
+    // Reusable per-round buffers (no allocation in the hot loop).
+    let mut f_vals = vec![0.0f32; t_count * d];
+    let mut r_vals = vec![0.0f32; t_count * d];
+    let mut dx_buf = vec![0.0f32; t_count * d];
+    let mut df_buf = vec![0.0f32; t_count * d];
+    let mut batch_x: Vec<f32> = Vec::new();
+    let mut batch_t: Vec<usize> = Vec::new();
+    // Pre-cloned condition pool: one request has one condition, so avoid
+    // re-cloning (potentially heap-backed) `Cond`s every round (§Perf L3).
+    let cond_pool: Vec<Cond> = vec![problem.cond.clone(); t_count + 1];
+    let mut batch_out: Vec<f32> = Vec::new();
+
+    let mut last_residual: Vec<Option<f64>> = vec![None; t_count];
+    let thresholds: Vec<f64> = (0..t_count).map(|p| coeffs.threshold(p, cfg.tol, d)).collect();
+
+    let mut batch_states: Vec<usize> = Vec::new();
+    let mut t2 = t_init - 1;
+    let mut t1 = (t2 + 1).saturating_sub(w);
+    let mut total_nfe = 0usize;
+    let mut records: Vec<IterationRecord> = Vec::new();
+    let mut converged = false;
+
+    for iter in 1..=cfg.s_max {
+        // --- 1. Batched ε_θ over the active window (one parallel round) ----
+        batch_x.clear();
+        batch_t.clear();
+        batch_states.clear();
+        // Equations are clamped at the boundary state t2+1 (see
+        // `equations::eval_fk`), so only states [t1+1, t2+1] are needed; the
+        // boundary state is frozen and served from the cache once filled.
+        let top_needed = (t2 + 1).min(t_count);
+        for j in t1 + 1..=top_needed {
+            let active = j <= t2;
+            if active || !eps_valid[j] {
+                batch_states.push(j);
+                batch_x.extend_from_slice(xs.row(j));
+                batch_t.push(coeffs.train_t[j]);
+            }
+        }
+        batch_out.resize(batch_states.len() * d, 0.0);
+        model.eps_batch(
+            &batch_x,
+            &batch_t,
+            &cond_pool[..batch_states.len()],
+            cfg.guidance,
+            &mut batch_out,
+        );
+        total_nfe += batch_states.len();
+        for (bi, &j) in batch_states.iter().enumerate() {
+            eps.set_row(j, &batch_out[bi * d..(bi + 1) * d]);
+            eps_valid[j] = true;
+        }
+
+        // --- 2. Residuals + convergence front (§2.1) -----------------------
+        for p in t1..=t2 {
+            last_residual[p] = Some(residual_sq(coeffs, &xs, &eps, &problem.xi, p));
+        }
+        let mut new_t2: Option<usize> = None;
+        for p in (t1..=t2).rev() {
+            if last_residual[p].unwrap() > thresholds[p] {
+                new_t2 = Some(p);
+                break;
+            }
+        }
+        let residual_sum: f64 = last_residual.iter().flatten().sum();
+        let max_ratio = (t1..=t2)
+            .map(|p| last_residual[p].unwrap() / thresholds[p])
+            .fold(0.0f64, f64::max);
+
+        let (nt1, nt2, done) = match new_t2 {
+            None if t1 == 0 => (t1, t2, true),
+            None => {
+                // Whole window converged; slide below it.
+                let nt2 = t1 - 1;
+                ((nt2 + 1).saturating_sub(w), nt2, false)
+            }
+            Some(nt2) => ((nt2 + 1).saturating_sub(w), nt2, false),
+        };
+
+        let row_residuals: Vec<f64> =
+            last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect();
+
+        if done {
+            converged = true;
+            let rec = IterationRecord {
+                iter,
+                t1,
+                t2,
+                nfe: batch_states.len(),
+                residual_sum,
+                max_residual_ratio: max_ratio,
+                converged_rows: t_count,
+                row_residuals,
+            };
+            observer(&rec, &xs);
+            records.push(rec);
+            break;
+        }
+        t1 = nt1;
+        t2 = nt2;
+
+        // --- 3. F^{(k)} and residual vectors over the (new) window ---------
+        // First frozen state; without the clamp the equations reach across
+        // the front (Definition 2.1 verbatim) — kept only for `ablate`.
+        let boundary = if cfg.clamp_boundary { t2 + 1 } else { t_count };
+        r_vals.fill(0.0);
+        for p in t1..=t2 {
+            let row = p * d..(p + 1) * d;
+            eval_fk(coeffs, &xs, &eps, &problem.xi, k, boundary, p, &mut f_vals[row.clone()]);
+            for i in row.clone() {
+                r_vals[i] = f_vals[i] - xs.data[i];
+            }
+        }
+
+        // --- 4. Anderson history push (Δx^{i-1}, ΔR^{i-1}) ------------------
+        if hist_cols > 0 {
+            if let Some((p1, p2)) = prev_active {
+                dx_buf.fill(0.0);
+                df_buf.fill(0.0);
+                let lo = t1.max(p1);
+                let hi = t2.min(p2);
+                if lo <= hi {
+                    for i in lo * d..(hi + 1) * d {
+                        dx_buf[i] = xs.data[i] - prev_x[i];
+                        df_buf[i] = r_vals[i] - prev_r[i];
+                    }
+                    history.push(&dx_buf, &df_buf);
+                }
+            }
+            prev_x.copy_from_slice(&xs.data[..t_count * d]);
+            prev_r.copy_from_slice(&r_vals);
+            prev_active = Some((t1, t2));
+        }
+
+        // --- 5. Update rule -------------------------------------------------
+        apply_update(
+            cfg.method,
+            &mut xs.data[..t_count * d],
+            &f_vals,
+            &r_vals,
+            &history,
+            t1,
+            t2,
+            t_count,
+            d,
+            cfg.lambda,
+            cfg.safeguard,
+        );
+
+        let rec = IterationRecord {
+            iter,
+            t1,
+            t2,
+            nfe: batch_states.len(),
+            residual_sum,
+            max_residual_ratio: max_ratio,
+            converged_rows: t_count - (t2 + 1),
+            row_residuals,
+        };
+        let stop = observer(&rec, &xs);
+        records.push(rec);
+        if stop {
+            break;
+        }
+    }
+
+    let iterations = records.len();
+    SolveResult { xs, iterations, total_nfe, converged, records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::model::Cond;
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+    use crate::solver::sequential::sample_sequential;
+    use crate::util::proplite::{self, forall, size_in};
+    use crate::util::rng::Pcg64;
+
+    fn gmm(d: usize, n_comp: usize, seed: u64) -> GmmEps {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(seed);
+        let means: Vec<f32> = (0..n_comp * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        GmmEps::new(means, d, 0.25, ns.alpha_bars.clone())
+    }
+
+    fn coeffs(steps: usize, kind: SamplerKind) -> SamplerCoeffs {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        SamplerCoeffs::new(&ns, kind, steps)
+    }
+
+    /// Parallel ≡ sequential (Theorem 2.2 / Remark 5.3) for every method.
+    #[test]
+    fn parallel_matches_sequential_all_methods() {
+        forall("parallel_eq_sequential", 6, |rng, case| {
+            let steps = size_in(rng, 6, 16);
+            let d = size_in(rng, 2, 6);
+            let kind = if case % 2 == 0 { SamplerKind::Ddim } else { SamplerKind::Ddpm };
+            let sc = coeffs(steps, kind);
+            let model = gmm(d, 3, 100 + case);
+            let problem = Problem::new(&sc, &model, Cond::Class(1), 7 + case);
+            let seq = sample_sequential(&problem, 2.0);
+            for method in [Method::FixedPoint, Method::AndersonStd, Method::AndersonUpperTri, Method::Taa] {
+                let cfg = SolverConfig {
+                    k: size_in(rng, 1, steps),
+                    method,
+                    m: 3,
+                    lambda: 1e-4,
+                    safeguard: true,
+                    window: steps,
+                    tol: 1e-5, // tight: near-exact match expected
+                    s_max: 4 * steps,
+                    guidance: 2.0,
+                    clamp_boundary: true,
+                };
+                let par = solve(&problem, &cfg);
+                if !par.converged {
+                    return Err(format!("{} did not converge", method.label()));
+                }
+                proplite::assert_close(
+                    par.xs.row(0),
+                    seq.xs.row(0),
+                    5e-3,
+                    5e-2,
+                    &format!("{} vs sequential (k={})", method.label(), cfg.k),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Theorem 3.6 / Song et al. Prop. 1: safeguarded methods converge in
+    /// at most T parallel rounds (with full window).
+    #[test]
+    fn worst_case_t_rounds_with_safeguard() {
+        forall("safeguard_T_rounds", 6, |rng, case| {
+            let steps = size_in(rng, 4, 12);
+            let d = size_in(rng, 2, 4);
+            let sc = coeffs(steps, SamplerKind::Ddpm);
+            let model = gmm(d, 2, 200 + case);
+            let problem = Problem::new(&sc, &model, Cond::Class(0), case);
+            for method in [Method::FixedPoint, Method::Taa] {
+                let cfg = SolverConfig {
+                    k: size_in(rng, 1, steps),
+                    method,
+                    m: 3,
+                    lambda: 1e-4,
+                    safeguard: true,
+                    window: steps,
+                    tol: 1e-4,
+                    s_max: steps + 1, // T rounds + the final check round
+                    guidance: 1.0,
+                    clamp_boundary: true,
+                };
+                let r = solve(&problem, &cfg);
+                if !r.converged {
+                    return Err(format!(
+                        "{} (k={}) exceeded T+1={} rounds",
+                        method.label(),
+                        cfg.k,
+                        steps + 1
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The convergence front only advances (rows never un-freeze).
+    #[test]
+    fn front_is_monotone() {
+        let sc = coeffs(20, SamplerKind::Ddim);
+        let model = gmm(4, 3, 5);
+        let problem = Problem::new(&sc, &model, Cond::Class(2), 3);
+        let cfg = SolverConfig::parataa(20);
+        let mut last = 0usize;
+        let r = solve_with(&problem, &cfg, |rec, _| {
+            assert!(rec.converged_rows >= last, "front went backwards");
+            last = rec.converged_rows;
+            false
+        });
+        assert!(r.converged);
+    }
+
+    /// TAA converges in (weakly) fewer rounds than plain FP on the same
+    /// problem — the paper's headline ordering (Fig. 2).
+    #[test]
+    fn taa_not_slower_than_fp() {
+        let steps = 24;
+        let sc = coeffs(steps, SamplerKind::Ddim);
+        let model = gmm(6, 4, 11);
+        let problem = Problem::new(&sc, &model, Cond::Class(1), 9);
+        let k = 6;
+        let fp = solve(&problem, &SolverConfig {
+            k,
+            method: Method::FixedPoint,
+            m: 1,
+            lambda: 0.0,
+            safeguard: false,
+            window: steps,
+            tol: 1e-3,
+            s_max: 3 * steps,
+            guidance: 2.0,
+            clamp_boundary: true,
+        });
+        let taa = solve(&problem, &SolverConfig {
+            k,
+            method: Method::Taa,
+            m: 3,
+            lambda: 1e-4,
+            safeguard: true,
+            window: steps,
+            tol: 1e-3,
+            s_max: 3 * steps,
+            guidance: 2.0,
+            clamp_boundary: true,
+        });
+        assert!(fp.converged && taa.converged);
+        assert!(
+            taa.iterations <= fp.iterations,
+            "TAA {} rounds vs FP {} rounds",
+            taa.iterations,
+            fp.iterations
+        );
+    }
+
+    /// Sliding windows (w < T) still converge to the sequential solution.
+    #[test]
+    fn sliding_window_correct() {
+        forall("sliding_window", 4, |rng, case| {
+            let steps = 16;
+            let d = 4;
+            let sc = coeffs(steps, SamplerKind::Ddim);
+            let model = gmm(d, 3, 300 + case);
+            let problem = Problem::new(&sc, &model, Cond::Class(0), 40 + case);
+            let seq = sample_sequential(&problem, 1.0);
+            let w = size_in(rng, 2, 8);
+            let cfg = SolverConfig {
+                k: 4,
+                method: Method::Taa,
+                m: 3,
+                lambda: 1e-4,
+                safeguard: true,
+                window: w,
+                tol: 1e-5,
+                s_max: 20 * steps,
+                guidance: 1.0,
+                clamp_boundary: true,
+            };
+            let par = solve(&problem, &cfg);
+            if !par.converged {
+                return Err(format!("w={w} did not converge"));
+            }
+            proplite::assert_close(par.xs.row(0), seq.xs.row(0), 5e-3, 5e-2, "windowed")
+        });
+    }
+
+    /// Early-stop observer halts the solve.
+    #[test]
+    fn observer_can_stop() {
+        let sc = coeffs(30, SamplerKind::Ddim);
+        let model = gmm(4, 2, 8);
+        let problem = Problem::new(&sc, &model, Cond::Class(0), 1);
+        let cfg = SolverConfig::parataa(30);
+        let r = solve_with(&problem, &cfg, |rec, _| rec.iter >= 3);
+        assert_eq!(r.iterations, 3);
+        assert!(!r.converged);
+    }
+
+    /// Trajectory init (§4.2): starting from the solved trajectory of the
+    /// *same* problem converges immediately (1 round).
+    #[test]
+    fn init_from_own_solution_converges_immediately() {
+        let sc = coeffs(20, SamplerKind::Ddim);
+        let model = gmm(5, 3, 6);
+        let mut problem = Problem::new(&sc, &model, Cond::Class(1), 77);
+        let cfg = SolverConfig { tol: 1e-4, ..SolverConfig::parataa(20) };
+        let first = solve(&problem, &cfg);
+        assert!(first.converged);
+        problem.init = Some(first.xs.clone());
+        let again = solve(&problem, &cfg);
+        assert!(again.converged);
+        assert_eq!(again.iterations, 1, "warm restart should converge in one round");
+    }
+
+    /// NFE accounting: full-window FP does ≈ (w+. . .) evals per round.
+    #[test]
+    fn nfe_accounting() {
+        let steps = 10;
+        let sc = coeffs(steps, SamplerKind::Ddim);
+        let model = gmm(3, 2, 2);
+        let problem = Problem::new(&sc, &model, Cond::Class(0), 5);
+        let cfg = SolverConfig::fp_baseline(steps);
+        let r = solve(&problem, &cfg);
+        assert!(r.converged);
+        assert_eq!(
+            r.total_nfe,
+            r.records.iter().map(|rec| rec.nfe).sum::<usize>()
+        );
+        // First round evaluates the full window [t1+1, T].
+        assert_eq!(r.records[0].nfe, steps);
+    }
+}

@@ -1,0 +1,135 @@
+//! Anderson history ring buffers.
+//!
+//! Stores the last `cap` difference pairs (ΔX^j, ΔF^j) over the *full* state
+//! range `[T, d]` (not just the active window): the sliding window moves
+//! between iterations and full-range storage keeps row alignment trivial.
+//! Rows that were inactive (frozen or outside the window) when a slot was
+//! recorded hold zeros, which contribute nothing to the suffix Grams — the
+//! λ-ridge (Remark 3.3) absorbs the resulting rank deficiency.
+
+/// Ring buffer of history difference pairs.
+pub struct History {
+    /// Capacity = number of difference columns (paper's m − 1).
+    cap: usize,
+    rows: usize,
+    d: usize,
+    /// Slots in insertion order; `dx[s]` and `df[s]` are `[rows*d]`.
+    dx: Vec<Vec<f32>>,
+    df: Vec<Vec<f32>>,
+    /// Next slot to overwrite.
+    next: usize,
+    /// Number of valid slots (≤ cap).
+    len: usize,
+}
+
+impl History {
+    pub fn new(cap: usize, rows: usize, d: usize) -> Self {
+        History {
+            cap,
+            rows,
+            d,
+            dx: (0..cap).map(|_| vec![0.0; rows * d]).collect(),
+            df: (0..cap).map(|_| vec![0.0; rows * d]).collect(),
+            next: 0,
+            len: 0,
+        }
+    }
+
+    /// Number of valid difference columns m_i.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Record a new difference pair. `dx`/`df` are full `[rows*d]` buffers;
+    /// the caller zeroes rows without valid previous values.
+    pub fn push(&mut self, dx: &[f32], df: &[f32]) {
+        if self.cap == 0 {
+            return;
+        }
+        debug_assert_eq!(dx.len(), self.rows * self.d);
+        debug_assert_eq!(df.len(), self.rows * self.d);
+        self.dx[self.next].copy_from_slice(dx);
+        self.df[self.next].copy_from_slice(df);
+        self.next = (self.next + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    /// Valid ΔX slots (arbitrary but consistent order w.r.t. [`df_slots`]).
+    pub fn dx_slots(&self) -> Vec<&[f32]> {
+        (0..self.len).map(|i| self.dx[i].as_slice()).collect()
+    }
+
+    /// Valid ΔF slots, index-aligned with [`dx_slots`].
+    pub fn df_slots(&self) -> Vec<&[f32]> {
+        (0..self.len).map(|i| self.df[i].as_slice()).collect()
+    }
+
+    /// Drop all history (used when the window jumps discontinuously).
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.next = 0;
+        for s in &mut self.dx {
+            s.fill(0.0);
+        }
+        for s in &mut self.df {
+            s.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut h = History::new(2, 1, 2);
+        h.push(&[1.0, 1.0], &[10.0, 10.0]);
+        h.push(&[2.0, 2.0], &[20.0, 20.0]);
+        assert_eq!(h.len(), 2);
+        h.push(&[3.0, 3.0], &[30.0, 30.0]);
+        assert_eq!(h.len(), 2);
+        // Slot 0 was overwritten by the third push.
+        let slots = h.dx_slots();
+        let mut firsts: Vec<f32> = slots.iter().map(|s| s[0]).collect();
+        firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(firsts, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn dx_df_alignment_survives_wrap() {
+        let mut h = History::new(2, 1, 1);
+        h.push(&[1.0], &[-1.0]);
+        h.push(&[2.0], &[-2.0]);
+        h.push(&[3.0], &[-3.0]);
+        let dx = h.dx_slots();
+        let df = h.df_slots();
+        for i in 0..h.len() {
+            assert_eq!(dx[i][0], -df[i][0], "slot {i} misaligned");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_noop() {
+        let mut h = History::new(0, 2, 2);
+        h.push(&[0.0; 4], &[0.0; 4]);
+        assert!(h.is_empty());
+        assert!(h.dx_slots().is_empty());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut h = History::new(3, 1, 1);
+        h.push(&[1.0], &[1.0]);
+        h.clear();
+        assert_eq!(h.len(), 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Trajectory initialization (§4.2) and the SDEdit-style splice.
+//!
+//! If a similar problem (e.g. a nearby prompt) has already been solved, its
+//! trajectory is a far better starting point than Gaussian noise: the two
+//! nonlinear systems are close, so the old solution nearly solves the new
+//! one. Optionally the later (noisier) portion of the trajectory is frozen
+//! (`t_init`), which anchors the new sample near the old image and yields
+//! the paper's smooth source→target interpolations (Fig. 5/13/15).
+
+use super::Problem;
+use crate::equations::States;
+
+/// Configure `problem` to start from `trajectory` (a full x_0..x_T stack
+/// from a previous solve), freezing rows ≥ `t_init`.
+///
+/// The ξ draws of `problem` are **replaced** by `xi`: re-using the source
+/// problem's noise is what makes the two systems differ only through the
+/// condition, giving the interpolation its smoothness.
+pub fn init_from_trajectory(
+    problem: &mut Problem,
+    trajectory: States,
+    xi: States,
+    t_init: usize,
+) {
+    assert_eq!(trajectory.d, problem.model.dim());
+    let t_count = problem.coeffs.steps;
+    assert_eq!(trajectory.rows(), t_count + 1);
+    assert_eq!(xi.rows(), t_count + 1);
+    assert!(t_init >= 1 && t_init <= t_count, "t_init out of range");
+    problem.xi = xi;
+    problem.init = Some(trajectory);
+    problem.t_init = Some(t_init);
+}
+
+/// Distance between two conditions' trajectories at the sample row — used
+/// by the coordinator's trajectory cache to pick the closest donor.
+pub fn trajectory_distance(a: &States, b: &States) -> f64 {
+    assert_eq!(a.d, b.d);
+    assert_eq!(a.rows(), b.rows());
+    let mut acc = 0.0f64;
+    for (x, y) in a.row(0).iter().zip(b.row(0).iter()) {
+        let r = (*x - *y) as f64;
+        acc += r * r;
+    }
+    acc.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::model::{Cond, EpsModel};
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+    use crate::solver::{solve, SolverConfig};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (SamplerCoeffs, GmmEps) {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 24);
+        let mut rng = Pcg64::seeded(50);
+        let d = 6;
+        let means: Vec<f32> = (0..4 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        let model = GmmEps::new(means, d, 0.25, ns.alpha_bars.clone());
+        (coeffs, model)
+    }
+
+    #[test]
+    fn warm_init_converges_faster_than_cold() {
+        let (coeffs, model) = setup();
+        let cfg = SolverConfig { guidance: 2.0, ..SolverConfig::parataa(24) };
+
+        // Solve for "prompt" P1 = pure class 0.
+        let p1 = Problem::new(&coeffs, &model, Cond::Class(0), 123);
+        let r1 = solve(&p1, &cfg);
+        assert!(r1.converged);
+
+        // P2 = a nearby prompt (90% class 0, 10% class 1).
+        let near = Cond::Class(0).lerp(&Cond::Class(1), 0.1, 4);
+        let cold = {
+            let p2 = Problem::new(&coeffs, &model, near.clone(), 123);
+            solve(&p2, &cfg)
+        };
+        let warm = {
+            let mut p2 = Problem::new(&coeffs, &model, near, 123);
+            let xi = p1.xi.clone();
+            init_from_trajectory(&mut p2, r1.xs.clone(), xi, 24);
+            solve(&p2, &cfg)
+        };
+        assert!(cold.converged && warm.converged);
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+
+    #[test]
+    fn frozen_tail_is_preserved() {
+        let (coeffs, model) = setup();
+        let cfg = SolverConfig { guidance: 1.0, tol: 1e-4, ..SolverConfig::parataa(24) };
+        let p1 = Problem::new(&coeffs, &model, Cond::Class(1), 9);
+        let r1 = solve(&p1, &cfg);
+        let t_init = 16;
+        let mut p2 = Problem::new(&coeffs, &model, Cond::Class(2), 9);
+        let xi = p1.xi.clone();
+        init_from_trajectory(&mut p2, r1.xs.clone(), xi, t_init);
+        let r2 = solve(&p2, &cfg);
+        // Rows ≥ t_init must be bit-identical to the donor trajectory.
+        for t in t_init..=24 {
+            assert_eq!(r2.xs.row(t), r1.xs.row(t), "frozen row {t} moved");
+        }
+        // ...and the sample row must still satisfy the new condition's
+        // system below T_init: just check it changed from the donor.
+        assert_ne!(r2.xs.row(0), r1.xs.row(0));
+    }
+
+    #[test]
+    fn splice_matches_sequential_from_frozen_state() {
+        // Freezing rows ≥ t_init and solving the rest must equal running the
+        // *sequential* sampler for the new condition starting from the
+        // donor's x_{t_init}.
+        let (coeffs, model) = setup();
+        let cfg = SolverConfig { guidance: 1.0, tol: 1e-6, ..SolverConfig::parataa(24) };
+        let p1 = Problem::new(&coeffs, &model, Cond::Class(0), 31);
+        let r1 = solve(&p1, &cfg);
+        let t_init = 12;
+        let mut p2 = Problem::new(&coeffs, &model, Cond::Class(3), 31);
+        init_from_trajectory(&mut p2, r1.xs.clone(), p1.xi.clone(), t_init);
+        let par = solve(&p2, &cfg);
+        assert!(par.converged);
+
+        // Sequential reference: descend from the frozen x_{t_init}.
+        let d = model.dim();
+        let mut xs = r1.xs.clone();
+        let mut eps = vec![0.0f32; d];
+        for t in (1..=t_init).rev() {
+            model.eps_batch(
+                xs.row(t),
+                &[coeffs.train_t[t]],
+                &[Cond::Class(3)],
+                1.0,
+                &mut eps,
+            );
+            let row: Vec<f32> = (0..d)
+                .map(|i| {
+                    coeffs.a[t] as f32 * xs.row(t)[i]
+                        + coeffs.b[t] as f32 * eps[i]
+                        + coeffs.c[t - 1] as f32 * p2.xi.row(t - 1)[i]
+                })
+                .collect();
+            xs.set_row(t - 1, &row);
+        }
+        crate::util::proplite::assert_close(par.xs.row(0), xs.row(0), 1e-3, 1e-2, "splice")
+            .unwrap();
+    }
+
+    #[test]
+    fn trajectory_distance_basics() {
+        let mut a = States::zeros(3, 2);
+        let b = States::zeros(3, 2);
+        assert_eq!(trajectory_distance(&a, &b), 0.0);
+        a.row_mut(0)[0] = 3.0;
+        a.row_mut(0)[1] = 4.0;
+        assert!((trajectory_distance(&a, &b) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,167 @@
+//! Parallel diffusion sampling solvers (the paper's contribution).
+//!
+//! - [`sequential`] — the autoregressive baseline (eq. 6), also the oracle
+//!   that parallel methods must match (Theorem 2.2 / Remark 5.3);
+//! - [`history`] — Anderson history ring buffers (ΔX, ΔF);
+//! - [`update`] — the update rules: fixed-point (eq. 10), standard Anderson
+//!   Acceleration (eq. 12–13), AA+ (upper-triangular extraction, Remark
+//!   3.4), and Triangular Anderson Acceleration (Theorem 3.2) with the
+//!   Theorem 3.6 safeguard;
+//! - [`driver`] — Algorithm 1: sliding window, stopping criterion, history
+//!   management, iteration accounting;
+//! - [`init`] — trajectory initialization (§4.2).
+
+pub mod driver;
+pub mod history;
+pub mod init;
+pub mod sequential;
+pub mod update;
+
+pub use driver::{solve, IterationRecord, SolveResult};
+pub use sequential::sample_sequential;
+
+use crate::equations::States;
+use crate::model::{Cond, EpsModel};
+use crate::schedule::SamplerCoeffs;
+
+/// Which parallel update rule to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Plain fixed-point iteration on the order-k system (eq. 10).
+    /// With k = window size this is the PL iteration of Shih et al. ("FP");
+    /// with a tuned k it is the paper's "FP+".
+    FixedPoint,
+    /// Standard Anderson Acceleration (eq. 12–13): one global γ per
+    /// iteration computed from the full-window Gram.
+    AndersonStd,
+    /// AA+ — upper-triangular extraction of the standard AA matrix
+    /// (Remark 3.4 / Appendix B): global Gram inverse, per-row suffix
+    /// projection.
+    AndersonUpperTri,
+    /// Triangular Anderson Acceleration (Theorem 3.2): per-row γ_t from
+    /// suffix Grams — the paper's ParaTAA update.
+    Taa,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FixedPoint => "FP",
+            Method::AndersonStd => "AA",
+            Method::AndersonUpperTri => "AA+",
+            Method::Taa => "TAA",
+        }
+    }
+}
+
+/// Solver configuration (the hyperparameters of Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Order k of the nonlinear system (Definition 2.1).
+    pub k: usize,
+    /// Update rule.
+    pub method: Method,
+    /// Anderson history size m (paper convention: m = 1 ⇒ no history ⇒
+    /// plain FP; the number of difference columns is min(m−1, i)).
+    pub m: usize,
+    /// Ridge λ stabilizing the Gram solve (Remark 3.3).
+    pub lambda: f32,
+    /// Apply the Theorem 3.6 safeguard (top unconverged row takes the plain
+    /// FP step), guaranteeing convergence within T iterations.
+    pub safeguard: bool,
+    /// Sliding window size w (§2.2). Clamped to T by the driver.
+    pub window: usize,
+    /// Stopping tolerance τ (thresholds ε_t = τ²·g²(t)·d, §2.1).
+    pub tol: f64,
+    /// Maximum parallel iterations s_max.
+    pub s_max: usize,
+    /// Classifier-free guidance scale.
+    pub guidance: f32,
+    /// Clamp the order-k equations at the frozen boundary (see
+    /// `equations::eval_fk`). `true` is the correct windowed semantics
+    /// (Remark 2.4); `false` applies Definition 2.1 verbatim across the
+    /// frozen front and is kept for the `ablate` experiment, which shows
+    /// the resulting convergence stall.
+    pub clamp_boundary: bool,
+}
+
+impl SolverConfig {
+    /// The paper's ParaTAA defaults (Appendix C: m ∈ 2..4, robust k).
+    pub fn parataa(steps: usize) -> Self {
+        SolverConfig {
+            k: (steps / 4).max(2),
+            method: Method::Taa,
+            m: 3,
+            lambda: 1e-4,
+            safeguard: true,
+            window: steps,
+            tol: 1e-3,
+            s_max: steps + 1,
+            guidance: 5.0,
+            clamp_boundary: true,
+        }
+    }
+
+    /// The Shih et al. baseline: FP with k = w.
+    pub fn fp_baseline(steps: usize) -> Self {
+        SolverConfig {
+            k: steps,
+            method: Method::FixedPoint,
+            m: 1,
+            lambda: 0.0,
+            safeguard: false,
+            window: steps,
+            tol: 1e-3,
+            s_max: steps + 1,
+            guidance: 5.0,
+            clamp_boundary: true,
+        }
+    }
+
+    /// FP+ — fixed-point with a tuned order k.
+    pub fn fp_plus(steps: usize, k: usize) -> Self {
+        SolverConfig { k, ..Self::fp_baseline(steps) }
+    }
+}
+
+/// A sampling problem: one trajectory to solve.
+pub struct Problem<'a> {
+    pub coeffs: &'a SamplerCoeffs,
+    pub model: &'a dyn EpsModel,
+    pub cond: Cond,
+    /// Fixed noise draws ξ_0..ξ_T (row T doubles as the initial state x_T).
+    pub xi: States,
+    /// Optional initialization trajectory (§4.2): rows 0..T. When absent
+    /// the driver initializes all unknowns from standard Gaussians.
+    pub init: Option<States>,
+    /// Freeze rows ≥ T_init at their initialization values (§4.2's
+    /// SDEdit-style splice). Ignored unless `init` is set.
+    pub t_init: Option<usize>,
+    /// Seed for the Gaussian initialization of the unknowns (and provenance
+    /// of the ξ draws when constructed via [`Problem::new`]).
+    pub seed: u64,
+}
+
+impl<'a> Problem<'a> {
+    /// Fresh random problem with noise drawn from `seed`.
+    pub fn new(
+        coeffs: &'a SamplerCoeffs,
+        model: &'a dyn EpsModel,
+        cond: Cond,
+        seed: u64,
+    ) -> Self {
+        let d = model.dim();
+        let t = coeffs.steps;
+        let mut rng = crate::util::rng::Pcg64::new(seed, 0x0d1f_f751);
+        let mut xi = States::zeros(t, d);
+        rng.fill_gaussian(&mut xi.data);
+        // An ODE sampler never consumes ξ_0..ξ_{T-1}, but drawing them keeps
+        // the stream layout identical between DDIM and DDPM runs.
+        Problem { coeffs, model, cond, xi, init: None, t_init: None, seed }
+    }
+
+    /// Seed used for the Gaussian initialization of the unknowns.
+    pub fn init_seed(&self) -> u64 {
+        self.seed
+    }
+}

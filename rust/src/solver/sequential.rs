@@ -1,0 +1,141 @@
+//! The sequential (autoregressive) sampling baseline — eq. (6).
+//!
+//! This is both the performance baseline of Table 1 and the *correctness
+//! oracle*: Theorem 2.2 guarantees the parallel solvers converge to exactly
+//! this trajectory, and the integration tests assert it.
+
+use super::Problem;
+use crate::equations::States;
+use crate::model::Cond;
+
+/// Result of a sequential rollout.
+pub struct SequentialResult {
+    /// Full trajectory x_0..x_T.
+    pub xs: States,
+    /// Number of (serial) denoiser evaluations — always T.
+    pub nfe: usize,
+}
+
+/// Roll out eq. (6) from x_T = ξ_T down to x_0, one ε_θ call per step.
+pub fn sample_sequential(problem: &Problem, guidance: f32) -> SequentialResult {
+    let coeffs = problem.coeffs;
+    let model = problem.model;
+    let t_count = coeffs.steps;
+    let d = model.dim();
+    let mut xs = States::zeros(t_count, d);
+    xs.set_row(t_count, problem.xi.row(t_count));
+
+    let mut eps = vec![0.0f32; d];
+    let conds: [Cond; 1] = [problem.cond.clone()];
+    for t in (1..=t_count).rev() {
+        // ε_θ(x_t, τ_{t-1}) — a single-item "batch": the serial baseline
+        // pays one full device round-trip per step, which is exactly the
+        // cost structure the paper parallelizes away.
+        model.eps_batch(xs.row(t), &[coeffs.train_t[t]], &conds, guidance, &mut eps);
+        let a = coeffs.a[t] as f32;
+        let b = coeffs.b[t] as f32;
+        let c = coeffs.c[t - 1] as f32;
+        let xi_row = problem.xi.row(t - 1);
+        let (head, tail) = xs.data.split_at_mut(t * d);
+        let x_prev = &mut head[(t - 1) * d..t * d];
+        let x_t = &tail[..d];
+        for i in 0..d {
+            x_prev[i] = a * x_t[i] + b * eps[i] + c * xi_row[i];
+        }
+    }
+    SequentialResult { xs, nfe: t_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::model::{Cond, EpsModel};
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+    use crate::util::rng::Pcg64;
+
+    fn tiny_model(d: usize, n_comp: usize) -> GmmEps {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(77);
+        let means: Vec<f32> = (0..n_comp * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        GmmEps::new(means, d, 0.2, ns.alpha_bars.clone())
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 25);
+        let model = tiny_model(8, 3);
+        let p1 = Problem::new(&coeffs, &model, Cond::Class(1), 42);
+        let p2 = Problem::new(&coeffs, &model, Cond::Class(1), 42);
+        let r1 = sample_sequential(&p1, 2.0);
+        let r2 = sample_sequential(&p2, 2.0);
+        assert_eq!(r1.xs.data, r2.xs.data);
+        assert_eq!(r1.nfe, 25);
+    }
+
+    #[test]
+    fn different_seeds_produce_different_samples() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 25);
+        let model = tiny_model(8, 3);
+        let r1 = sample_sequential(&Problem::new(&coeffs, &model, Cond::Class(0), 1), 1.0);
+        let r2 = sample_sequential(&Problem::new(&coeffs, &model, Cond::Class(0), 2), 1.0);
+        let diff: f32 = r1
+            .xs
+            .row(0)
+            .iter()
+            .zip(r2.xs.row(0).iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-3);
+    }
+
+    #[test]
+    fn ddim_sample_lands_near_data_manifold() {
+        // With the exact GMM score and enough steps, DDIM should land close
+        // to a component mean (within a few data std-devs).
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 100);
+        let d = 8;
+        let model = tiny_model(d, 3);
+        let p = Problem::new(&coeffs, &model, Cond::Class(2), 5);
+        let r = sample_sequential(&p, 1.0);
+        let x0 = r.xs.row(0);
+        // distance to the nearest component mean
+        let mut best = f64::INFINITY;
+        for c in 0..3 {
+            let mu = &model.means[c * d..(c + 1) * d];
+            let d2: f64 = x0
+                .iter()
+                .zip(mu.iter())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            best = best.min(d2.sqrt());
+        }
+        assert!(best < 1.0, "sample distance to nearest mode: {best}");
+    }
+
+    #[test]
+    fn residuals_vanish_on_sequential_trajectory() {
+        // The sequential trajectory is the exact solution of the system.
+        use crate::equations::residual_sq;
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 30);
+        let model = tiny_model(6, 2);
+        let p = Problem::new(&coeffs, &model, Cond::Class(0), 9);
+        let r = sample_sequential(&p, 1.0);
+        // Recompute eps at every state to evaluate residuals.
+        let mut eps = States::zeros(30, 6);
+        let conds = vec![Cond::Class(0); 1];
+        for t in 1..=30usize {
+            let mut e = vec![0.0f32; 6];
+            model.eps_batch(r.xs.row(t), &[coeffs.train_t[t]], &conds, 1.0, &mut e);
+            eps.set_row(t, &e);
+        }
+        for p_row in 0..30 {
+            let res = residual_sq(&coeffs, &r.xs, &eps, &p.xi, p_row);
+            assert!(res < 1e-8, "residual at row {p_row}: {res}");
+        }
+    }
+}

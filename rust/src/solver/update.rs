@@ -1,0 +1,284 @@
+//! Parallel update rules: FP (eq. 10), standard AA (eq. 12–13), AA+
+//! (Remark 3.4), and Triangular AA (Theorem 3.2) + safeguard (Theorem 3.6).
+//!
+//! All Anderson variants share one identity: with history matrices
+//! X = [ΔX^{i-m_i}..ΔX^{i-1}], F = [ΔF^{i-m_i}..ΔF^{i-1}] the update
+//! x^{i+1} = x − G R with G from eq. (13) expands to
+//!
+//!   x^{i+1}_p = x_p + R_p − (ΔX_p + ΔF_p)·γ_p
+//!
+//! where γ_p ∈ R^{m_i} is a per-row coefficient vector. The variants differ
+//! *only* in how γ is computed:
+//!
+//! | method | Gram               | projection        | γ |
+//! |--------|--------------------|-------------------|---|
+//! | AA     | full-window FᵀF    | full-window FᵀR   | one global γ (eq. 13) |
+//! | AA+    | full-window FᵀF    | suffix Fᵀ_{p:}R_{p:} | per-row γ_p = M·b_p (upper-tri extraction of G) |
+//! | TAA    | suffix Fᵀ_{p:}F_{p:} | suffix Fᵀ_{p:}R_{p:} | per-row γ_p = (G_p+λI)⁻¹·b_p (Thm 3.2) |
+//!
+//! which is exactly why TAA restricts information flow to later timesteps:
+//! row p's correction involves only rows ≥ p of the history.
+//!
+//! An empty history makes every variant degenerate to the FP step
+//! x^{i+1} = x + R = F(x) — also the safeguarded row's update.
+
+use super::history::History;
+use super::Method;
+use crate::linalg::{cholesky_solve, suffix_grams};
+
+/// Apply one parallel update over active rows `[t1, t2]` (inclusive).
+///
+/// * `xs_rows` — mutable view of the unknown states `[T*d]` (rows 0..T−1);
+/// * `f_vals` — F_p^{(k)} for active rows (`[T*d]`, other rows ignored);
+/// * `r_vals` — residuals R_p = F_p − x_p (`[T*d]`, **zero outside the
+///   active window** — the suffix Grams rely on it);
+/// * `history` — Anderson difference pairs (may be empty);
+/// * `lambda` — Gram ridge (Remark 3.3);
+/// * `safeguard` — force the top unconverged row `t2` to a plain FP step
+///   (Theorem 3.6; rows above t2 are converged, i.e. R ≈ 0, so t2 is the
+///   row the theorem's condition bites on).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update(
+    method: Method,
+    xs_rows: &mut [f32],
+    f_vals: &[f32],
+    r_vals: &[f32],
+    history: &History,
+    t1: usize,
+    t2: usize,
+    t_rows: usize,
+    d: usize,
+    lambda: f32,
+    safeguard: bool,
+) {
+    debug_assert_eq!(xs_rows.len(), t_rows * d);
+    debug_assert!(t1 <= t2 && t2 < t_rows);
+
+    let m = history.len();
+    if method == Method::FixedPoint || m == 0 {
+        // x ← F(x)
+        for p in t1..=t2 {
+            xs_rows[p * d..(p + 1) * d].copy_from_slice(&f_vals[p * d..(p + 1) * d]);
+        }
+        return;
+    }
+
+    let dx = history.dx_slots();
+    let df = history.df_slots();
+
+    // Suffix Grams over the full row range; rows above t2 hold zeros, so
+    // G_{t1} is also the full-window Gram used by AA/AA+.
+    let sg = suffix_grams(&df, r_vals, t_rows, d, t1);
+
+    // Ridge the diagonal.
+    let ridge = |g: &[f32]| -> Vec<f32> {
+        let mut a = g.to_vec();
+        // Scale-aware ridge: λ·(1 + tr(G)/m) keeps conditioning stable
+        // across the wildly varying residual magnitudes of early vs late
+        // iterations.
+        let tr: f32 = (0..m).map(|i| g[i * m + i]).sum();
+        let scale = lambda * (1.0 + tr / m as f32);
+        for i in 0..m {
+            a[i * m + i] += scale;
+        }
+        a
+    };
+
+    // Global γ (AA) or the shared Gram factor (AA+).
+    let global_gamma: Option<Vec<f32>> = match method {
+        Method::AndersonStd => cholesky_solve(&ridge(&sg.grams[t1]), &sg.proj[t1], m),
+        _ => None,
+    };
+
+    for p in t1..=t2 {
+        let row = p * d..(p + 1) * d;
+        // Safeguarded row: plain FP (γ = 0). Theorem 3.6's condition is
+        // imposed on the top unconverged row, whose suffix residuals
+        // R_{p+1:} are all (numerically) zero.
+        let fp_only = safeguard && p == t2;
+
+        let gamma: Option<Vec<f32>> = if fp_only {
+            None
+        } else {
+            match method {
+                Method::FixedPoint => None,
+                Method::AndersonStd => global_gamma.clone(),
+                Method::AndersonUpperTri => {
+                    // M = (full-window Gram + λI)⁻¹ applied to the *suffix*
+                    // projection b_p — the upper-triangular part of eq. (13).
+                    cholesky_solve(&ridge(&sg.grams[t1]), &sg.proj[p], m)
+                }
+                Method::Taa => cholesky_solve(&ridge(&sg.grams[p]), &sg.proj[p], m),
+            }
+        };
+
+        match gamma {
+            None => {
+                xs_rows[row.clone()].copy_from_slice(&f_vals[row]);
+            }
+            Some(g) => {
+                // x_p ← x_p + R_p − Σ_h γ_h·(ΔX_h[p] + ΔF_h[p])
+                let (xr, rr) = (row.clone(), row.clone());
+                for i in 0..d {
+                    let idx = p * d + i;
+                    let mut corr = 0.0f32;
+                    for h in 0..m {
+                        corr += g[h] * (dx[h][idx] + df[h][idx]);
+                    }
+                    let _ = (&xr, &rr);
+                    xs_rows[idx] += r_vals[idx] - corr;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::{self, forall, size_in};
+
+    fn mk_history(rows: usize, d: usize, slots: &[(Vec<f32>, Vec<f32>)]) -> History {
+        let mut h = History::new(slots.len().max(1), rows, d);
+        for (dx, df) in slots {
+            h.push(dx, df);
+        }
+        h
+    }
+
+    #[test]
+    fn fp_copies_f() {
+        let (t_rows, d) = (4, 2);
+        let mut xs = vec![0.0f32; t_rows * d];
+        let f: Vec<f32> = (0..t_rows * d).map(|i| i as f32).collect();
+        let r = vec![0.0f32; t_rows * d];
+        let h = History::new(0, t_rows, d);
+        apply_update(Method::FixedPoint, &mut xs, &f, &r, &h, 1, 2, t_rows, d, 0.0, false);
+        // rows 1..=2 updated, rows 0 and 3 untouched
+        assert_eq!(&xs[2..6], &f[2..6]);
+        assert_eq!(&xs[0..2], &[0.0, 0.0]);
+        assert_eq!(&xs[6..8], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_history_degenerates_to_fp() {
+        let (t_rows, d) = (3, 2);
+        let mut xs_a = vec![1.0f32; t_rows * d];
+        let mut xs_b = vec![1.0f32; t_rows * d];
+        let f: Vec<f32> = (0..t_rows * d).map(|i| (i as f32).sin()).collect();
+        let r: Vec<f32> = f.iter().zip(xs_a.iter()).map(|(a, b)| a - b).collect();
+        let h = History::new(3, t_rows, d); // empty
+        apply_update(Method::Taa, &mut xs_a, &f, &r, &h, 0, 2, t_rows, d, 1e-4, true);
+        apply_update(Method::FixedPoint, &mut xs_b, &f, &r, &h, 0, 2, t_rows, d, 0.0, false);
+        assert_eq!(xs_a, xs_b);
+    }
+
+    #[test]
+    fn safeguard_forces_fp_on_top_row() {
+        let (t_rows, d) = (3, 2);
+        let mut rng = crate::util::rng::Pcg64::seeded(8);
+        let f: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let xs0: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let r: Vec<f32> = f.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+        let slots = vec![(
+            (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect::<Vec<f32>>(),
+            (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect::<Vec<f32>>(),
+        )];
+        let h = mk_history(t_rows, d, &slots);
+        let mut with_sg = xs0.clone();
+        apply_update(Method::Taa, &mut with_sg, &f, &r, &h, 0, 2, t_rows, d, 1e-4, true);
+        // Top row (2) must equal the FP step = F row 2.
+        assert_eq!(&with_sg[4..6], &f[4..6]);
+        // Lower rows get Anderson corrections (differ from plain FP).
+        let mut no_sg = xs0.clone();
+        apply_update(Method::Taa, &mut no_sg, &f, &r, &h, 0, 2, t_rows, d, 1e-4, false);
+        assert_ne!(&no_sg[4..6], &with_sg[4..6]);
+        assert_eq!(&no_sg[0..4], &with_sg[0..4], "safeguard only touches the top row");
+    }
+
+    #[test]
+    fn taa_row_update_depends_only_on_suffix() {
+        // Corrupting history below row p must not change row p's TAA update
+        // (the triangularity property motivating the method).
+        forall("taa_suffix_locality", 16, |rng, _| {
+            let t_rows = size_in(rng, 3, 8);
+            let d = size_in(rng, 1, 4);
+            let p_check = t_rows - 1; // top row, no safeguard
+            let xs0: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+            let f: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+            let r: Vec<f32> = f.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+            let dx: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect();
+            let df: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect();
+            let h1 = mk_history(t_rows, d, &[(dx.clone(), df.clone())]);
+            // Corrupt all rows BELOW p_check in the history.
+            let mut dx2 = dx.clone();
+            let mut df2 = df.clone();
+            for v in &mut dx2[..p_check * d] {
+                *v += 10.0 * rng.next_f32();
+            }
+            for v in &mut df2[..p_check * d] {
+                *v += 10.0 * rng.next_f32();
+            }
+            let h2 = mk_history(t_rows, d, &[(dx2, df2)]);
+            let mut out1 = xs0.clone();
+            let mut out2 = xs0.clone();
+            apply_update(Method::Taa, &mut out1, &f, &r, &h1, 0, t_rows - 1, t_rows, d, 1e-4, false);
+            apply_update(Method::Taa, &mut out2, &f, &r, &h2, 0, t_rows - 1, t_rows, d, 1e-4, false);
+            proplite::assert_close(
+                &out1[p_check * d..],
+                &out2[p_check * d..],
+                1e-5,
+                1e-4,
+                "top row invariant to prefix corruption",
+            )
+        });
+    }
+
+    #[test]
+    fn std_aa_is_dense_prefix_corruption_changes_top_row() {
+        // Contrast with the TAA test: standard AA lets earlier rows leak
+        // into later rows (the instability the paper identifies in §3.1).
+        let mut rng = crate::util::rng::Pcg64::seeded(21);
+        let (t_rows, d) = (4, 2);
+        let xs0: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let f: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let r: Vec<f32> = f.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+        let dx: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect();
+        let df: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect();
+        let mut df2 = df.clone();
+        for v in &mut df2[..d] {
+            *v += 5.0;
+        }
+        let h1 = mk_history(t_rows, d, &[(dx.clone(), df)]);
+        let h2 = mk_history(t_rows, d, &[(dx, df2)]);
+        let mut o1 = xs0.clone();
+        let mut o2 = xs0.clone();
+        apply_update(Method::AndersonStd, &mut o1, &f, &r, &h1, 0, 3, t_rows, d, 1e-4, false);
+        apply_update(Method::AndersonStd, &mut o2, &f, &r, &h2, 0, 3, t_rows, d, 1e-4, false);
+        let top_diff: f32 = o1[6..8]
+            .iter()
+            .zip(o2[6..8].iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(top_diff > 1e-6, "AA top row should see prefix corruption");
+    }
+
+    #[test]
+    fn anderson_exact_on_linear_problem() {
+        // For an affine map F(x) = Wx + v (W scalar diag here), AA with one
+        // history column solves a 1-parameter secant problem. With a single
+        // unknown row and exact arithmetic, the update must land on the
+        // fixed point of the scalar recursion x ← 0.5x + 1 (x* = 2).
+        let (t_rows, d) = (1, 1);
+        let fmap = |x: f32| 0.5 * x + 1.0;
+        let x0 = 0.0f32;
+        let x1 = fmap(x0); // FP step: 1.0
+        // history: Δx = x1-x0 = 1, ΔR: R(x)=F(x)-x = 1-0.5x; R0=1, R1=0.5, ΔR=-0.5
+        let h = mk_history(t_rows, d, &[(vec![x1 - x0], vec![-0.5])]);
+        let f1 = vec![fmap(x1)]; // 1.5
+        let r1 = vec![fmap(x1) - x1]; // 0.5
+        let mut xs = vec![x1];
+        apply_update(Method::Taa, &mut xs, &f1, &r1, &h, 0, 0, t_rows, d, 0.0, false);
+        assert!((xs[0] - 2.0).abs() < 1e-5, "AA should hit x*=2, got {}", xs[0]);
+    }
+}

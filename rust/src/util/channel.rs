@@ -1,0 +1,336 @@
+//! Bounded multi-producer / multi-consumer channel.
+//!
+//! The coordinator needs an MPMC queue with backpressure (block or reject
+//! when full) and clean shutdown semantics. The offline environment has no
+//! `crossbeam-channel`/`tokio`, so this is a small Mutex+Condvar ring
+//! implementation. Throughput requirements are modest: the channel carries
+//! *requests* and *window batches*, each of which amortizes an ε_θ device
+//! call that costs milliseconds, so a lock-based queue is nowhere near the
+//! bottleneck (verified in `benches/bench_coordinator.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+}
+
+/// Error returned when sending on a closed channel.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by `try_send`.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Queue at capacity.
+    Full(T),
+    /// All receivers dropped / channel closed.
+    Closed(T),
+}
+
+/// Sending half. Cloneable.
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Receiving half. Cloneable (MPMC).
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Create a bounded channel with capacity `cap` (≥1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1, "channel capacity must be >= 1");
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State {
+            items: VecDeque::with_capacity(cap),
+            cap,
+            closed: false,
+            senders: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.queue.lock().unwrap().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // Last sender gone: wake all receivers so they can observe
+            // disconnection once the queue drains.
+            drop(st);
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure; fails only if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError(item));
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send: `Full` applies backpressure to the caller.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.items.len() >= st.cap {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel: pending items remain receivable, new sends fail.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Current queue depth (diagnostic; racy by nature).
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    /// True when the queue is empty (diagnostic; racy by nature).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once the channel is closed (or all senders
+    /// dropped) *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed || st.senders == 0 {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a timeout. `Ok(None)` means closed+drained; `Err(())`
+    /// means timed out with no item.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed || st.senders == 0 {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed || st.senders == 0 {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain up to `max` immediately-available items (used by the batcher to
+    /// coalesce without waiting).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let n = st.items.len().min(max);
+        let out: Vec<T> = st.items.drain(..n).collect();
+        if !out.is_empty() {
+            drop(st);
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn try_send_full() {
+        let (tx, _rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(TrySendError::Full(3)));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let (tx, rx) = bounded(4);
+        tx.send("a").unwrap();
+        tx.close();
+        assert_eq!(tx.try_send("b"), Err(TrySendError::Closed("b")));
+        assert_eq!(rx.recv(), Some("a"));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn sender_drop_disconnects() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn blocking_backpressure() {
+        let (tx, rx) = bounded(1);
+        tx.send(0u32).unwrap();
+        let t = thread::spawn(move || {
+            // This blocks until the receiver frees a slot.
+            tx.send(1).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(16);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..100u32 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let mut expect: Vec<u32> = (0..4)
+            .flat_map(|p| (0..100).map(move |i| p * 1000 + i))
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = bounded::<u8>(1);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Err(()));
+    }
+
+    #[test]
+    fn drain_up_to_takes_prefix() {
+        let (tx, rx) = bounded(8);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.drain_up_to(4), vec![0, 1, 2, 3]);
+        assert_eq!(rx.drain_up_to(4), vec![4, 5]);
+        assert!(rx.drain_up_to(4).is_empty());
+    }
+}

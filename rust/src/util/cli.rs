@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `parataa <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags may be written `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--ks 1,2,4,8`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad list element '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--flag` followed by a non-dash token would consume it
+        // as a value (`--key value` form), so positionals precede flags.
+        let a = parse(&["fig1", "extra", "--steps", "100", "--model=dit", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("model"), Some("dit"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "7", "--tau", "0.5"]);
+        assert_eq!(a.usize_or("n", 1), 7);
+        assert_eq!(a.usize_or("missing", 3), 3);
+        assert!((a.f64_or("tau", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--ks", "1,2,8"]);
+        assert_eq!(a.usize_list("ks", &[9]), vec![1, 2, 8]);
+        assert_eq!(a.usize_list("ms", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--quiet"]);
+        assert!(a.has_flag("quiet"));
+        assert!(a.get("quiet").is_none());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--shift -3`: "-3" doesn't start with --, so it's the value.
+        let a = parse(&["x", "--shift", "-3"]);
+        assert_eq!(a.get("shift"), Some("-3"));
+    }
+}

@@ -1,0 +1,84 @@
+//! PGM image output for qualitative figures (Fig. 5/13 analogs).
+//!
+//! Samples live in [-1, 1] pixel space (16×16 grayscale); PGM (P2, ASCII)
+//! needs no external codecs and renders everywhere.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Write a [-1,1]-scaled grayscale image (row-major, h*w values) as ASCII PGM.
+pub fn write_pgm<P: AsRef<Path>>(path: P, pixels: &[f32], w: usize, h: usize) -> std::io::Result<()> {
+    assert_eq!(pixels.len(), w * h, "pixel count must equal w*h");
+    if let Some(parent) = path.as_ref().parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut f = fs::File::create(path)?;
+    writeln!(f, "P2\n{w} {h}\n255")?;
+    for row in pixels.chunks(w) {
+        let line: Vec<String> = row
+            .iter()
+            .map(|&p| {
+                let v = ((p.clamp(-1.0, 1.0) + 1.0) * 127.5).round() as u8;
+                v.to_string()
+            })
+            .collect();
+        writeln!(f, "{}", line.join(" "))?;
+    }
+    Ok(())
+}
+
+/// Tile a sequence of equally-sized images horizontally into one strip
+/// (the paper's "iterations of parallel sampling" rows).
+pub fn hstack(images: &[Vec<f32>], w: usize, h: usize, pad: usize) -> (Vec<f32>, usize, usize) {
+    let n = images.len();
+    assert!(n > 0);
+    let out_w = n * w + (n - 1) * pad;
+    let mut out = vec![1.0f32; out_w * h]; // white padding
+    for (idx, img) in images.iter().enumerate() {
+        assert_eq!(img.len(), w * h);
+        let x0 = idx * (w + pad);
+        for r in 0..h {
+            out[r * out_w + x0..r * out_w + x0 + w].copy_from_slice(&img[r * w..(r + 1) * w]);
+        }
+    }
+    (out, out_w, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip_header() {
+        let dir = std::env::temp_dir().join("parataa_img_test");
+        let p = dir.join("t.pgm");
+        write_pgm(&p, &vec![0.0; 4], 2, 2).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("P2\n2 2\n255\n"));
+        // 0.0 maps to mid-gray 128.
+        assert!(text.contains("128 128"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clamping() {
+        let dir = std::env::temp_dir().join("parataa_img_test2");
+        let p = dir.join("t.pgm");
+        write_pgm(&p, &[-5.0, 5.0], 2, 1).unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert!(text.trim().ends_with("0 255"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hstack_dims() {
+        let a = vec![0.0f32; 4];
+        let b = vec![0.5f32; 4];
+        let (out, w, h) = hstack(&[a, b], 2, 2, 1);
+        assert_eq!((w, h), (5, 2));
+        assert_eq!(out.len(), 10);
+        // padding column is white
+        assert_eq!(out[2], 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure substrates built from scratch for the offline environment:
+//! RNG, channels, threadpool, CLI parsing, JSON, CSV/tables, stats/bench
+//! harness, property testing, and image output.
+
+pub mod channel;
+pub mod cli;
+pub mod image;
+pub mod json;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

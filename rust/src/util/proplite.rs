@@ -1,0 +1,113 @@
+//! `proplite` — a minimal property-based testing helper.
+//!
+//! The offline environment has no `proptest`, so this module provides the
+//! subset we need: run a property over many randomized cases derived from a
+//! seeded [`Pcg64`], and on failure report the case index and seed so the
+//! exact case can be replayed deterministically.
+//!
+//! Usage:
+//! ```no_run
+//! use parataa::util::proplite::forall;
+//! forall("sum_commutes", 64, |rng, case| {
+//!     let a = rng.next_f32();
+//!     let b = rng.next_f32();
+//!     if (a + b - (b + a)).abs() > 0.0 {
+//!         return Err(format!("case {case}: {a} + {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Fixed base seed; each case gets an independent stream so failures replay
+/// in isolation (`Pcg64::new(BASE_SEED, case)`).
+pub const BASE_SEED: u64 = 0x5eed_cafe_f00d_0001;
+
+/// Run `prop` over `cases` independently-seeded random cases; panic with a
+/// replayable diagnostic on the first failure.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, u64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg64::new(BASE_SEED, case);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay: Pcg64::new(proplite::BASE_SEED, {case})): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a random size in [lo, hi].
+pub fn size_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    debug_assert!(hi >= lo);
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Draw a uniform f32 in [lo, hi).
+pub fn f32_in(rng: &mut Pcg64, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+/// Assert two slices are elementwise close; returns a property-style error.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "{what}: mismatch at [{i}]: {x} vs {y} (|Δ|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counter", 17, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failure() {
+        forall("fails", 8, |_, case| {
+            if case == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn size_in_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..200 {
+            let s = size_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&s));
+        }
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 0.0, "eq").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 0.0, "neq").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 0.0, "len").is_err());
+    }
+}

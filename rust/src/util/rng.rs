@@ -1,0 +1,211 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, so we implement a
+//! PCG64-DXSM-style generator (two 64-bit LCG lanes + output permutation)
+//! plus the distributions the solver needs: uniform floats and Gaussian
+//! variates (Box–Muller with caching).
+//!
+//! Determinism is load-bearing: the paper's central claim (Remark 5.3) is
+//! that parallel sampling reproduces the *same* image as sequential sampling
+//! given the same noise vectors ξ_0..ξ_T, so every experiment seeds noise
+//! through this generator and both paths must observe identical streams.
+
+/// A small, fast, deterministic PRNG (PCG-XSL-RR 128/64 variant).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams with
+    /// the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | (stream as u128) | 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        // A few warm-up rounds to diffuse low-entropy seeds.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64-bit output (XSL-RR output permutation).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for practical n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Widening multiply method; bias is negligible (<2^-64 * n) for the
+        // experiment sizes used here, and determinism is what matters.
+        let m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        (m >> 64) as u64
+    }
+
+    /// Standard normal variate (Box–Muller, both halves used).
+    #[inline]
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Draw until u1 is nonzero to avoid ln(0).
+        let mut u1 = self.next_f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.next_f64();
+        }
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        r * theta.cos()
+    }
+
+    /// Fill a slice with standard normal f32 samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32]) {
+        // Generate pairs from Box–Muller to halve the transcendental count.
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let mut u1 = self.next_f64();
+            while u1 <= f64::MIN_POSITIVE {
+                u1 = self.next_f64();
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            out[i] = (r * theta.cos()) as f32;
+            out[i + 1] = (r * theta.sin()) as f32;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.next_gaussian() as f32;
+        }
+    }
+
+    /// Allocate and fill a Gaussian vector.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill_gaussian(&mut v);
+        v
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "seeds should produce distinct streams");
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(9, 0);
+        let mut b = Pcg64::new(9, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seeded(4);
+        let n = 50_000;
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian(&mut v);
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Pcg64::seeded(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = rng.below(10) as usize;
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets should be hit");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle should move elements");
+    }
+
+    #[test]
+    fn odd_length_gaussian_fill() {
+        let mut rng = Pcg64::seeded(7);
+        let mut v = vec![0.0f32; 7];
+        rng.fill_gaussian(&mut v);
+        assert!(v.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! Fixed-size thread pool.
+//!
+//! Used by the figure/benchmark harness to fan parameter sweeps across cores
+//! and by the coordinator for worker loops. `tokio` is unavailable offline;
+//! the workloads here are coarse (each job is at least one full solver run or
+//! device call), so a plain worker-pool over the bounded channel is ideal.
+
+use super::channel::{bounded, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (≥1). Queue capacity is 4× the worker count, which
+    /// provides backpressure for producers that enqueue faster than jobs run.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = bounded::<Job>(n * 4);
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("parataa-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Pool sized to the machine's available parallelism.
+    pub fn with_available_parallelism() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(f))
+            .ok();
+    }
+
+    /// Map `f` over `items` in parallel, preserving order of results.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = bounded::<()>(n.max(1));
+        for (i, item) in items.into_iter().enumerate() {
+            let results = results.clone();
+            let f = f.clone();
+            let done_tx = done_tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                // Release our Arc clones BEFORE signaling completion so the
+                // collector's try_unwrap sees a unique reference.
+                drop(results);
+                drop(f);
+                let _ = done_tx.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv();
+        }
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("job completed"))
+            .collect()
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            tx.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..64 {
+            let c = count.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50u64).collect(), |x| x * x);
+        assert_eq!(out, (0..50u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn size_respects_minimum() {
+        assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+}

@@ -1,0 +1,470 @@
+//! Integration tests across modules, including the cross-language vectors
+//! exported by `python/compile/aot.py` and the PJRT artifact path.
+//!
+//! Tests touching `artifacts/` are skipped (with a notice) when the
+//! directory has not been built — `make artifacts` first for full coverage.
+
+use parataa::equations::States;
+use parataa::figures::common::{method_config, ModelChoice, Scenario};
+use parataa::metrics::match_rmse;
+use parataa::model::gmm::GmmEps;
+use parataa::model::{Cond, EpsModel};
+use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+use parataa::solver::{self, history::History, update::apply_update, Method, Problem};
+use parataa::util::json::{parse, Json};
+use parataa::util::proplite::assert_close;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    parataa::runtime::default_artifacts_dir()
+}
+
+fn load_testvec(name: &str) -> Option<Json> {
+    let path = artifacts_dir().join(name);
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(parse(&text).expect("test vector parses"))
+}
+
+macro_rules! require_artifacts {
+    ($name:expr) => {
+        match load_testvec($name) {
+            Some(v) => v,
+            None => {
+                eprintln!("SKIP: {} not found (run `make artifacts`)", $name);
+                return;
+            }
+        }
+    };
+}
+
+// --- cross-language: schedule ------------------------------------------------
+
+#[test]
+fn schedule_matches_python() {
+    let tv = require_artifacts!("testvec_schedule.json");
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    for (name, kind, steps) in [
+        ("ddim10", SamplerKind::Ddim, 10usize),
+        ("ddpm10", SamplerKind::Ddpm, 10),
+        ("ddim25", SamplerKind::Ddim, 25),
+    ] {
+        let case = tv.get(name).unwrap();
+        let sc = SamplerCoeffs::new(&ns, kind, steps);
+        for (field, ours) in [("a", &sc.a), ("b", &sc.b)] {
+            let py: Vec<f64> = case
+                .get(field)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect();
+            for (i, (&a, &b)) in ours.iter().zip(py.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-9, "{name}.{field}[{i}]: {a} vs {b}");
+            }
+        }
+        let py_c: Vec<f64> = case
+            .get("c")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (i, (&a, &b)) in sc.c.iter().zip(py_c.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-9, "{name}.c[{i}]: {a} vs {b}");
+        }
+        let py_tt: Vec<usize> = case
+            .get("train_t")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(sc.train_t, py_tt, "{name}.train_t");
+        let py_g2: Vec<f64> = case
+            .get("g2")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (i, (&a, &b)) in sc.g2.iter().zip(py_g2.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-9, "{name}.g2[{i}]");
+        }
+    }
+}
+
+// --- cross-language: GMM eps -------------------------------------------------
+
+#[test]
+fn gmm_eps_matches_python() {
+    let tv = require_artifacts!("testvec_gmm.json");
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let (_k, d, means) = tv.get("means").unwrap().as_f32_mat().unwrap();
+    let data_std = tv.get("data_std").unwrap().as_f64().unwrap();
+    let model = GmmEps::new(means, d, data_std, ns.alpha_bars.clone());
+    for case in tv.get("cases").unwrap().as_arr().unwrap() {
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let t = case.get("train_t").unwrap().as_usize().unwrap();
+        let w = case.get("weights").unwrap().as_f32_vec().unwrap();
+        let g = case.get("guidance").unwrap().as_f64().unwrap() as f32;
+        let expect = case.get("eps").unwrap().as_f32_vec().unwrap();
+        let mut out = vec![0.0f32; d];
+        model.eps_batch(&x, &[t], &[Cond::Weights(w)], g, &mut out);
+        assert_close(&out, &expect, 1e-4, 1e-3, &format!("gmm eps t={t} g={g}")).unwrap();
+    }
+}
+
+// --- cross-language: TAA update ----------------------------------------------
+
+#[test]
+fn taa_update_matches_python() {
+    let tv = require_artifacts!("testvec_taa.json");
+    let w = tv.get("w").unwrap().as_usize().unwrap();
+    let d = tv.get("d").unwrap().as_usize().unwrap();
+    let mc = tv.get("mc").unwrap().as_usize().unwrap();
+    let lam = tv.get("lam").unwrap().as_f64().unwrap() as f32;
+    let dx = tv.get("dX").unwrap().as_f32_vec().unwrap();
+    let df = tv.get("dF").unwrap().as_f32_vec().unwrap();
+    let x = tv.get("x").unwrap().as_f32_vec().unwrap();
+    let r = tv.get("R").unwrap().as_f32_vec().unwrap();
+    let expect_xnew = tv.get("x_new").unwrap().as_f32_vec().unwrap();
+
+    let mut history = History::new(mc, w, d);
+    // python layout is [mc, w, d]; our history slots are [w*d] each.
+    for h in 0..mc {
+        history.push(&dx[h * w * d..(h + 1) * w * d], &df[h * w * d..(h + 1) * w * d]);
+    }
+    let f_vals: Vec<f32> = x.iter().zip(r.iter()).map(|(a, b)| a + b).collect();
+    let mut xs = x.clone();
+    apply_update(Method::Taa, &mut xs, &f_vals, &r, &history, 0, w - 1, w, d, lam, false);
+    assert_close(&xs, &expect_xnew, 2e-3, 2e-2, "taa x_new").unwrap();
+}
+
+// --- PJRT: trained model numerics ---------------------------------------------
+
+#[test]
+fn pjrt_dit_matches_python() {
+    let tv = require_artifacts!("testvec_dit.json");
+    if !artifacts_dir().join("eps_batch_1.hlo.txt").exists() {
+        eprintln!("SKIP: eps artifacts missing");
+        return;
+    }
+    let actor = parataa::runtime::DeviceActor::spawn(artifacts_dir(), 256).unwrap();
+    let handle = actor.handle();
+    for case in tv.get("cases").unwrap().as_arr().unwrap() {
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let t = case.get("train_t").unwrap().as_f64().unwrap() as i32;
+        let y = case.get("y").unwrap().as_f64().unwrap() as i32;
+        let g = case.get("guidance").unwrap().as_f64().unwrap() as f32;
+        let expect = case.get("eps").unwrap().as_f32_vec().unwrap();
+        let out = handle.eps_batch(&x, &[t], &[y], g).unwrap();
+        assert_close(&out, &expect, 1e-4, 1e-3, &format!("dit eps t={t} y={y}")).unwrap();
+    }
+}
+
+// --- PJRT: padding invariance + batching --------------------------------------
+
+#[test]
+fn pjrt_batch_padding_is_consistent() {
+    let tv = require_artifacts!("testvec_dit.json");
+    let actor = parataa::runtime::DeviceActor::spawn(artifacts_dir(), 256).unwrap();
+    let handle = actor.handle();
+    let case = &tv.get("cases").unwrap().as_arr().unwrap()[1];
+    let x = case.get("x").unwrap().as_f32_vec().unwrap();
+    let t = case.get("train_t").unwrap().as_f64().unwrap() as i32;
+    let y = case.get("y").unwrap().as_f64().unwrap() as i32;
+    // Same item evaluated alone and replicated 7× (pads to the 10-variant)
+    // must agree elementwise.
+    let single = handle.eps_batch(&x, &[t], &[y], 2.0).unwrap();
+    let mut x7 = Vec::new();
+    for _ in 0..7 {
+        x7.extend_from_slice(&x);
+    }
+    let batch = handle.eps_batch(&x7, &[t; 7], &[y; 7], 2.0).unwrap();
+    for i in 0..7 {
+        assert_close(
+            &batch[i * 256..(i + 1) * 256],
+            &single,
+            1e-5,
+            1e-4,
+            &format!("padded item {i}"),
+        )
+        .unwrap();
+    }
+}
+
+// --- PJRT: end-to-end parallel == sequential on the trained model --------------
+
+#[test]
+fn pjrt_parataa_matches_sequential() {
+    if !artifacts_dir().join("eps_batch_1.hlo.txt").exists() {
+        eprintln!("SKIP: eps artifacts missing");
+        return;
+    }
+    let scenario = Scenario::new(ModelChoice::Dit, SamplerKind::Ddim, 25);
+    let coeffs = scenario.coeffs();
+    let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(3), 11);
+    let seq = solver::sample_sequential(&problem, scenario.guidance);
+    let cfg = method_config(Method::Taa, 25, None, scenario.guidance);
+    let par = solver::solve(&problem, &cfg);
+    assert!(par.converged, "ParaTAA on PJRT did not converge");
+    assert!(par.iterations < 25, "no parallel speedup: {}", par.iterations);
+    let rmse = match_rmse(par.xs.row(0), seq.xs.row(0));
+    assert!(rmse < 0.02, "parallel/sequential mismatch: {rmse}");
+}
+
+// --- PJRT: fused solver_step artifact matches the native update ----------------
+
+#[test]
+fn pjrt_solver_step_matches_native() {
+    if !artifacts_dir().join("solver_step_25.hlo.txt").exists() {
+        eprintln!("SKIP: solver_step artifacts missing");
+        return;
+    }
+    use parataa::equations::{build_b_matrix, build_s_matrix, build_xi_comb, eval_fk};
+    use parataa::runtime::device::{SolverStepInputs, SOLVER_HIST_COLS};
+    use parataa::util::rng::Pcg64;
+
+    let steps = 25usize;
+    let d = 256usize;
+    let k = 6;
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, steps);
+    let mut rng = Pcg64::seeded(5);
+
+    let mut xs = States::zeros(steps, d);
+    rng.fill_gaussian(&mut xs.data);
+    let mut eps = States::zeros(steps, d);
+    rng.fill_gaussian(&mut eps.data);
+    let mut xi = States::zeros(steps, d);
+    rng.fill_gaussian(&mut xi.data);
+    let boundary = steps;
+    let w = steps;
+
+    let dx: Vec<f32> = (0..SOLVER_HIST_COLS * w * d).map(|_| rng.next_f32() - 0.5).collect();
+    let df: Vec<f32> = (0..SOLVER_HIST_COLS * w * d).map(|_| rng.next_f32() - 0.5).collect();
+
+    // Native: F^{(k)}, R, then TAA.
+    let mut f_vals = vec![0.0f32; w * d];
+    let mut r_vals = vec![0.0f32; w * d];
+    for p in 0..w {
+        eval_fk(&coeffs, &xs, &eps, &xi, k, boundary, p, &mut f_vals[p * d..(p + 1) * d]);
+        for i in p * d..(p + 1) * d {
+            r_vals[i] = f_vals[i] - xs.data[i];
+        }
+    }
+    let mut history = History::new(SOLVER_HIST_COLS, w, d);
+    for h in 0..SOLVER_HIST_COLS {
+        history.push(&dx[h * w * d..(h + 1) * w * d], &df[h * w * d..(h + 1) * w * d]);
+    }
+    let mut native = xs.data[..w * d].to_vec();
+    apply_update(Method::Taa, &mut native, &f_vals, &r_vals, &history, 0, w - 1, w, d, 1e-4, false);
+
+    // PJRT: the fused artifact.
+    let actor = parataa::runtime::DeviceActor::spawn(artifacts_dir(), d).unwrap();
+    let inputs = SolverStepInputs {
+        xs_ext: xs.data.clone(),
+        eps_ext: eps.data.clone(),
+        x_win: xs.data[..w * d].to_vec(),
+        s_mat: build_s_matrix(&coeffs, k, boundary, 0, w),
+        b_mat: build_b_matrix(&coeffs, k, boundary, 0, w),
+        xi_comb: build_xi_comb(&coeffs, &xi, k, boundary, 0, w),
+        s1_mat: build_s_matrix(&coeffs, 1, boundary, 0, w),
+        b1_mat: build_b_matrix(&coeffs, 1, boundary, 0, w),
+        xi1_comb: build_xi_comb(&coeffs, &xi, 1, boundary, 0, w),
+        dx,
+        df,
+        mask: vec![1.0; w],
+        fp_mask: vec![0.0; w],
+        lam: 1e-4,
+    };
+    let out = actor.handle().solver_step(steps, inputs).unwrap();
+    assert_close(&out.x_new, &native, 5e-3, 5e-2, "fused vs native x_new").unwrap();
+    assert_close(&out.r_vec, &r_vals, 1e-3, 1e-2, "fused vs native R").unwrap();
+}
+
+// --- service-level equivalence -------------------------------------------------
+
+#[test]
+fn coordinator_end_to_end_gmm() {
+    use parataa::coordinator::{
+        Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
+    };
+    use std::sync::Arc;
+
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+    let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
+    let eps = Arc::new(batcher.eps_handle(256, "batched"));
+    let coord = Coordinator::start(eps, CoordinatorConfig::default());
+
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let mut req =
+            SampleRequest::parataa(Cond::Class(i as usize % 8), i, SamplerSpec::ddim(25));
+        req.guidance = 2.0;
+        handles.push((i, coord.submit(req)));
+    }
+    for (i, h) in handles {
+        let r = h.wait().unwrap();
+        assert!(r.converged, "request {i}");
+        // oracle
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 25);
+        let p = Problem::new(&coeffs, &*model, Cond::Class(i as usize % 8), i);
+        let seq = solver::sample_sequential(&p, 2.0);
+        let rmse = match_rmse(&r.sample, seq.xs.row(0));
+        assert!(rmse < 0.02, "request {i} mismatch {rmse}");
+    }
+    drop(coord);
+}
+
+// --- edge cases across the solver stack -----------------------------------
+
+#[test]
+fn window_one_degenerates_to_sequential_schedule() {
+    // w = 1: each round updates a single row; ParaTAA must still converge
+    // and match the sequential sample (at ~T rounds).
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = {
+        let mut rng = parataa::util::rng::Pcg64::seeded(3);
+        let d = 4;
+        let means: Vec<f32> = (0..2 * d).map(|_| rng.next_f32()).collect();
+        GmmEps::new(means, d, 0.3, ns.alpha_bars.clone())
+    };
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 12);
+    let problem = Problem::new(&coeffs, &model, Cond::Class(0), 5);
+    let seq = solver::sample_sequential(&problem, 1.0);
+    let mut cfg = method_config(Method::Taa, 12, None, 1.0);
+    cfg.window = 1;
+    cfg.s_max = 100;
+    let par = solver::solve(&problem, &cfg);
+    assert!(par.converged);
+    assert!(match_rmse(par.xs.row(0), seq.xs.row(0)) < 1e-2);
+}
+
+#[test]
+fn k_larger_than_t_is_clamped() {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = {
+        let mut rng = parataa::util::rng::Pcg64::seeded(4);
+        let means: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
+        GmmEps::new(means, 4, 0.3, ns.alpha_bars.clone())
+    };
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 8);
+    let problem = Problem::new(&coeffs, &model, Cond::Class(1), 2);
+    let mut cfg = method_config(Method::Taa, 8, Some(10_000), 1.0);
+    cfg.s_max = 50;
+    let r = solver::solve(&problem, &cfg);
+    assert!(r.converged, "oversized k must be clamped, not crash");
+}
+
+#[test]
+fn t_init_one_freezes_everything_but_the_sample() {
+    // T_init = 1: only x_0 is re-solved; all other rows stay frozen.
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = {
+        let mut rng = parataa::util::rng::Pcg64::seeded(6);
+        let means: Vec<f32> = (0..12).map(|_| rng.next_f32()).collect();
+        GmmEps::new(means, 4, 0.3, ns.alpha_bars.clone())
+    };
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 10);
+    let cfg = method_config(Method::Taa, 10, None, 1.0);
+    let p1 = Problem::new(&coeffs, &model, Cond::Class(0), 9);
+    let r1 = solver::solve(&p1, &cfg);
+    let mut p2 = Problem::new(&coeffs, &model, Cond::Class(2), 9);
+    parataa::solver::init::init_from_trajectory(&mut p2, r1.xs.clone(), p1.xi.clone(), 1);
+    let r2 = solver::solve(&p2, &cfg);
+    assert!(r2.converged);
+    for t in 1..=10 {
+        assert_eq!(r2.xs.row(t), r1.xs.row(t), "row {t} should be frozen");
+    }
+}
+
+#[test]
+fn gmm_zero_weight_components_are_ignored() {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let mut rng = parataa::util::rng::Pcg64::seeded(8);
+    let d = 4;
+    let means: Vec<f32> = (0..3 * d).map(|_| rng.next_f32()).collect();
+    let model = GmmEps::new(means.clone(), d, 0.2, ns.alpha_bars.clone());
+    // Condition with zero weight on components 1,2 must equal a 1-component
+    // model built from component 0 alone.
+    let single = GmmEps::new(means[..d].to_vec(), d, 0.2, ns.alpha_bars.clone());
+    let x: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let mut a = vec![0.0f32; d];
+    let mut b = vec![0.0f32; d];
+    model.eps_batch(&x, &[300], &[Cond::Weights(vec![1.0, 0.0, 0.0])], 1.0, &mut a);
+    single.eps_batch(&x, &[300], &[Cond::Class(0)], 1.0, &mut b);
+    assert_close(&a, &b, 1e-6, 1e-5, "zero-weight components").unwrap();
+}
+
+#[test]
+fn ddpm_parallel_uses_identical_noise_as_sequential() {
+    // The stochastic sampler's ξ draws are fixed per problem: parallel and
+    // sequential must consume the same stream and produce the same sample.
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = {
+        let mut rng = parataa::util::rng::Pcg64::seeded(10);
+        let means: Vec<f32> = (0..3 * 6).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        GmmEps::new(means, 6, 0.25, ns.alpha_bars.clone())
+    };
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 20);
+    let problem = Problem::new(&coeffs, &model, Cond::Class(1), 77);
+    let seq = solver::sample_sequential(&problem, 1.5);
+    let mut cfg = method_config(Method::Taa, 20, None, 1.5);
+    cfg.tol = 1e-5;
+    cfg.s_max = 80;
+    let par = solver::solve(&problem, &cfg);
+    assert!(par.converged);
+    assert!(
+        match_rmse(par.xs.row(0), seq.xs.row(0)) < 5e-3,
+        "DDPM parallel must reproduce the sequential stochastic sample"
+    );
+}
+
+#[test]
+fn figures_registry_covers_all_experiments() {
+    for name in parataa::figures::ALL {
+        assert!(
+            ["fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig14", "table1", "ablate"]
+                .contains(name)
+        );
+    }
+    assert_eq!(parataa::figures::ALL.len(), 10);
+}
+
+#[test]
+fn fused_pjrt_driver_matches_sequential() {
+    // The fully-fused device path (2 device calls/round, zero host math on
+    // window tensors) must converge to the sequential sample too.
+    if !artifacts_dir().join("solver_step_25.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    use parataa::runtime::pjrt_driver::solve_pjrt;
+    let scenario = Scenario::new(ModelChoice::Dit, SamplerKind::Ddim, 25);
+    let coeffs = scenario.coeffs();
+    let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(5), 21);
+    let seq = solver::sample_sequential(&problem, scenario.guidance);
+
+    let actor = parataa::runtime::DeviceActor::spawn(artifacts_dir(), 256).unwrap();
+    let mut cfg = method_config(Method::Taa, 25, None, scenario.guidance);
+    cfg.s_max = 60;
+    let fused = solve_pjrt(&actor.handle(), &problem, &cfg).unwrap();
+    assert!(fused.converged, "fused path did not converge");
+    let rmse = match_rmse(fused.xs.row(0), seq.xs.row(0));
+    assert!(rmse < 0.02, "fused path mismatch: {rmse}");
+
+    // Native path for comparison: fused may lag a round or two (history
+    // staleness, see pjrt_driver.rs) but must stay in the same ballpark.
+    let native = solver::solve(&problem, &cfg);
+    assert!(
+        fused.iterations <= native.iterations + 6,
+        "fused {} vs native {} rounds",
+        fused.iterations,
+        native.iterations
+    );
+}
