@@ -1,22 +1,73 @@
-//! PJRT runtime benchmarks: eps_batch latency per compiled variant and the
-//! fused solver_step artifact. Skipped when artifacts are absent.
+//! Runtime benchmarks.
 //!
-//! These are the numbers behind Remark 5.1: on CPU a batch-N ε call costs
-//! ~N× a batch-1 call (no parallel hardware), so wall-clock speedup comes
-//! from *round reduction* only; the per-variant latencies quantify that.
+//! Part 1 (always runs): device-pool throughput sweep on the in-process
+//! backend — rows/sec scaling over devices ∈ {1, 2, 4, 8}. This is the
+//! multi-executor speedup the paper gets from sharding each window across
+//! 8 GPUs, reproduced with CPU worker threads.
+//!
+//! Part 2 (`--features pjrt`, artifacts present): eps_batch latency per
+//! compiled variant and the fused solver_step artifact. These are the
+//! numbers behind Remark 5.1: on CPU a batch-N ε call costs ~N× a batch-1
+//! call (no parallel hardware), so wall-clock speedup comes from *round
+//! reduction* only; the per-variant latencies quantify that.
 
-use parataa::runtime::{default_artifacts_dir, DeviceActor, EPS_BATCH_SIZES};
+use parataa::model::gmm::GmmEps;
+use parataa::model::{Cond, EpsModel};
+use parataa::runtime::{DevicePool, PoolConfig};
+use parataa::schedule::{BetaSchedule, NoiseSchedule};
 use parataa::util::rng::Pcg64;
 use parataa::util::stats::bench;
+use std::sync::Arc;
 use std::time::Duration;
 
-fn main() {
+fn bench_pool_sweep() {
+    println!("--- device pool sweep (in-process backend, 256-dim GMM) ---");
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model: Arc<GmmEps> = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+    let mut rng = Pcg64::seeded(7);
+
+    let rows = 400; // 4×100-row shards at devices=4 (see pool::shard_size)
+    let x = rng.gaussian_vec(rows * 256);
+    let ts: Vec<usize> = (0..rows).map(|i| (i * 997) % 1000).collect();
+    let conds: Vec<Cond> = (0..rows).map(|i| Cond::Class(i % 8)).collect();
+    let mut out = vec![0.0f32; rows * 256];
+
+    let mut base_rps = 0.0f64;
+    for &devices in &[1usize, 2, 4, 8] {
+        let pool = DevicePool::in_process(model.clone(), devices, PoolConfig::default())
+            .expect("spawn pool");
+        let eps = pool.eps_handle("pooled");
+        let r = bench(
+            &format!("pool eps_batch {rows} rows, devices={devices}"),
+            Duration::from_millis(100),
+            Duration::from_millis(600),
+            || {
+                eps.eps_batch(&x, &ts, &conds, 2.0, &mut out);
+            },
+        );
+        let rps = rows as f64 / r.mean.as_secs_f64();
+        if devices == 1 {
+            base_rps = rps;
+        }
+        println!(
+            "{}  ({:.0} rows/s, {:.2}x vs devices=1)",
+            r.report(),
+            rps,
+            rps / base_rps.max(1e-9)
+        );
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt() {
+    use parataa::runtime::{default_artifacts_dir, DeviceActor, EPS_BATCH_SIZES};
+
     let dir = default_artifacts_dir();
     if !dir.join("eps_batch_1.hlo.txt").exists() {
-        println!("bench_runtime: artifacts missing, skipping (run `make artifacts`)");
+        println!("bench_runtime: artifacts missing, skipping PJRT section (run `make artifacts`)");
         return;
     }
-    println!("=== bench_runtime ===");
+    println!("--- PJRT artifact latencies ---");
     let actor = DeviceActor::spawn(&dir, 256).unwrap();
     let handle = actor.handle();
     let mut rng = Pcg64::seeded(2);
@@ -70,4 +121,13 @@ fn main() {
         );
         println!("{}", r.report());
     }
+}
+
+fn main() {
+    println!("=== bench_runtime ===");
+    bench_pool_sweep();
+    #[cfg(feature = "pjrt")]
+    bench_pjrt();
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt feature disabled: artifact latency section skipped)");
 }

@@ -15,9 +15,10 @@ use parataa::util::table::Table;
 
 fn main() {
     println!("=== bench_table1 (reduced; full table via `parataa table1`) ===");
-    let have_artifacts = parataa::runtime::default_artifacts_dir()
-        .join("eps_batch_1.hlo.txt")
-        .exists();
+    let have_artifacts = cfg!(feature = "pjrt")
+        && parataa::runtime::default_artifacts_dir()
+            .join("eps_batch_1.hlo.txt")
+            .exists();
     let models = if have_artifacts {
         vec![ModelChoice::Dit, ModelChoice::Gmm]
     } else {

@@ -27,12 +27,17 @@ struct EpsJob {
 /// Batcher tuning.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Maximum items (window rows) per merged device call.
+    /// Maximum items (window rows) per merged device call **per device**;
+    /// the effective merge cap is `max_items × devices`.
     pub max_items: usize,
     /// How long to linger for more jobs once one is pending.
     pub linger: Duration,
     /// Job queue capacity (backpressure bound).
     pub queue_capacity: usize,
+    /// Devices behind the backing model (a [`crate::runtime::DevicePool`]):
+    /// merged calls grow to keep every device busy, and the pool then
+    /// shards them back out per device.
+    pub devices: usize,
 }
 
 impl Default for BatcherConfig {
@@ -41,7 +46,16 @@ impl Default for BatcherConfig {
             max_items: 100,
             linger: Duration::from_micros(200),
             queue_capacity: 256,
+            devices: 1,
         }
+    }
+}
+
+impl BatcherConfig {
+    /// Defaults scaled for an N-device pool: one full merged device call
+    /// (the largest compiled batch variant) per device.
+    pub fn for_devices(devices: usize) -> Self {
+        BatcherConfig { devices: devices.max(1), ..Default::default() }
     }
 }
 
@@ -52,8 +66,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn over a backing model (typically [`crate::runtime::PjrtEps`] or
-    /// [`crate::model::gmm::GmmEps`]).
+    /// Spawn over a backing model (typically a [`crate::runtime::PooledEps`],
+    /// `crate::runtime::PjrtEps`, or [`crate::model::gmm::GmmEps`]).
     pub fn spawn(model: Arc<dyn EpsModel>, cfg: BatcherConfig) -> Self {
         let (tx, rx) = bounded::<EpsJob>(cfg.queue_capacity);
         let join = std::thread::Builder::new()
@@ -80,13 +94,14 @@ impl Drop for Batcher {
 
 fn run_batcher(model: Arc<dyn EpsModel>, rx: Receiver<EpsJob>, cfg: BatcherConfig) {
     let d = model.dim();
+    let merge_cap = cfg.max_items.saturating_mul(cfg.devices.max(1));
     while let Some(first) = rx.recv() {
         // Collect: the first job plus whatever arrives within the linger
-        // window, up to max_items.
+        // window, up to one full merged call per device.
         let mut jobs = vec![first];
         let mut items: usize = jobs[0].t.len();
         let deadline = std::time::Instant::now() + cfg.linger;
-        while items < cfg.max_items {
+        while items < merge_cap {
             let now = std::time::Instant::now();
             let job = if now < deadline {
                 match rx.recv_timeout(deadline - now) {
@@ -160,16 +175,16 @@ impl EpsModel for BatchedEps {
         out: &mut [f32],
     ) {
         let (rtx, rrx) = bounded(1);
-        self.tx
-            .send(EpsJob {
-                x: xs.to_vec(),
-                t: train_ts.to_vec(),
-                conds: conds.to_vec(),
-                guidance,
-                reply: rtx,
-            })
-            .ok()
-            .expect("batcher is down");
+        let job = EpsJob {
+            x: xs.to_vec(),
+            t: train_ts.to_vec(),
+            conds: conds.to_vec(),
+            guidance,
+            reply: rtx,
+        };
+        if self.tx.send(job).is_err() {
+            panic!("batcher is down");
+        }
         let eps = rrx.recv().expect("batcher dropped reply");
         out.copy_from_slice(&eps);
     }
@@ -208,6 +223,27 @@ mod tests {
         let mut direct = vec![0.0f32; 4 * 6];
         model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
         assert_eq!(via_batch, direct);
+    }
+
+    #[test]
+    fn batcher_over_device_pool_matches_direct() {
+        use crate::runtime::{DevicePool, PoolConfig};
+        let model = gmm();
+        let pool = DevicePool::in_process(model.clone(), 2, PoolConfig::default()).unwrap();
+        let pooled = Arc::new(pool.eps_handle("pooled"));
+        let batcher = Batcher::spawn(pooled, BatcherConfig::for_devices(2));
+        let handle = batcher.eps_handle(6, "gmm-pooled-batched");
+        let mut rng = Pcg64::seeded(5);
+        let n = 11;
+        let xs: Vec<f32> = (0..n * 6).map(|_| rng.next_f32()).collect();
+        let ts: Vec<usize> = (0..n).map(|i| (i * 83) % 1000).collect();
+        let conds: Vec<Cond> = (0..n).map(|i| Cond::Class(i % 3)).collect();
+        let mut via_stack = vec![0.0f32; n * 6];
+        handle.eps_batch(&xs, &ts, &conds, 2.0, &mut via_stack);
+        let mut direct = vec![0.0f32; n * 6];
+        model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
+        assert_eq!(via_stack, direct);
+        drop(batcher); // shut the batcher down before the pool drops
     }
 
     #[test]

@@ -1,13 +1,17 @@
-//! Service metrics: counters + latency/round distributions.
+//! Service metrics: counters + latency/round distributions, plus the
+//! per-device utilization/queue-depth breakdown of an attached
+//! [`crate::runtime::DevicePool`].
 
+use crate::runtime::pool::{DeviceStat, PoolStats};
 use crate::util::stats::percentile;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Aggregated service metrics (interior-mutable, shared by workers).
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
+    pool: Mutex<Option<Arc<PoolStats>>>,
 }
 
 #[derive(Default)]
@@ -33,6 +37,8 @@ pub struct MetricsSnapshot {
     pub latency_ms_p99: f64,
     pub mean_rounds: f64,
     pub mean_nfe: f64,
+    /// Per-device pool breakdown (empty unless a pool is attached).
+    pub devices: Vec<DeviceStat>,
 }
 
 impl Default for Metrics {
@@ -43,7 +49,17 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        Metrics { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            started: Instant::now(),
+            pool: Mutex::new(None),
+        }
+    }
+
+    /// Attach a device pool's counters; snapshots then carry the
+    /// per-device utilization/queue-depth breakdown.
+    pub fn attach_pool(&self, stats: Arc<PoolStats>) {
+        *self.pool.lock().unwrap() = Some(stats);
     }
 
     pub fn record_success(&self, latency: Duration, rounds: usize, nfe: usize, warm: bool) {
@@ -78,13 +94,20 @@ impl Metrics {
             latency_ms_p99: percentile(&m.latencies_ms, 0.99),
             mean_rounds: mean(&m.rounds),
             mean_nfe: mean(&m.nfes),
+            devices: self
+                .pool
+                .lock()
+                .unwrap()
+                .as_ref()
+                .map(|p| p.snapshot())
+                .unwrap_or_default(),
         }
     }
 }
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "completed={} failed={} warm={} | {:.2} req/s | latency ms p50={:.1} p95={:.1} p99={:.1} | rounds μ={:.1} | nfe μ={:.0}",
             self.completed,
             self.failed,
@@ -95,7 +118,11 @@ impl MetricsSnapshot {
             self.latency_ms_p99,
             self.mean_rounds,
             self.mean_nfe,
-        )
+        );
+        for s in &self.devices {
+            out.push_str(&format!("\n  {s}"));
+        }
+        out
     }
 }
 
@@ -123,5 +150,40 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.mean_rounds, 0.0);
+        assert!(s.devices.is_empty());
+    }
+
+    #[test]
+    fn attached_pool_breakdown_in_report() {
+        use crate::model::{Cond, EpsModel};
+        use crate::runtime::{DevicePool, PoolConfig};
+        use crate::schedule::{BetaSchedule, NoiseSchedule};
+        use std::sync::Arc;
+
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let model = Arc::new(crate::model::gmm::GmmEps::new(
+            vec![0.5; 2 * 4],
+            4,
+            0.2,
+            ns.alpha_bars.clone(),
+        ));
+        let pool = DevicePool::in_process(model, 2, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let mut out = vec![0.0f32; 3 * 4];
+        eps.eps_batch(
+            &[0.1; 12],
+            &[10, 500, 900],
+            &[Cond::Class(0), Cond::Class(1), Cond::Uncond],
+            1.0,
+            &mut out,
+        );
+
+        let m = Metrics::new();
+        m.attach_pool(pool.stats());
+        let s = m.snapshot();
+        assert_eq!(s.devices.len(), 2);
+        assert_eq!(s.devices.iter().map(|d| d.items).sum::<u64>(), 3);
+        assert!(s.report().contains("dev0"), "report: {}", s.report());
+        assert!(s.report().contains("dev1"), "report: {}", s.report());
     }
 }

@@ -18,7 +18,7 @@ use crate::model::EpsModel;
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
 use crate::solver::{self, init::init_from_trajectory, Problem};
 use crate::util::channel::{bounded, Receiver, Sender};
-use anyhow::Result;
+use crate::util::error::{anyhow, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -40,6 +40,10 @@ pub struct CoordinatorConfig {
     pub cache_t_init_frac: f64,
     /// Number of condition components (for densifying `Cond`s).
     pub n_components: usize,
+    /// Devices behind the model handle (a [`crate::runtime::DevicePool`]):
+    /// the in-flight window-row budget scales as `slot_budget × devices`,
+    /// matching the extra device memory a bigger pool brings.
+    pub devices: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -52,6 +56,7 @@ impl Default for CoordinatorConfig {
             cache_max_dist: 0.5,
             cache_t_init_frac: 0.7,
             n_components: 8,
+            devices: 1,
         }
     }
 }
@@ -72,7 +77,7 @@ impl ResponseHandle {
     pub fn wait(self) -> Result<SampleResponse> {
         self.rx
             .recv()
-            .unwrap_or_else(|| Err(anyhow::anyhow!("coordinator shut down")))
+            .unwrap_or_else(|| Err(anyhow!("coordinator shut down")))
     }
 }
 
@@ -91,7 +96,7 @@ impl Coordinator {
         let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::new());
         let cache = Arc::new(TrajectoryCache::new(cfg.cache_capacity, cfg.n_components));
-        let budget = Arc::new(SlotBudget::new(cfg.slot_budget));
+        let budget = Arc::new(SlotBudget::new(cfg.slot_budget * cfg.devices.max(1)));
         let schedule = Arc::new(NoiseSchedule::new(BetaSchedule::Linear, 1000));
         let workers = (0..cfg.workers.max(1))
             .map(|i| {
@@ -129,10 +134,9 @@ impl Coordinator {
     /// Enqueue a request (blocking if the queue is full — backpressure).
     pub fn submit(&self, req: SampleRequest) -> ResponseHandle {
         let (rtx, rrx) = bounded(1);
-        self.tx
-            .send(Job { req, reply: rtx, enqueued: Instant::now() })
-            .ok()
-            .expect("coordinator is down");
+        if self.tx.send(Job { req, reply: rtx, enqueued: Instant::now() }).is_err() {
+            panic!("coordinator is down");
+        }
         ResponseHandle { rx: rrx }
     }
 
@@ -143,6 +147,12 @@ impl Coordinator {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Record a device pool's per-device counters in this service's
+    /// metrics: snapshots/reports then include the per-device breakdown.
+    pub fn attach_pool(&self, stats: Arc<crate::runtime::PoolStats>) {
+        self.metrics.attach_pool(stats);
     }
 
     /// Trajectory-cache size (diagnostic).

@@ -32,6 +32,17 @@ impl ModelChoice {
             ModelChoice::Gmm => "SDa(GMM)",
         }
     }
+
+    /// Default `--model` for figure generators: the trained DiT when the
+    /// PJRT backend is compiled in, the analytic model otherwise (so the
+    /// zero-dep default build never panics mid-`all-figures`).
+    pub fn default_name() -> &'static str {
+        if cfg!(feature = "pjrt") {
+            "dit"
+        } else {
+            "gmm"
+        }
+    }
 }
 
 /// A scenario = model × sampler × steps (one column group of Table 1).
@@ -48,6 +59,7 @@ pub struct Scenario {
 }
 
 /// Keep one device actor alive for all DiT scenarios in a process.
+#[cfg(feature = "pjrt")]
 static DEVICE: std::sync::OnceLock<crate::runtime::DeviceActor> = std::sync::OnceLock::new();
 
 impl Scenario {
@@ -63,21 +75,32 @@ impl Scenario {
                 (classifier.clone(), 2.0)
             }
             ModelChoice::Dit => {
-                let actor = DEVICE.get_or_init(|| {
-                    let actor = crate::runtime::DeviceActor::spawn(
-                        crate::runtime::default_artifacts_dir(),
-                        256,
+                #[cfg(feature = "pjrt")]
+                {
+                    let actor = DEVICE.get_or_init(|| {
+                        let actor = crate::runtime::DeviceActor::spawn(
+                            crate::runtime::default_artifacts_dir(),
+                            256,
+                        )
+                        .expect("artifacts missing — run `make artifacts`");
+                        // Warm every batch variant once so lazy XLA compilation
+                        // never contaminates a timed solve.
+                        let h = actor.handle();
+                        for &n in crate::runtime::EPS_BATCH_SIZES {
+                            let _ =
+                                h.eps_batch(&vec![0.0; n * 256], &vec![0; n], &vec![0; n], 1.0);
+                        }
+                        actor
+                    });
+                    (Arc::new(crate::runtime::PjrtEps::new(actor.handle())), 5.0)
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    panic!(
+                        "model 'dit' needs the PJRT backend: build with `--features pjrt` \
+                         (see rust/Cargo.toml) and run `make artifacts`"
                     )
-                    .expect("artifacts missing — run `make artifacts`");
-                    // Warm every batch variant once so lazy XLA compilation
-                    // never contaminates a timed solve.
-                    let h = actor.handle();
-                    for &n in crate::runtime::EPS_BATCH_SIZES {
-                        let _ = h.eps_batch(&vec![0.0; n * 256], &vec![0; n], &vec![0; n], 1.0);
-                    }
-                    actor
-                });
-                (Arc::new(crate::runtime::PjrtEps::new(actor.handle())), 5.0)
+                }
             }
         };
         Scenario { model_choice, kind, steps, guidance, model, classifier, schedule }

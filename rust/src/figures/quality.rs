@@ -96,7 +96,7 @@ pub fn quality_row(scenario: &Scenario, samples: &[f32], conds: &[Cond], referen
 
 /// Fig. 3 — quality vs s_max for FP / FP+ / ParaTAA across scenarios.
 pub fn fig3(args: &Args) -> Table {
-    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let model = ModelChoice::parse(&args.get_or("model", ModelChoice::default_name()));
     let n = args.usize_or("samples", 64);
     let seed0 = args.u64_or("seed", 100);
     let pool = ThreadPool::with_available_parallelism();
@@ -153,7 +153,7 @@ pub fn fig3(args: &Args) -> Table {
 
 /// Fig. 4 — ParaTAA quality vs rounds under different window sizes.
 pub fn fig4(args: &Args) -> Table {
-    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let model = ModelChoice::parse(&args.get_or("model", ModelChoice::default_name()));
     let steps = args.usize_or("steps", 100);
     let n = args.usize_or("samples", 32);
     let windows = args.usize_list("windows", &[10, 20, 50, 100]);

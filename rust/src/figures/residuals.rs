@@ -28,7 +28,7 @@ fn residual_curve(
 
 /// Fig. 1 — FP residual convergence under different orders k.
 pub fn fig1(args: &Args) -> Table {
-    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let model = ModelChoice::parse(&args.get_or("model", ModelChoice::default_name()));
     let steps = args.usize_or("steps", 100);
     let ks = args.usize_list("ks", &[1, 2, 4, 8, 20, steps]);
     let seed = args.u64_or("seed", 1);
@@ -65,7 +65,7 @@ pub fn fig1(args: &Args) -> Table {
 
 /// Fig. 2 — FP vs AA vs TAA under different k.
 pub fn fig2(args: &Args) -> Table {
-    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let model = ModelChoice::parse(&args.get_or("model", ModelChoice::default_name()));
     let steps = args.usize_or("steps", 100);
     let ks = args.usize_list("ks", &[steps / 4, steps]);
     let seed = args.u64_or("seed", 1);
@@ -101,7 +101,7 @@ pub fn fig2(args: &Args) -> Table {
 /// Fig. 6 — (a) per-timestep residuals under FP; (b) safeguard on/off;
 /// (c) AA vs AA+ vs TAA, plus a conditioning stress test (λ → 0).
 pub fn fig6(args: &Args) -> (Table, Table, Table) {
-    let model = ModelChoice::parse(&args.get_or("model", "dit"));
+    let model = ModelChoice::parse(&args.get_or("model", ModelChoice::default_name()));
     let steps = args.usize_or("steps", 100);
     let seed = args.u64_or("seed", 1);
     let scenario = Scenario::new(model, SamplerKind::Ddpm, steps);

@@ -118,7 +118,9 @@ pub fn table1(args: &Args) -> Table {
     let seed0 = args.u64_or("seed", 1000);
     let models: Vec<ModelChoice> = match args.get("model") {
         Some(m) => vec![ModelChoice::parse(m)],
-        None => vec![ModelChoice::Dit, ModelChoice::Gmm],
+        // DiT needs the PJRT backend; default to the analytic column otherwise.
+        None if cfg!(feature = "pjrt") => vec![ModelChoice::Dit, ModelChoice::Gmm],
+        None => vec![ModelChoice::Gmm],
     };
     let pool = ThreadPool::with_available_parallelism();
 

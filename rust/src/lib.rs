@@ -6,12 +6,17 @@
 //! of denoiser evaluations executed in parallel as one batched device call.
 //!
 //! Architecture (see `DESIGN.md`):
-//! - **L3 (this crate)** — solver + serving coordinator, pure Rust.
+//! - **L3 (this crate)** — solver + serving coordinator + multi-device
+//!   execution pool, pure Rust.
 //! - **L2** — JAX model (`python/compile/model.py`) AOT-lowered to HLO text.
 //! - **L1** — Pallas kernels (`python/compile/kernels/`), lowered into L2.
 //!
-//! The hot path loads `artifacts/*.hlo.txt` through the PJRT CPU client
-//! (`runtime`); Python never runs at request time.
+//! Execution flows through [`runtime::DevicePool`]: N backend actors
+//! (pure-Rust in-process by default; PJRT device actors with
+//! `--features pjrt`) behind one [`model::EpsModel`] handle, with
+//! per-device queues, batch sharding and work stealing. With the `pjrt`
+//! feature the hot path loads `artifacts/*.hlo.txt` through the PJRT CPU
+//! client; Python never runs at request time.
 
 pub mod coordinator;
 pub mod equations;

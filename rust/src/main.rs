@@ -8,7 +8,9 @@
 //!   all-figures   regenerate everything into results/
 //!
 //! Common options: --model dit|gmm, --steps N, --samples N, --seed N.
-//! DiT scenarios need `make artifacts` (PJRT HLO + trained weights).
+//! `serve` additionally takes --devices N (size of the execution pool).
+//! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
+//! trained weights).
 
 use parataa::figures;
 use parataa::util::cli::Args;
@@ -41,7 +43,10 @@ fn help() {
          subcommands:\n\
            sample      solve one request    (--model dit|gmm --steps N --seed N\n\
                        --method taa|fp|aa|aa+ --class C --out img.pgm)\n\
-           serve       coordinator demo under synthetic load (--requests N --workers N)\n\
+           serve       coordinator demo under synthetic load\n\
+                       (--requests N --workers N --devices N: N-backend execution\n\
+                       pool with sharding + work stealing; prints a per-device\n\
+                       utilization breakdown)\n\
            fig1        FP residual convergence vs order k\n\
            fig2        FP vs AA vs TAA\n\
            fig3        quality vs rounds across scenarios\n\
@@ -115,13 +120,60 @@ fn cmd_sample(args: &Args) {
     println!("wrote {out}");
 }
 
+/// Build the execution pool for `serve` (plus the scenario's CFG scale):
+/// N in-process backends over the analytic model, or N PJRT device actors
+/// for `--model dit` (pjrt builds only). Deliberately does NOT go through
+/// `figures::common::Scenario`, which would spawn and warm a shared device
+/// actor that serve never uses — everything runs through this pool.
+fn build_pool(
+    model_choice: parataa::figures::common::ModelChoice,
+    devices: usize,
+) -> (parataa::runtime::DevicePool, f32) {
+    use parataa::figures::common::ModelChoice;
+    use parataa::model::gmm::GmmEps;
+    use parataa::runtime::{DevicePool, PoolConfig};
+    use parataa::schedule::{BetaSchedule, NoiseSchedule};
+    use std::sync::Arc;
+
+    match model_choice {
+        ModelChoice::Gmm => {
+            let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+            let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+            let pool = DevicePool::in_process(model, devices, PoolConfig::default())
+                .expect("spawn device pool");
+            (pool, 2.0)
+        }
+        ModelChoice::Dit => {
+            #[cfg(feature = "pjrt")]
+            {
+                use parataa::runtime::{EpsBackend, PjrtBackend};
+                let mut backends: Vec<Box<dyn EpsBackend>> = Vec::with_capacity(devices);
+                for _ in 0..devices {
+                    let b =
+                        PjrtBackend::spawn(parataa::runtime::default_artifacts_dir(), 256)
+                            .expect("artifacts missing — run `make artifacts`");
+                    backends.push(Box::new(b));
+                }
+                let cfg = PoolConfig {
+                    warm: parataa::runtime::EPS_BATCH_SIZES.to_vec(),
+                    ..Default::default()
+                };
+                (DevicePool::spawn(backends, cfg).expect("spawn device pool"), 5.0)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                panic!("serve --model dit needs a `--features pjrt` build (see rust/Cargo.toml)")
+            }
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) {
     use parataa::coordinator::{
         Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
     };
-    use parataa::figures::common::{ModelChoice, Scenario};
+    use parataa::figures::common::ModelChoice;
     use parataa::model::Cond;
-    use parataa::schedule::SamplerKind;
     use parataa::util::rng::Pcg64;
     use std::sync::Arc;
 
@@ -129,16 +181,25 @@ fn cmd_serve(args: &Args) {
     let steps = args.usize_or("steps", 50);
     let n_requests = args.usize_or("requests", 32);
     let workers = args.usize_or("workers", 4);
-    let scenario = Scenario::new(model_choice, SamplerKind::Ddim, steps);
+    let devices = args.usize_or("devices", 1).max(1);
 
-    let batcher = Batcher::spawn(scenario.model.clone(), BatcherConfig::default());
-    let eps = Arc::new(batcher.eps_handle(scenario.model.dim(), "batched"));
+    // Stack: backend pool -> dynamic batcher -> coordinator worker pool.
+    let (pool, guidance) = build_pool(model_choice, devices);
+    let pool_stats = pool.stats();
+    let dim = pool.dim();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let batcher = Batcher::spawn(pooled, BatcherConfig::for_devices(devices));
+    let eps = Arc::new(batcher.eps_handle(dim, "batched"));
     let coord = Coordinator::start(
         eps,
-        CoordinatorConfig { workers, ..Default::default() },
+        CoordinatorConfig { workers, devices, ..Default::default() },
     );
+    coord.attach_pool(pool_stats);
 
-    eprintln!("serving {n_requests} requests ({}) ...", scenario.label());
+    eprintln!(
+        "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s) ...",
+        model_choice.label()
+    );
     let mut rng = Pcg64::seeded(args.u64_or("seed", 0));
     let handles: Vec<_> = (0..n_requests)
         .map(|i| {
@@ -147,7 +208,7 @@ fn cmd_serve(args: &Args) {
                 i as u64,
                 SamplerSpec::ddim(steps),
             );
-            req.guidance = scenario.guidance;
+            req.guidance = guidance;
             req.use_trajectory_cache = true;
             coord.submit(req)
         })
@@ -161,6 +222,7 @@ fn cmd_serve(args: &Args) {
             );
         }
     }
+    // The report includes the per-device breakdown (attached pool stats).
     println!("{}", coord.metrics().report());
     drop(coord);
 }

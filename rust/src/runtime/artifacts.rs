@@ -4,7 +4,7 @@
 //! device-actor thread. One compiled executable per artifact name, compiled
 //! lazily on first use and cached for the process lifetime.
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -66,7 +66,7 @@ impl ArtifactStore {
 /// Build an `f32` literal of the given dims from a slice.
 pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(data.len() == n, "literal_f32: {} != prod{dims:?}", data.len());
+    ensure!(data.len() == n, "literal_f32: {} != prod{dims:?}", data.len());
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
@@ -76,7 +76,7 @@ pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
 /// Build an `i32` literal of the given dims from a slice.
 pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
-    anyhow::ensure!(data.len() == n, "literal_i32: {} != prod{dims:?}", data.len());
+    ensure!(data.len() == n, "literal_i32: {} != prod{dims:?}", data.len());
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)

@@ -1,0 +1,214 @@
+//! Execution backends — the "compile artifacts, execute a batch" trait the
+//! device pool is generic over.
+//!
+//! Two implementations ship:
+//!
+//! - [`InProcessBackend`] — wraps any [`EpsModel`] (typically the analytic
+//!   GMM) and evaluates on the worker thread itself. Zero artifacts, zero
+//!   native deps: this is the default substrate for the pool, its tests and
+//!   its benches, and genuinely parallelizes across pool workers because the
+//!   evaluation is pure CPU Rust. Latency/jitter injection hooks make
+//!   straggler and out-of-order completion scenarios reproducible.
+//! - `PjrtBackend` (`--features pjrt`) — wraps a `device::DeviceActor`
+//!   PJRT executor, one accelerator per backend, exactly the deployment
+//!   shape of the paper's 8-GPU DDP testbed.
+//!
+//! Backends are `Send` but deliberately **not** required to be `Sync`: each
+//! one is moved onto its pool worker thread and owned there exclusively
+//! (`&mut self` methods), which is what lets the PJRT implementation keep
+//! its `Rc`-based client and mutable compile cache without locks.
+
+use crate::model::{Cond, EpsModel};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One sub-batch of ε work, borrowed from a pool task.
+pub struct EpsShard<'a> {
+    /// `[n, d]` row-major states.
+    pub xs: &'a [f32],
+    /// Training timesteps, length n.
+    pub train_ts: &'a [usize],
+    /// Conditions, length n.
+    pub conds: &'a [Cond],
+    /// Classifier-free guidance scale.
+    pub guidance: f32,
+}
+
+impl EpsShard<'_> {
+    /// Number of rows in the shard.
+    pub fn len(&self) -> usize {
+        self.train_ts.len()
+    }
+
+    /// True when the shard carries no rows.
+    pub fn is_empty(&self) -> bool {
+        self.train_ts.is_empty()
+    }
+}
+
+/// A device-like executor: warm compiled artifacts, execute one batch.
+pub trait EpsBackend: Send {
+    /// Feature dimension d.
+    fn dim(&self) -> usize;
+
+    /// Human-readable backend name for reports.
+    fn name(&self) -> String;
+
+    /// Prepare the executor for the given batch-size variants (compile PJRT
+    /// artifacts, fill caches). Called once on the worker thread before the
+    /// first shard. Default: nothing to do.
+    fn warm(&mut self, _batch_sizes: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute one sub-batch, returning `[n, d]` ε rows.
+    fn execute(&mut self, shard: &EpsShard<'_>) -> Result<Vec<f32>>;
+}
+
+/// Pure-Rust in-process backend over any [`EpsModel`].
+pub struct InProcessBackend {
+    model: Arc<dyn EpsModel>,
+    latency: Duration,
+    jitter: Duration,
+    rng: Pcg64,
+}
+
+impl InProcessBackend {
+    pub fn new(model: Arc<dyn EpsModel>) -> Self {
+        InProcessBackend {
+            model,
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            rng: Pcg64::seeded(0),
+        }
+    }
+
+    /// Add a fixed per-shard latency (simulates a slow device; used by the
+    /// work-stealing tests and the pool scaling benches).
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Add a random per-shard latency in `[0, jitter)` (shuffles completion
+    /// order; used by the reassembly tests).
+    pub fn with_jitter(mut self, jitter: Duration, seed: u64) -> Self {
+        self.jitter = jitter;
+        self.rng = Pcg64::seeded(seed);
+        self
+    }
+}
+
+impl EpsBackend for InProcessBackend {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn name(&self) -> String {
+        format!("{}(in-proc)", self.model.name())
+    }
+
+    fn execute(&mut self, shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+        let delay = self.latency
+            + Duration::from_secs_f64(self.jitter.as_secs_f64() * self.rng.next_f64());
+        if delay > Duration::ZERO {
+            std::thread::sleep(delay);
+        }
+        let mut out = vec![0.0f32; shard.len() * self.model.dim()];
+        self.model
+            .eps_batch(shard.xs, shard.train_ts, shard.conds, shard.guidance, &mut out);
+        Ok(out)
+    }
+}
+
+/// PJRT backend: one device actor (= one accelerator) per instance.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    handle: super::device::DeviceHandle,
+    _actor: Option<super::device::DeviceActor>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Spawn a dedicated device actor over an artifacts directory.
+    pub fn spawn<P: AsRef<std::path::Path>>(dir: P, dim: usize) -> Result<Self> {
+        let actor = super::device::DeviceActor::spawn(dir, dim)?;
+        Ok(PjrtBackend { handle: actor.handle(), _actor: Some(actor) })
+    }
+
+    /// Wrap an existing actor's handle (the actor is shared, not owned).
+    pub fn from_handle(handle: super::device::DeviceHandle) -> Self {
+        PjrtBackend { handle, _actor: None }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl EpsBackend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.handle.dim()
+    }
+
+    fn name(&self) -> String {
+        "dit-tiny(pjrt)".to_string()
+    }
+
+    fn warm(&mut self, batch_sizes: &[usize]) -> Result<()> {
+        let d = self.handle.dim();
+        for &n in batch_sizes {
+            self.handle.eps_batch(&vec![0.0; n * d], &vec![0; n], &vec![0; n], 1.0)?;
+        }
+        Ok(())
+    }
+
+    fn execute(&mut self, shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+        let t: Vec<i32> = shard.train_ts.iter().map(|&v| v as i32).collect();
+        let y: Vec<i32> = shard.conds.iter().map(super::eps::PjrtEps::cond_to_class).collect();
+        self.handle.eps_batch(shard.xs, &t, &y, shard.guidance)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::schedule::{BetaSchedule, NoiseSchedule};
+
+    fn gmm(d: usize) -> Arc<GmmEps> {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(11);
+        let means: Vec<f32> = (0..3 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        Arc::new(GmmEps::new(means, d, 0.2, ns.alpha_bars.clone()))
+    }
+
+    #[test]
+    fn in_process_matches_model() {
+        let model = gmm(5);
+        let mut backend = InProcessBackend::new(model.clone());
+        let mut rng = Pcg64::seeded(12);
+        let xs: Vec<f32> = (0..3 * 5).map(|_| rng.next_f32()).collect();
+        let ts = [10usize, 400, 900];
+        let conds = vec![Cond::Class(0), Cond::Uncond, Cond::Class(2)];
+        let shard = EpsShard { xs: &xs, train_ts: &ts, conds: &conds, guidance: 2.0 };
+        assert_eq!(shard.len(), 3);
+        assert!(!shard.is_empty());
+        let got = backend.execute(&shard).unwrap();
+        let mut expect = vec![0.0f32; 3 * 5];
+        model.eps_batch(&xs, &ts, &conds, 2.0, &mut expect);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn latency_injection_delays_execution() {
+        let model = gmm(4);
+        let mut backend =
+            InProcessBackend::new(model).with_latency(Duration::from_millis(15));
+        let xs = vec![0.1f32; 4];
+        let shard =
+            EpsShard { xs: &xs, train_ts: &[500], conds: &[Cond::Uncond], guidance: 1.0 };
+        let t0 = std::time::Instant::now();
+        backend.execute(&shard).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+}

@@ -9,7 +9,7 @@
 use super::artifacts::{literal_f32, literal_i32, literal_scalar, ArtifactStore};
 use super::pick_batch_size;
 use crate::util::channel::{bounded, Receiver, Sender};
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -91,7 +91,7 @@ impl DeviceHandle {
         guidance: f32,
     ) -> Result<Vec<f32>> {
         let n = t.len();
-        anyhow::ensure!(x.len() == n * self.dim, "eps_batch: x shape");
+        ensure!(x.len() == n * self.dim, "eps_batch: x shape");
         let (rtx, rrx) = bounded(1);
         self.tx
             .send(DeviceRequest::EpsBatch {
@@ -137,7 +137,7 @@ impl DeviceActor {
     pub fn spawn<P: AsRef<std::path::Path>>(dir: P, dim: usize) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         // Fail fast if the directory is missing entirely.
-        anyhow::ensure!(
+        ensure!(
             dir.exists(),
             "artifacts directory {dir:?} not found — run `make artifacts`"
         );

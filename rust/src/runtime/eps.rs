@@ -20,7 +20,7 @@ impl PjrtEps {
         PjrtEps { handle, name: "dit-tiny(pjrt)".to_string() }
     }
 
-    fn cond_to_class(cond: &Cond) -> i32 {
+    pub(crate) fn cond_to_class(cond: &Cond) -> i32 {
         match cond {
             Cond::Uncond => NULL_CLASS,
             Cond::Class(c) => (*c % 8) as i32,

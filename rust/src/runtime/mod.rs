@@ -1,28 +1,55 @@
-//! PJRT runtime — loads and executes the AOT HLO artifacts (the hot path).
+//! Execution runtime — backends, the multi-device pool, and (behind the
+//! `pjrt` feature) the PJRT loader for the AOT HLO artifacts.
 //!
 //! Layering: Python lowers the L2 JAX graphs (with their L1 Pallas kernels)
-//! to **HLO text** at build time (`make artifacts`); this module loads the
-//! text through `HloModuleProto::from_text_file`, compiles it on the PJRT
-//! CPU client (`xla` crate 0.1.6), and executes it with zero Python on the
-//! request path.
+//! to **HLO text** at build time (`make artifacts`); the `pjrt`-gated
+//! modules load the text through `HloModuleProto::from_text_file`, compile
+//! it on the PJRT CPU client (`xla` crate 0.1.6), and execute it with zero
+//! Python on the request path.
+//!
+//! Execution is organized as a **pool of device actors** (the paper's
+//! multi-GPU DDP testbed, §5):
+//!
+//! - [`backend::EpsBackend`] abstracts "warm artifacts, execute a batch".
+//!   [`backend::InProcessBackend`] evaluates any [`crate::model::EpsModel`]
+//!   on the worker thread (default, no artifacts needed);
+//!   `backend::PjrtBackend` wraps one PJRT device actor per instance.
+//! - [`pool::DevicePool`] owns N backends, shards each ε-batch into even
+//!   per-device sub-batches (capped at the largest compiled variant, see
+//!   [`pool::shard_size`]), dispatches them over per-device bounded queues
+//!   with work-stealing for stragglers, and reassembles results in order.
+//! - [`pool::PooledEps`] is the clonable `Send + Sync` [`crate::model::EpsModel`]
+//!   handle the solver, batcher and coordinator hold.
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so all
-//! device interaction lives on a dedicated **device-actor thread**
-//! ([`device::DeviceActor`]) that owns the client and compiled executables
-//! and serves requests over a bounded channel — the same shape as a real
-//! serving deployment (one executor per accelerator, submission queue in
-//! front). [`eps::PjrtEps`] is the cheap, clonable, `Send + Sync` handle
-//! that implements [`crate::model::EpsModel`] for the solver and the
-//! coordinator.
+//! PJRT interaction lives on dedicated **device-actor threads**
+//! (`device::DeviceActor`) that own the client and compiled executables and
+//! serve requests over bounded channels — the same shape as a real serving
+//! deployment (one executor per accelerator, submission queue in front).
+//! `eps::PjrtEps` remains the single-actor handle; multi-device setups wrap
+//! actors in `backend::PjrtBackend` and pool them.
 
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod device;
+#[cfg(feature = "pjrt")]
 pub mod eps;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_driver;
+pub mod pool;
 
+#[cfg(feature = "pjrt")]
 pub use artifacts::ArtifactStore;
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{EpsBackend, EpsShard, InProcessBackend};
+#[cfg(feature = "pjrt")]
 pub use device::{DeviceActor, DeviceHandle};
+#[cfg(feature = "pjrt")]
 pub use eps::PjrtEps;
+pub use pool::{DevicePool, DeviceStat, PoolConfig, PoolStats, PooledEps};
 
 /// Default artifacts directory, overridable with `PARATAA_ARTIFACTS`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

@@ -17,7 +17,7 @@ use crate::equations::{build_b_matrix, build_s_matrix, build_xi_comb, States};
 use crate::model::Cond;
 use crate::schedule::SamplerCoeffs;
 use crate::solver::{Problem, SolverConfig};
-use anyhow::Result;
+use crate::util::error::{ensure, Result};
 
 /// Result of a fused-path solve.
 pub struct PjrtSolveResult {
@@ -41,7 +41,7 @@ pub fn solve_pjrt(
     let d = handle.dim();
     let k = cfg.k.clamp(1, t_count);
     let w = t_count; // fused artifacts are compiled at full window
-    anyhow::ensure!(
+    ensure!(
         cfg.window >= t_count,
         "solve_pjrt supports full-window solves only (w = T)"
     );

@@ -1,0 +1,685 @@
+//! Multi-device execution pool — shards each ε-batch across N backend
+//! actors, the in-process analog of the paper's 8-GPU DDP evaluation of a
+//! window (Tang et al. §5; same testbed shape as ParaDiGMS).
+//!
+//! ```text
+//!   PooledEps::eps_batch(n rows)
+//!        │  split into ceil-even shards of `shard_size(n, devices)` rows
+//!        ▼
+//!   per-device bounded queues ──► worker 0 (owns backend 0)
+//!        │         ▲        └──► worker 1 (owns backend 1) ...
+//!        │         └─ idle workers steal queued shards from busy peers
+//!        ▼
+//!   ordered reassembly: shard i copies into rows [start_i, end_i)
+//! ```
+//!
+//! Properties the tests pin down:
+//! - **Order preservation** — results are reassembled by shard index, so
+//!   completion order (jittered backends, steals) never reorders rows.
+//! - **devices = 1 ≡ single actor** — the shard policy degenerates to the
+//!   exact calls the single-device path would make, so outputs are
+//!   bit-identical to the pre-pool runtime.
+//! - **Work stealing** — a straggler device only delays the shards it is
+//!   actively executing; queued shards migrate to idle peers.
+
+use super::backend::{EpsBackend, EpsShard, InProcessBackend};
+use crate::model::{Cond, EpsModel};
+use crate::util::channel::{bounded, Receiver, Sender};
+use crate::util::error::{anyhow, ensure, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Pool tuning.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Per-device submission queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Allow idle devices to steal queued shards from busy peers.
+    pub work_stealing: bool,
+    /// How long an idle worker blocks on its own queue before scanning
+    /// peers for stealable work (the steal latency bound).
+    pub steal_poll: Duration,
+    /// Batch variants each backend warms on its worker thread before
+    /// serving (empty = no warmup; PJRT deployments pass
+    /// [`super::EPS_BATCH_SIZES`] so XLA compilation never lands on a
+    /// request).
+    pub warm: Vec<usize>,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            queue_capacity: 64,
+            work_stealing: true,
+            steal_poll: Duration::from_micros(500),
+            warm: Vec::new(),
+        }
+    }
+}
+
+/// Rows per shard for an `n`-row batch over `devices` executors: an even
+/// per-device split, capped at the largest compiled batch variant (larger
+/// shards would just re-split inside a PJRT actor anyway). Never rounds a
+/// split *up* to a variant — that would leave devices idle (e.g. 120 rows
+/// over 4 devices must be 4×30, not 50/50/20); PJRT backends simply pad a
+/// sub-variant shard via [`super::pick_batch_size`] as the single-device
+/// actor always has. With `devices = 1` this reproduces the old
+/// single-actor splitting exactly.
+pub fn shard_size(n: usize, devices: usize) -> usize {
+    let per_device = n.div_ceil(devices.max(1));
+    per_device.min(*super::EPS_BATCH_SIZES.last().unwrap()).max(1)
+}
+
+/// One queued sub-batch.
+struct ShardTask {
+    x: Vec<f32>,
+    t: Vec<usize>,
+    conds: Vec<Cond>,
+    guidance: f32,
+    /// Index of this shard within its parent batch (reassembly key).
+    shard: usize,
+    reply: Sender<(usize, Result<Vec<f32>>)>,
+}
+
+/// Per-device counters (lock-free; written by the executing worker).
+#[derive(Debug, Default)]
+pub struct DeviceCounters {
+    /// Shards executed by this device.
+    pub shards: AtomicU64,
+    /// ε rows executed by this device.
+    pub items: AtomicU64,
+    /// Shards this device stole from a peer's queue.
+    pub stolen: AtomicU64,
+    /// Nanoseconds spent inside `EpsBackend::execute`.
+    pub busy_ns: AtomicU64,
+}
+
+/// Point-in-time view of one device.
+#[derive(Debug, Clone)]
+pub struct DeviceStat {
+    pub device: usize,
+    pub name: String,
+    pub shards: u64,
+    pub items: u64,
+    pub stolen: u64,
+    /// Busy time / pool wall time since spawn, in [0, 1].
+    pub utilization: f64,
+    /// Shards currently waiting in this device's queue.
+    pub queue_depth: usize,
+}
+
+impl std::fmt::Display for DeviceStat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dev{} [{}] shards={} items={} stolen={} util={:.1}% queue={}",
+            self.device,
+            self.name,
+            self.shards,
+            self.items,
+            self.stolen,
+            100.0 * self.utilization,
+            self.queue_depth,
+        )
+    }
+}
+
+/// Shared metrics surface of a pool (outlives the pool if needed — the
+/// coordinator's metrics hold an `Arc` of this).
+pub struct PoolStats {
+    started: Instant,
+    names: Vec<String>,
+    counters: Vec<DeviceCounters>,
+    queues: Vec<Sender<ShardTask>>,
+}
+
+impl PoolStats {
+    /// Number of devices in the pool.
+    pub fn devices(&self) -> usize {
+        self.counters.len()
+    }
+
+    /// Snapshot every device's counters.
+    pub fn snapshot(&self) -> Vec<DeviceStat> {
+        let wall = self.started.elapsed().as_nanos().max(1) as f64;
+        (0..self.counters.len())
+            .map(|i| {
+                let c = &self.counters[i];
+                DeviceStat {
+                    device: i,
+                    name: self.names[i].clone(),
+                    shards: c.shards.load(Ordering::Relaxed),
+                    items: c.items.load(Ordering::Relaxed),
+                    stolen: c.stolen.load(Ordering::Relaxed),
+                    utilization: (c.busy_ns.load(Ordering::Relaxed) as f64 / wall).min(1.0),
+                    queue_depth: self.queues[i].len(),
+                }
+            })
+            .collect()
+    }
+
+    /// Multi-line per-device breakdown for the `serve` demo.
+    pub fn report(&self) -> String {
+        self.snapshot()
+            .iter()
+            .map(|s| format!("  {s}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Submission side shared by [`DevicePool`] and every [`PooledEps`] handle.
+struct PoolInner {
+    queues: Vec<Sender<ShardTask>>,
+    stats: Arc<PoolStats>,
+    dim: usize,
+    devices: usize,
+    rr: AtomicUsize,
+}
+
+impl PoolInner {
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = train_ts.len();
+        let d = self.dim;
+        ensure!(
+            xs.len() == n * d && out.len() == n * d && conds.len() == n,
+            "pool eps_batch: shape mismatch (n={n}, d={d})"
+        );
+        if n == 0 {
+            return Ok(());
+        }
+
+        // Shard and dispatch round-robin over the per-device queues.
+        let rows = shard_size(n, self.devices);
+        let n_shards = n.div_ceil(rows);
+        let (rtx, rrx) = bounded::<(usize, Result<Vec<f32>>)>(n_shards);
+        let mut spans = Vec::with_capacity(n_shards);
+        for (idx, start) in (0..n).step_by(rows).enumerate() {
+            let end = (start + rows).min(n);
+            spans.push((start, end));
+            let task = ShardTask {
+                x: xs[start * d..end * d].to_vec(),
+                t: train_ts[start..end].to_vec(),
+                conds: conds[start..end].to_vec(),
+                guidance,
+                shard: idx,
+                reply: rtx.clone(),
+            };
+            let q = self.rr.fetch_add(1, Ordering::Relaxed) % self.devices;
+            self.queues[q].send(task).map_err(|_| anyhow!("device pool is down"))?;
+        }
+        drop(rtx);
+
+        // Reassemble by shard index — completion order is irrelevant.
+        for _ in 0..n_shards {
+            let (idx, res) = rrx
+                .recv()
+                .ok_or_else(|| anyhow!("device pool dropped a shard reply"))?;
+            let eps = res?;
+            let (start, end) = spans[idx];
+            ensure!(
+                eps.len() == (end - start) * d,
+                "shard {idx}: got {} values, want {}",
+                eps.len(),
+                (end - start) * d
+            );
+            out[start * d..end * d].copy_from_slice(&eps);
+        }
+        Ok(())
+    }
+}
+
+/// The pool: N worker threads, each owning one [`EpsBackend`].
+pub struct DevicePool {
+    inner: Arc<PoolInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Spawn one worker per backend. All backends must agree on `dim()`.
+    pub fn spawn(backends: Vec<Box<dyn EpsBackend>>, cfg: PoolConfig) -> Result<DevicePool> {
+        ensure!(!backends.is_empty(), "device pool needs at least one backend");
+        ensure!(cfg.queue_capacity >= 1, "device pool queue capacity must be >= 1");
+        let dim = backends[0].dim();
+        for b in &backends {
+            ensure!(b.dim() == dim, "device pool backends disagree on dim");
+        }
+        let devices = backends.len();
+        let names: Vec<String> = backends.iter().map(|b| b.name()).collect();
+
+        let mut txs = Vec::with_capacity(devices);
+        let mut rxs = Vec::with_capacity(devices);
+        for _ in 0..devices {
+            let (tx, rx) = bounded::<ShardTask>(cfg.queue_capacity);
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let stats = Arc::new(PoolStats {
+            started: Instant::now(),
+            names,
+            counters: (0..devices).map(|_| DeviceCounters::default()).collect(),
+            queues: txs.clone(),
+        });
+
+        // Workers warm their backend on their own thread (PJRT compilation
+        // must happen where the client lives) and report the result back so
+        // an unusable pool fails at construction, not on the first request.
+        let (warm_tx, warm_rx) = bounded::<Result<()>>(devices);
+        let mut workers = Vec::with_capacity(devices);
+        for (me, mut backend) in backends.into_iter().enumerate() {
+            let rxs = rxs.clone();
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            let warm_tx = warm_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("parataa-dev-{me}"))
+                .spawn(move || {
+                    let warmed = backend
+                        .warm(&cfg.warm)
+                        .map_err(|e| anyhow!("pool device {me} warmup: {e}"));
+                    let _ = warm_tx.send(warmed);
+                    drop(warm_tx);
+                    run_worker(me, &mut *backend, &rxs, &stats, &cfg);
+                })?;
+            workers.push(join);
+        }
+        drop(warm_tx);
+        for _ in 0..devices {
+            let warmed = warm_rx
+                .recv()
+                .unwrap_or_else(|| Err(anyhow!("pool worker died during warmup")));
+            if let Err(e) = warmed {
+                // Abort construction: close the queues so every worker
+                // exits, then surface the warmup error.
+                for q in &txs {
+                    q.close();
+                }
+                for w in workers.drain(..) {
+                    let _ = w.join();
+                }
+                return Err(e);
+            }
+        }
+
+        let inner = Arc::new(PoolInner {
+            queues: txs,
+            stats,
+            dim,
+            devices,
+            rr: AtomicUsize::new(0),
+        });
+        Ok(DevicePool { inner, workers })
+    }
+
+    /// Convenience: N in-process backends over one shared [`EpsModel`].
+    pub fn in_process(
+        model: Arc<dyn EpsModel>,
+        devices: usize,
+        cfg: PoolConfig,
+    ) -> Result<DevicePool> {
+        let backends: Vec<Box<dyn EpsBackend>> = (0..devices.max(1))
+            .map(|_| Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>)
+            .collect();
+        DevicePool::spawn(backends, cfg)
+    }
+
+    /// Number of devices in the pool.
+    pub fn devices(&self) -> usize {
+        self.inner.devices
+    }
+
+    /// Feature dimension served by the pool's backends.
+    pub fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    /// Shared per-device counters (attachable to coordinator metrics).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.inner.stats.clone()
+    }
+
+    /// An [`EpsModel`] handle that shards through this pool. Clonable,
+    /// `Send + Sync`; outstanding handles fail (panic) once the pool drops.
+    pub fn eps_handle(&self, name: &str) -> PooledEps {
+        PooledEps { inner: self.inner.clone(), name: name.to_string() }
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        for q in &self.inner.queues {
+            q.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_worker(
+    me: usize,
+    backend: &mut dyn EpsBackend,
+    queues: &[Receiver<ShardTask>],
+    stats: &PoolStats,
+    cfg: &PoolConfig,
+) {
+    // Exponential idle backoff (up to 128× steal_poll ≈ 64ms at defaults):
+    // own-queue arrivals always wake the worker immediately through the
+    // channel condvar, so backing off only delays *steals* after a fully
+    // idle stretch — it never delays a device's own work, and a busy pool
+    // polls at full `steal_poll` rate.
+    let mut idle: u32 = 0;
+    loop {
+        // Own queue first; block only briefly so steals stay responsive.
+        let wait = cfg.steal_poll.saturating_mul(1u32 << idle.min(7));
+        match queues[me].recv_timeout(wait) {
+            Ok(Some(task)) => {
+                idle = 0;
+                exec_task(me, backend, task, false, stats);
+                continue;
+            }
+            Ok(None) => return, // pool shut down
+            Err(()) => {}
+        }
+        if !cfg.work_stealing {
+            idle = idle.saturating_add(1);
+            continue;
+        }
+        let mut stole = false;
+        for (peer, q) in queues.iter().enumerate() {
+            if peer == me {
+                continue;
+            }
+            if let Some(task) = q.try_recv() {
+                idle = 0;
+                stole = true;
+                exec_task(me, backend, task, true, stats);
+                break;
+            }
+        }
+        if !stole {
+            idle = idle.saturating_add(1);
+        }
+    }
+}
+
+fn exec_task(
+    me: usize,
+    backend: &mut dyn EpsBackend,
+    task: ShardTask,
+    stolen: bool,
+    stats: &PoolStats,
+) {
+    let items = task.t.len() as u64;
+    let t0 = Instant::now();
+    let res = backend.execute(&EpsShard {
+        xs: &task.x,
+        train_ts: &task.t,
+        conds: &task.conds,
+        guidance: task.guidance,
+    });
+    let c = &stats.counters[me];
+    c.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    c.shards.fetch_add(1, Ordering::Relaxed);
+    c.items.fetch_add(items, Ordering::Relaxed);
+    if stolen {
+        c.stolen.fetch_add(1, Ordering::Relaxed);
+    }
+    // Submitter may have vanished (shutdown mid-flight); nothing to do then.
+    let _ = task.reply.send((task.shard, res));
+}
+
+/// `EpsModel` handle sharding through a [`DevicePool`]. This is what the
+/// solver, the batcher and the coordinator hold in a multi-device setup.
+#[derive(Clone)]
+pub struct PooledEps {
+    inner: Arc<PoolInner>,
+    name: String,
+}
+
+impl PooledEps {
+    /// Number of devices behind this handle.
+    pub fn devices(&self) -> usize {
+        self.inner.devices
+    }
+}
+
+impl EpsModel for PooledEps {
+    fn dim(&self) -> usize {
+        self.inner.dim
+    }
+
+    fn eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) {
+        self.inner
+            .eps_batch(xs, train_ts, conds, guidance, out)
+            .expect("device pool eps_batch failed");
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::schedule::{BetaSchedule, NoiseSchedule};
+    use crate::util::rng::Pcg64;
+
+    fn gmm(d: usize) -> Arc<GmmEps> {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let mut rng = Pcg64::seeded(21);
+        let means: Vec<f32> = (0..4 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        Arc::new(GmmEps::new(means, d, 0.2, ns.alpha_bars.clone()))
+    }
+
+    fn batch(d: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<usize>, Vec<Cond>) {
+        let mut rng = Pcg64::seeded(seed);
+        let xs = rng.gaussian_vec(n * d);
+        let ts: Vec<usize> = (0..n).map(|i| (i * 131) % 1000).collect();
+        let conds: Vec<Cond> = (0..n)
+            .map(|i| if i % 5 == 0 { Cond::Uncond } else { Cond::Class(i % 4) })
+            .collect();
+        (xs, ts, conds)
+    }
+
+    #[test]
+    fn shard_policy() {
+        // devices=1 degenerates to the single-actor splitting (one call up
+        // to the largest variant, then 100-row chunks).
+        assert_eq!(shard_size(1, 1), 1);
+        assert_eq!(shard_size(23, 1), 23);
+        assert_eq!(shard_size(100, 1), 100);
+        assert_eq!(shard_size(400, 1), 100);
+        // Even splits across devices — never fewer shards than devices.
+        assert_eq!(shard_size(100, 4), 25);
+        assert_eq!(shard_size(400, 4), 100);
+        assert_eq!(shard_size(400, 8), 50);
+        assert_eq!(shard_size(120, 4), 30); // 4×30, not 50/50/20
+        assert_eq!(shard_size(101, 4), 26); // 26/26/26/23
+        // Oversized per-device splits cap at the largest compiled variant.
+        assert_eq!(shard_size(1000, 2), 100);
+        // Degenerate inputs stay sane.
+        assert_eq!(shard_size(0, 4), 1);
+        assert_eq!(shard_size(7, 0), 7);
+    }
+
+    #[test]
+    fn single_device_is_bit_identical_to_direct() {
+        let d = 6;
+        let model = gmm(d);
+        let pool = DevicePool::in_process(model.clone(), 1, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let (xs, ts, conds) = batch(d, 37, 1);
+        let mut via_pool = vec![0.0f32; 37 * d];
+        eps.eps_batch(&xs, &ts, &conds, 2.0, &mut via_pool);
+        let mut direct = vec![0.0f32; 37 * d];
+        model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
+        assert_eq!(via_pool, direct, "devices=1 must be bit-identical to the direct path");
+    }
+
+    #[test]
+    fn jittered_devices_preserve_row_order() {
+        // Backends complete shards in shuffled order; reassembly must still
+        // be exact and order-preserving (bit-identical to direct eval).
+        let d = 5;
+        let model = gmm(d);
+        let backends: Vec<Box<dyn EpsBackend>> = (0..4)
+            .map(|i| {
+                Box::new(
+                    InProcessBackend::new(model.clone())
+                        .with_jitter(Duration::from_millis(3), 100 + i),
+                ) as Box<dyn EpsBackend>
+            })
+            .collect();
+        let pool = DevicePool::spawn(backends, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        for round in 0..5u64 {
+            let n = 40; // 4 shards of 10 rows
+            let (xs, ts, conds) = batch(d, n, 50 + round);
+            let mut via_pool = vec![0.0f32; n * d];
+            eps.eps_batch(&xs, &ts, &conds, 1.5, &mut via_pool);
+            let mut direct = vec![0.0f32; n * d];
+            model.eps_batch(&xs, &ts, &conds, 1.5, &mut direct);
+            assert_eq!(via_pool, direct, "round {round}: reassembly scrambled rows");
+        }
+    }
+
+    #[test]
+    fn work_stealing_rescues_a_straggler() {
+        // Device 0 sleeps 80ms per shard; device 1 is instant. Of the 5
+        // shards, round-robin parks 3 on the straggler — stealing must move
+        // the queued ones to the idle device.
+        let d = 4;
+        let model = gmm(d);
+        let backends: Vec<Box<dyn EpsBackend>> = vec![
+            Box::new(
+                InProcessBackend::new(model.clone()).with_latency(Duration::from_millis(80)),
+            ),
+            Box::new(InProcessBackend::new(model.clone())),
+        ];
+        let pool = DevicePool::spawn(backends, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 500; // shard_size(500, 2) = 100 -> 5 shards
+        let (xs, ts, conds) = batch(d, n, 9);
+        let mut via_pool = vec![0.0f32; n * d];
+        let t0 = Instant::now();
+        eps.eps_batch(&xs, &ts, &conds, 1.0, &mut via_pool);
+        let wall = t0.elapsed();
+        let mut direct = vec![0.0f32; n * d];
+        model.eps_batch(&xs, &ts, &conds, 1.0, &mut direct);
+        assert_eq!(via_pool, direct);
+
+        let stats = pool.stats().snapshot();
+        let total_stolen: u64 = stats.iter().map(|s| s.stolen).sum();
+        assert!(total_stolen >= 1, "no steals recorded: {stats:?}");
+        assert!(
+            stats[1].shards > stats[0].shards,
+            "fast device should execute more shards: {stats:?}"
+        );
+        // Straggler bound: without stealing the slow device serializes 3
+        // shards (240ms); with stealing it finishes after ~1 (80ms). Leave
+        // generous scheduler slack for loaded CI runners.
+        assert!(wall < Duration::from_millis(200), "stealing did not help: {wall:?}");
+    }
+
+    #[test]
+    fn latency_bound_backends_run_concurrently() {
+        let d = 4;
+        let model = gmm(d);
+        let backends: Vec<Box<dyn EpsBackend>> = (0..4)
+            .map(|_| {
+                Box::new(
+                    InProcessBackend::new(model.clone())
+                        .with_latency(Duration::from_millis(40)),
+                ) as Box<dyn EpsBackend>
+            })
+            .collect();
+        let pool = DevicePool::spawn(backends, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 400; // 4 shards of 100
+        let (xs, ts, conds) = batch(d, n, 13);
+        let mut out = vec![0.0f32; n * d];
+        let t0 = Instant::now();
+        eps.eps_batch(&xs, &ts, &conds, 1.0, &mut out);
+        let wall = t0.elapsed();
+        // Serial would be >= 160ms of injected latency alone; require
+        // clearly-parallel execution with generous scheduler slack for
+        // loaded CI runners (ideal is ~40ms).
+        assert!(wall < Duration::from_millis(110), "no overlap across devices: {wall:?}");
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let model = gmm(3);
+        let pool = DevicePool::in_process(model, 2, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let mut out = Vec::new();
+        eps.eps_batch(&[], &[], &[], 1.0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(pool.stats().snapshot().iter().map(|s| s.shards).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn stats_account_for_all_work() {
+        let d = 4;
+        let model = gmm(d);
+        let pool = DevicePool::in_process(model, 3, PoolConfig::default()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 60; // shard_size(60, 3) = 20 -> 3 shards of 20
+        let (xs, ts, conds) = batch(d, n, 3);
+        let mut out = vec![0.0f32; n * d];
+        eps.eps_batch(&xs, &ts, &conds, 1.0, &mut out);
+        let stats = pool.stats().snapshot();
+        assert_eq!(stats.iter().map(|s| s.items).sum::<u64>(), n as u64);
+        assert_eq!(stats.iter().map(|s| s.shards).sum::<u64>(), 3);
+        assert!(pool.stats().report().contains("dev0"));
+        assert_eq!(pool.devices(), 3);
+        assert_eq!(eps.devices(), 3);
+        assert_eq!(eps.dim(), d);
+        assert_eq!(eps.name(), "pooled");
+    }
+
+    #[test]
+    fn concurrent_submitters_all_get_exact_results() {
+        let d = 6;
+        let model = gmm(d);
+        let pool = DevicePool::in_process(model.clone(), 4, PoolConfig::default()).unwrap();
+        let threads: Vec<_> = (0..8u64)
+            .map(|i| {
+                let eps = pool.eps_handle("pooled");
+                let model = model.clone();
+                std::thread::spawn(move || {
+                    let n = 30;
+                    let (xs, ts, conds) = batch(d, n, 200 + i);
+                    let g = if i % 2 == 0 { 1.0 } else { 3.0 };
+                    let mut out = vec![0.0f32; n * d];
+                    eps.eps_batch(&xs, &ts, &conds, g, &mut out);
+                    let mut expect = vec![0.0f32; n * d];
+                    model.eps_batch(&xs, &ts, &conds, g, &mut expect);
+                    assert_eq!(out, expect, "submitter {i}");
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal error handling (`anyhow` is unavailable offline, like the rest of
+//! the registry — see `util/channel.rs`): a string-backed [`Error`] plus the
+//! `anyhow!` / `ensure!` / `bail!` / [`Context`] surface the crate builds on.
+//!
+//! The subset is intentionally tiny — errors here are terminal diagnostics
+//! (a missing artifact, a dead actor), not values programs branch on.
+
+use std::fmt;
+
+/// String-backed error with accumulated context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prefix additional context, mirroring `anyhow::Error::context`.
+    pub fn context<M: fmt::Display>(self, ctx: M) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result type (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible result, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a `msg:` prefix.
+    fn context<M: fmt::Display>(self, msg: M) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<M: fmt::Display>(self, msg: M) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_when(cond: bool) -> Result<u32> {
+        ensure!(!cond, "condition was {cond}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad {}", 42);
+        assert_eq!(e.to_string(), "bad 42");
+        assert_eq!(fails_when(false).unwrap(), 7);
+        assert_eq!(fails_when(true).unwrap_err().to_string(), "condition was true");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("formatting header").unwrap_err();
+        assert!(e.to_string().starts_with("formatting header: "));
+        let e2 = e.context("outer");
+        assert!(e2.to_string().starts_with("outer: formatting header"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn io() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+            Ok(())
+        }
+        assert!(io().unwrap_err().to_string().contains("gone"));
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod channel;
 pub mod cli;
+pub mod error;
 pub mod image;
 pub mod json;
 pub mod proplite;

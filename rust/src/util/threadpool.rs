@@ -87,8 +87,7 @@ impl ThreadPool {
             done_rx.recv();
         }
         Arc::try_unwrap(results)
-            .ok()
-            .expect("all workers done")
+            .unwrap_or_else(|_| panic!("all workers done"))
             .into_inner()
             .unwrap()
             .into_iter()

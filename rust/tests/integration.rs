@@ -4,8 +4,7 @@
 //! Tests touching `artifacts/` are skipped (with a notice) when the
 //! directory has not been built — `make artifacts` first for full coverage.
 
-use parataa::equations::States;
-use parataa::figures::common::{method_config, ModelChoice, Scenario};
+use parataa::figures::common::method_config;
 use parataa::metrics::match_rmse;
 use parataa::model::gmm::GmmEps;
 use parataa::model::{Cond, EpsModel};
@@ -145,6 +144,7 @@ fn taa_update_matches_python() {
 
 // --- PJRT: trained model numerics ---------------------------------------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_dit_matches_python() {
     let tv = require_artifacts!("testvec_dit.json");
@@ -167,6 +167,7 @@ fn pjrt_dit_matches_python() {
 
 // --- PJRT: padding invariance + batching --------------------------------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_batch_padding_is_consistent() {
     let tv = require_artifacts!("testvec_dit.json");
@@ -198,8 +199,10 @@ fn pjrt_batch_padding_is_consistent() {
 
 // --- PJRT: end-to-end parallel == sequential on the trained model --------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_parataa_matches_sequential() {
+    use parataa::figures::common::{ModelChoice, Scenario};
     if !artifacts_dir().join("eps_batch_1.hlo.txt").exists() {
         eprintln!("SKIP: eps artifacts missing");
         return;
@@ -218,13 +221,14 @@ fn pjrt_parataa_matches_sequential() {
 
 // --- PJRT: fused solver_step artifact matches the native update ----------------
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_solver_step_matches_native() {
     if !artifacts_dir().join("solver_step_25.hlo.txt").exists() {
         eprintln!("SKIP: solver_step artifacts missing");
         return;
     }
-    use parataa::equations::{build_b_matrix, build_s_matrix, build_xi_comb, eval_fk};
+    use parataa::equations::{build_b_matrix, build_s_matrix, build_xi_comb, eval_fk, States};
     use parataa::runtime::device::{SolverStepInputs, SOLVER_HIST_COLS};
     use parataa::util::rng::Pcg64;
 
@@ -322,6 +326,93 @@ fn coordinator_end_to_end_gmm() {
 }
 
 // --- edge cases across the solver stack -----------------------------------
+
+// --- device pool: service-level equivalence and metrics ---------------------
+
+#[test]
+fn pooled_coordinator_matches_single_device_bit_exact() {
+    // The same request stream served through a 3-device pool and through the
+    // direct single-model path must produce byte-identical samples: sharding
+    // and work distribution must never leak into numerics.
+    use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
+    use parataa::runtime::{DevicePool, PoolConfig};
+    use std::sync::Arc;
+
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+
+    let req = |i: u64| {
+        let mut r = SampleRequest::parataa(Cond::Class(i as usize % 8), i, SamplerSpec::ddim(25));
+        r.guidance = 2.0;
+        r
+    };
+
+    let direct = Coordinator::start(model.clone(), CoordinatorConfig::default());
+    let baseline: Vec<Vec<f32>> =
+        (0..6).map(|i| direct.sample(req(i)).unwrap().sample).collect();
+    drop(direct);
+
+    let pool = DevicePool::in_process(model.clone(), 3, PoolConfig::default()).unwrap();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let coord = Coordinator::start(
+        pooled,
+        CoordinatorConfig { devices: 3, ..Default::default() },
+    );
+    coord.attach_pool(pool.stats());
+    for (i, expect) in baseline.iter().enumerate() {
+        let r = coord.sample(req(i as u64)).unwrap();
+        assert!(r.converged);
+        assert_eq!(&r.sample, expect, "request {i}: pooled sample diverged");
+    }
+
+    let m = coord.metrics();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.devices.len(), 3, "metrics must carry the per-device breakdown");
+    let items: u64 = m.devices.iter().map(|d| d.items).sum();
+    assert!(items > 0, "pool executed no work");
+    assert!(m.report().contains("dev2"), "report: {}", m.report());
+    drop(coord);
+}
+
+#[test]
+fn pooled_batcher_coordinator_end_to_end() {
+    // Full production stack on the in-process backend: pool -> dynamic
+    // batcher -> coordinator, checked against the sequential oracle.
+    use parataa::coordinator::{
+        Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
+    };
+    use parataa::runtime::{DevicePool, PoolConfig};
+    use std::sync::Arc;
+
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+    let pool = DevicePool::in_process(model.clone(), 2, PoolConfig::default()).unwrap();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let batcher = Batcher::spawn(pooled, BatcherConfig::for_devices(2));
+    let eps = Arc::new(batcher.eps_handle(256, "batched"));
+    let coord = Coordinator::start(
+        eps,
+        CoordinatorConfig { devices: 2, ..Default::default() },
+    );
+
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let mut req =
+            SampleRequest::parataa(Cond::Class(i as usize % 8), i, SamplerSpec::ddim(25));
+        req.guidance = 2.0;
+        handles.push((i, coord.submit(req)));
+    }
+    for (i, h) in handles {
+        let r = h.wait().unwrap();
+        assert!(r.converged, "request {i}");
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 25);
+        let p = Problem::new(&coeffs, &*model, Cond::Class(i as usize % 8), i);
+        let seq = solver::sample_sequential(&p, 2.0);
+        let rmse = match_rmse(&r.sample, seq.xs.row(0));
+        assert!(rmse < 0.02, "request {i} mismatch {rmse}");
+    }
+    drop(coord); // workers, then batcher, then pool
+}
 
 #[test]
 fn window_one_degenerates_to_sequential_schedule() {
@@ -436,6 +527,7 @@ fn figures_registry_covers_all_experiments() {
     assert_eq!(parataa::figures::ALL.len(), 10);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn fused_pjrt_driver_matches_sequential() {
     // The fully-fused device path (2 device calls/round, zero host math on
@@ -444,6 +536,7 @@ fn fused_pjrt_driver_matches_sequential() {
         eprintln!("SKIP: artifacts missing");
         return;
     }
+    use parataa::figures::common::{ModelChoice, Scenario};
     use parataa::runtime::pjrt_driver::solve_pjrt;
     let scenario = Scenario::new(ModelChoice::Dit, SamplerKind::Ddim, 25);
     let coeffs = scenario.coeffs();
