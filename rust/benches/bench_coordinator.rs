@@ -1,90 +1,14 @@
-//! Coordinator-layer benchmarks: channel/queue overhead, batcher coalescing
-//! gain, and service throughput under concurrent load (GMM model, so the
-//! numbers isolate L3 costs from real device time).
+//! Coordinator-layer benchmarks — thin wrapper over the shared `bench::`
+//! scenario registry (groups `coordinator` and `cache`): channel/queue
+//! overhead, batcher coalescing cost, service latency percentiles under
+//! concurrent load, and trajectory-cache warm-start savings. `parataa
+//! bench` runs the same scenarios and writes the JSON report.
 
-use parataa::coordinator::{
-    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
-};
-use parataa::model::gmm::GmmEps;
-use parataa::model::{Cond, EpsModel};
-use parataa::schedule::{BetaSchedule, NoiseSchedule};
-use parataa::util::rng::Pcg64;
-use parataa::util::stats::bench;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-
-fn gmm() -> Arc<GmmEps> {
-    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
-    Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()))
-}
+use parataa::bench::{run_and_print, BenchOpts};
 
 fn main() {
-    println!("=== bench_coordinator ===");
-    let model = gmm();
-    let mut rng = Pcg64::seeded(3);
-
-    // Raw channel round-trip (the per-round queueing overhead floor).
-    {
-        let (tx, rx) = parataa::util::channel::bounded::<u64>(16);
-        let t = std::thread::spawn(move || while rx.recv().is_some() {});
-        let r = bench("channel send (uncontended)", Duration::from_millis(50), Duration::from_millis(300), || {
-            tx.send(1).unwrap();
-        });
-        println!("{}", r.report());
-        tx.close();
-        t.join().unwrap();
-    }
-
-    // Batcher overhead: direct model call vs through the batcher, 25 items.
-    {
-        let n = 25;
-        let x = rng.gaussian_vec(n * 256);
-        let ts: Vec<usize> = (0..n).map(|i| i * 39).collect();
-        let conds = vec![Cond::Class(1); n];
-        let mut out = vec![0.0f32; n * 256];
-        let r = bench("gmm eps 25 items (direct)", Duration::from_millis(100), Duration::from_millis(600), || {
-            model.eps_batch(&x, &ts, &conds, 2.0, &mut out);
-        });
-        println!("{}", r.report());
-        let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
-        let handle = batcher.eps_handle(256, "batched");
-        let r = bench("gmm eps 25 items (via batcher)", Duration::from_millis(100), Duration::from_millis(600), || {
-            handle.eps_batch(&x, &ts, &conds, 2.0, &mut out);
-        });
-        println!("{}", r.report());
-    }
-
-    // Service throughput under load, with and without the batcher.
-    for (label, use_batcher) in [("direct", false), ("batched", true)] {
-        let coord = if use_batcher {
-            let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
-            let eps = Arc::new(batcher.eps_handle(256, "batched"));
-            std::mem::forget(batcher); // keep alive for the run
-            Coordinator::start(eps, CoordinatorConfig { workers: 4, ..Default::default() })
-        } else {
-            Coordinator::start(model.clone(), CoordinatorConfig { workers: 4, ..Default::default() })
-        };
-        let n_req = 24;
-        let t0 = Instant::now();
-        let handles: Vec<_> = (0..n_req)
-            .map(|i| {
-                let mut req = SampleRequest::parataa(
-                    Cond::Class(i % 8),
-                    i as u64,
-                    SamplerSpec::ddim(25),
-                );
-                req.guidance = 2.0;
-                coord.submit(req)
-            })
-            .collect();
-        for h in handles {
-            h.wait().unwrap();
-        }
-        let dt = t0.elapsed();
-        println!(
-            "service {n_req} reqs DDIM-25 ({label:7}): {dt:?}  ({:.1} req/s)  {}",
-            n_req as f64 / dt.as_secs_f64(),
-            coord.metrics().report()
-        );
-    }
+    println!("=== bench_coordinator (registry groups: coordinator, cache) ===");
+    let opts = BenchOpts::full();
+    run_and_print("coordinator", &opts);
+    run_and_print("cache", &opts);
 }

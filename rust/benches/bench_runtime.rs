@@ -1,66 +1,27 @@
 //! Runtime benchmarks.
 //!
-//! Part 1 (always runs): device-pool throughput sweep on the in-process
-//! backend — rows/sec scaling over devices ∈ {1, 2, 4, 8}. This is the
-//! multi-executor speedup the paper gets from sharding each window across
-//! 8 GPUs, reproduced with CPU worker threads.
+//! Part 1 (always runs): thin wrapper over the shared `bench::` scenario
+//! registry (group `pool`) — device-pool throughput on the in-process
+//! backend over devices ∈ {1, 2, 4, 8}, the multi-executor speedup the
+//! paper gets from sharding each window across 8 GPUs, reproduced with CPU
+//! worker threads. `parataa bench` runs the same scenarios and writes the
+//! JSON report with the per-device counter breakdown.
 //!
 //! Part 2 (`--features pjrt`, artifacts present): eps_batch latency per
 //! compiled variant and the fused solver_step artifact. These are the
 //! numbers behind Remark 5.1: on CPU a batch-N ε call costs ~N× a batch-1
 //! call (no parallel hardware), so wall-clock speedup comes from *round
-//! reduction* only; the per-variant latencies quantify that.
+//! reduction* only; the per-variant latencies quantify that. This part
+//! stays outside the registry because the default build cannot compile it.
 
-use parataa::model::gmm::GmmEps;
-use parataa::model::{Cond, EpsModel};
-use parataa::runtime::{DevicePool, PoolConfig};
-use parataa::schedule::{BetaSchedule, NoiseSchedule};
-use parataa::util::rng::Pcg64;
-use parataa::util::stats::bench;
-use std::sync::Arc;
-use std::time::Duration;
-
-fn bench_pool_sweep() {
-    println!("--- device pool sweep (in-process backend, 256-dim GMM) ---");
-    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
-    let model: Arc<GmmEps> = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
-    let mut rng = Pcg64::seeded(7);
-
-    let rows = 400; // 4×100-row shards at devices=4 (see pool::shard_size)
-    let x = rng.gaussian_vec(rows * 256);
-    let ts: Vec<usize> = (0..rows).map(|i| (i * 997) % 1000).collect();
-    let conds: Vec<Cond> = (0..rows).map(|i| Cond::Class(i % 8)).collect();
-    let mut out = vec![0.0f32; rows * 256];
-
-    let mut base_rps = 0.0f64;
-    for &devices in &[1usize, 2, 4, 8] {
-        let pool = DevicePool::in_process(model.clone(), devices, PoolConfig::default())
-            .expect("spawn pool");
-        let eps = pool.eps_handle("pooled");
-        let r = bench(
-            &format!("pool eps_batch {rows} rows, devices={devices}"),
-            Duration::from_millis(100),
-            Duration::from_millis(600),
-            || {
-                eps.eps_batch(&x, &ts, &conds, 2.0, &mut out);
-            },
-        );
-        let rps = rows as f64 / r.mean.as_secs_f64();
-        if devices == 1 {
-            base_rps = rps;
-        }
-        println!(
-            "{}  ({:.0} rows/s, {:.2}x vs devices=1)",
-            r.report(),
-            rps,
-            rps / base_rps.max(1e-9)
-        );
-    }
-}
+use parataa::bench::{run_and_print, BenchOpts};
 
 #[cfg(feature = "pjrt")]
 fn bench_pjrt() {
+    use parataa::bench::run_timed;
     use parataa::runtime::{default_artifacts_dir, DeviceActor, EPS_BATCH_SIZES};
+    use parataa::util::rng::Pcg64;
+    use std::time::Duration;
 
     let dir = default_artifacts_dir();
     if !dir.join("eps_batch_1.hlo.txt").exists() {
@@ -78,7 +39,7 @@ fn bench_pjrt() {
         let y: Vec<i32> = (0..n as i32).map(|i| i % 8).collect();
         // warm (compiles on first call)
         let _ = handle.eps_batch(&x, &t, &y, 5.0).unwrap();
-        let r = bench(
+        let r = run_timed(
             &format!("pjrt eps_batch_{n}"),
             Duration::from_millis(100),
             Duration::from_millis(800),
@@ -86,7 +47,7 @@ fn bench_pjrt() {
                 std::hint::black_box(handle.eps_batch(&x, &t, &y, 5.0).unwrap());
             },
         );
-        println!("{}  ({:.1} items/ms)", r.report(), n as f64 / (r.mean.as_secs_f64() * 1e3));
+        println!("{}  ({:.1} items/ms)", r.report(), n as f64 / (r.mean_s * 1e3));
     }
 
     // Fused solver-step artifact.
@@ -111,7 +72,7 @@ fn bench_pjrt() {
             lam: 1e-4,
         };
         let _ = handle.solver_step(w, inputs()).unwrap();
-        let r = bench(
+        let r = run_timed(
             "pjrt solver_step_100 (fused round)",
             Duration::from_millis(100),
             Duration::from_millis(800),
@@ -124,8 +85,8 @@ fn bench_pjrt() {
 }
 
 fn main() {
-    println!("=== bench_runtime ===");
-    bench_pool_sweep();
+    println!("=== bench_runtime (registry group: pool) ===");
+    run_and_print("pool", &BenchOpts::full());
     #[cfg(feature = "pjrt")]
     bench_pjrt();
     #[cfg(not(feature = "pjrt"))]

@@ -1,83 +1,12 @@
-//! Micro-benchmarks of the solver hot paths: the suffix-Gram scan, the TAA
-//! update, and full FP/TAA rounds on the analytic model (no device cost),
-//! isolating L3 overhead from ε_θ time.
+//! Solver benchmarks — thin wrapper over the shared `bench::` scenario
+//! registry (group `solver`): the suffix-Gram scan and TAA-update
+//! micro-kernels plus the Table-1 regime solves. `parataa bench` runs the
+//! same scenarios and additionally writes the JSON report; use
+//! `parataa bench --only table1` etc. for machine-readable output.
 
-use parataa::figures::common::{method_config, ModelChoice, Scenario};
-use parataa::linalg::suffix_grams;
-use parataa::model::Cond;
-use parataa::schedule::SamplerKind;
-use parataa::solver::{self, history::History, update::apply_update, Method, Problem};
-use parataa::util::rng::Pcg64;
-use parataa::util::stats::bench;
-use std::time::Duration;
+use parataa::bench::{run_and_print, BenchOpts};
 
 fn main() {
-    let warm = Duration::from_millis(100);
-    let measure = Duration::from_millis(600);
-    let mut rng = Pcg64::seeded(1);
-
-    println!("=== bench_solver ===");
-
-    // Suffix-Gram scan at Table-1 scale (W=100, D=256, m=2).
-    for (w, d, m) in [(25usize, 256usize, 2usize), (100, 256, 2), (100, 1024, 4)] {
-        let slots: Vec<Vec<f32>> = (0..m).map(|_| rng.gaussian_vec(w * d)).collect();
-        let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
-        let res = rng.gaussian_vec(w * d);
-        let r = bench(
-            &format!("suffix_grams W={w} D={d} m={m}"),
-            warm,
-            measure,
-            || {
-                std::hint::black_box(suffix_grams(&refs, &res, w, d, 0));
-            },
-        );
-        println!("{}", r.report());
-    }
-
-    // Full TAA update (grams + solves + correction).
-    for (w, d) in [(25usize, 256usize), (100, 256)] {
-        let m = 2;
-        let mut history = History::new(m, w, d);
-        for _ in 0..m {
-            let dx = rng.gaussian_vec(w * d);
-            let df = rng.gaussian_vec(w * d);
-            history.push(&dx, &df);
-        }
-        let f_vals = rng.gaussian_vec(w * d);
-        let xs0 = rng.gaussian_vec(w * d);
-        let r_vals: Vec<f32> = f_vals.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
-        let mut xs = xs0.clone();
-        let r = bench(&format!("taa_update W={w} D={d}"), warm, measure, || {
-            xs.copy_from_slice(&xs0);
-            apply_update(
-                Method::Taa,
-                &mut xs,
-                &f_vals,
-                &r_vals,
-                &history,
-                0,
-                w - 1,
-                w,
-                d,
-                1e-4,
-                true,
-            );
-            std::hint::black_box(&xs);
-        });
-        println!("{}", r.report());
-    }
-
-    // Whole solves on the analytic model: L3 cost per scenario.
-    for (method, label) in [(Method::FixedPoint, "FP"), (Method::Taa, "ParaTAA")] {
-        let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 50);
-        let coeffs = scenario.coeffs();
-        let mut seed = 0u64;
-        let r = bench(&format!("solve DDIM-50 gmm {label}"), warm, measure, || {
-            seed += 1;
-            let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(0), seed);
-            let cfg = method_config(method, 50, None, scenario.guidance);
-            std::hint::black_box(solver::solve(&problem, &cfg));
-        });
-        println!("{}", r.report());
-    }
+    println!("=== bench_solver (registry group: solver) ===");
+    run_and_print("solver", &BenchOpts::full());
 }

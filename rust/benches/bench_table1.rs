@@ -1,95 +1,18 @@
-//! End-to-end Table-1 bench: per-scenario wall-clock of Sequential vs FP vs
-//! FP+ vs ParaTAA. A reduced-sample version of `parataa table1` suitable
-//! for `cargo bench`; the full harness regenerates the complete table.
+//! End-to-end Table-1 bench — thin wrapper over the shared `bench::`
+//! registry, filtered to the `table1_*` scenarios (Sequential vs FP vs
+//! FP+ vs ParaTAA wall-clock/rounds per scenario, analytic SDa model).
 //!
-//! DiT scenarios require `make artifacts`; without them only the analytic
-//! SDa columns run.
+//! The registry covers only the zero-dep analytic scenarios; for DiT
+//! timings build with `--features pjrt`, run `make artifacts`, and use
+//! `parataa table1` — which also writes the full paper table (with
+//! quality columns) as CSV. The JSON form of the numbers measured here
+//! comes from `parataa bench`.
 
-use parataa::figures::common::{fp_plus_k, method_config, ModelChoice, Scenario};
-use parataa::model::Cond;
-use parataa::schedule::SamplerKind;
-use parataa::solver::{self, Method, Problem};
-use parataa::util::rng::Pcg64;
-use parataa::util::stats::Summary;
-use parataa::util::table::Table;
+use parataa::bench::{run_and_print, BenchOpts};
 
 fn main() {
-    println!("=== bench_table1 (reduced; full table via `parataa table1`) ===");
-    let have_artifacts = cfg!(feature = "pjrt")
-        && parataa::runtime::default_artifacts_dir()
-            .join("eps_batch_1.hlo.txt")
-            .exists();
-    let models = if have_artifacts {
-        vec![ModelChoice::Dit, ModelChoice::Gmm]
-    } else {
-        println!("(artifacts missing: DiT columns skipped)");
-        vec![ModelChoice::Gmm]
-    };
-
-    let n = 6; // seeds per cell
-    let mut t = Table::new(
-        "Table 1 (bench): mean rounds + wall-clock per scenario/method",
-        &["scenario", "method", "rounds", "time_ms", "speedup_x"],
-    );
-    for model in models {
-        for (kind, steps) in [
-            (SamplerKind::Ddim, 25),
-            (SamplerKind::Ddim, 50),
-            (SamplerKind::Ddim, 100),
-            (SamplerKind::Ddpm, 100),
-        ] {
-            let scenario = Scenario::new(model, kind, steps);
-            let coeffs = scenario.coeffs();
-            let mut rng = Pcg64::seeded(42);
-
-            // Sequential baseline.
-            let mut seq_time = Summary::new();
-            for seed in 0..n {
-                let problem =
-                    Problem::new(&coeffs, &*scenario.model, Cond::Class(rng.below(8) as usize), seed);
-                let t0 = std::time::Instant::now();
-                std::hint::black_box(solver::sample_sequential(&problem, scenario.guidance));
-                seq_time.push(t0.elapsed().as_secs_f64());
-            }
-            t.push_row(vec![
-                scenario.label(),
-                "Sequential".into(),
-                format!("{steps}"),
-                format!("{:.1}", seq_time.mean() * 1e3),
-                "1.00".into(),
-            ]);
-
-            for (label, method, k) in [
-                ("FP", Method::FixedPoint, Some(steps)),
-                ("FP+", Method::FixedPoint, Some(fp_plus_k(steps))),
-                ("ParaTAA", Method::Taa, None),
-            ] {
-                let mut time = Summary::new();
-                let mut rounds = Summary::new();
-                for seed in 0..n {
-                    let problem = Problem::new(
-                        &coeffs,
-                        &*scenario.model,
-                        Cond::Class(rng.below(8) as usize),
-                        seed,
-                    );
-                    let cfg = method_config(method, steps, k, scenario.guidance);
-                    let t0 = std::time::Instant::now();
-                    let r = solver::solve(&problem, &cfg);
-                    time.push(t0.elapsed().as_secs_f64());
-                    rounds.push(r.iterations as f64);
-                }
-                t.push_row(vec![
-                    scenario.label(),
-                    label.into(),
-                    format!("{:.1}", rounds.mean()),
-                    format!("{:.1}", time.mean() * 1e3),
-                    format!("{:.2}", seq_time.mean() / time.mean()),
-                ]);
-            }
-            eprintln!("  {} done", scenario.label());
-        }
-    }
-    println!("{}", t.to_ascii());
-    t.write_csv("results/bench_table1.csv").ok();
+    println!("=== bench_table1 (registry group: solver, table1_* only) ===");
+    let mut opts = BenchOpts::full();
+    opts.filter = Some("table1".to_string());
+    run_and_print("solver", &opts);
 }

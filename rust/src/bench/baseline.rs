@@ -1,0 +1,219 @@
+//! Baseline regression comparison (`parataa bench --baseline FILE`).
+//!
+//! Compares two [`Report`]s metric-by-metric: for every gated metric (a
+//! [`Better`] direction other than `Neutral`) present in both reports, the
+//! relative change is folded into the metric's *worse* direction and any
+//! worsening beyond the threshold (default 10%) is flagged. Scenarios or
+//! metrics present in only one report are skipped — a quick report can be
+//! diffed against a full one over their common subset. A flagged run makes
+//! `parataa bench` exit non-zero, which is how CI can gate once a checked-in
+//! baseline is maintained (see `docs/bench.md` §Baseline gating).
+//!
+//! # Example
+//!
+//! An injected 2× slowdown on a lower-is-better metric is flagged:
+//!
+//! ```
+//! use parataa::bench::{compare, BenchOpts, Metric, Report, ScenarioReport};
+//!
+//! let mut scenario = ScenarioReport::default();
+//! scenario.push("mean_ms", Metric::lower(10.0, "ms"));
+//! let mut baseline = Report::new(&BenchOpts::quick());
+//! baseline.insert("solver", "table1", scenario.clone());
+//!
+//! scenario.metrics.get_mut("mean_ms").unwrap().value = 20.0; // 2x slower
+//! let mut current = Report::new(&BenchOpts::quick());
+//! current.insert("solver", "table1", scenario);
+//!
+//! let deltas = compare(&baseline, &current, 10.0);
+//! assert!(deltas.iter().any(|d| d.regressed));
+//! ```
+
+use super::report::{Better, Report};
+use crate::util::table::Table;
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    /// Group section the metric lives in.
+    pub group: String,
+    /// Scenario name.
+    pub scenario: String,
+    /// Metric name.
+    pub metric: String,
+    /// Unit label (from the current report).
+    pub unit: String,
+    /// Direction gated on (from the current report).
+    pub better: Better,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// Relative change folded into the worse direction: positive = worse,
+    /// negative = improved, 0 for `Neutral` metrics.
+    pub worse_pct: f64,
+    /// Whether `worse_pct` exceeded the threshold.
+    pub regressed: bool,
+}
+
+/// Compare `current` against `baseline`; a gated metric that is more than
+/// `threshold_pct` percent worse is marked regressed.
+pub fn compare(baseline: &Report, current: &Report, threshold_pct: f64) -> Vec<Delta> {
+    let mut out = Vec::new();
+    for (group, scenarios) in &current.groups {
+        let Some(base_group) = baseline.groups.get(group) else { continue };
+        for (name, sc) in scenarios {
+            let Some(base_sc) = base_group.get(name) else { continue };
+            for (metric, m) in &sc.metrics {
+                let Some(bm) = base_sc.metrics.get(metric) else { continue };
+                let comparable = bm.value.is_finite()
+                    && m.value.is_finite()
+                    && bm.value.abs() > 1e-12;
+                let change_pct = if comparable {
+                    (m.value - bm.value) / bm.value.abs() * 100.0
+                } else {
+                    0.0
+                };
+                let worse_pct = match m.better {
+                    Better::Lower => change_pct,
+                    Better::Higher => -change_pct,
+                    Better::Neutral => 0.0,
+                };
+                out.push(Delta {
+                    group: group.clone(),
+                    scenario: name.clone(),
+                    metric: metric.clone(),
+                    unit: m.unit.clone(),
+                    better: m.better,
+                    baseline: bm.value,
+                    current: m.value,
+                    worse_pct,
+                    regressed: comparable
+                        && m.better != Better::Neutral
+                        && worse_pct > threshold_pct,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Number of regressed deltas.
+pub fn regression_count(deltas: &[Delta]) -> usize {
+    deltas.iter().filter(|d| d.regressed).count()
+}
+
+/// Render the comparison as an ASCII table (Δ% is in the metric's worse
+/// direction; `threshold_pct` also marks symmetric improvements).
+pub fn regression_table(deltas: &[Delta], threshold_pct: f64) -> Table {
+    let mut t = Table::new(
+        "bench vs baseline (delta % in each metric's worse direction)",
+        &["group", "scenario", "metric", "baseline", "current", "worse_pct", "status"],
+    );
+    for d in deltas {
+        let status = if d.regressed {
+            "REGRESSED"
+        } else if d.better == Better::Neutral {
+            "info"
+        } else if d.worse_pct < -threshold_pct {
+            "improved"
+        } else {
+            "ok"
+        };
+        t.push_row(vec![
+            d.group.clone(),
+            d.scenario.clone(),
+            d.metric.clone(),
+            format!("{:.3}", d.baseline),
+            format!("{:.3}", d.current),
+            format!("{:+.1}", d.worse_pct),
+            status.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::harness::BenchOpts;
+    use crate::bench::report::{Metric, ScenarioReport};
+
+    fn report_with(metric: &str, m: Metric) -> Report {
+        let mut sc = ScenarioReport::default();
+        sc.push(metric, m);
+        let mut r = Report::new(&BenchOpts::quick());
+        r.insert("solver", "s1", sc);
+        r
+    }
+
+    #[test]
+    fn injected_2x_slowdown_is_flagged() {
+        let base = report_with("mean_ms", Metric::lower(10.0, "ms"));
+        let cur = report_with("mean_ms", Metric::lower(20.0, "ms"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert_eq!(deltas.len(), 1);
+        assert!(deltas[0].regressed);
+        assert!((deltas[0].worse_pct - 100.0).abs() < 1e-9);
+        assert_eq!(regression_count(&deltas), 1);
+        let table = regression_table(&deltas, 10.0).to_ascii();
+        assert!(table.contains("REGRESSED"), "table: {table}");
+    }
+
+    #[test]
+    fn throughput_drop_is_a_regression_for_higher_better() {
+        let base = report_with("rows_per_s", Metric::higher(1000.0, "rows/s"));
+        let cur = report_with("rows_per_s", Metric::higher(500.0, "rows/s"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(deltas[0].regressed);
+        assert!(deltas[0].worse_pct > 49.0);
+    }
+
+    #[test]
+    fn small_noise_within_threshold_passes() {
+        let base = report_with("mean_ms", Metric::lower(10.0, "ms"));
+        let cur = report_with("mean_ms", Metric::lower(10.5, "ms"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(!deltas[0].regressed);
+        assert_eq!(regression_count(&deltas), 0);
+    }
+
+    #[test]
+    fn improvement_is_not_a_regression() {
+        let base = report_with("mean_ms", Metric::lower(20.0, "ms"));
+        let cur = report_with("mean_ms", Metric::lower(10.0, "ms"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(!deltas[0].regressed);
+        assert!(deltas[0].worse_pct < 0.0);
+        let table = regression_table(&deltas, 10.0).to_ascii();
+        assert!(table.contains("improved"));
+    }
+
+    #[test]
+    fn neutral_metrics_are_never_gated() {
+        let base = report_with("completed", Metric::info(10.0, "req"));
+        let cur = report_with("completed", Metric::info(1.0, "req"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(!deltas[0].regressed);
+        assert_eq!(deltas[0].worse_pct, 0.0);
+    }
+
+    #[test]
+    fn disjoint_scenarios_and_metrics_are_skipped() {
+        let base = report_with("mean_ms", Metric::lower(10.0, "ms"));
+        let mut cur = report_with("other_metric", Metric::lower(99.0, "ms"));
+        let mut sc = ScenarioReport::default();
+        sc.push("x", Metric::lower(1.0, "ms"));
+        cur.insert("pool", "only_in_current", sc);
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(deltas.is_empty());
+    }
+
+    #[test]
+    fn zero_baseline_is_not_comparable() {
+        let base = report_with("failed", Metric::lower(0.0, "req"));
+        let cur = report_with("failed", Metric::lower(5.0, "req"));
+        let deltas = compare(&base, &cur, 10.0);
+        assert!(!deltas[0].regressed);
+    }
+}

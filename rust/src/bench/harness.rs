@@ -1,0 +1,199 @@
+//! Timing harness — the measurement substrate of the bench subsystem.
+//!
+//! [`run_timed`] is criterion-lite with percentile capture: a warmup phase
+//! (fills caches, compiles PJRT artifacts lazily, steadies the allocator)
+//! followed by a wall-clock-bounded measurement phase that records every
+//! per-iteration sample, then summarizes into mean/std/min/max/p50/p95.
+//! [`BenchOpts`] carries the sweep-wide knobs (quick vs full durations,
+//! seed, scenario filter) that `parataa bench` parses from the CLI.
+
+use crate::util::stats::{percentile_sorted, Summary};
+use std::time::{Duration, Instant};
+
+/// Cap on stored per-iteration samples. The `Summary` keeps exact moments
+/// over *all* iterations; the percentile buffer is decimated to a uniform
+/// stride whenever it fills, so sub-microsecond benchmarks neither
+/// allocate tens of MB nor bias p50/p95 toward the earliest (coldest)
+/// iterations.
+const SAMPLE_CAP: usize = 200_000;
+
+/// Sweep-wide benchmark options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Quick mode: shorter phases, fewer seeds, only `quick`-tagged
+    /// scenarios (the CI smoke configuration).
+    pub quick: bool,
+    /// Warmup phase duration per timed run.
+    pub warmup: Duration,
+    /// Measurement phase duration per timed run.
+    pub measure: Duration,
+    /// Base seed for the load-generating scenarios (solver cells,
+    /// `serve_load`, `warm_start`); reports are comparable only across
+    /// runs with the same seed. Micro-kernel and pool scenarios use fixed
+    /// input seeds — their timings are input-independent.
+    pub seed: u64,
+    /// Optional substring filter on scenario names (`--only`).
+    pub filter: Option<String>,
+}
+
+impl BenchOpts {
+    /// The full-sweep configuration (matches the historical standalone
+    /// bench binaries: 100 ms warmup, 600 ms measurement).
+    pub fn full() -> Self {
+        BenchOpts {
+            quick: false,
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_millis(600),
+            seed: 42,
+            filter: None,
+        }
+    }
+
+    /// The CI smoke configuration (`parataa bench --quick`).
+    pub fn quick() -> Self {
+        BenchOpts {
+            quick: true,
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            seed: 42,
+            filter: None,
+        }
+    }
+
+    /// Seeds per averaged solver cell (Table-1 style scenarios).
+    pub fn seeds(&self) -> u64 {
+        if self.quick {
+            2
+        } else {
+            6
+        }
+    }
+
+    /// Does `name` pass the `--only` filter?
+    pub fn matches(&self, name: &str) -> bool {
+        self.filter.as_ref().map(|f| name.contains(f.as_str())).unwrap_or(true)
+    }
+}
+
+/// Per-iteration timing statistics of one measured closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// Label of the timed run.
+    pub name: String,
+    /// Measured iterations (warmup iterations are not counted).
+    pub iters: u64,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Sample standard deviation, seconds.
+    pub std_s: f64,
+    /// Fastest iteration, seconds.
+    pub min_s: f64,
+    /// Slowest iteration, seconds.
+    pub max_s: f64,
+    /// Median iteration, seconds.
+    pub p50_s: f64,
+    /// 95th-percentile iteration, seconds.
+    pub p95_s: f64,
+}
+
+impl Timing {
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>9} iters  mean {:>11?}  p50 {:>11?}  p95 {:>11?}  max {:>11?}",
+            self.name,
+            self.iters,
+            Duration::from_secs_f64(self.mean_s),
+            Duration::from_secs_f64(self.p50_s),
+            Duration::from_secs_f64(self.p95_s),
+            Duration::from_secs_f64(self.max_s),
+        )
+    }
+}
+
+/// Warm up for `warmup`, then time `f` repeatedly until `measure` wall-clock
+/// elapses (at least one iteration of each phase always runs), reporting
+/// per-iteration statistics including percentiles.
+pub fn run_timed<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    mut f: F,
+) -> Timing {
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup || warm_iters == 0 {
+        f();
+        warm_iters += 1;
+    }
+
+    let mut s = Summary::new();
+    let mut samples: Vec<f64> = Vec::new();
+    // Keep every `stride`-th sample; on overflow drop every other stored
+    // sample and double the stride, so the buffer always covers the whole
+    // measurement phase uniformly.
+    let mut stride = 1u64;
+    let phase = Instant::now();
+    while phase.elapsed() < measure || s.count() == 0 {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        s.push(dt);
+        if s.count() % stride == 0 {
+            if samples.len() >= SAMPLE_CAP {
+                let mut keep = false;
+                samples.retain(|_| {
+                    keep = !keep;
+                    keep
+                });
+                stride *= 2;
+            }
+            if s.count() % stride == 0 {
+                samples.push(dt);
+            }
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        name: name.to_string(),
+        iters: s.count(),
+        mean_s: s.mean(),
+        std_s: s.std(),
+        min_s: s.min(),
+        max_s: s.max(),
+        p50_s: percentile_sorted(&samples, 0.50),
+        p95_s: percentile_sorted(&samples, 0.95),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_timed_collects_percentiles() {
+        let t = run_timed(
+            "noop",
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            || {
+                std::hint::black_box(3 * 7);
+            },
+        );
+        assert!(t.iters > 0);
+        assert!(t.min_s <= t.p50_s && t.p50_s <= t.p95_s && t.p95_s <= t.max_s);
+        assert!(t.mean_s.is_finite() && t.mean_s >= 0.0);
+        assert!(t.report().contains("noop"));
+    }
+
+    #[test]
+    fn opts_filter_and_seeds() {
+        let mut o = BenchOpts::quick();
+        assert!(o.matches("pool_d4"));
+        o.filter = Some("pool".to_string());
+        assert!(o.matches("pool_d4"));
+        assert!(!o.matches("table1_ddim25"));
+        assert_eq!(o.seeds(), 2);
+        assert_eq!(BenchOpts::full().seeds(), 6);
+    }
+}

@@ -1,0 +1,29 @@
+//! The measurement subsystem — `parataa bench`.
+//!
+//! Every optimization PR needs machine-readable perf data to diff against;
+//! this module provides it as four pieces:
+//!
+//! - [`harness`]   — warmup + wall-clock-bounded timing with percentile
+//!   capture ([`run_timed`]) and the sweep options ([`BenchOpts`]);
+//! - [`scenarios`] — the canonical scenario registry ([`registry`]):
+//!   Table-1 regime solves, solver micro-kernels, the [`crate::runtime::DevicePool`]
+//!   throughput sweep over devices ∈ {1, 2, 4, 8}, coordinator end-to-end
+//!   latency under load, and trajectory-cache warm-start savings;
+//! - [`report`]    — the versioned JSON schema written to
+//!   `BENCH_repro.json` at the repo root (see `docs/bench.md`);
+//! - [`baseline`]  — the `--baseline` regression comparator (Δ% per metric
+//!   in its worse direction; CI gates on >10%).
+//!
+//! The standalone `benches/bench_*.rs` binaries are thin wrappers over
+//! [`run_and_print`], so `cargo bench` and `parataa bench` measure the
+//! exact same code paths.
+
+pub mod baseline;
+pub mod harness;
+pub mod report;
+pub mod scenarios;
+
+pub use baseline::{compare, regression_count, regression_table, Delta};
+pub use harness::{run_timed, BenchOpts, Timing};
+pub use report::{Better, Meta, Metric, Report, ScenarioReport, SCHEMA_VERSION};
+pub use scenarios::{registry, run_all, run_and_print, run_group, ScenarioDef};

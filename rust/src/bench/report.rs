@@ -1,0 +1,521 @@
+//! Versioned JSON perf-report schema (`BENCH_repro.json`).
+//!
+//! A [`Report`] is `meta` + one section per scenario *group* (`solver`,
+//! `pool`, `coordinator`, `cache`), each mapping scenario name →
+//! [`ScenarioReport`] (named [`Metric`]s plus an optional per-device
+//! counter breakdown threaded from [`crate::runtime::PoolStats`] /
+//! [`crate::coordinator::MetricsSnapshot`]). Every metric carries its unit
+//! and a [`Better`] direction so the [`crate::bench::baseline`] comparator
+//! knows which way "worse" points. The full field reference lives in
+//! `docs/bench.md`; bump [`SCHEMA_VERSION`] on any breaking change.
+//!
+//! # Example
+//!
+//! Build a report, round-trip it through JSON, and read a metric back:
+//!
+//! ```
+//! use parataa::bench::{BenchOpts, Metric, Report, ScenarioReport};
+//!
+//! let mut report = Report::new(&BenchOpts::quick());
+//! let mut scenario = ScenarioReport::default();
+//! scenario.push("rows_per_s", Metric::higher(1234.5, "rows/s"));
+//! report.insert("pool", "pool_d1", scenario);
+//!
+//! let text = report.to_json().to_string();
+//! let back = Report::from_json_str(&text).unwrap();
+//! assert_eq!(back.groups["pool"]["pool_d1"].metrics["rows_per_s"].value, 1234.5);
+//! ```
+
+use crate::util::json::{self, obj, Json};
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::harness::BenchOpts;
+
+/// Current report schema version (see `docs/bench.md` for the changelog).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Groups that must be present for a report to validate (a `cache` section
+/// is emitted too, but optional so filtered runs of the three core groups
+/// still validate).
+pub const REQUIRED_GROUPS: &[&str] = &["solver", "pool", "coordinator"];
+
+/// Which direction of change is an improvement for a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Better {
+    /// Larger is better (throughput, speedup); regressions shrink it.
+    Higher,
+    /// Smaller is better (latency, rounds); regressions grow it.
+    Lower,
+    /// Informational only — never gated by the baseline comparator.
+    Neutral,
+}
+
+impl Better {
+    /// Stable string form used in the JSON schema.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Better::Higher => "higher",
+            Better::Lower => "lower",
+            Better::Neutral => "neutral",
+        }
+    }
+
+    /// Parse the JSON string form.
+    pub fn parse(s: &str) -> Result<Better, String> {
+        match s {
+            "higher" => Ok(Better::Higher),
+            "lower" => Ok(Better::Lower),
+            "neutral" => Ok(Better::Neutral),
+            other => Err(format!("unknown better direction '{other}'")),
+        }
+    }
+}
+
+/// One measured quantity.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    /// The measured value (must be finite for the report to validate).
+    pub value: f64,
+    /// Unit label, e.g. `ms`, `rows/s`, `rounds`.
+    pub unit: String,
+    /// Which direction of change is an improvement.
+    pub better: Better,
+}
+
+impl Metric {
+    /// A larger-is-better metric (throughput, speedup).
+    pub fn higher(value: f64, unit: &str) -> Metric {
+        Metric { value, unit: unit.to_string(), better: Better::Higher }
+    }
+
+    /// A smaller-is-better metric (latency, rounds, NFE).
+    pub fn lower(value: f64, unit: &str) -> Metric {
+        Metric { value, unit: unit.to_string(), better: Better::Lower }
+    }
+
+    /// An informational metric, never gated by the comparator.
+    pub fn info(value: f64, unit: &str) -> Metric {
+        Metric { value, unit: unit.to_string(), better: Better::Neutral }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("value", Json::Num(self.value)),
+            ("unit", Json::Str(self.unit.clone())),
+            ("better", Json::Str(self.better.as_str().to_string())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Metric, String> {
+        let value = v
+            .get("value")
+            .and_then(|x| x.as_f64())
+            .ok_or("metric missing numeric 'value'")?;
+        let unit = v
+            .get("unit")
+            .and_then(|x| x.as_str())
+            .ok_or("metric missing 'unit'")?
+            .to_string();
+        let better = Better::parse(
+            v.get("better").and_then(|x| x.as_str()).ok_or("metric missing 'better'")?,
+        )?;
+        Ok(Metric { value, unit, better })
+    }
+}
+
+/// One scenario's results: named metrics plus an optional per-device
+/// counter breakdown (kept as raw JSON — the shape is owned by
+/// [`crate::runtime::DeviceStat::to_json`]).
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioReport {
+    /// Metric name → measurement.
+    pub metrics: BTreeMap<String, Metric>,
+    /// Per-device counters, when the scenario drove a device pool.
+    pub devices: Vec<Json>,
+}
+
+impl ScenarioReport {
+    /// Add a metric under `name`.
+    pub fn push(&mut self, name: &str, m: Metric) {
+        self.metrics.insert(name.to_string(), m);
+    }
+
+    /// Human-readable multi-line rendering (used by the bench binaries).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.metrics {
+            let _ = writeln!(
+                out,
+                "  {:<26} {:>14} {:<8} [{}]",
+                name,
+                format_value(m.value),
+                m.unit,
+                m.better.as_str()
+            );
+        }
+        for d in &self.devices {
+            let _ = writeln!(out, "  device {d}");
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![(
+            "metrics",
+            Json::Obj(
+                self.metrics.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+            ),
+        )];
+        if !self.devices.is_empty() {
+            pairs.push(("devices", Json::Arr(self.devices.clone())));
+        }
+        obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<ScenarioReport, String> {
+        let mut sc = ScenarioReport::default();
+        match v.get("metrics") {
+            Some(Json::Obj(m)) => {
+                for (name, mv) in m {
+                    sc.metrics.insert(
+                        name.clone(),
+                        Metric::from_json(mv).map_err(|e| format!("metric '{name}': {e}"))?,
+                    );
+                }
+            }
+            _ => return Err("scenario missing 'metrics' object".to_string()),
+        }
+        if let Some(Json::Arr(d)) = v.get("devices") {
+            sc.devices = d.clone();
+        }
+        Ok(sc)
+    }
+}
+
+/// Sweep-level metadata recorded alongside the measurements.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    /// `parataa` crate version that produced the report.
+    pub crate_version: String,
+    /// Unix timestamp (seconds) of the run.
+    pub created_unix: u64,
+    /// Whether this was a `--quick` sweep.
+    pub quick: bool,
+    /// Warmup phase per timed run, milliseconds.
+    pub warmup_ms: u64,
+    /// Measurement phase per timed run, milliseconds.
+    pub measure_ms: u64,
+    /// Base RNG seed of the sweep.
+    pub seed: u64,
+}
+
+impl Meta {
+    /// Metadata for a sweep about to run under `opts`.
+    pub fn for_opts(opts: &BenchOpts) -> Meta {
+        let created_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Meta {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            created_unix,
+            quick: opts.quick,
+            warmup_ms: opts.warmup.as_millis() as u64,
+            measure_ms: opts.measure.as_millis() as u64,
+            seed: opts.seed,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("crate_version", Json::Str(self.crate_version.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("quick", Json::Bool(self.quick)),
+            ("warmup_ms", Json::Num(self.warmup_ms as f64)),
+            ("measure_ms", Json::Num(self.measure_ms as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Meta, String> {
+        Ok(Meta {
+            crate_version: v
+                .get("crate_version")
+                .and_then(|x| x.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            created_unix: v
+                .get("created_unix")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(0.0) as u64,
+            quick: matches!(v.get("quick"), Some(Json::Bool(true))),
+            warmup_ms: v.get("warmup_ms").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            measure_ms: v.get("measure_ms").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            seed: v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// A full perf report: metadata + group → scenario → metrics.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Schema version ([`SCHEMA_VERSION`] when produced by this build).
+    pub schema_version: u64,
+    /// Sweep-level metadata.
+    pub meta: Meta,
+    /// `group → scenario name → results`.
+    pub groups: BTreeMap<String, BTreeMap<String, ScenarioReport>>,
+}
+
+impl Report {
+    /// An empty report for a sweep running under `opts`.
+    pub fn new(opts: &BenchOpts) -> Report {
+        Report {
+            schema_version: SCHEMA_VERSION,
+            meta: Meta::for_opts(opts),
+            groups: BTreeMap::new(),
+        }
+    }
+
+    /// Record a scenario's results under its group section.
+    pub fn insert(&mut self, group: &str, scenario: &str, sc: ScenarioReport) {
+        self.groups
+            .entry(group.to_string())
+            .or_default()
+            .insert(scenario.to_string(), sc);
+    }
+
+    /// Serialize to the schema's JSON form.
+    pub fn to_json(&self) -> Json {
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("schema_version".to_string(), Json::Num(self.schema_version as f64));
+        top.insert("meta".to_string(), self.meta.to_json());
+        for (group, scenarios) in &self.groups {
+            top.insert(
+                group.clone(),
+                Json::Obj(
+                    scenarios.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                ),
+            );
+        }
+        Json::Obj(top)
+    }
+
+    /// Deserialize from the schema's JSON form.
+    pub fn from_json(v: &Json) -> Result<Report, String> {
+        let schema_version = v
+            .get("schema_version")
+            .and_then(|x| x.as_f64())
+            .ok_or("report missing 'schema_version'")? as u64;
+        let meta = Meta::from_json(v.get("meta").ok_or("report missing 'meta'")?)?;
+        let mut groups = BTreeMap::new();
+        if let Json::Obj(top) = v {
+            for (key, gv) in top {
+                if key == "schema_version" || key == "meta" {
+                    continue;
+                }
+                let mut scenarios = BTreeMap::new();
+                match gv {
+                    Json::Obj(scs) => {
+                        for (name, sv) in scs {
+                            scenarios.insert(
+                                name.clone(),
+                                ScenarioReport::from_json(sv)
+                                    .map_err(|e| format!("{key}/{name}: {e}"))?,
+                            );
+                        }
+                    }
+                    _ => return Err(format!("section '{key}' is not an object")),
+                }
+                groups.insert(key.clone(), scenarios);
+            }
+        } else {
+            return Err("report root is not an object".to_string());
+        }
+        Ok(Report { schema_version, meta, groups })
+    }
+
+    /// Parse a report from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Report, String> {
+        Report::from_json(&json::parse(text)?)
+    }
+
+    /// Load a report from a file.
+    pub fn load(path: &str) -> Result<Report, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Report::from_json_str(&text)
+    }
+
+    /// Write the report (pretty-printed, trailing newline) to a file.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let mut text = json::to_pretty_string(&self.to_json());
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+
+    /// Structural validation: supported schema version, the
+    /// [`REQUIRED_GROUPS`] sections present and non-empty, every metric
+    /// finite with a unit.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.schema_version != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema_version {} (this build reads {SCHEMA_VERSION})",
+                self.schema_version
+            ));
+        }
+        for required in REQUIRED_GROUPS {
+            let g = self
+                .groups
+                .get(*required)
+                .ok_or_else(|| format!("missing required section '{required}'"))?;
+            if g.is_empty() {
+                return Err(format!("section '{required}' is empty"));
+            }
+        }
+        for (g, scenarios) in &self.groups {
+            for (s, sc) in scenarios {
+                if sc.metrics.is_empty() {
+                    return Err(format!("{g}/{s}: no metrics"));
+                }
+                for (name, m) in &sc.metrics {
+                    if !m.value.is_finite() {
+                        return Err(format!("{g}/{s}/{name}: non-finite value"));
+                    }
+                    if m.unit.is_empty() {
+                        return Err(format!("{g}/{s}/{name}: empty unit"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flatten every metric into one ASCII summary table.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            "bench report",
+            &["group", "scenario", "metric", "value", "unit", "better"],
+        );
+        for (g, scenarios) in &self.groups {
+            for (s, sc) in scenarios {
+                for (name, m) in &sc.metrics {
+                    t.push_row(vec![
+                        g.clone(),
+                        s.clone(),
+                        name.clone(),
+                        format_value(m.value),
+                        m.unit.clone(),
+                        m.better.as_str().to_string(),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Fixed-width value formatting for tables/renders.
+fn format_value(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> Report {
+        let mut r = Report::new(&BenchOpts::quick());
+        for (group, scenario, metric) in [
+            ("solver", "table1_ddim25", "taa_rounds"),
+            ("pool", "pool_d4", "rows_per_s"),
+            ("coordinator", "serve_load", "latency_ms_p95"),
+        ] {
+            let mut sc = ScenarioReport::default();
+            sc.push(metric, Metric::lower(12.5, "ms"));
+            sc.push("aux", Metric::info(3.0, "req"));
+            r.insert(group, scenario, sc);
+        }
+        r
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let r = sample_report();
+        let text = r.to_json().to_string();
+        let back = Report::from_json_str(&text).unwrap();
+        assert_eq!(back.schema_version, SCHEMA_VERSION);
+        assert_eq!(back.groups.len(), r.groups.len());
+        let m = &back.groups["pool"]["pool_d4"].metrics["rows_per_s"];
+        assert_eq!(m.value, 12.5);
+        assert_eq!(m.unit, "ms");
+        assert_eq!(m.better, Better::Lower);
+        assert!(back.meta.quick);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_flags_missing_sections() {
+        let mut r = Report::new(&BenchOpts::quick());
+        let mut sc = ScenarioReport::default();
+        sc.push("x", Metric::higher(1.0, "x"));
+        r.insert("solver", "s", sc);
+        let err = r.validate().unwrap_err();
+        assert!(err.contains("pool"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn validate_flags_non_finite_values() {
+        let mut r = sample_report();
+        r.groups.get_mut("solver").unwrap().get_mut("table1_ddim25").unwrap().push(
+            "bad",
+            Metric::higher(f64::NAN, "x"),
+        );
+        // NaN round-trips to null in our JSON, so validate the in-memory form.
+        assert!(r.validate().unwrap_err().contains("non-finite"));
+    }
+
+    #[test]
+    fn validate_flags_wrong_schema_version() {
+        let mut r = sample_report();
+        r.schema_version = 999;
+        assert!(r.validate().unwrap_err().contains("schema_version"));
+    }
+
+    #[test]
+    fn devices_survive_roundtrip() {
+        let mut r = sample_report();
+        let dev = obj(vec![
+            ("device", Json::Num(0.0)),
+            ("items", Json::Num(400.0)),
+        ]);
+        r.groups.get_mut("pool").unwrap().get_mut("pool_d4").unwrap().devices =
+            vec![dev];
+        let back = Report::from_json_str(&r.to_json().to_string()).unwrap();
+        let devices = &back.groups["pool"]["pool_d4"].devices;
+        assert_eq!(devices.len(), 1);
+        assert_eq!(devices[0].get("items").and_then(|v| v.as_f64()), Some(400.0));
+    }
+
+    #[test]
+    fn better_parse_rejects_garbage() {
+        assert!(Better::parse("sideways").is_err());
+        assert_eq!(Better::parse("higher").unwrap(), Better::Higher);
+    }
+
+    #[test]
+    fn render_lists_metrics() {
+        let r = sample_report();
+        let text = r.groups["solver"]["table1_ddim25"].render();
+        assert!(text.contains("taa_rounds"));
+        assert!(text.contains("[lower]"));
+        assert!(!r.summary_table().to_ascii().is_empty());
+    }
+}

@@ -1,0 +1,619 @@
+//! The canonical benchmark scenario registry.
+//!
+//! Each [`ScenarioDef`] is a named, grouped measurement that any driver can
+//! run: `parataa bench` sweeps the registry and writes `BENCH_repro.json`;
+//! the standalone `benches/bench_*.rs` binaries are thin wrappers that run
+//! one group each and print the same numbers. Groups mirror the report
+//! sections (`docs/bench.md`):
+//!
+//! - `solver` — Table-1 regime (rounds/NFE/wall-clock vs the sequential
+//!   baseline, per method) plus the suffix-Gram / TAA-update micro-kernels;
+//! - `pool` — [`DevicePool`] throughput over devices ∈ {1, 2, 4, 8} with
+//!   the per-device counter breakdown;
+//! - `coordinator` — channel/batcher overhead and end-to-end service
+//!   latency percentiles under concurrent load;
+//! - `cache` — trajectory-cache warm-start savings (§4.2 as a serving
+//!   feature).
+//!
+//! All scenarios run the analytic GMM model so the default zero-dep build
+//! measures L3 costs; PJRT artifact latencies remain in
+//! `benches/bench_runtime.rs` behind `--features pjrt`.
+
+use super::harness::{run_timed, BenchOpts};
+use super::report::{Metric, Report, ScenarioReport};
+use crate::coordinator::{
+    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
+};
+use crate::figures::common::{fp_plus_k, method_config, ModelChoice, Scenario};
+use crate::linalg::suffix_grams;
+use crate::model::gmm::GmmEps;
+use crate::model::{Cond, EpsModel};
+use crate::runtime::{DevicePool, PoolConfig};
+use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerKind};
+use crate::solver::{self, history::History, update::apply_update, Method, Problem};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One registered benchmark scenario.
+pub struct ScenarioDef {
+    /// Report section this scenario belongs to.
+    pub group: &'static str,
+    /// Scenario name (unique within the group).
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Included in `--quick` sweeps (CI smoke).
+    pub quick: bool,
+    /// The measurement itself.
+    pub run: fn(&BenchOpts) -> ScenarioReport,
+}
+
+/// The full scenario registry, in report order.
+pub fn registry() -> Vec<ScenarioDef> {
+    vec![
+        ScenarioDef {
+            group: "solver",
+            name: "table1_ddim25",
+            about: "rounds/NFE/wall-clock vs sequential, SDa DDIM-25",
+            quick: true,
+            run: table1_ddim25,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "table1_ddim50",
+            about: "rounds/NFE/wall-clock vs sequential, SDa DDIM-50",
+            quick: false,
+            run: table1_ddim50,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "table1_ddim100",
+            about: "rounds/NFE/wall-clock vs sequential, SDa DDIM-100",
+            quick: false,
+            run: table1_ddim100,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "table1_ddpm100",
+            about: "rounds/NFE/wall-clock vs sequential, SDa DDPM-100",
+            quick: false,
+            run: table1_ddpm100,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "micro_suffix_grams",
+            about: "suffix-Gram scan micro-kernel (TAA per-row Grams)",
+            quick: true,
+            run: micro_suffix_grams,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "micro_taa_update",
+            about: "full TAA update micro-kernel (Grams + solves + correction)",
+            quick: true,
+            run: micro_taa_update,
+        },
+        ScenarioDef {
+            group: "pool",
+            name: "pool_d1",
+            about: "DevicePool eps_batch throughput, 1 device",
+            quick: true,
+            run: pool_d1,
+        },
+        ScenarioDef {
+            group: "pool",
+            name: "pool_d2",
+            about: "DevicePool eps_batch throughput, 2 devices",
+            quick: true,
+            run: pool_d2,
+        },
+        ScenarioDef {
+            group: "pool",
+            name: "pool_d4",
+            about: "DevicePool eps_batch throughput, 4 devices",
+            quick: true,
+            run: pool_d4,
+        },
+        ScenarioDef {
+            group: "pool",
+            name: "pool_d8",
+            about: "DevicePool eps_batch throughput, 8 devices",
+            quick: true,
+            run: pool_d8,
+        },
+        ScenarioDef {
+            group: "coordinator",
+            name: "channel_send",
+            about: "bounded-channel send cost (per-round queueing floor)",
+            quick: true,
+            run: coord_channel,
+        },
+        ScenarioDef {
+            group: "coordinator",
+            name: "batcher_overhead",
+            about: "direct eps call vs through the dynamic batcher",
+            quick: true,
+            run: coord_batcher,
+        },
+        ScenarioDef {
+            group: "coordinator",
+            name: "serve_load",
+            about: "end-to-end latency p50/p95 under concurrent load",
+            quick: true,
+            run: coord_serve_load,
+        },
+        ScenarioDef {
+            group: "cache",
+            name: "warm_start",
+            about: "trajectory-cache warm-start round/latency savings",
+            quick: true,
+            run: cache_warm_start,
+        },
+    ]
+}
+
+/// Run every registry scenario selected by `opts` into a [`Report`].
+pub fn run_all(opts: &BenchOpts) -> Report {
+    let mut report = Report::new(opts);
+    for def in registry() {
+        if (opts.quick && !def.quick) || !opts.matches(def.name) {
+            continue;
+        }
+        eprintln!("bench: {}/{} — {}", def.group, def.name, def.about);
+        let t0 = Instant::now();
+        let sc = (def.run)(opts);
+        eprintln!("bench: {}/{} done in {:?}", def.group, def.name, t0.elapsed());
+        report.insert(def.group, def.name, sc);
+    }
+    report
+}
+
+/// Run one group's scenarios (the standalone bench binaries use this).
+pub fn run_group(group: &str, opts: &BenchOpts) -> Vec<(&'static str, ScenarioReport)> {
+    registry()
+        .into_iter()
+        .filter(|d| d.group == group && opts.matches(d.name) && (!opts.quick || d.quick))
+        .map(|d| (d.name, (d.run)(opts)))
+        .collect()
+}
+
+/// Run one group and print each scenario's metrics to stdout.
+pub fn run_and_print(group: &str, opts: &BenchOpts) {
+    for (name, sc) in run_group(group, opts) {
+        println!("--- {group}/{name} ---");
+        print!("{}", sc.render());
+    }
+}
+
+/// The SD-analog model every scenario runs on (256-dim analytic GMM).
+fn gmm_model() -> Arc<GmmEps> {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()))
+}
+
+// --- solver ---------------------------------------------------------------
+
+fn table1_ddim25(o: &BenchOpts) -> ScenarioReport {
+    run_table1(SamplerKind::Ddim, 25, o)
+}
+fn table1_ddim50(o: &BenchOpts) -> ScenarioReport {
+    run_table1(SamplerKind::Ddim, 50, o)
+}
+fn table1_ddim100(o: &BenchOpts) -> ScenarioReport {
+    run_table1(SamplerKind::Ddim, 100, o)
+}
+fn table1_ddpm100(o: &BenchOpts) -> ScenarioReport {
+    run_table1(SamplerKind::Ddpm, 100, o)
+}
+
+/// One Table-1 cell group: Sequential vs FP vs FP+ vs ParaTAA on the
+/// analytic model, averaged over `opts.seeds()` seeds.
+fn run_table1(kind: SamplerKind, steps: usize, opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let scenario = Scenario::new(ModelChoice::Gmm, kind, steps);
+    let coeffs = scenario.coeffs();
+    let n = opts.seeds();
+    let mut rng = Pcg64::seeded(opts.seed);
+
+    let mut seq_time = Summary::new();
+    for seed in 0..n {
+        let problem = Problem::new(
+            &coeffs,
+            &*scenario.model,
+            Cond::Class(rng.below(8) as usize),
+            seed,
+        );
+        let t0 = Instant::now();
+        std::hint::black_box(solver::sample_sequential(&problem, scenario.guidance));
+        seq_time.push(t0.elapsed().as_secs_f64());
+    }
+    sc.push("sequential_ms", Metric::lower(seq_time.mean() * 1e3, "ms"));
+    sc.push("sequential_steps", Metric::info(steps as f64, "steps"));
+
+    for (label, method, k) in [
+        ("fp", Method::FixedPoint, Some(steps)),
+        ("fp_plus", Method::FixedPoint, Some(fp_plus_k(steps))),
+        ("taa", Method::Taa, None),
+    ] {
+        let mut time = Summary::new();
+        let mut rounds = Summary::new();
+        let mut nfe = Summary::new();
+        for seed in 0..n {
+            let problem = Problem::new(
+                &coeffs,
+                &*scenario.model,
+                Cond::Class(rng.below(8) as usize),
+                seed,
+            );
+            let cfg = method_config(method, steps, k, scenario.guidance);
+            let t0 = Instant::now();
+            let r = solver::solve(&problem, &cfg);
+            time.push(t0.elapsed().as_secs_f64());
+            rounds.push(r.iterations as f64);
+            nfe.push(r.total_nfe as f64);
+        }
+        sc.push(&format!("{label}_rounds"), Metric::lower(rounds.mean(), "rounds"));
+        sc.push(&format!("{label}_nfe"), Metric::lower(nfe.mean(), "evals"));
+        sc.push(&format!("{label}_ms"), Metric::lower(time.mean() * 1e3, "ms"));
+        sc.push(
+            &format!("{label}_speedup_x"),
+            Metric::higher(seq_time.mean() / time.mean().max(1e-12), "x"),
+        );
+        sc.push(
+            &format!("{label}_step_reduction_x"),
+            Metric::higher(steps as f64 / rounds.mean().max(1e-9), "x"),
+        );
+    }
+    sc
+}
+
+fn micro_suffix_grams(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let mut rng = Pcg64::seeded(1);
+    for (w, d, m) in [(25usize, 256usize, 2usize), (100, 256, 2), (100, 1024, 4)] {
+        let slots: Vec<Vec<f32>> = (0..m).map(|_| rng.gaussian_vec(w * d)).collect();
+        let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+        let res = rng.gaussian_vec(w * d);
+        let t = run_timed(
+            &format!("suffix_grams W={w} D={d} m={m}"),
+            opts.warmup,
+            opts.measure,
+            || {
+                std::hint::black_box(suffix_grams(&refs, &res, w, d, 0));
+            },
+        );
+        sc.push(&format!("w{w}_d{d}_m{m}_mean_us"), Metric::lower(t.mean_s * 1e6, "us"));
+        sc.push(&format!("w{w}_d{d}_m{m}_p95_us"), Metric::lower(t.p95_s * 1e6, "us"));
+    }
+    sc
+}
+
+fn micro_taa_update(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let mut rng = Pcg64::seeded(1);
+    for (w, d) in [(25usize, 256usize), (100, 256)] {
+        let m = 2;
+        let mut history = History::new(m, w, d);
+        for _ in 0..m {
+            let dx = rng.gaussian_vec(w * d);
+            let df = rng.gaussian_vec(w * d);
+            history.push(&dx, &df);
+        }
+        let f_vals = rng.gaussian_vec(w * d);
+        let xs0 = rng.gaussian_vec(w * d);
+        let r_vals: Vec<f32> =
+            f_vals.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+        let mut xs = xs0.clone();
+        let t = run_timed(
+            &format!("taa_update W={w} D={d}"),
+            opts.warmup,
+            opts.measure,
+            || {
+                xs.copy_from_slice(&xs0);
+                apply_update(
+                    Method::Taa,
+                    &mut xs,
+                    &f_vals,
+                    &r_vals,
+                    &history,
+                    0,
+                    w - 1,
+                    w,
+                    d,
+                    1e-4,
+                    true,
+                );
+                std::hint::black_box(&xs);
+            },
+        );
+        sc.push(&format!("w{w}_d{d}_mean_us"), Metric::lower(t.mean_s * 1e6, "us"));
+        sc.push(&format!("w{w}_d{d}_p95_us"), Metric::lower(t.p95_s * 1e6, "us"));
+    }
+    sc
+}
+
+// --- pool -----------------------------------------------------------------
+
+fn pool_d1(o: &BenchOpts) -> ScenarioReport {
+    run_pool(1, o)
+}
+fn pool_d2(o: &BenchOpts) -> ScenarioReport {
+    run_pool(2, o)
+}
+fn pool_d4(o: &BenchOpts) -> ScenarioReport {
+    run_pool(4, o)
+}
+fn pool_d8(o: &BenchOpts) -> ScenarioReport {
+    run_pool(8, o)
+}
+
+/// Pool throughput on a 400-row ε-batch (the paper's window-sharding
+/// regime: 4×100-row shards at devices=4), in-process backends so the
+/// numbers isolate pool overhead + CPU-thread scaling.
+fn run_pool(devices: usize, opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let model = gmm_model();
+    let d = model.dim();
+    let mut rng = Pcg64::seeded(7);
+    let rows = 400;
+    let x = rng.gaussian_vec(rows * d);
+    let ts: Vec<usize> = (0..rows).map(|i| (i * 997) % 1000).collect();
+    let conds: Vec<Cond> = (0..rows).map(|i| Cond::Class(i % 8)).collect();
+    let mut out = vec![0.0f32; rows * d];
+
+    let pool = DevicePool::in_process(model, devices, PoolConfig::default())
+        .expect("spawn device pool");
+    let eps = pool.eps_handle("pooled");
+    let t = run_timed(
+        &format!("pool eps_batch {rows} rows, devices={devices}"),
+        opts.warmup,
+        opts.measure,
+        || {
+            eps.eps_batch(&x, &ts, &conds, 2.0, &mut out);
+        },
+    );
+    sc.push("rows_per_s", Metric::higher(rows as f64 / t.mean_s.max(1e-12), "rows/s"));
+    sc.push("batch_mean_ms", Metric::lower(t.mean_s * 1e3, "ms"));
+    sc.push("batch_p95_ms", Metric::lower(t.p95_s * 1e3, "ms"));
+    sc.push("devices", Metric::info(devices as f64, "devices"));
+    sc.devices = pool.stats().snapshot().iter().map(|s| s.to_json()).collect();
+    sc
+}
+
+// --- coordinator ----------------------------------------------------------
+
+fn coord_channel(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let (tx, rx) = crate::util::channel::bounded::<u64>(16);
+    let drain = std::thread::spawn(move || while rx.recv().is_some() {});
+    let t = run_timed("channel send (uncontended)", opts.warmup, opts.measure, || {
+        tx.send(1).unwrap();
+    });
+    tx.close();
+    drain.join().unwrap();
+    sc.push("send_mean_ns", Metric::lower(t.mean_s * 1e9, "ns"));
+    sc.push("send_p95_ns", Metric::lower(t.p95_s * 1e9, "ns"));
+    sc
+}
+
+fn coord_batcher(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let model = gmm_model();
+    let d = model.dim();
+    let mut rng = Pcg64::seeded(3);
+    let n = 25;
+    let x = rng.gaussian_vec(n * d);
+    let ts: Vec<usize> = (0..n).map(|i| i * 39).collect();
+    let conds = vec![Cond::Class(1); n];
+    let mut out = vec![0.0f32; n * d];
+
+    let t_direct = run_timed("eps 25 rows (direct)", opts.warmup, opts.measure, || {
+        model.eps_batch(&x, &ts, &conds, 2.0, &mut out);
+    });
+    let batcher = Batcher::spawn(model.clone(), BatcherConfig::default());
+    let handle = batcher.eps_handle(d, "batched");
+    let t_batched =
+        run_timed("eps 25 rows (via batcher)", opts.warmup, opts.measure, || {
+            handle.eps_batch(&x, &ts, &conds, 2.0, &mut out);
+        });
+    sc.push("direct_mean_us", Metric::lower(t_direct.mean_s * 1e6, "us"));
+    sc.push("batched_mean_us", Metric::lower(t_batched.mean_s * 1e6, "us"));
+    sc.push(
+        "overhead_pct",
+        Metric::info(
+            (t_batched.mean_s - t_direct.mean_s) / t_direct.mean_s.max(1e-12) * 100.0,
+            "%",
+        ),
+    );
+    sc
+}
+
+/// End-to-end service benchmark: pool(2) → batcher → coordinator(4 workers),
+/// concurrent DDIM-25 requests; latency percentiles come straight from the
+/// coordinator's [`crate::coordinator::MetricsSnapshot`].
+fn coord_serve_load(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let model = gmm_model();
+    let devices = 2;
+    let dim = model.dim();
+    let pool = DevicePool::in_process(model, devices, PoolConfig::default())
+        .expect("spawn device pool");
+    let pool_stats = pool.stats();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let batcher = Batcher::spawn(pooled, BatcherConfig::for_devices(devices));
+    let eps = Arc::new(batcher.eps_handle(dim, "batched"));
+    let coord = Coordinator::start(
+        eps,
+        CoordinatorConfig { workers: 4, devices, ..Default::default() },
+    );
+    coord.attach_pool(pool_stats);
+
+    let n_req: usize = if opts.quick { 16 } else { 48 };
+    let mut rng = Pcg64::seeded(opts.seed);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_req)
+        .map(|i| {
+            let mut req = SampleRequest::parataa(
+                Cond::Class(rng.below(8) as usize),
+                i as u64,
+                SamplerSpec::ddim(25),
+            );
+            req.guidance = 2.0;
+            coord.submit(req)
+        })
+        .collect();
+    for h in handles {
+        h.wait().expect("bench request failed");
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+
+    sc.push(
+        "throughput_rps",
+        Metric::higher(n_req as f64 / wall.as_secs_f64().max(1e-9), "req/s"),
+    );
+    sc.push("latency_ms_p50", Metric::lower(snap.latency_ms_p50, "ms"));
+    sc.push("latency_ms_p95", Metric::lower(snap.latency_ms_p95, "ms"));
+    sc.push("latency_ms_p99", Metric::lower(snap.latency_ms_p99, "ms"));
+    sc.push("mean_rounds", Metric::lower(snap.mean_rounds, "rounds"));
+    sc.push("mean_nfe", Metric::lower(snap.mean_nfe, "evals"));
+    sc.push("completed", Metric::info(snap.completed as f64, "req"));
+    sc.push("failed", Metric::info(snap.failed as f64, "req"));
+    sc.devices = snap.devices.iter().map(|s| s.to_json()).collect();
+    drop(coord); // join workers before the batcher/pool unwind
+    sc
+}
+
+// --- cache ----------------------------------------------------------------
+
+/// Warm-start savings: for each pair, solve a cold request (populates the
+/// trajectory cache), then a nearby-condition request with the same seed
+/// that should warm-start from the donor (§4.2).
+fn cache_warm_start(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let coord = Coordinator::start(
+        gmm_model(),
+        CoordinatorConfig { workers: 2, ..Default::default() },
+    );
+    let pairs: u64 = if opts.quick { 3 } else { 8 };
+    let mut cold_rounds = Summary::new();
+    let mut warm_rounds = Summary::new();
+    let mut cold_ms = Summary::new();
+    let mut warm_ms = Summary::new();
+    let mut warm_hits = 0u64;
+    for i in 0..pairs {
+        let mut cold = SampleRequest::parataa(
+            Cond::Class((i % 8) as usize),
+            opts.seed + 1000 + i,
+            SamplerSpec::ddim(25),
+        );
+        cold.guidance = 2.0;
+        cold.use_trajectory_cache = true;
+        let r1 = coord.sample(cold.clone()).expect("cold solve failed");
+        cold_rounds.push(r1.rounds as f64);
+        cold_ms.push(r1.latency.as_secs_f64() * 1e3);
+
+        let mut warm = cold.clone();
+        warm.cond = cold.cond.lerp(&Cond::Class(((i + 1) % 8) as usize), 0.05, 8);
+        let r2 = coord.sample(warm).expect("warm solve failed");
+        if r2.warm_started {
+            warm_hits += 1;
+        }
+        warm_rounds.push(r2.rounds as f64);
+        warm_ms.push(r2.latency.as_secs_f64() * 1e3);
+    }
+    sc.push("cold_rounds_mean", Metric::lower(cold_rounds.mean(), "rounds"));
+    sc.push("warm_rounds_mean", Metric::lower(warm_rounds.mean(), "rounds"));
+    // Informational only: a small-valued ratio whose *relative* change
+    // amplifies noise — warm_rounds_mean is the gated form of this signal.
+    sc.push(
+        "rounds_saved_pct",
+        Metric::info(
+            (1.0 - warm_rounds.mean() / cold_rounds.mean().max(1e-9)) * 100.0,
+            "%",
+        ),
+    );
+    sc.push("cold_ms_mean", Metric::info(cold_ms.mean(), "ms"));
+    sc.push("warm_ms_mean", Metric::info(warm_ms.mean(), "ms"));
+    sc.push("warm_hit_rate", Metric::higher(warm_hits as f64 / pairs as f64, "frac"));
+    sc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Ultra-short phases so the full quick sweep stays test-sized.
+    fn tiny_opts() -> BenchOpts {
+        BenchOpts {
+            quick: true,
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            seed: 42,
+            filter: None,
+        }
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_grouped() {
+        let defs = registry();
+        for d in &defs {
+            assert!(
+                ["solver", "pool", "coordinator", "cache"].contains(&d.group),
+                "unknown group {}",
+                d.group
+            );
+        }
+        let mut names: Vec<_> = defs.iter().map(|d| (d.group, d.name)).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), defs.len(), "duplicate scenario names");
+        // The CI smoke subset must cover every required report section.
+        for group in crate::bench::report::REQUIRED_GROUPS {
+            assert!(
+                defs.iter().any(|d| d.quick && d.group == *group),
+                "no quick scenario in group {group}"
+            );
+        }
+    }
+
+    #[test]
+    fn quick_sweep_produces_a_schema_valid_report() {
+        let report = run_all(&tiny_opts());
+        report.validate().expect("quick sweep must produce a valid report");
+        // Round-trip through the on-disk form.
+        let back = Report::from_json_str(&report.to_json().to_string()).unwrap();
+        back.validate().unwrap();
+        // Spot-check the threaded-through structures.
+        let pool = &report.groups["pool"]["pool_d4"];
+        assert!(pool.metrics["rows_per_s"].value > 0.0);
+        assert_eq!(pool.devices.len(), 4);
+        let serve = &report.groups["coordinator"]["serve_load"];
+        assert_eq!(serve.metrics["failed"].value, 0.0);
+        assert!(serve.metrics["latency_ms_p95"].value > 0.0);
+        assert_eq!(serve.devices.len(), 2);
+        assert!(report.groups["cache"]["warm_start"].metrics["cold_rounds_mean"].value > 0.0);
+    }
+
+    #[test]
+    fn filter_restricts_the_sweep() {
+        let mut opts = tiny_opts();
+        opts.filter = Some("micro_suffix".to_string());
+        let report = run_all(&opts);
+        assert_eq!(report.groups.len(), 1);
+        assert_eq!(report.groups["solver"].len(), 1);
+        // A filtered report is intentionally NOT schema-valid (missing
+        // sections) — the CLI only validates unfiltered sweeps.
+        assert!(report.validate().is_err());
+    }
+
+    #[test]
+    fn run_group_returns_only_that_group() {
+        let out = run_group("pool", &tiny_opts());
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|(name, _)| name.starts_with("pool_d")));
+    }
+}

@@ -3,7 +3,7 @@
 //! [`crate::runtime::DevicePool`].
 
 use crate::runtime::pool::{DeviceStat, PoolStats};
-use crate::util::stats::percentile;
+use crate::util::stats::percentile_sorted;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -83,15 +83,19 @@ impl Metrics {
         let mean = |v: &[f64]| {
             if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
         };
+        // One clone+sort serves all three percentiles (percentile() would
+        // clone and sort per call, tripling the work under the lock).
+        let mut lat = m.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         MetricsSnapshot {
             completed: m.completed,
             failed: m.failed,
             warm_starts: m.warm_starts,
             uptime,
             throughput_rps: m.completed as f64 / uptime.as_secs_f64().max(1e-9),
-            latency_ms_p50: percentile(&m.latencies_ms, 0.50),
-            latency_ms_p95: percentile(&m.latencies_ms, 0.95),
-            latency_ms_p99: percentile(&m.latencies_ms, 0.99),
+            latency_ms_p50: percentile_sorted(&lat, 0.50),
+            latency_ms_p95: percentile_sorted(&lat, 0.95),
+            latency_ms_p99: percentile_sorted(&lat, 0.99),
             mean_rounds: mean(&m.rounds),
             mean_nfe: mean(&m.nfes),
             devices: self
@@ -106,6 +110,32 @@ impl Metrics {
 }
 
 impl MetricsSnapshot {
+    /// The full snapshot as JSON — `parataa serve --json` dumps this, and
+    /// the `devices` array is the same shape the bench report embeds
+    /// (`docs/bench.md` §devices, via [`DeviceStat::to_json`]).
+    /// Percentiles over an empty sample set serialize as `null` (the JSON
+    /// writer maps non-finite numbers to `null`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("warm_starts", Json::Num(self.warm_starts as f64)),
+            ("uptime_s", Json::Num(self.uptime.as_secs_f64())),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("latency_ms_p50", Json::Num(self.latency_ms_p50)),
+            ("latency_ms_p95", Json::Num(self.latency_ms_p95)),
+            ("latency_ms_p99", Json::Num(self.latency_ms_p99)),
+            ("mean_rounds", Json::Num(self.mean_rounds)),
+            ("mean_nfe", Json::Num(self.mean_nfe)),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// One-line human-readable summary plus the per-device breakdown.
     pub fn report(&self) -> String {
         let mut out = format!(
             "completed={} failed={} warm={} | {:.2} req/s | latency ms p50={:.1} p95={:.1} p99={:.1} | rounds μ={:.1} | nfe μ={:.0}",
@@ -185,5 +215,18 @@ mod tests {
         assert_eq!(s.devices.iter().map(|d| d.items).sum::<u64>(), 3);
         assert!(s.report().contains("dev0"), "report: {}", s.report());
         assert!(s.report().contains("dev1"), "report: {}", s.report());
+    }
+
+    #[test]
+    fn snapshot_serializes_to_json() {
+        let m = Metrics::new();
+        m.record_success(Duration::from_millis(12), 5, 500, true);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("warm_starts").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("latency_ms_p50").and_then(|v| v.as_f64()).unwrap() >= 12.0);
+        // Round-trips through the parser (also proves no NaN leaked out).
+        let text = j.to_string();
+        crate::util::json::parse(&text).expect("snapshot JSON must parse");
     }
 }

@@ -17,7 +17,19 @@
 //! per-device queues, batch sharding and work stealing. With the `pjrt`
 //! feature the hot path loads `artifacts/*.hlo.txt` through the PJRT CPU
 //! client; Python never runs at request time.
+//!
+//! Performance is tracked by the [`bench`] subsystem: `parataa bench`
+//! sweeps a registry of canonical scenarios and writes a versioned
+//! `BENCH_repro.json` that later PRs diff against (`--baseline`); see
+//! `docs/bench.md` and the README for the workflow.
 
+// Public-API documentation coverage is tracked as warnings, not a build
+// gate: CI deliberately avoids blanket `-D warnings` (a source-level lint
+// attribute beats a CLI `-A`, so it could not be re-allowed there) — see
+// .github/workflows/ci.yml.
+#![warn(missing_docs)]
+
+pub mod bench;
 pub mod coordinator;
 pub mod equations;
 pub mod figures;

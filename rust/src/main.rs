@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   sample        solve one sampling request and write the image
 //!   serve         run the coordinator demo under synthetic load
+//!   bench         run the perf-scenario registry, write BENCH_repro.json
+//!                 (and optionally gate against a --baseline report)
 //!   fig1..fig7, fig14, table1
 //!                 regenerate a paper figure/table (CSV + ASCII)
 //!   all-figures   regenerate everything into results/
@@ -22,6 +24,7 @@ fn main() {
         "help" | "--help" => help(),
         "sample" => cmd_sample(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "all-figures" => {
             for name in figures::ALL {
                 run_experiment(name, &args);
@@ -46,7 +49,11 @@ fn help() {
            serve       coordinator demo under synthetic load\n\
                        (--requests N --workers N --devices N: N-backend execution\n\
                        pool with sharding + work stealing; prints a per-device\n\
-                       utilization breakdown)\n\
+                       utilization breakdown; --json dumps the metrics snapshot)\n\
+           bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
+                       (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
+                       --baseline FILE [--threshold PCT]: print a regression\n\
+                       table and exit 3 if any metric is >PCT pct worse)\n\
            fig1        FP residual convergence vs order k\n\
            fig2        FP vs AA vs TAA\n\
            fig3        quality vs rounds across scenarios\n\
@@ -216,13 +223,175 @@ fn cmd_serve(args: &Args) {
     for (i, h) in handles.into_iter().enumerate() {
         let r = h.wait().expect("request failed");
         if i < 4 || !r.converged {
-            println!(
+            // Progress goes to stderr so `--json` stdout stays parseable.
+            eprintln!(
                 "req {i}: rounds={} nfe={} warm={} conv={} latency={:?}",
                 r.rounds, r.nfe, r.warm_started, r.converged, r.latency
             );
         }
     }
     // The report includes the per-device breakdown (attached pool stats).
-    println!("{}", coord.metrics().report());
+    if args.has_flag("json") {
+        println!("{}", coord.metrics().to_json());
+    } else {
+        println!("{}", coord.metrics().report());
+    }
     drop(coord);
+}
+
+/// Do two paths name the same file, regardless of spelling
+/// (`./BENCH_repro.json` vs `BENCH_repro.json`)? Falls back to literal
+/// comparison when either path cannot be canonicalized (e.g. not yet
+/// created).
+fn same_file(a: &str, b: &str) -> bool {
+    match (std::fs::canonicalize(a), std::fs::canonicalize(b)) {
+        (Ok(ca), Ok(cb)) => ca == cb,
+        _ => a == b,
+    }
+}
+
+/// Human label for a report's sweep mode.
+fn sweep_kind(quick: bool) -> &'static str {
+    if quick {
+        "quick"
+    } else {
+        "full"
+    }
+}
+
+/// `parataa bench`: sweep the scenario registry, write the JSON report,
+/// and optionally gate against a baseline report.
+///
+/// Exit codes: 0 ok, 1 internal failure (invalid report / unwritable
+/// output), 2 usage/input problems (empty --only match; unusable or
+/// incomparable baseline), 3 regression(s) detected (the baseline file is
+/// left unchanged in that case).
+fn cmd_bench(args: &Args) {
+    use parataa::bench::{self, BenchOpts};
+
+    let mut opts = if args.has_flag("quick") { BenchOpts::quick() } else { BenchOpts::full() };
+    opts.seed = args.u64_or("seed", opts.seed);
+    if let Some(f) = args.get("only") {
+        opts.filter = Some(f.to_string());
+    }
+
+    // Load the baseline BEFORE running (fail fast on a bad path) and
+    // before saving (the default --out equals the conventional baseline
+    // path, and the old numbers must be read before being replaced).
+    let baseline = args.get("baseline").map(|base_path| {
+        match bench::Report::load(base_path) {
+            Ok(b) => (base_path.to_string(), b),
+            Err(e) => {
+                eprintln!("bench: cannot load baseline {base_path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    });
+
+    let report = bench::run_all(&opts);
+    if report.groups.is_empty() {
+        // A misspelled --only (or one naming a scenario the --quick subset
+        // excludes) must not masquerade as a successful sweep.
+        eprintln!(
+            "bench: no scenarios matched (filter {:?}, quick={})",
+            opts.filter, opts.quick
+        );
+        std::process::exit(2);
+    }
+    println!("{}", report.summary_table().to_ascii());
+    if opts.filter.is_none() {
+        // A full (or quick) sweep must produce a schema-valid report;
+        // filtered sweeps legitimately omit sections.
+        if let Err(e) = report.validate() {
+            eprintln!("bench: report failed schema validation: {e}");
+            std::process::exit(1);
+        }
+    }
+    // Gate BEFORE writing: a failed gate must not replace the baseline
+    // file with the regressed numbers (an immediate re-run would then
+    // compare the regression against itself and pass).
+    let mut gate_failed: Option<(String, usize, f64)> = None;
+    if let Some((base_path, baseline)) = &baseline {
+        if baseline.schema_version != bench::SCHEMA_VERSION {
+            eprintln!(
+                "bench: baseline {base_path} has schema v{} (this build reads v{})",
+                baseline.schema_version,
+                bench::SCHEMA_VERSION
+            );
+            std::process::exit(2);
+        }
+        // Reports from different sweep configurations are only loosely
+        // comparable: another seed draws different Table-1 conditions
+        // (shifting even the deterministic rounds/NFE metrics) and another
+        // mode changes phase lengths and seed counts.
+        if baseline.meta.seed != report.meta.seed {
+            eprintln!(
+                "bench: WARNING — baseline seed {} != this sweep's seed {}; \
+                 rounds/NFE deltas are not meaningful across seeds",
+                baseline.meta.seed, report.meta.seed
+            );
+        }
+        if baseline.meta.quick != report.meta.quick {
+            eprintln!(
+                "bench: note — comparing a {} sweep against a {} baseline \
+                 (common subset only)",
+                sweep_kind(report.meta.quick),
+                sweep_kind(baseline.meta.quick),
+            );
+        }
+        let threshold = args.f64_or("threshold", 10.0);
+        let deltas = bench::compare(baseline, &report, threshold);
+        if deltas.is_empty() {
+            // No common (group, scenario, metric) at all — almost certainly
+            // a wrong/partial baseline file; passing silently would make
+            // the gate vacuous.
+            eprintln!("bench: baseline {base_path} shares no metrics with this sweep");
+            std::process::exit(2);
+        }
+        println!("{}", bench::regression_table(&deltas, threshold).to_ascii());
+        let regressions = bench::regression_count(&deltas);
+        if regressions > 0 {
+            gate_failed = Some((base_path.clone(), regressions, threshold));
+        } else {
+            println!(
+                "bench: no regressions vs {base_path} ({} metrics compared, threshold {threshold:.0}%)",
+                deltas.len()
+            );
+        }
+    }
+
+    let out = args.get_or("out", "BENCH_repro.json");
+    if opts.filter.is_some() && args.get("out").is_none() {
+        // A filtered sweep is partial and schema-invalid: never let it
+        // silently replace the canonical repo-root report (a later
+        // --baseline against it would skip everything it lacks). Writing
+        // a partial report needs an explicit --out.
+        eprintln!("bench: --only sweep is partial; not writing BENCH_repro.json (pass --out to save)");
+    } else if gate_failed.as_ref().map(|(bp, _, _)| same_file(bp, &out)).unwrap_or(false) {
+        eprintln!("bench: gate failed — keeping baseline {out} unchanged");
+    } else {
+        // Replacing a report from the other sweep mode loses fidelity
+        // (quick uses shorter phases, fewer seeds and a scenario subset);
+        // the smoke workflow does exactly this on CI runners, so warn
+        // rather than refuse.
+        if let Ok(prev) = bench::Report::load(&out) {
+            if prev.meta.quick != report.meta.quick {
+                eprintln!(
+                    "bench: WARNING — replacing a {} report at {out} with a {} one",
+                    sweep_kind(prev.meta.quick),
+                    sweep_kind(report.meta.quick),
+                );
+            }
+        }
+        if let Err(e) = report.save(&out) {
+            eprintln!("bench: cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {out} (schema v{})", parataa::bench::SCHEMA_VERSION);
+    }
+
+    if let Some((base_path, regressions, threshold)) = gate_failed {
+        eprintln!("bench: {regressions} metric(s) regressed >{threshold:.0}% vs {base_path}");
+        std::process::exit(3);
+    }
 }

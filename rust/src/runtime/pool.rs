@@ -110,6 +110,23 @@ pub struct DeviceStat {
     pub queue_depth: usize,
 }
 
+impl DeviceStat {
+    /// JSON form used by the bench report's per-device breakdown
+    /// (`docs/bench.md` §devices).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            ("device", Json::Num(self.device as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("shards", Json::Num(self.shards as f64)),
+            ("items", Json::Num(self.items as f64)),
+            ("stolen", Json::Num(self.stolen as f64)),
+            ("utilization", Json::Num(self.utilization)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+        ])
+    }
+}
+
 impl std::fmt::Display for DeviceStat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -280,7 +297,7 @@ impl DevicePool {
             let stats = stats.clone();
             let cfg = cfg.clone();
             let warm_tx = warm_tx.clone();
-            let join = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name(format!("parataa-dev-{me}"))
                 .spawn(move || {
                     let warmed = backend
@@ -289,8 +306,24 @@ impl DevicePool {
                     let _ = warm_tx.send(warmed);
                     drop(warm_tx);
                     run_worker(me, &mut *backend, &rxs, &stats, &cfg);
-                })?;
-            workers.push(join);
+                });
+            match spawned {
+                Ok(join) => workers.push(join),
+                Err(e) => {
+                    // Unwind the workers already spawned: close their
+                    // queues so run_worker observes shutdown (PoolStats
+                    // holds Sender clones, so only an explicit close ends
+                    // the steal/backoff loop), then join. Without this the
+                    // earlier threads would spin for the process lifetime.
+                    for q in &txs {
+                        q.close();
+                    }
+                    for w in workers.drain(..) {
+                        let _ = w.join();
+                    }
+                    return Err(anyhow!("pool device {me} thread spawn: {e}"));
+                }
+            }
         }
         drop(warm_tx);
         for _ in 0..devices {
@@ -421,12 +454,19 @@ fn exec_task(
 ) {
     let items = task.t.len() as u64;
     let t0 = Instant::now();
-    let res = backend.execute(&EpsShard {
-        xs: &task.x,
-        train_ts: &task.t,
-        conds: &task.conds,
-        guidance: task.guidance,
-    });
+    // Contain backend panics: if the worker unwound here, shards queued
+    // behind it would keep their reply senders alive forever and (without
+    // stealing) deadlock every submitter. Surface the panic as the shard's
+    // error instead — the submitter fails loudly and the worker lives on.
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        backend.execute(&EpsShard {
+            xs: &task.x,
+            train_ts: &task.t,
+            conds: &task.conds,
+            guidance: task.guidance,
+        })
+    }))
+    .unwrap_or_else(|_| Err(anyhow!("pool device {me}: backend panicked executing a shard")));
     let c = &stats.counters[me];
     c.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     c.shards.fetch_add(1, Ordering::Relaxed);
@@ -655,6 +695,52 @@ mod tests {
         assert_eq!(eps.devices(), 3);
         assert_eq!(eps.dim(), d);
         assert_eq!(eps.name(), "pooled");
+    }
+
+    #[test]
+    fn panicking_backend_fails_loudly_instead_of_hanging() {
+        // A backend that panics mid-shard must surface an error to the
+        // submitter (PooledEps escalates it to a panic) — with stealing
+        // off, an uncontained unwind used to strand queued shards forever.
+        struct PanicEps;
+        impl crate::model::EpsModel for PanicEps {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn eps_batch(
+                &self,
+                _xs: &[f32],
+                _ts: &[usize],
+                _conds: &[Cond],
+                _g: f32,
+                _out: &mut [f32],
+            ) {
+                panic!("injected model failure");
+            }
+            fn name(&self) -> &str {
+                "panic"
+            }
+        }
+        let pool = DevicePool::in_process(
+            Arc::new(PanicEps),
+            2,
+            PoolConfig { work_stealing: false, ..Default::default() },
+        )
+        .unwrap();
+        let eps = pool.eps_handle("pooled");
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0.0f32; 4 * 2];
+            eps.eps_batch(
+                &[0.0; 8],
+                &[1, 2, 3, 4],
+                &[Cond::Uncond, Cond::Uncond, Cond::Uncond, Cond::Uncond],
+                1.0,
+                &mut out,
+            );
+        }));
+        // Completing at all proves no deadlock; the submitter must have
+        // observed the backend failure as a panic, not a bogus success.
+        assert!(res.is_err(), "expected a loud failure from the pooled handle");
     }
 
     #[test]

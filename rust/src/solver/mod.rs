@@ -87,6 +87,29 @@ pub struct SolverConfig {
 
 impl SolverConfig {
     /// The paper's ParaTAA defaults (Appendix C: m ∈ 2..4, robust k).
+    ///
+    /// # Example
+    ///
+    /// Solve an 8-step DDIM trajectory on the analytic SD-analog model and
+    /// confirm the parallel solve converged:
+    ///
+    /// ```
+    /// use parataa::model::{gmm::GmmEps, Cond};
+    /// use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+    /// use parataa::solver::{self, Problem, SolverConfig};
+    ///
+    /// let schedule = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    /// let model = GmmEps::sd_analog(schedule.alpha_bars.clone());
+    /// let coeffs = SamplerCoeffs::new(&schedule, SamplerKind::Ddim, 8);
+    /// let problem = Problem::new(&coeffs, &model, Cond::Class(0), 3);
+    ///
+    /// let mut cfg = SolverConfig::parataa(8);
+    /// cfg.guidance = 2.0; // the analytic score is stiffer than a trained net
+    /// cfg.s_max = 32;
+    /// let result = solver::solve(&problem, &cfg);
+    /// assert!(result.converged);
+    /// assert!(result.iterations >= 1);
+    /// ```
     pub fn parataa(steps: usize) -> Self {
         SolverConfig {
             k: (steps / 4).max(2),

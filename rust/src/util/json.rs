@@ -71,19 +71,17 @@ impl Json {
         Some((rows.len(), ncols, out))
     }
 
-    /// Serialize (compact form).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Inf literal; degrade to null so the
+                    // output always re-parses (readers see `None` via
+                    // `as_f64`, which is the honest value here).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -113,6 +111,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`value.to_string()` comes via `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -320,6 +327,68 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Serialize with two-space indentation (diff-friendly; used for the
+/// repo-root `BENCH_repro.json`). Scalar-only arrays stay on one line.
+pub fn to_pretty_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out
+}
+
+fn write_pretty(v: &Json, indent: usize, out: &mut String) {
+    let pad = |out: &mut String, n: usize| {
+        for _ in 0..n {
+            out.push_str("  ");
+        }
+    };
+    match v {
+        Json::Arr(items) if items.is_empty() => out.push_str("[]"),
+        Json::Arr(items)
+            if items.iter().all(|i| !matches!(i, Json::Arr(_) | Json::Obj(_))) =>
+        {
+            // All-scalar array: compact form, written element-wise.
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                item.write(out);
+            }
+            out.push(']');
+        }
+        Json::Arr(items) => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                pad(out, indent + 1);
+                write_pretty(item, indent + 1, out);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(out, indent);
+            out.push(']');
+        }
+        Json::Obj(m) if m.is_empty() => out.push_str("{}"),
+        Json::Obj(m) => {
+            out.push_str("{\n");
+            for (i, (k, val)) in m.iter().enumerate() {
+                pad(out, indent + 1);
+                write_escaped(out, k);
+                out.push_str(": ");
+                write_pretty(val, indent + 1, out);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            pad(out, indent);
+            out.push('}');
+        }
+        scalar => out.push_str(&scalar.to_string()),
+    }
+}
+
 /// Build a Json object from key/value pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -385,5 +454,23 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let v = obj(vec![("x", Json::Num(f64::NAN))]);
+        assert_eq!(parse(&v.to_string()).unwrap().get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let v = parse(r#"{"a":[1,2,3],"b":{"c":"d","e":[{"f":1}]},"g":null}"#).unwrap();
+        let pretty = to_pretty_string(&v);
+        assert_eq!(parse(&pretty).unwrap(), v, "pretty form must re-parse");
+        assert!(pretty.contains("\n"), "expected multi-line output");
+        assert!(pretty.contains("\"a\": [1,2,3]"), "scalar arrays stay compact:\n{pretty}");
+        assert!(pretty.contains("  \"b\": {"), "objects indent:\n{pretty}");
     }
 }

@@ -1,7 +1,6 @@
-//! Timing and summary statistics: the bench-harness substrate (criterion is
-//! unavailable offline) plus latency histograms for the coordinator.
-
-use std::time::{Duration, Instant};
+//! Summary statistics: Welford moments and exact percentiles — the
+//! substrate under the coordinator's latency accounting and the
+//! `bench::harness` timing loops (criterion is unavailable offline).
 
 /// Online summary statistics over f64 samples (Welford).
 #[derive(Debug, Default, Clone)]
@@ -14,10 +13,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one sample in (Welford single-pass update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -27,90 +28,51 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Sample mean (0 when empty).
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Unbiased sample variance (0 with fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest sample seen (+inf when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest sample seen (-inf when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
 }
 
-/// Percentile over a sample buffer (exact, by sorting a copy).
+/// Percentile over a sample buffer (exact, by sorting a copy). Callers
+/// taking several percentiles of one buffer should sort once and use
+/// [`percentile_sorted`].
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
     let mut v = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-    v[rank]
+    percentile_sorted(&v, p)
 }
 
-/// Result of a benchmark run.
-#[derive(Debug, Clone)]
-pub struct BenchResult {
-    pub name: String,
-    pub iters: u64,
-    pub mean: Duration,
-    pub std: Duration,
-    pub min: Duration,
-    pub max: Duration,
-}
-
-impl BenchResult {
-    pub fn report(&self) -> String {
-        format!(
-            "{:<42} {:>10} iters  mean {:>12?}  std {:>10?}  min {:>12?}  max {:>12?}",
-            self.name, self.iters, self.mean, self.std, self.min, self.max
-        )
+/// Percentile over an already ascending-sorted buffer.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
     }
-}
-
-/// Criterion-lite: warm up, then time `f` for enough iterations to cover
-/// `measure` wall-clock, reporting per-iteration stats.
-pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
-    // Warm-up phase (JIT-free in rust, but fills caches and the PJRT pools).
-    let start = Instant::now();
-    let mut warm_iters = 0u64;
-    while start.elapsed() < warmup || warm_iters == 0 {
-        f();
-        warm_iters += 1;
-    }
-    // Measurement phase.
-    let mut s = Summary::new();
-    let phase = Instant::now();
-    while phase.elapsed() < measure || s.count() == 0 {
-        let t0 = Instant::now();
-        f();
-        s.push(t0.elapsed().as_secs_f64());
-    }
-    BenchResult {
-        name: name.to_string(),
-        iters: s.count(),
-        mean: Duration::from_secs_f64(s.mean()),
-        std: Duration::from_secs_f64(s.std()),
-        min: Duration::from_secs_f64(s.min()),
-        max: Duration::from_secs_f64(s.max()),
-    }
-}
-
-/// Quick single-shot timer.
-pub fn time_it<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
-    let t0 = Instant::now();
-    let r = f();
-    (r, t0.elapsed())
+    let rank = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank]
 }
 
 #[cfg(test)]
@@ -137,26 +99,7 @@ mod tests {
         assert_eq!(percentile(&v, 0.5), 50.0);
         assert_eq!(percentile(&v, 1.0), 100.0);
         assert!(percentile(&[], 0.5).is_nan());
-    }
-
-    #[test]
-    fn bench_runs() {
-        let r = bench(
-            "noop",
-            Duration::from_millis(1),
-            Duration::from_millis(5),
-            || {
-                std::hint::black_box(1 + 1);
-            },
-        );
-        assert!(r.iters > 0);
-        assert!(r.mean <= r.max);
-    }
-
-    #[test]
-    fn time_it_returns_value() {
-        let (v, d) = time_it(|| 42);
-        assert_eq!(v, 42);
-        assert!(d.as_nanos() > 0);
+        assert_eq!(percentile_sorted(&v, 0.95), 95.0);
+        assert!(percentile_sorted(&[], 0.5).is_nan());
     }
 }
