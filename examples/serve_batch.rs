@@ -5,15 +5,12 @@
 //!
 //!   cargo run --release --example serve_batch -- [dit|gmm] [n_requests]
 
-use parataa::coordinator::{
-    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
-};
+use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
 use parataa::figures::common::{ModelChoice, Scenario};
 use parataa::model::Cond;
 use parataa::schedule::SamplerKind;
 use parataa::solver::Method;
 use parataa::util::rng::Pcg64;
-use std::sync::Arc;
 
 fn main() {
     let model = std::env::args()
@@ -25,12 +22,17 @@ fn main() {
     let scenario = Scenario::new(model, SamplerKind::Ddim, steps);
     println!("serving {} requests on {}", n_requests, scenario.label());
 
-    // Stack: model -> dynamic batcher -> coordinator worker pool.
-    let batcher = Batcher::spawn(scenario.model.clone(), BatcherConfig::default());
-    let eps = Arc::new(batcher.eps_handle(scenario.model.dim(), "batched"));
+    // Stack: model -> coordinator round drivers. Every request is a
+    // resumable SolverSession; two driver threads carry all of them,
+    // merging their per-round eps batches into single device calls.
     let coord = Coordinator::start(
-        eps,
-        CoordinatorConfig { workers: 4, slot_budget: 4 * steps, ..Default::default() },
+        scenario.model.clone(),
+        CoordinatorConfig {
+            workers: 2,
+            drivers: 2,
+            slot_budget: 4 * steps,
+            ..Default::default()
+        },
     );
 
     let mut rng = Pcg64::seeded(7);

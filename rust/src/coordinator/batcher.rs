@@ -1,13 +1,20 @@
-//! Dynamic batcher — coalesces ε jobs across concurrent solves.
+//! Dynamic batcher — the public `EpsModel`-facing coalescing adapter.
 //!
 //! Each in-flight ParaTAA solve emits one ε job per parallel round (its
-//! active window). With many requests in flight, executing those jobs one
+//! active window). With many callers in flight, executing those jobs one
 //! by one wastes device occupancy; the batcher drains the job queue,
-//! groups jobs by guidance scale (a scalar graph input), concatenates their
-//! items, runs ONE backing `eps_batch` call per group, and scatters the
-//! results back. This is the cross-request analog of the paper's
-//! within-request window parallelism, and the moral equivalent of vLLM's
-//! continuous batching for diffusion rounds.
+//! lingers briefly for stragglers, groups jobs by guidance scale (a scalar
+//! graph input), concatenates their items, runs ONE backing `eps_batch`
+//! call per group, and scatters the results back.
+//!
+//! Since the session refactor the *coordinator* no longer sits behind this
+//! adapter: its round drivers merge the pending [`crate::solver::EpsBatch`]es
+//! of ready sessions deterministically at the round boundary
+//! (`coordinator/server.rs`), with no linger. The batcher remains the right
+//! tool for callers outside the coordinator — anything holding a plain
+//! [`EpsModel`] handle (blocking `solver::solve` loops, figure generators,
+//! user threads) that wants cross-caller coalescing without restructuring
+//! around sessions.
 
 use crate::model::{Cond, EpsModel};
 use crate::util::channel::{bounded, Receiver, Sender};
@@ -102,17 +109,19 @@ fn run_batcher(model: Arc<dyn EpsModel>, rx: Receiver<EpsJob>, cfg: BatcherConfi
         let mut items: usize = jobs[0].t.len();
         let deadline = std::time::Instant::now() + cfg.linger;
         while items < merge_cap {
-            let now = std::time::Instant::now();
-            let job = if now < deadline {
-                match rx.recv_timeout(deadline - now) {
+            // `checked_duration_since` (not `deadline - now`): the deadline
+            // may already have passed when the drain loop re-checks, and
+            // Instant subtraction panics on negative spans.
+            let left = deadline.checked_duration_since(std::time::Instant::now());
+            let job = match left {
+                Some(left) => match rx.recv_timeout(left) {
                     Ok(Some(j)) => j,
                     _ => break,
-                }
-            } else {
-                match rx.try_recv() {
+                },
+                None => match rx.try_recv() {
                     Some(j) => j,
                     None => break,
-                }
+                },
             };
             items += job.t.len();
             jobs.push(job);
@@ -223,6 +232,29 @@ mod tests {
         let mut direct = vec![0.0f32; 4 * 6];
         model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
         assert_eq!(via_batch, direct);
+    }
+
+    #[test]
+    fn expired_linger_deadline_does_not_panic() {
+        // A zero linger means the deadline has always already passed when
+        // the drain loop re-checks; the countdown must saturate, not panic.
+        let model = gmm();
+        let batcher = Batcher::spawn(
+            model.clone(),
+            BatcherConfig { linger: Duration::ZERO, ..Default::default() },
+        );
+        let handle = batcher.eps_handle(6, "gmm-batched");
+        let mut rng = Pcg64::seeded(9);
+        let xs: Vec<f32> = (0..3 * 6).map(|_| rng.next_f32()).collect();
+        let ts = vec![5usize, 400, 800];
+        let conds = vec![Cond::Class(0); 3];
+        for _ in 0..16 {
+            let mut out = vec![0.0f32; 3 * 6];
+            handle.eps_batch(&xs, &ts, &conds, 1.5, &mut out);
+            let mut direct = vec![0.0f32; 3 * 6];
+            model.eps_batch(&xs, &ts, &conds, 1.5, &mut direct);
+            assert_eq!(out, direct);
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Service metrics: counters + latency/round distributions, plus the
-//! per-device utilization/queue-depth breakdown of an attached
+//! Service metrics: counters + latency/round distributions, round-driver
+//! merge occupancy and sessions-in-flight gauges, plus the per-device
+//! utilization/queue-depth breakdown of an attached
 //! [`crate::runtime::DevicePool`].
 
 use crate::runtime::pool::{DeviceStat, PoolStats};
@@ -22,6 +23,18 @@ struct Inner {
     latencies_ms: Vec<f64>,
     rounds: Vec<f64>,
     nfes: Vec<f64>,
+    /// Round-driver threads configured (0 until a coordinator attaches).
+    drivers: u64,
+    /// Sessions currently between admission and finalization.
+    in_flight: u64,
+    /// High-water mark of `in_flight` — the "sustains more sessions than
+    /// driver threads" acceptance signal survives snapshot timing.
+    peak_in_flight: u64,
+    /// Merged round calls driven so far, plus occupancy accumulators.
+    rounds_driven: u64,
+    merged_sessions: u64,
+    merged_rows: u64,
+    merged_groups: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -37,6 +50,21 @@ pub struct MetricsSnapshot {
     pub latency_ms_p99: f64,
     pub mean_rounds: f64,
     pub mean_nfe: f64,
+    /// Round-driver threads carrying the session run queue.
+    pub driver_threads: u64,
+    /// Sessions in flight at snapshot time.
+    pub sessions_in_flight: u64,
+    /// High-water mark of concurrent sessions.
+    pub peak_sessions_in_flight: u64,
+    /// Merged round calls executed by the drivers.
+    pub rounds_driven: u64,
+    /// Mean sessions merged per round call (the occupancy the refactor
+    /// buys: > 1 means cross-request batching is happening).
+    pub merge_sessions_mean: f64,
+    /// Mean window rows per merged round call.
+    pub merge_rows_mean: f64,
+    /// Mean guidance groups (device calls) per round.
+    pub merge_groups_mean: f64,
     /// Per-device pool breakdown (empty unless a pool is attached).
     pub devices: Vec<DeviceStat>,
 }
@@ -77,6 +105,40 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
+    /// Record the round-driver pool size (reported in snapshots).
+    pub fn set_drivers(&self, drivers: usize) {
+        self.inner.lock().unwrap().drivers = drivers as u64;
+    }
+
+    /// A session was admitted (between slot grant and finalization).
+    pub fn session_started(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.in_flight += 1;
+        m.peak_in_flight = m.peak_in_flight.max(m.in_flight);
+    }
+
+    /// A session was finalized (response sent, slots released).
+    pub fn session_finished(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.in_flight = m.in_flight.saturating_sub(1);
+    }
+
+    /// Sessions currently in flight (the Coordinator's shutdown path waits
+    /// for this to reach zero before closing the run queue).
+    pub fn sessions_in_flight(&self) -> usize {
+        self.inner.lock().unwrap().in_flight as usize
+    }
+
+    /// One merged round call: `sessions` sessions contributed `rows` window
+    /// rows across `groups` guidance groups (device calls).
+    pub fn record_round(&self, sessions: usize, rows: usize, groups: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.rounds_driven += 1;
+        m.merged_sessions += sessions as u64;
+        m.merged_rows += rows as u64;
+        m.merged_groups += groups as u64;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed();
@@ -87,6 +149,9 @@ impl Metrics {
         // clone and sort per call, tripling the work under the lock).
         let mut lat = m.latencies_ms.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let per_round = |sum: u64| {
+            if m.rounds_driven == 0 { 0.0 } else { sum as f64 / m.rounds_driven as f64 }
+        };
         MetricsSnapshot {
             completed: m.completed,
             failed: m.failed,
@@ -98,6 +163,13 @@ impl Metrics {
             latency_ms_p99: percentile_sorted(&lat, 0.99),
             mean_rounds: mean(&m.rounds),
             mean_nfe: mean(&m.nfes),
+            driver_threads: m.drivers,
+            sessions_in_flight: m.in_flight,
+            peak_sessions_in_flight: m.peak_in_flight,
+            rounds_driven: m.rounds_driven,
+            merge_sessions_mean: per_round(m.merged_sessions),
+            merge_rows_mean: per_round(m.merged_rows),
+            merge_groups_mean: per_round(m.merged_groups),
             devices: self
                 .pool
                 .lock()
@@ -128,6 +200,16 @@ impl MetricsSnapshot {
             ("latency_ms_p99", Json::Num(self.latency_ms_p99)),
             ("mean_rounds", Json::Num(self.mean_rounds)),
             ("mean_nfe", Json::Num(self.mean_nfe)),
+            ("driver_threads", Json::Num(self.driver_threads as f64)),
+            ("sessions_in_flight", Json::Num(self.sessions_in_flight as f64)),
+            (
+                "peak_sessions_in_flight",
+                Json::Num(self.peak_sessions_in_flight as f64),
+            ),
+            ("rounds_driven", Json::Num(self.rounds_driven as f64)),
+            ("merge_sessions_mean", Json::Num(self.merge_sessions_mean)),
+            ("merge_rows_mean", Json::Num(self.merge_rows_mean)),
+            ("merge_groups_mean", Json::Num(self.merge_groups_mean)),
             (
                 "devices",
                 Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
@@ -149,6 +231,19 @@ impl MetricsSnapshot {
             self.mean_rounds,
             self.mean_nfe,
         );
+        if self.rounds_driven > 0 {
+            out.push_str(&format!(
+                "\n  drivers={} rounds driven={} | merge occupancy μ={:.1} sessions \
+                 / {:.0} rows / {:.1} groups | sessions in flight now={} peak={}",
+                self.driver_threads,
+                self.rounds_driven,
+                self.merge_sessions_mean,
+                self.merge_rows_mean,
+                self.merge_groups_mean,
+                self.sessions_in_flight,
+                self.peak_sessions_in_flight,
+            ));
+        }
         for s in &self.devices {
             out.push_str(&format!("\n  {s}"));
         }
@@ -173,6 +268,30 @@ mod tests {
         assert!((s.mean_rounds - 8.0).abs() < 1e-9);
         assert!(s.latency_ms_p50 >= 10.0 && s.latency_ms_p99 <= 30.5);
         assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn session_and_round_gauges_aggregate() {
+        let m = Metrics::new();
+        m.set_drivers(2);
+        m.session_started();
+        m.session_started();
+        m.session_started();
+        m.session_finished();
+        m.record_round(3, 75, 1);
+        m.record_round(1, 25, 1);
+        let s = m.snapshot();
+        assert_eq!(s.driver_threads, 2);
+        assert_eq!(s.sessions_in_flight, 2);
+        assert_eq!(s.peak_sessions_in_flight, 3);
+        assert_eq!(s.rounds_driven, 2);
+        assert!((s.merge_sessions_mean - 2.0).abs() < 1e-9);
+        assert!((s.merge_rows_mean - 50.0).abs() < 1e-9);
+        assert!((s.merge_groups_mean - 1.0).abs() < 1e-9);
+        assert!(s.report().contains("merge occupancy"), "report: {}", s.report());
+        let j = s.to_json();
+        assert_eq!(j.get("peak_sessions_in_flight").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("rounds_driven").and_then(|v| v.as_f64()), Some(2.0));
     }
 
     #[test]

@@ -2,20 +2,26 @@
 //!
 //! ParaTAA turns one sampling request into a *sequence of parallel rounds*,
 //! each of which is a batched ε_θ evaluation. A serving deployment has many
-//! such requests in flight; this layer provides what the paper's multi-GPU
-//! testbed provided implicitly:
+//! such requests in flight; this layer carries each of them as a resumable
+//! [`crate::solver::SolverSession`] and drives all of them, round by round,
+//! from a small fixed pool of driver threads:
 //!
 //! - [`request`]  — request/response types and handles;
-//! - [`batcher`]  — dynamic batching: ε jobs from concurrent solves are
-//!   coalesced into single device calls (the cross-request analog of the
-//!   paper's within-request window parallelism);
-//! - [`scheduler`] — a slot budget bounding total in-flight window rows
+//! - [`server`]   — admission (intake) + the event-driven round drivers:
+//!   ready sessions are pulled from a run queue, their pending ε batches
+//!   merged deterministically by guidance group into one pool call per
+//!   round, results scattered, live sessions requeued — so in-flight
+//!   requests are bounded by the slot budget, not by thread count;
+//! - [`scheduler`] — the slot budget bounding total in-flight window rows
 //!   (the "GPU memory" the paper's window size w trades against, §5.2);
 //! - [`cache`]    — trajectory cache: solved trajectories are kept and
 //!   donated as initializations for similar conditions (§4.2 as a serving
 //!   feature — the paper's "users adjust prompts" scenario);
-//! - [`metrics`]  — latency/throughput/round accounting;
-//! - [`server`]   — worker pool tying it together.
+//! - [`batcher`]  — the public `EpsModel`-facing coalescing adapter for
+//!   callers outside the coordinator (the internal path merges at the
+//!   round boundary instead);
+//! - [`metrics`]  — latency/throughput/round accounting plus merge
+//!   occupancy and sessions-in-flight gauges.
 
 pub mod batcher;
 pub mod cache;
@@ -28,5 +34,5 @@ pub use batcher::{BatchedEps, Batcher, BatcherConfig};
 pub use cache::TrajectoryCache;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{SampleRequest, SampleResponse, SamplerSpec};
-pub use scheduler::SlotBudget;
+pub use scheduler::{OwnedSlotGuard, SlotBudget};
 pub use server::{Coordinator, CoordinatorConfig};

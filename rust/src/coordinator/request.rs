@@ -79,7 +79,11 @@ impl SampleRequest {
             cfg.k = steps; // Shih et al. baseline default
         }
         if let Some(w) = self.window {
-            cfg.window = w;
+            // Clamp like the solver session will, so the coordinator's
+            // slot-budget footprint (window rows held per session) agrees
+            // with what the solve actually uses. min/max rather than
+            // `clamp` — clamp(1, 0) panics on a degenerate steps == 0.
+            cfg.window = w.min(steps).max(1);
         }
         if let Some(s) = self.max_rounds {
             cfg.s_max = s;

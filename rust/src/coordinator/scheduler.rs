@@ -8,7 +8,7 @@
 //! stream of small ones.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 struct State {
     available: usize,
@@ -28,6 +28,21 @@ pub struct SlotBudget {
 pub struct SlotGuard<'a> {
     budget: &'a SlotBudget,
     amount: usize,
+}
+
+/// Like [`SlotGuard`], but holds the budget by `Arc`, so it can live inside
+/// long-lived session state that migrates between round-driver threads
+/// (a borrowed guard would tie the session to one stack frame).
+pub struct OwnedSlotGuard {
+    budget: Arc<SlotBudget>,
+    amount: usize,
+}
+
+impl OwnedSlotGuard {
+    /// Slots held by this guard.
+    pub fn amount(&self) -> usize {
+        self.amount
+    }
 }
 
 impl SlotBudget {
@@ -52,6 +67,22 @@ impl SlotBudget {
     /// Acquire `amount` slots (clamped to the total so oversized requests
     /// still run — alone). Blocks FIFO until granted.
     pub fn acquire(&self, amount: usize) -> SlotGuard<'_> {
+        let amount = self.acquire_raw(amount);
+        SlotGuard { budget: self, amount }
+    }
+
+    /// [`acquire`](Self::acquire) returning an [`OwnedSlotGuard`] that can
+    /// be stored in session state outliving this call frame. An associated
+    /// fn (not a method): `&Arc<Self>` receivers are invalid on stable
+    /// Rust (E0307), so call as `SlotBudget::acquire_owned(&budget, n)`.
+    pub fn acquire_owned(this: &Arc<SlotBudget>, amount: usize) -> OwnedSlotGuard {
+        let amount = this.acquire_raw(amount);
+        OwnedSlotGuard { budget: this.clone(), amount }
+    }
+
+    /// The FIFO wait loop shared by both guard flavors; returns the
+    /// (clamped) amount actually granted.
+    fn acquire_raw(&self, amount: usize) -> usize {
         let amount = amount.clamp(1, self.total);
         let mut st = self.state.lock().unwrap();
         let ticket = st.next_ticket;
@@ -64,18 +95,29 @@ impl SlotBudget {
                 st.available -= amount;
                 // Wake the next ticket in case it also fits.
                 self.cv.notify_all();
-                return SlotGuard { budget: self, amount };
+                return amount;
             }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    fn release(&self, amount: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.available += amount;
+        drop(st);
+        self.cv.notify_all();
     }
 }
 
 impl Drop for SlotGuard<'_> {
     fn drop(&mut self) {
-        let mut st = self.budget.state.lock().unwrap();
-        st.available += self.amount;
-        self.budget.cv.notify_all();
+        self.budget.release(self.amount);
+    }
+}
+
+impl Drop for OwnedSlotGuard {
+    fn drop(&mut self) {
+        self.budget.release(self.amount);
     }
 }
 
@@ -94,6 +136,17 @@ mod tests {
             assert_eq!(b.available(), 3);
         }
         assert_eq!(b.available(), 10);
+    }
+
+    #[test]
+    fn owned_guard_releases_on_drop_across_threads() {
+        let b = Arc::new(SlotBudget::new(8));
+        let g = SlotBudget::acquire_owned(&b, 5);
+        assert_eq!(g.amount(), 5);
+        assert_eq!(b.available(), 3);
+        let t = std::thread::spawn(move || drop(g));
+        t.join().unwrap();
+        assert_eq!(b.available(), 8);
     }
 
     #[test]

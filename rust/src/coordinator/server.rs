@@ -1,34 +1,61 @@
-//! The coordinator server: request queue → worker pool → parallel solves.
+//! The coordinator server: event-driven round drivers over resumable
+//! [`SolverSession`]s.
 //!
 //! Wiring (see module docs in `coordinator/mod.rs`):
 //!
 //! ```text
-//!   submit() ──► bounded queue ──► worker pool ──► solver::solve
-//!                                   │  ▲               │ one ε job / round
-//!                                   │  └─ slot budget  ▼
-//!                                   │            dynamic batcher ──► device
-//!                                   └─ trajectory cache (warm starts)
+//!   submit() ──► job queue ──► intake (admission: cache lookup, FIFO slot
+//!                  │            budget acquire, session construction)
+//!                  │                       │
+//!                  │                       ▼
+//!                  │                  run queue ◄───────────────┐
+//!                  │                       │                    │ requeue
+//!                  │                       ▼                    │ live
+//!                  │              round drivers (fixed pool):   │ sessions
+//!                  │              pull ready sessions, merge    │
+//!                  │              pending ε batches by guidance─┘
+//!                  │              group, ONE pool call / group,
+//!                  │              scatter, resume
+//!                  └─ trajectory cache (warm starts) ◄─ finalize (reply)
 //! ```
+//!
+//! In-flight sessions are bounded by the **slot budget** (admission blocks
+//! in the intake, never in a driver), not by thread count: a single round
+//! driver carries hundreds of concurrent solves, advancing each one round
+//! at a time. Batch merging happens deterministically at the round boundary
+//! — sessions popped this round are grouped by guidance scale (a scalar
+//! graph input, so merging is bit-exact) in pop order — replacing the
+//! latency-linger heuristic the internal path previously inherited from
+//! [`super::batcher`]; the batcher remains as the public `EpsModel`-facing
+//! adapter for callers outside the coordinator.
 
 use super::cache::{CachedTrajectory, TrajectoryCache};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{SampleRequest, SampleResponse};
-use super::scheduler::SlotBudget;
-use crate::model::EpsModel;
+use super::scheduler::{OwnedSlotGuard, SlotBudget};
+use crate::model::{Cond, EpsModel};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
-use crate::solver::{self, init::init_from_trajectory, Problem};
+use crate::solver::{init::init_from_trajectory, Problem, SolverSession};
 use crate::util::channel::{bounded, Receiver, Sender};
 use crate::util::error::{anyhow, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Coordinator tuning.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker threads (concurrent solves).
+    /// Intake (admission) threads: request parsing, cache lookup, slot
+    /// acquisition, session construction. Historically these were
+    /// thread-per-solve workers; concurrency is now bounded by
+    /// `slot_budget`, so a couple of intakes saturate admission.
     pub workers: usize,
-    /// Total window-row slots in flight (the "device memory" budget).
+    /// Round-driver threads: each pulls ready sessions from the run queue,
+    /// merges their pending ε batches, and submits one pool call per
+    /// guidance group per round.
+    pub drivers: usize,
+    /// Total window-row slots in flight (the "device memory" budget). This
+    /// — not `workers` — bounds concurrent sessions.
     pub slot_budget: usize,
     /// Request queue capacity (backpressure bound).
     pub queue_capacity: usize,
@@ -50,6 +77,7 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             workers: 4,
+            drivers: 2,
             slot_budget: 400,
             queue_capacity: 128,
             cache_capacity: 64,
@@ -65,6 +93,67 @@ struct Job {
     req: SampleRequest,
     reply: Sender<Result<SampleResponse>>,
     enqueued: Instant,
+}
+
+/// Session accounting with panic safety. Created at the top of admission;
+/// on drop it records the request as failed unless
+/// [`defuse`](Self::defuse) ran first (successful finalize), so a session
+/// dropped on any abnormal path (an admission panic, a solve panic
+/// unwinding a round, a closed run queue) keeps `completed + failed`
+/// consistent instead of vanishing from the counters. The in-flight gauge
+/// is separate: [`mark_started`](Self::mark_started) fires at slot grant,
+/// so the gauge counts only slot-holding sessions (the property the
+/// `peak > driver_threads` checks rely on), not admissions still blocked
+/// on the budget.
+struct SessionGuard {
+    metrics: Arc<Metrics>,
+    started: bool,
+    finalized: bool,
+}
+
+impl SessionGuard {
+    fn new(metrics: Arc<Metrics>) -> SessionGuard {
+        SessionGuard { metrics, started: false, finalized: false }
+    }
+
+    /// The session acquired its slots: count it into the in-flight gauge.
+    fn mark_started(&mut self) {
+        self.metrics.session_started();
+        self.started = true;
+    }
+
+    /// The request completed normally; drop only clears the gauge.
+    fn defuse(&mut self) {
+        self.finalized = true;
+    }
+}
+
+impl Drop for SessionGuard {
+    fn drop(&mut self) {
+        if !self.finalized {
+            self.metrics.record_failure();
+        }
+        if self.started {
+            self.metrics.session_finished();
+        }
+    }
+}
+
+/// One admitted request: a resumable session plus everything needed to
+/// finalize it. Owned by exactly one round driver at a time; between
+/// rounds it lives on the run queue.
+struct ActiveSession {
+    session: SolverSession,
+    req: SampleRequest,
+    reply: Sender<Result<SampleResponse>>,
+    enqueued: Instant,
+    warm: bool,
+    scenario: String,
+    /// Window-row slots held for the session's whole lifetime. Declared
+    /// before `in_flight` so a plain drop releases budget first, then
+    /// clears the gauge the shutdown path waits on.
+    slots: OwnedSlotGuard,
+    in_flight: SessionGuard,
 }
 
 /// Handle to an in-flight request.
@@ -84,51 +173,103 @@ impl ResponseHandle {
 /// The sampling service.
 pub struct Coordinator {
     tx: Sender<Job>,
+    /// Kept to close the run queue at shutdown (the drivers' exit signal).
+    run_tx: Sender<ActiveSession>,
     metrics: Arc<Metrics>,
     cache: Arc<TrajectoryCache>,
     budget: Arc<SlotBudget>,
-    workers: Vec<JoinHandle<()>>,
+    intakes: Vec<JoinHandle<()>>,
+    drivers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the service over a model (direct or batcher-wrapped).
+    /// Start the service over a model (typically a pooled handle; the
+    /// round drivers merge ε batches internally, so no batcher is needed
+    /// on this path).
     pub fn start(model: Arc<dyn EpsModel>, cfg: CoordinatorConfig) -> Self {
-        let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
+        let (tx, job_rx) = bounded::<Job>(cfg.queue_capacity);
         let metrics = Arc::new(Metrics::new());
         let cache = Arc::new(TrajectoryCache::new(cfg.cache_capacity, cfg.n_components));
         let budget = Arc::new(SlotBudget::new(cfg.slot_budget * cfg.devices.max(1)));
         let schedule = Arc::new(NoiseSchedule::new(BetaSchedule::Linear, 1000));
-        let workers = (0..cfg.workers.max(1))
-            .map(|i| {
-                let rx = rx.clone();
-                let model = model.clone();
-                let metrics = metrics.clone();
-                let cache = cache.clone();
-                let budget = budget.clone();
-                let schedule = schedule.clone();
-                let cfg = cfg.clone();
+        let n_intakes = cfg.workers.max(1);
+        let n_drivers = cfg.drivers.max(1);
+        metrics.set_drivers(n_drivers);
+
+        // Sized so a requeue can never block: every in-flight session holds
+        // at least one budget slot, so sessions ≤ budget.total() < capacity.
+        let (run_tx, run_rx) =
+            bounded::<ActiveSession>(budget.total() + n_intakes + n_drivers);
+
+        let mut intakes = Vec::with_capacity(n_intakes);
+        for i in 0..n_intakes {
+            let job_rx = job_rx.clone();
+            let run_tx = run_tx.clone();
+            let model = model.clone();
+            let metrics = metrics.clone();
+            let cache = cache.clone();
+            let budget = budget.clone();
+            let schedule = schedule.clone();
+            let cfg = cfg.clone();
+            intakes.push(
                 std::thread::Builder::new()
-                    .name(format!("parataa-worker-{i}"))
+                    .name(format!("parataa-intake-{i}"))
                     .spawn(move || {
-                        while let Some(job) = rx.recv() {
-                            let res =
-                                handle_job(&job, &*model, &schedule, &cache, &budget, &cfg);
-                            match &res {
-                                Ok(r) => metrics.record_success(
-                                    r.latency,
-                                    r.rounds,
-                                    r.nfe,
-                                    r.warm_started,
-                                ),
-                                Err(_) => metrics.record_failure(),
+                        while let Some(job) = job_rx.recv() {
+                            // A malformed request must fail itself, not
+                            // kill admission: contain panics (mirroring
+                            // the driver path) and answer via a clone of
+                            // the reply handle. The session guard — made
+                            // first thing in admit() — records exactly
+                            // one failure for the panicked request.
+                            let reply = job.reply.clone();
+                            let admitted =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    admit(
+                                        job, &*model, &schedule, &cache, &budget, &metrics,
+                                        &cfg,
+                                    )
+                                }));
+                            let active = match admitted {
+                                Ok(active) => active,
+                                Err(_) => {
+                                    eprintln!(
+                                        "parataa: admission panicked; failing the request"
+                                    );
+                                    let _ = reply
+                                        .send(Err(anyhow!("invalid request: admission failed")));
+                                    continue;
+                                }
+                            };
+                            if let Err(back) = run_tx.send(active) {
+                                // Drop the session first: its guard
+                                // records the failure and frees the slots
+                                // before the error becomes observable.
+                                let ActiveSession { reply, .. } = back.0;
+                                let _ = reply
+                                    .send(Err(anyhow!("coordinator run queue closed")));
                             }
-                            let _ = job.reply.send(res);
                         }
                     })
-                    .expect("spawn coordinator worker")
-            })
-            .collect();
-        Coordinator { tx, metrics, cache, budget, workers }
+                    .expect("spawn coordinator intake"),
+            );
+        }
+        let mut drivers = Vec::with_capacity(n_drivers);
+        for i in 0..n_drivers {
+            let run_rx = run_rx.clone();
+            let run_tx = run_tx.clone();
+            let model = model.clone();
+            let metrics = metrics.clone();
+            let cache = cache.clone();
+            let cfg = cfg.clone();
+            drivers.push(
+                std::thread::Builder::new()
+                    .name(format!("parataa-driver-{i}"))
+                    .spawn(move || run_driver(run_rx, run_tx, model, metrics, cache, cfg))
+                    .expect("spawn coordinator round driver"),
+            );
+        }
+        Coordinator { tx, run_tx, metrics, cache, budget, intakes, drivers }
     }
 
     /// Enqueue a request (blocking if the queue is full — backpressure).
@@ -168,22 +309,41 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
+        // Stop admission: intakes drain whatever is queued, then exit.
         self.tx.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for t in self.intakes.drain(..) {
+            let _ = t.join();
+        }
+        // Admission is over, so the in-flight gauge is now monotone
+        // non-increasing; wait for the drivers to finalize the stragglers,
+        // then close the run queue — the drivers' (otherwise fully
+        // blocking) recv() returns None and they exit. No idle polling
+        // anywhere: this 1 ms spin exists only during teardown.
+        while self.metrics.sessions_in_flight() > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.run_tx.close();
+        for t in self.drivers.drain(..) {
+            let _ = t.join();
         }
     }
 }
 
-fn handle_job(
-    job: &Job,
+/// Admission: build the problem (with a §4.2 warm start when the cache has
+/// a donor), block FIFO on the slot budget, and construct the session.
+fn admit(
+    job: Job,
     model: &dyn EpsModel,
     schedule: &NoiseSchedule,
     cache: &TrajectoryCache,
-    budget: &SlotBudget,
+    budget: &Arc<SlotBudget>,
+    metrics: &Arc<Metrics>,
     cfg: &CoordinatorConfig,
-) -> Result<SampleResponse> {
-    let req = &job.req;
+) -> ActiveSession {
+    let Job { req, reply, enqueued } = job;
+    // Guard first: if anything below panics (malformed request), the
+    // unwinding guard records exactly one failure.
+    let mut in_flight = SessionGuard::new(metrics.clone());
     let steps = req.sampler.steps;
     let coeffs = SamplerCoeffs::new(schedule, req.sampler.kind, steps);
     let solver_cfg = req.solver_config();
@@ -201,28 +361,199 @@ fn handle_job(
         }
     }
 
-    // Hold window-row slots for the duration of the solve.
-    let _slots = budget.acquire(solver_cfg.window.min(steps));
-    let result = solver::solve(&problem, &solver_cfg);
+    // Hold window-row slots for the session's lifetime. Blocking here — in
+    // the intake, never in a round driver — is what bounds in-flight
+    // sessions by the budget while rounds keep flowing.
+    let slots = SlotBudget::acquire_owned(budget, solver_cfg.window.min(steps));
+    in_flight.mark_started();
+    let session = SolverSession::new(&problem, &solver_cfg);
+    ActiveSession { session, req, reply, enqueued, warm, scenario, slots, in_flight }
+}
 
-    if req.use_trajectory_cache && result.converged {
+/// A round-driver thread: pop every ready session, drive them one merged
+/// round, requeue the survivors. Blocks in `recv()` while idle — no
+/// polling; the Coordinator's Drop closes the run queue (after admission
+/// stops and in-flight reaches zero), which is the exit signal.
+fn run_driver(
+    run_rx: Receiver<ActiveSession>,
+    // Each driver keeps a sender so it can requeue live sessions; shutdown
+    // is therefore an explicit close, not sender disconnection.
+    run_tx: Sender<ActiveSession>,
+    model: Arc<dyn EpsModel>,
+    metrics: Arc<Metrics>,
+    cache: Arc<TrajectoryCache>,
+    cfg: CoordinatorConfig,
+) {
+    while let Some(first) = run_rx.recv() {
+        let mut round = vec![first];
+        round.extend(run_rx.drain_up_to(usize::MAX));
+        // drive_round confines solve/backend panics to the poisoned
+        // session or guidance group; this outer catch is the backstop for
+        // the finalize/requeue path, so a panic there can neither take
+        // down the driver nor hang shutdown (dropped sessions' guards
+        // release slots and record the failures).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            drive_round(round, &*model, &cache, &metrics, &run_tx, &cfg)
+        }));
+        if outcome.is_err() {
+            eprintln!("parataa: a round panicked outside the solves; its requests were failed");
+        }
+    }
+}
+
+/// Drive one merged parallel round over `round`'s sessions.
+fn drive_round(
+    mut round: Vec<ActiveSession>,
+    model: &dyn EpsModel,
+    cache: &TrajectoryCache,
+    metrics: &Metrics,
+    run_tx: &Sender<ActiveSession>,
+    cfg: &CoordinatorConfig,
+) {
+    // Sessions that arrived already done (e.g. `max_rounds: 0`) finalize
+    // without a device call.
+    let mut i = 0;
+    while i < round.len() {
+        if round[i].session.is_done() {
+            finalize(round.swap_remove(i), cache, metrics, cfg);
+        } else {
+            i += 1;
+        }
+    }
+    if round.is_empty() {
+        return;
+    }
+
+    let d = model.dim();
+    // Deterministic merge: group by guidance bits in pop order (guidance is
+    // a scalar graph input, so per-row results are bit-identical to a solo
+    // call; there is no linger — whatever is ready now rides this round).
+    let mut groups: Vec<(u32, Vec<usize>)> = Vec::new();
+    for (i, s) in round.iter().enumerate() {
+        let key = s.session.guidance().to_bits();
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => v.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+
+    let n_groups = groups.len();
+    let mut total_rows = 0usize;
+    let mut poisoned = vec![false; round.len()];
+    let mut x: Vec<f32> = Vec::new();
+    let mut t: Vec<usize> = Vec::new();
+    let mut conds: Vec<Cond> = Vec::new();
+    let mut lens: Vec<usize> = Vec::new();
+    let mut out: Vec<f32> = Vec::new();
+    for (gbits, idxs) in &groups {
+        let guidance = f32::from_bits(*gbits);
+        x.clear();
+        t.clear();
+        conds.clear();
+        lens.clear();
+        for &i in idxs {
+            let b = round[i].session.pending().expect("live session has a pending batch");
+            x.extend_from_slice(b.x);
+            t.extend_from_slice(b.t);
+            conds.extend_from_slice(b.conds);
+            lens.push(b.len());
+        }
+        let rows = t.len();
+        total_rows += rows;
+        out.resize(rows * d, 0.0);
+        // ONE merged device call per guidance group per round; the pool
+        // behind `model` shards it across devices. A panicking backend
+        // poisons only this guidance group, not the whole round.
+        let call = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.eps_batch(&x, &t, &conds, guidance, &mut out);
+        }));
+        if call.is_err() {
+            for &i in idxs {
+                poisoned[i] = true;
+            }
+            continue;
+        }
+        // Scatter results back: each session advances exactly one round.
+        // A panicking update rule poisons only its own session.
+        let mut off = 0usize;
+        for (&i, &n) in idxs.iter().zip(lens.iter()) {
+            let slice = &out[off * d..(off + n) * d];
+            off += n;
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                round[i].session.resume(slice);
+            }));
+            if stepped.is_err() {
+                poisoned[i] = true;
+            }
+        }
+    }
+    metrics.record_round(round.len(), total_rows, n_groups);
+
+    // Poisoned sessions fail with an accurate error (their guards record
+    // the failure on drop); finished sessions finalize; live ones rejoin
+    // the back of the run queue (round-robin — no session can starve).
+    for (i, s) in round.into_iter().enumerate() {
+        if poisoned[i] {
+            eprintln!("parataa: a solve panicked; failing its request");
+            // Drop everything but the reply first, so the failure count,
+            // slots and gauge are settled before the caller can observe
+            // the error (mirroring finalize's ordering for successes).
+            let ActiveSession { reply, .. } = s;
+            let _ = reply.send(Err(anyhow!("solve panicked during a parallel round")));
+        } else if s.session.is_done() {
+            finalize(s, cache, metrics, cfg);
+        } else if let Err(back) = run_tx.send(s) {
+            // Unreachable in practice: the queue is sized for every
+            // admissible session and only closes once in-flight is zero.
+            // The dropped session's guard records the failure (settled,
+            // as above, before the reply is visible).
+            let ActiveSession { reply, .. } = back.0;
+            let _ = reply.send(Err(anyhow!("coordinator run queue closed")));
+        }
+    }
+}
+
+/// Send the response, populate the trajectory cache, release the slots.
+fn finalize(
+    active: ActiveSession,
+    cache: &TrajectoryCache,
+    metrics: &Metrics,
+    cfg: &CoordinatorConfig,
+) {
+    let ActiveSession { session, req, reply, enqueued, warm, scenario, slots, mut in_flight } =
+        active;
+    let cache_xi = if req.use_trajectory_cache && session.converged() {
+        Some(session.xi().clone())
+    } else {
+        None
+    };
+    let result = session.finish();
+    if let Some(xi) = cache_xi {
         cache.insert(CachedTrajectory {
             scenario,
             seed: req.seed,
             weights: req.cond.to_weights(cfg.n_components),
             trajectory: result.xs.clone(),
-            xi: problem.xi.clone(),
+            xi,
         });
     }
-
-    Ok(SampleResponse {
+    let resp = SampleResponse {
         sample: result.xs.row(0).to_vec(),
         rounds: result.iterations,
         nfe: result.total_nfe,
         converged: result.converged,
         warm_started: warm,
-        latency: job.enqueued.elapsed(),
-    })
+        latency: enqueued.elapsed(),
+    };
+    // Return budget and clear the in-flight gauge before replying (the
+    // historical worker path released its slots before the reply, and a
+    // caller that has observed the response must see both already
+    // settled). `defuse` first: this finalize is a success, not a failure.
+    drop(slots);
+    metrics.record_success(resp.latency, resp.rounds, resp.nfe, resp.warm_started);
+    in_flight.defuse();
+    drop(in_flight);
+    let _ = reply.send(Ok(resp));
 }
 
 #[cfg(test)]
@@ -257,6 +588,7 @@ mod tests {
         assert_eq!(resp.sample.len(), 8);
         let m = coord.metrics();
         assert_eq!(m.completed, 1);
+        assert!(m.rounds_driven >= resp.rounds as u64);
     }
 
     #[test]
@@ -292,6 +624,87 @@ mod tests {
         assert_eq!(coord.slots_available(), 48);
     }
 
+    /// Sessions merged into shared rounds must produce exactly the result a
+    /// solo blocking solve produces — guidance-grouped merging is bit-exact.
+    #[test]
+    fn merged_rounds_are_bit_identical_to_solo_solves() {
+        let model = gmm_model();
+        let coord = Coordinator::start(
+            model.clone(),
+            CoordinatorConfig { workers: 2, drivers: 2, ..Default::default() },
+        );
+        let handles: Vec<_> = (0..6).map(|i| coord.submit(basic_req(40 + i))).collect();
+        let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        for (i, resp) in responses.iter().enumerate() {
+            let req = basic_req(40 + i as u64);
+            let p = Problem::new(&coeffs, &*model, req.cond.clone(), req.seed);
+            let solo = crate::solver::solve(&p, &req.solver_config());
+            assert_eq!(resp.sample, solo.xs.row(0).to_vec(), "request {i}");
+            assert_eq!(resp.rounds, solo.iterations, "request {i}");
+            assert_eq!(resp.nfe, solo.total_nfe, "request {i}");
+        }
+    }
+
+    /// One round driver fairly carries many sessions with heterogeneous
+    /// window sizes: nobody starves, everyone converges, and the in-flight
+    /// high-water mark exceeds the driver-thread count.
+    #[test]
+    fn one_driver_carries_many_sessions_fairly() {
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 1, drivers: 1, ..Default::default() },
+        );
+        let windows = [3usize, 16, 5, 9, 12, 4, 7, 16];
+        let handles: Vec<_> = windows
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let mut r = basic_req(60 + i as u64);
+                r.window = Some(w);
+                r.max_rounds = Some(400); // small windows need many rounds
+                coord.submit(r)
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait().unwrap();
+            assert!(r.converged, "session {i} (window {}) did not converge", windows[i]);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, windows.len() as u64);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.driver_threads, 1);
+        assert!(
+            m.peak_sessions_in_flight > m.driver_threads,
+            "peak in-flight {} should exceed the {} driver thread(s)",
+            m.peak_sessions_in_flight,
+            m.driver_threads
+        );
+        assert_eq!(m.sessions_in_flight, 0, "everything finalized");
+        assert!(m.rounds_driven > 0);
+        assert!(m.merge_rows_mean > 0.0);
+    }
+
+    /// A malformed request (steps == 0 panics inside admission) must fail
+    /// itself — accurately counted — without killing the intake thread.
+    #[test]
+    fn malformed_request_fails_without_killing_admission() {
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 1, ..Default::default() },
+        );
+        let bad = SampleRequest::parataa(Cond::Class(0), 1, SamplerSpec::ddim(0));
+        assert!(coord.sample(bad).is_err(), "steps == 0 must fail, not hang");
+        // The same (sole) intake thread must still admit good requests.
+        let good = coord.sample(basic_req(2)).unwrap();
+        assert!(good.converged);
+        let m = coord.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.sessions_in_flight, 0);
+    }
+
     #[test]
     fn warm_start_reduces_rounds() {
         let coord = Coordinator::start(gmm_model(), CoordinatorConfig::default());
@@ -319,6 +732,6 @@ mod tests {
         for h in handles {
             assert!(h.wait().unwrap().converged);
         }
-        drop(coord); // shut down workers before the batcher drops
+        drop(coord); // shut down drivers before the batcher drops
     }
 }

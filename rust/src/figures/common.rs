@@ -128,7 +128,10 @@ pub struct SnapshotSolve {
 }
 
 /// Run a solve capturing per-round x₀ snapshots (for quality-vs-rounds
-/// curves — the Fig. 3/4/14 x-axis).
+/// curves — the Fig. 3/4/14 x-axis). The observer fires once per parallel
+/// round — `solve_with` is itself a thin wrapper over
+/// [`solver::SolverSession`], so the snapshot boundary and the session's
+/// `resume()` boundary are the same thing.
 pub fn solve_with_snapshots(problem: &Problem, cfg: &SolverConfig) -> SnapshotSolve {
     let mut snapshots = Vec::new();
     let result = solver::driver::solve_with(problem, cfg, |_, xs| {

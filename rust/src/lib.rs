@@ -11,9 +11,13 @@
 //! - **L2** — JAX model (`python/compile/model.py`) AOT-lowered to HLO text.
 //! - **L1** — Pallas kernels (`python/compile/kernels/`), lowered into L2.
 //!
-//! Execution flows through [`runtime::DevicePool`]: N backend actors
-//! (pure-Rust in-process by default; PJRT device actors with
-//! `--features pjrt`) behind one [`model::EpsModel`] handle, with
+//! Each solve is a resumable [`solver::SolverSession`] — Algorithm 1 with
+//! the parallel-round boundary externalized (`pending()` → ε batch →
+//! `resume()`) — and the serving coordinator drives hundreds of sessions
+//! from a few round-driver threads, merging their per-round ε batches into
+//! single device calls. Execution flows through [`runtime::DevicePool`]:
+//! N backend actors (pure-Rust in-process by default; PJRT device actors
+//! with `--features pjrt`) behind one [`model::EpsModel`] handle, with
 //! per-device queues, batch sharding and work stealing. With the `pjrt`
 //! feature the hot path loads `artifacts/*.hlo.txt` through the PJRT CPU
 //! client; Python never runs at request time.

@@ -10,7 +10,8 @@
 //!   all-figures   regenerate everything into results/
 //!
 //! Common options: --model dit|gmm, --steps N, --samples N, --seed N.
-//! `serve` additionally takes --devices N (size of the execution pool).
+//! `serve` additionally takes --devices N (size of the execution pool) and
+//! --drivers N (round-driver threads carrying the session run queue).
 //! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
 //! trained weights).
 
@@ -47,9 +48,12 @@ fn help() {
            sample      solve one request    (--model dit|gmm --steps N --seed N\n\
                        --method taa|fp|aa|aa+ --class C --out img.pgm)\n\
            serve       coordinator demo under synthetic load\n\
-                       (--requests N --workers N --devices N: N-backend execution\n\
-                       pool with sharding + work stealing; prints a per-device\n\
-                       utilization breakdown; --json dumps the metrics snapshot)\n\
+                       (--requests N --workers N: admission threads; --drivers N:\n\
+                       round-driver threads carrying all in-flight sessions and\n\
+                       merging their per-round eps batches; --devices N: N-backend\n\
+                       execution pool with sharding + work stealing; prints merge\n\
+                       occupancy + a per-device utilization breakdown; --json\n\
+                       dumps the metrics snapshot)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
                        --baseline FILE [--threshold PCT]: print a regression\n\
@@ -176,9 +180,7 @@ fn build_pool(
 }
 
 fn cmd_serve(args: &Args) {
-    use parataa::coordinator::{
-        Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
-    };
+    use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
     use parataa::figures::common::ModelChoice;
     use parataa::model::Cond;
     use parataa::util::rng::Pcg64;
@@ -188,23 +190,24 @@ fn cmd_serve(args: &Args) {
     let steps = args.usize_or("steps", 50);
     let n_requests = args.usize_or("requests", 32);
     let workers = args.usize_or("workers", 4);
+    let drivers = args.usize_or("drivers", 2).max(1);
     let devices = args.usize_or("devices", 1).max(1);
 
-    // Stack: backend pool -> dynamic batcher -> coordinator worker pool.
+    // Stack: backend pool -> coordinator round drivers. The drivers merge
+    // the pending ε batches of ready sessions per round (no batcher layer:
+    // merging happens deterministically at the round boundary).
     let (pool, guidance) = build_pool(model_choice, devices);
     let pool_stats = pool.stats();
-    let dim = pool.dim();
     let pooled = Arc::new(pool.eps_handle("pooled"));
-    let batcher = Batcher::spawn(pooled, BatcherConfig::for_devices(devices));
-    let eps = Arc::new(batcher.eps_handle(dim, "batched"));
     let coord = Coordinator::start(
-        eps,
-        CoordinatorConfig { workers, devices, ..Default::default() },
+        pooled,
+        CoordinatorConfig { workers, drivers, devices, ..Default::default() },
     );
     coord.attach_pool(pool_stats);
 
     eprintln!(
-        "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s) ...",
+        "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s), \
+         {drivers} round driver(s) ...",
         model_choice.label()
     );
     let mut rng = Pcg64::seeded(args.u64_or("seed", 0));

@@ -1,21 +1,21 @@
-//! Algorithm 1 — the ParaTAA driver.
+//! Algorithm 1 — the blocking ParaTAA driver entry points.
 //!
 //! One iteration = one *parallel round*: a single batched ε_θ call over the
 //! active window followed by the chosen update rule. The number of rounds is
 //! the paper's "Steps" metric (Table 1); it is hardware-independent, unlike
 //! wall-clock, and is what the reproduction pins against the paper.
 //!
-//! Window/stopping mechanics follow §2.1–2.2: first-order residuals with
-//! thresholds ε_t = τ²g²(t)d decide the convergence *front* (states freeze
-//! strictly from the top down — the triangular structure guarantees states
-//! above the front can no longer change), and the active window [t1, t2]
-//! slides down as the front advances.
+//! Since the session refactor all round mechanics (window sliding,
+//! residual/convergence front, safeguard, Anderson history) live in
+//! [`super::session::SolverSession`]; [`solve`]/[`solve_with`] are thin
+//! wrappers that evaluate each pending ε batch on the problem's own model
+//! and feed it back. Their output is **bit-identical** to the historical
+//! blocking loop (golden-tested against a frozen copy of it in
+//! `tests/golden_session.rs`).
 
-use super::history::History;
-use super::update::apply_update;
-use super::{Method, Problem, SolverConfig};
-use crate::equations::{eval_fk, residual_sq, States};
-use crate::model::Cond;
+use super::session::SolverSession;
+use super::{Problem, SolverConfig};
+use crate::equations::States;
 
 /// Per-iteration diagnostics.
 #[derive(Debug, Clone)]
@@ -62,209 +62,34 @@ pub fn solve_with<F>(problem: &Problem, cfg: &SolverConfig, mut observer: F) -> 
 where
     F: FnMut(&IterationRecord, &States) -> bool,
 {
-    let coeffs = problem.coeffs;
-    let model = problem.model;
-    let t_count = coeffs.steps;
-    let d = model.dim();
-    let k = cfg.k.clamp(1, t_count);
-    let w = cfg.window.clamp(1, t_count);
-    let t_init = problem.t_init.unwrap_or(t_count).clamp(1, t_count);
-
-    // --- State ------------------------------------------------------------
-    let mut xs = States::zeros(t_count, d);
-    xs.set_row(t_count, problem.xi.row(t_count));
-    match (&problem.init, t_init) {
-        (Some(init), _) => {
-            assert_eq!(init.d, d, "init trajectory dimension mismatch");
-            assert_eq!(init.rows(), t_count + 1, "init trajectory length mismatch");
-            xs.data[..t_count * d].copy_from_slice(&init.data[..t_count * d]);
-        }
-        (None, _) => {
-            // Standard-Gaussian initialization of all unknowns (§5.1).
-            let mut rng = crate::util::rng::Pcg64::new(problem.init_seed(), 0x1717_c0de);
-            rng.fill_gaussian(&mut xs.data[..t_count * d]);
-        }
-    }
-
-    let mut eps = States::zeros(t_count, d);
-    let mut eps_valid = vec![false; t_count + 1];
-
-    // Anderson history: paper's m counts the iterate window, so m−1
-    // difference columns (m = 1 ⇒ plain FP; Appendix C).
-    let hist_cols = if cfg.method == Method::FixedPoint { 0 } else { cfg.m.saturating_sub(1) };
-    let mut history = History::new(hist_cols, t_count, d);
-    let mut prev_x = vec![0.0f32; t_count * d];
-    let mut prev_r = vec![0.0f32; t_count * d];
-    let mut prev_active: Option<(usize, usize)> = None;
-
-    // Reusable per-round buffers (no allocation in the hot loop).
-    let mut f_vals = vec![0.0f32; t_count * d];
-    let mut r_vals = vec![0.0f32; t_count * d];
-    let mut dx_buf = vec![0.0f32; t_count * d];
-    let mut df_buf = vec![0.0f32; t_count * d];
-    let mut batch_x: Vec<f32> = Vec::new();
-    let mut batch_t: Vec<usize> = Vec::new();
-    // Pre-cloned condition pool: one request has one condition, so avoid
-    // re-cloning (potentially heap-backed) `Cond`s every round (§Perf L3).
-    let cond_pool: Vec<Cond> = vec![problem.cond.clone(); t_count + 1];
-    let mut batch_out: Vec<f32> = Vec::new();
-
-    let mut last_residual: Vec<Option<f64>> = vec![None; t_count];
-    let thresholds: Vec<f64> = (0..t_count).map(|p| coeffs.threshold(p, cfg.tol, d)).collect();
-
-    let mut batch_states: Vec<usize> = Vec::new();
-    let mut t2 = t_init - 1;
-    let mut t1 = (t2 + 1).saturating_sub(w);
-    let mut total_nfe = 0usize;
-    let mut records: Vec<IterationRecord> = Vec::new();
-    let mut converged = false;
-
-    for iter in 1..=cfg.s_max {
-        // --- 1. Batched ε_θ over the active window (one parallel round) ----
-        batch_x.clear();
-        batch_t.clear();
-        batch_states.clear();
-        // Equations are clamped at the boundary state t2+1 (see
-        // `equations::eval_fk`), so only states [t1+1, t2+1] are needed; the
-        // boundary state is frozen and served from the cache once filled.
-        let top_needed = (t2 + 1).min(t_count);
-        for j in t1 + 1..=top_needed {
-            let active = j <= t2;
-            if active || !eps_valid[j] {
-                batch_states.push(j);
-                batch_x.extend_from_slice(xs.row(j));
-                batch_t.push(coeffs.train_t[j]);
+    let mut session = SolverSession::new(problem, cfg);
+    let d = session.dim();
+    let mut eps_out: Vec<f32> = Vec::new();
+    loop {
+        // Evaluate the pending ε batch on the problem's model — exactly the
+        // values the historical in-loop call passed (same window rows, same
+        // per-item conditions, same guidance), so the solve is bit-identical.
+        let n = match session.pending() {
+            None => break,
+            Some(batch) => {
+                eps_out.resize(batch.len() * d, 0.0);
+                problem.model.eps_batch(
+                    batch.x,
+                    batch.t,
+                    batch.conds,
+                    batch.guidance,
+                    &mut eps_out,
+                );
+                batch.len()
             }
-        }
-        batch_out.resize(batch_states.len() * d, 0.0);
-        model.eps_batch(
-            &batch_x,
-            &batch_t,
-            &cond_pool[..batch_states.len()],
-            cfg.guidance,
-            &mut batch_out,
-        );
-        total_nfe += batch_states.len();
-        for (bi, &j) in batch_states.iter().enumerate() {
-            eps.set_row(j, &batch_out[bi * d..(bi + 1) * d]);
-            eps_valid[j] = true;
-        }
-
-        // --- 2. Residuals + convergence front (§2.1) -----------------------
-        for p in t1..=t2 {
-            last_residual[p] = Some(residual_sq(coeffs, &xs, &eps, &problem.xi, p));
-        }
-        let mut new_t2: Option<usize> = None;
-        for p in (t1..=t2).rev() {
-            if last_residual[p].unwrap() > thresholds[p] {
-                new_t2 = Some(p);
-                break;
-            }
-        }
-        let residual_sum: f64 = last_residual.iter().flatten().sum();
-        let max_ratio = (t1..=t2)
-            .map(|p| last_residual[p].unwrap() / thresholds[p])
-            .fold(0.0f64, f64::max);
-
-        let (nt1, nt2, done) = match new_t2 {
-            None if t1 == 0 => (t1, t2, true),
-            None => {
-                // Whole window converged; slide below it.
-                let nt2 = t1 - 1;
-                ((nt2 + 1).saturating_sub(w), nt2, false)
-            }
-            Some(nt2) => ((nt2 + 1).saturating_sub(w), nt2, false),
         };
-
-        let row_residuals: Vec<f64> =
-            last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect();
-
-        if done {
-            converged = true;
-            let rec = IterationRecord {
-                iter,
-                t1,
-                t2,
-                nfe: batch_states.len(),
-                residual_sum,
-                max_residual_ratio: max_ratio,
-                converged_rows: t_count,
-                row_residuals,
-            };
-            observer(&rec, &xs);
-            records.push(rec);
-            break;
-        }
-        t1 = nt1;
-        t2 = nt2;
-
-        // --- 3. F^{(k)} and residual vectors over the (new) window ---------
-        // First frozen state; without the clamp the equations reach across
-        // the front (Definition 2.1 verbatim) — kept only for `ablate`.
-        let boundary = if cfg.clamp_boundary { t2 + 1 } else { t_count };
-        r_vals.fill(0.0);
-        for p in t1..=t2 {
-            let row = p * d..(p + 1) * d;
-            eval_fk(coeffs, &xs, &eps, &problem.xi, k, boundary, p, &mut f_vals[row.clone()]);
-            for i in row.clone() {
-                r_vals[i] = f_vals[i] - xs.data[i];
-            }
-        }
-
-        // --- 4. Anderson history push (Δx^{i-1}, ΔR^{i-1}) ------------------
-        if hist_cols > 0 {
-            if let Some((p1, p2)) = prev_active {
-                dx_buf.fill(0.0);
-                df_buf.fill(0.0);
-                let lo = t1.max(p1);
-                let hi = t2.min(p2);
-                if lo <= hi {
-                    for i in lo * d..(hi + 1) * d {
-                        dx_buf[i] = xs.data[i] - prev_x[i];
-                        df_buf[i] = r_vals[i] - prev_r[i];
-                    }
-                    history.push(&dx_buf, &df_buf);
-                }
-            }
-            prev_x.copy_from_slice(&xs.data[..t_count * d]);
-            prev_r.copy_from_slice(&r_vals);
-            prev_active = Some((t1, t2));
-        }
-
-        // --- 5. Update rule -------------------------------------------------
-        apply_update(
-            cfg.method,
-            &mut xs.data[..t_count * d],
-            &f_vals,
-            &r_vals,
-            &history,
-            t1,
-            t2,
-            t_count,
-            d,
-            cfg.lambda,
-            cfg.safeguard,
-        );
-
-        let rec = IterationRecord {
-            iter,
-            t1,
-            t2,
-            nfe: batch_states.len(),
-            residual_sum,
-            max_residual_ratio: max_ratio,
-            converged_rows: t_count - (t2 + 1),
-            row_residuals,
-        };
-        let stop = observer(&rec, &xs);
-        records.push(rec);
-        if stop {
+        let outcome = session.resume(&eps_out[..n * d]);
+        let stop = observer(&outcome.record, session.xs());
+        if outcome.done || stop {
             break;
         }
     }
-
-    let iterations = records.len();
-    SolveResult { xs, iterations, total_nfe, converged, records }
+    session.finish()
 }
 
 #[cfg(test)]
@@ -274,6 +99,7 @@ mod tests {
     use crate::model::Cond;
     use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
     use crate::solver::sequential::sample_sequential;
+    use crate::solver::Method;
     use crate::util::proplite::{self, forall, size_in};
     use crate::util::rng::Pcg64;
 

@@ -7,18 +7,24 @@
 //!   Acceleration (eq. 12–13), AA+ (upper-triangular extraction, Remark
 //!   3.4), and Triangular Anderson Acceleration (Theorem 3.2) with the
 //!   Theorem 3.6 safeguard;
-//! - [`driver`] — Algorithm 1: sliding window, stopping criterion, history
-//!   management, iteration accounting;
+//! - [`session`] — Algorithm 1 as a resumable state machine
+//!   ([`SolverSession`]): sliding window, stopping criterion, history
+//!   management, iteration accounting, one `pending()`/`resume()` pair per
+//!   parallel round;
+//! - [`driver`] — the blocking entry points [`solve`]/`solve_with`, thin
+//!   wrappers over a session (bit-identical to the historical loop);
 //! - [`init`] — trajectory initialization (§4.2).
 
 pub mod driver;
 pub mod history;
 pub mod init;
 pub mod sequential;
+pub mod session;
 pub mod update;
 
 pub use driver::{solve, IterationRecord, SolveResult};
 pub use sequential::sample_sequential;
+pub use session::{EpsBatch, RoundOutcome, SolverSession};
 
 use crate::equations::States;
 use crate::model::{Cond, EpsModel};

@@ -1,0 +1,636 @@
+//! Resumable solver sessions — Algorithm 1 as an event-driven state machine.
+//!
+//! The paper's Algorithm 1 is one *parallel round* per iteration: a single
+//! batched ε_θ call over the active window, followed by the update rule and
+//! the window slide. [`SolverSession`] makes that round boundary a
+//! first-class API instead of the interior of a blocking loop:
+//!
+//! ```text
+//!   SolverSession::new(problem, cfg)
+//!        │
+//!        ▼
+//!   pending() ──► EpsBatch { x, t, conds, guidance }   (the round's ε job)
+//!        │                         │
+//!        │          caller evaluates ε_θ — directly, through a
+//!        │          [`crate::coordinator::Batcher`], or merged with other
+//!        │          sessions' batches into one device call
+//!        ▼                         │
+//!   resume(eps_out) ◄──────────────┘
+//!        │  ──► RoundOutcome { record, done }
+//!        ▼
+//!   ... repeat until done, then finish() ──► SolveResult
+//! ```
+//!
+//! All window-sliding, residual/convergence-front, safeguard and
+//! Anderson-history logic lives here; [`super::driver::solve`] and
+//! [`super::driver::solve_with`] are thin wrappers whose output is
+//! **bit-identical** to the historical blocking driver (golden-tested in
+//! `tests/golden_session.rs`).
+//!
+//! Because a session never touches the model itself — it only *emits* ε
+//! jobs and *consumes* their results — hundreds of sessions can be carried
+//! by a handful of round-driver threads that merge their pending batches
+//! into single device calls (see `coordinator/server.rs`). This is the
+//! continuous-batching shape serving systems use for autoregressive loops,
+//! applied to parallel diffusion rounds, and the substrate for
+//! draft-and-refine / Parareal-style schemes that interleave rounds across
+//! requests.
+
+use super::driver::{IterationRecord, SolveResult};
+use super::history::History;
+use super::update::apply_update;
+use super::{Problem, SolverConfig};
+use crate::equations::{eval_fk, residual_sq, States};
+use crate::model::Cond;
+use crate::schedule::SamplerCoeffs;
+
+/// One pending ε job: the batched denoiser evaluation the session needs
+/// before its next [`SolverSession::resume`]. Slices borrow the session's
+/// internal (reused) buffers; callers copy them into merged device calls.
+#[derive(Debug)]
+pub struct EpsBatch<'s> {
+    /// Flattened `[len, d]` row-major stack of window states.
+    pub x: &'s [f32],
+    /// Per-item training timesteps.
+    pub t: &'s [usize],
+    /// Per-item conditions (all equal to the session's condition).
+    pub conds: &'s [Cond],
+    /// Classifier-free guidance scale — a scalar graph input, so batches
+    /// from sessions with equal guidance merge bit-exactly.
+    pub guidance: f32,
+}
+
+impl EpsBatch<'_> {
+    /// Number of items (window rows) in this batch. May be zero: a round
+    /// whose window is fully served from the ε cache still advances.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    /// True when the round needs no fresh ε evaluations.
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+}
+
+/// What one [`SolverSession::resume`] produced.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Diagnostics for the round just completed (also appended to the
+    /// session's record history, returned by [`SolverSession::finish`]).
+    pub record: IterationRecord,
+    /// True once the session needs no further rounds: the stopping
+    /// criterion held for every row, or `s_max` rounds elapsed.
+    pub done: bool,
+}
+
+/// A resumable parallel solve: Algorithm 1 with the round boundary
+/// externalized.
+///
+/// The session owns everything the solve needs (coefficients, noise draws,
+/// state, history) and none of what it doesn't (no model handle, no
+/// threads), so it is `Send` and can migrate between round-driver threads
+/// through a run queue.
+///
+/// # Example
+///
+/// Drive the state machine by hand and confirm the result is bit-identical
+/// to the blocking [`crate::solver::solve`] wrapper:
+///
+/// ```
+/// use parataa::model::{gmm::GmmEps, Cond, EpsModel};
+/// use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+/// use parataa::solver::{self, Problem, SolverConfig, SolverSession};
+///
+/// let schedule = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+/// let model = GmmEps::sd_analog(schedule.alpha_bars.clone());
+/// let coeffs = SamplerCoeffs::new(&schedule, SamplerKind::Ddim, 8);
+/// let problem = Problem::new(&coeffs, &model, Cond::Class(0), 3);
+/// let mut cfg = SolverConfig::parataa(8);
+/// cfg.guidance = 2.0;
+/// cfg.s_max = 32;
+///
+/// let mut session = SolverSession::new(&problem, &cfg);
+/// let d = session.dim();
+/// let mut eps = Vec::new();
+/// loop {
+///     let n = match session.pending() {
+///         None => break,
+///         Some(batch) => {
+///             eps.resize(batch.len() * d, 0.0);
+///             model.eps_batch(batch.x, batch.t, batch.conds, batch.guidance, &mut eps);
+///             batch.len()
+///         }
+///     };
+///     if session.resume(&eps[..n * d]).done {
+///         break;
+///     }
+/// }
+/// let by_session = session.finish();
+/// let by_solve = solver::solve(&problem, &cfg);
+/// assert!(by_session.converged);
+/// assert_eq!(by_session.xs.data, by_solve.xs.data); // bit-identical
+/// assert_eq!(by_session.iterations, by_solve.iterations);
+/// assert_eq!(by_session.total_nfe, by_solve.total_nfe);
+/// ```
+pub struct SolverSession {
+    // --- immutable problem data (owned: sessions outlive their Problem) ---
+    coeffs: SamplerCoeffs,
+    xi: States,
+    cfg: SolverConfig,
+    d: usize,
+    t_count: usize,
+    k: usize,
+    w: usize,
+    hist_cols: usize,
+    thresholds: Vec<f64>,
+    /// Pre-cloned condition pool: one session has one condition, so avoid
+    /// re-cloning (potentially heap-backed) `Cond`s every round (§Perf L3).
+    cond_pool: Vec<Cond>,
+
+    // --- solver state ----------------------------------------------------
+    xs: States,
+    eps: States,
+    eps_valid: Vec<bool>,
+    history: History,
+    prev_x: Vec<f32>,
+    prev_r: Vec<f32>,
+    prev_active: Option<(usize, usize)>,
+    last_residual: Vec<Option<f64>>,
+
+    // Reusable per-round buffers (no allocation in the hot loop).
+    f_vals: Vec<f32>,
+    r_vals: Vec<f32>,
+    dx_buf: Vec<f32>,
+    df_buf: Vec<f32>,
+    batch_x: Vec<f32>,
+    batch_t: Vec<usize>,
+    batch_states: Vec<usize>,
+
+    // --- round accounting -------------------------------------------------
+    t1: usize,
+    t2: usize,
+    /// 1-based index of the round the pending batch belongs to.
+    iter: usize,
+    total_nfe: usize,
+    records: Vec<IterationRecord>,
+    converged: bool,
+    done: bool,
+}
+
+impl SolverSession {
+    /// Start a session for `problem` under `cfg`. Clones the coefficients,
+    /// noise draws and (optional) initialization out of the problem so the
+    /// session is self-contained; the model is *not* captured — evaluating
+    /// the pending batches is the caller's job.
+    pub fn new(problem: &Problem, cfg: &SolverConfig) -> SolverSession {
+        let coeffs = problem.coeffs.clone();
+        let t_count = coeffs.steps;
+        let d = problem.model.dim();
+        let k = cfg.k.clamp(1, t_count);
+        let w = cfg.window.clamp(1, t_count);
+        let t_init = problem.t_init.unwrap_or(t_count).clamp(1, t_count);
+
+        let mut xs = States::zeros(t_count, d);
+        xs.set_row(t_count, problem.xi.row(t_count));
+        match (&problem.init, t_init) {
+            (Some(init), _) => {
+                assert_eq!(init.d, d, "init trajectory dimension mismatch");
+                assert_eq!(init.rows(), t_count + 1, "init trajectory length mismatch");
+                xs.data[..t_count * d].copy_from_slice(&init.data[..t_count * d]);
+            }
+            (None, _) => {
+                // Standard-Gaussian initialization of all unknowns (§5.1).
+                let mut rng = crate::util::rng::Pcg64::new(problem.init_seed(), 0x1717_c0de);
+                rng.fill_gaussian(&mut xs.data[..t_count * d]);
+            }
+        }
+
+        // Anderson history: paper's m counts the iterate window, so m−1
+        // difference columns (m = 1 ⇒ plain FP; Appendix C).
+        let hist_cols =
+            if cfg.method == super::Method::FixedPoint { 0 } else { cfg.m.saturating_sub(1) };
+
+        let thresholds: Vec<f64> =
+            (0..t_count).map(|p| coeffs.threshold(p, cfg.tol, d)).collect();
+        let t2 = t_init - 1;
+        let t1 = (t2 + 1).saturating_sub(w);
+
+        let mut session = SolverSession {
+            xi: problem.xi.clone(),
+            cfg: cfg.clone(),
+            d,
+            t_count,
+            k,
+            w,
+            hist_cols,
+            thresholds,
+            cond_pool: vec![problem.cond.clone(); t_count + 1],
+            xs,
+            eps: States::zeros(t_count, d),
+            eps_valid: vec![false; t_count + 1],
+            history: History::new(hist_cols, t_count, d),
+            prev_x: vec![0.0f32; t_count * d],
+            prev_r: vec![0.0f32; t_count * d],
+            prev_active: None,
+            last_residual: vec![None; t_count],
+            f_vals: vec![0.0f32; t_count * d],
+            r_vals: vec![0.0f32; t_count * d],
+            dx_buf: vec![0.0f32; t_count * d],
+            df_buf: vec![0.0f32; t_count * d],
+            batch_x: Vec::new(),
+            batch_t: Vec::new(),
+            batch_states: Vec::new(),
+            t1,
+            t2,
+            iter: 1,
+            total_nfe: 0,
+            records: Vec::new(),
+            converged: false,
+            done: cfg.s_max == 0,
+            coeffs,
+        };
+        if !session.done {
+            session.build_batch();
+        }
+        session
+    }
+
+    /// The ε job for the upcoming round, or `None` once the session is
+    /// done. Idempotent: repeated calls return the same batch until
+    /// [`resume`](Self::resume) consumes it.
+    pub fn pending(&self) -> Option<EpsBatch<'_>> {
+        if self.done {
+            return None;
+        }
+        Some(EpsBatch {
+            x: &self.batch_x,
+            t: &self.batch_t,
+            conds: &self.cond_pool[..self.batch_states.len()],
+            guidance: self.cfg.guidance,
+        })
+    }
+
+    /// Batched ε_θ job over the active window (step 1 of a parallel round).
+    /// Equations are clamped at the boundary state t2+1 (see
+    /// `equations::eval_fk`), so only states [t1+1, t2+1] are needed; the
+    /// boundary state is frozen and served from the cache once filled.
+    fn build_batch(&mut self) {
+        self.batch_x.clear();
+        self.batch_t.clear();
+        self.batch_states.clear();
+        let top_needed = (self.t2 + 1).min(self.t_count);
+        for j in self.t1 + 1..=top_needed {
+            let active = j <= self.t2;
+            if active || !self.eps_valid[j] {
+                self.batch_states.push(j);
+                self.batch_x.extend_from_slice(self.xs.row(j));
+                self.batch_t.push(self.coeffs.train_t[j]);
+            }
+        }
+    }
+
+    /// Feed the ε results for the pending batch (`[len, d]` row-major, in
+    /// batch order) and run the rest of the round: residuals, convergence
+    /// front, window slide, Anderson history and the update rule.
+    ///
+    /// # Panics
+    ///
+    /// If the session is already done, or `eps_out` does not match the
+    /// pending batch's `len × dim`.
+    pub fn resume(&mut self, eps_out: &[f32]) -> RoundOutcome {
+        assert!(!self.done, "resume() on a finished session");
+        let d = self.d;
+        let n = self.batch_states.len();
+        assert_eq!(eps_out.len(), n * d, "eps_out does not match the pending batch");
+
+        self.total_nfe += n;
+        for (bi, &j) in self.batch_states.iter().enumerate() {
+            self.eps.set_row(j, &eps_out[bi * d..(bi + 1) * d]);
+            self.eps_valid[j] = true;
+        }
+
+        // --- Residuals + convergence front (§2.1) --------------------------
+        let (t1, t2) = (self.t1, self.t2);
+        for p in t1..=t2 {
+            self.last_residual[p] =
+                Some(residual_sq(&self.coeffs, &self.xs, &self.eps, &self.xi, p));
+        }
+        let mut new_t2: Option<usize> = None;
+        for p in (t1..=t2).rev() {
+            if self.last_residual[p].unwrap() > self.thresholds[p] {
+                new_t2 = Some(p);
+                break;
+            }
+        }
+        let residual_sum: f64 = self.last_residual.iter().flatten().sum();
+        let max_ratio = (t1..=t2)
+            .map(|p| self.last_residual[p].unwrap() / self.thresholds[p])
+            .fold(0.0f64, f64::max);
+
+        let (nt1, nt2, done) = match new_t2 {
+            None if t1 == 0 => (t1, t2, true),
+            None => {
+                // Whole window converged; slide below it.
+                let nt2 = t1 - 1;
+                ((nt2 + 1).saturating_sub(self.w), nt2, false)
+            }
+            Some(nt2) => ((nt2 + 1).saturating_sub(self.w), nt2, false),
+        };
+
+        let row_residuals: Vec<f64> =
+            self.last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect();
+
+        if done {
+            self.converged = true;
+            self.done = true;
+            let rec = IterationRecord {
+                iter: self.iter,
+                t1,
+                t2,
+                nfe: n,
+                residual_sum,
+                max_residual_ratio: max_ratio,
+                converged_rows: self.t_count,
+                row_residuals,
+            };
+            self.records.push(rec.clone());
+            return RoundOutcome { record: rec, done: true };
+        }
+        self.t1 = nt1;
+        self.t2 = nt2;
+
+        // --- F^{(k)} and residual vectors over the (new) window ------------
+        // First frozen state; without the clamp the equations reach across
+        // the front (Definition 2.1 verbatim) — kept only for `ablate`.
+        let boundary = if self.cfg.clamp_boundary { self.t2 + 1 } else { self.t_count };
+        self.r_vals.fill(0.0);
+        for p in self.t1..=self.t2 {
+            let row = p * d..(p + 1) * d;
+            eval_fk(
+                &self.coeffs,
+                &self.xs,
+                &self.eps,
+                &self.xi,
+                self.k,
+                boundary,
+                p,
+                &mut self.f_vals[row.clone()],
+            );
+            for i in row.clone() {
+                self.r_vals[i] = self.f_vals[i] - self.xs.data[i];
+            }
+        }
+
+        // --- Anderson history push (Δx^{i-1}, ΔR^{i-1}) ---------------------
+        if self.hist_cols > 0 {
+            if let Some((p1, p2)) = self.prev_active {
+                self.dx_buf.fill(0.0);
+                self.df_buf.fill(0.0);
+                let lo = self.t1.max(p1);
+                let hi = self.t2.min(p2);
+                if lo <= hi {
+                    for i in lo * d..(hi + 1) * d {
+                        self.dx_buf[i] = self.xs.data[i] - self.prev_x[i];
+                        self.df_buf[i] = self.r_vals[i] - self.prev_r[i];
+                    }
+                    self.history.push(&self.dx_buf, &self.df_buf);
+                }
+            }
+            self.prev_x.copy_from_slice(&self.xs.data[..self.t_count * d]);
+            self.prev_r.copy_from_slice(&self.r_vals);
+            self.prev_active = Some((self.t1, self.t2));
+        }
+
+        // --- Update rule ----------------------------------------------------
+        apply_update(
+            self.cfg.method,
+            &mut self.xs.data[..self.t_count * d],
+            &self.f_vals,
+            &self.r_vals,
+            &self.history,
+            self.t1,
+            self.t2,
+            self.t_count,
+            d,
+            self.cfg.lambda,
+            self.cfg.safeguard,
+        );
+
+        let rec = IterationRecord {
+            iter: self.iter,
+            t1: self.t1,
+            t2: self.t2,
+            nfe: n,
+            residual_sum,
+            max_residual_ratio: max_ratio,
+            converged_rows: self.t_count - (self.t2 + 1),
+            row_residuals,
+        };
+        self.records.push(rec.clone());
+
+        self.iter += 1;
+        if self.iter > self.cfg.s_max {
+            self.done = true; // round budget exhausted; not converged
+        } else {
+            self.build_batch();
+        }
+        RoundOutcome { record: rec, done: self.done }
+    }
+
+    /// Consume the session into a [`SolveResult`] (valid at any point —
+    /// mid-solve it reports the current trajectory with `converged = false`,
+    /// the §4.1 "user accepts the image" early stop).
+    pub fn finish(self) -> SolveResult {
+        SolveResult {
+            iterations: self.records.len(),
+            total_nfe: self.total_nfe,
+            converged: self.converged,
+            records: self.records,
+            xs: self.xs,
+        }
+    }
+
+    /// Feature dimension d of the model this session was built against.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// True once no further rounds are needed ([`pending`](Self::pending)
+    /// returns `None`).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Whether the stopping criterion has been met for every row.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Parallel rounds completed so far (the paper's "Steps").
+    pub fn iterations(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Total ε_θ evaluations so far.
+    pub fn total_nfe(&self) -> usize {
+        self.total_nfe
+    }
+
+    /// Per-round diagnostics so far.
+    pub fn records(&self) -> &[IterationRecord] {
+        &self.records
+    }
+
+    /// Current trajectory estimate x_0..x_T.
+    pub fn xs(&self) -> &States {
+        &self.xs
+    }
+
+    /// The fixed noise draws ξ_0..ξ_T this session solves against.
+    pub fn xi(&self) -> &States {
+        &self.xi
+    }
+
+    /// Classifier-free guidance scale (the batch merge key).
+    pub fn guidance(&self) -> f32 {
+        self.cfg.guidance
+    }
+
+    /// Clamped sliding-window size w — the session's slot-budget footprint.
+    pub fn window_rows(&self) -> usize {
+        self.w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gmm::GmmEps;
+    use crate::model::EpsModel;
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+    use crate::solver::{solve, Method};
+    use crate::util::rng::Pcg64;
+
+    fn setup(steps: usize) -> (SamplerCoeffs, GmmEps) {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, steps);
+        let mut rng = Pcg64::seeded(17);
+        let d = 5;
+        let means: Vec<f32> = (0..3 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+        (coeffs, GmmEps::new(means, d, 0.25, ns.alpha_bars.clone()))
+    }
+
+    fn drive(session: &mut SolverSession, model: &dyn EpsModel) -> usize {
+        let d = session.dim();
+        let mut eps = Vec::new();
+        let mut rounds = 0;
+        loop {
+            let n = match session.pending() {
+                None => break,
+                Some(b) => {
+                    eps.resize(b.len() * d, 0.0);
+                    model.eps_batch(b.x, b.t, b.conds, b.guidance, &mut eps);
+                    b.len()
+                }
+            };
+            rounds += 1;
+            if session.resume(&eps[..n * d]).done {
+                break;
+            }
+        }
+        rounds
+    }
+
+    #[test]
+    fn manual_drive_matches_solve_bitwise() {
+        let (coeffs, model) = setup(12);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 4);
+        for method in
+            [Method::FixedPoint, Method::AndersonStd, Method::AndersonUpperTri, Method::Taa]
+        {
+            let cfg = SolverConfig {
+                method,
+                guidance: 2.0,
+                tol: 1e-4,
+                s_max: 48,
+                ..SolverConfig::parataa(12)
+            };
+            let mut session = SolverSession::new(&problem, &cfg);
+            drive(&mut session, &model);
+            let by_session = session.finish();
+            let by_solve = solve(&problem, &cfg);
+            assert_eq!(by_session.xs.data, by_solve.xs.data, "{}", method.label());
+            assert_eq!(by_session.iterations, by_solve.iterations);
+            assert_eq!(by_session.total_nfe, by_solve.total_nfe);
+            assert_eq!(by_session.converged, by_solve.converged);
+        }
+    }
+
+    #[test]
+    fn pending_is_idempotent() {
+        let (coeffs, model) = setup(10);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(0), 9);
+        let cfg = SolverConfig { guidance: 2.0, ..SolverConfig::parataa(10) };
+        let session = SolverSession::new(&problem, &cfg);
+        let (a_x, a_t) = {
+            let b = session.pending().unwrap();
+            (b.x.to_vec(), b.t.to_vec())
+        };
+        let b = session.pending().unwrap();
+        assert_eq!(b.x, &a_x[..]);
+        assert_eq!(b.t, &a_t[..]);
+        assert_eq!(b.conds.len(), b.t.len());
+    }
+
+    #[test]
+    fn zero_round_budget_is_done_immediately() {
+        let (coeffs, model) = setup(8);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(0), 1);
+        let cfg = SolverConfig { s_max: 0, ..SolverConfig::parataa(8) };
+        let session = SolverSession::new(&problem, &cfg);
+        assert!(session.is_done());
+        assert!(session.pending().is_none());
+        let r = session.finish();
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn round_budget_exhaustion_reports_not_converged() {
+        let (coeffs, model) = setup(16);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(2), 3);
+        let cfg =
+            SolverConfig { s_max: 2, tol: 1e-9, guidance: 2.0, ..SolverConfig::parataa(16) };
+        let mut session = SolverSession::new(&problem, &cfg);
+        let rounds = drive(&mut session, &model);
+        assert_eq!(rounds, 2);
+        assert!(session.is_done());
+        assert!(!session.converged());
+        let by_solve = solve(&problem, &cfg);
+        assert_eq!(session.finish().xs.data, by_solve.xs.data);
+    }
+
+    #[test]
+    fn early_finish_mid_solve_is_valid() {
+        let (coeffs, model) = setup(20);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 7);
+        let cfg = SolverConfig { guidance: 2.0, s_max: 80, ..SolverConfig::parataa(20) };
+        let mut session = SolverSession::new(&problem, &cfg);
+        let d = session.dim();
+        let mut eps = Vec::new();
+        for _ in 0..3 {
+            let n = {
+                let b = session.pending().unwrap();
+                eps.resize(b.len() * d, 0.0);
+                model.eps_batch(b.x, b.t, b.conds, b.guidance, &mut eps);
+                b.len()
+            };
+            session.resume(&eps[..n * d]);
+        }
+        assert_eq!(session.iterations(), 3);
+        let r = session.finish();
+        assert_eq!(r.iterations, 3);
+        assert!(!r.converged);
+    }
+}

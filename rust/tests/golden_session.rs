@@ -1,0 +1,370 @@
+//! Golden equivalence: the session-driven `solve()` path must be
+//! **bit-identical** to the pre-refactor blocking driver.
+//!
+//! `reference_solve` below is a frozen, line-for-line copy of the seed
+//! `solver::driver::solve_with` loop body (as of the PR that extracted
+//! `SolverSession`). It is deliberately NOT shared with library code: it is
+//! the oracle the refactor is measured against. If a future change breaks
+//! these tests, either the session semantics drifted (a bug) or the solver
+//! algorithm itself was intentionally changed — in the latter case update
+//! this reference in the same commit and say so.
+
+use parataa::equations::{eval_fk, residual_sq, States};
+use parataa::model::gmm::GmmEps;
+use parataa::model::Cond;
+use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+use parataa::solver::{history::History, update::apply_update, Method, Problem, SolverConfig};
+use parataa::util::rng::Pcg64;
+
+/// Per-round facts the reference records (mirrors `IterationRecord`).
+struct RefRecord {
+    iter: usize,
+    t1: usize,
+    t2: usize,
+    nfe: usize,
+    residual_sum: f64,
+    max_residual_ratio: f64,
+    converged_rows: usize,
+    row_residuals: Vec<f64>,
+}
+
+struct RefResult {
+    xs: States,
+    iterations: usize,
+    total_nfe: usize,
+    converged: bool,
+    records: Vec<RefRecord>,
+}
+
+/// Frozen copy of the seed blocking driver (Algorithm 1).
+fn reference_solve(problem: &Problem, cfg: &SolverConfig) -> RefResult {
+    let coeffs = problem.coeffs;
+    let model = problem.model;
+    let t_count = coeffs.steps;
+    let d = model.dim();
+    let k = cfg.k.clamp(1, t_count);
+    let w = cfg.window.clamp(1, t_count);
+    let t_init = problem.t_init.unwrap_or(t_count).clamp(1, t_count);
+
+    let mut xs = States::zeros(t_count, d);
+    xs.set_row(t_count, problem.xi.row(t_count));
+    match (&problem.init, t_init) {
+        (Some(init), _) => {
+            assert_eq!(init.d, d);
+            assert_eq!(init.rows(), t_count + 1);
+            xs.data[..t_count * d].copy_from_slice(&init.data[..t_count * d]);
+        }
+        (None, _) => {
+            let mut rng = Pcg64::new(problem.init_seed(), 0x1717_c0de);
+            rng.fill_gaussian(&mut xs.data[..t_count * d]);
+        }
+    }
+
+    let mut eps = States::zeros(t_count, d);
+    let mut eps_valid = vec![false; t_count + 1];
+
+    let hist_cols = if cfg.method == Method::FixedPoint { 0 } else { cfg.m.saturating_sub(1) };
+    let mut history = History::new(hist_cols, t_count, d);
+    let mut prev_x = vec![0.0f32; t_count * d];
+    let mut prev_r = vec![0.0f32; t_count * d];
+    let mut prev_active: Option<(usize, usize)> = None;
+
+    let mut f_vals = vec![0.0f32; t_count * d];
+    let mut r_vals = vec![0.0f32; t_count * d];
+    let mut dx_buf = vec![0.0f32; t_count * d];
+    let mut df_buf = vec![0.0f32; t_count * d];
+    let mut batch_x: Vec<f32> = Vec::new();
+    let mut batch_t: Vec<usize> = Vec::new();
+    let cond_pool: Vec<Cond> = vec![problem.cond.clone(); t_count + 1];
+    let mut batch_out: Vec<f32> = Vec::new();
+
+    let mut last_residual: Vec<Option<f64>> = vec![None; t_count];
+    let thresholds: Vec<f64> = (0..t_count).map(|p| coeffs.threshold(p, cfg.tol, d)).collect();
+
+    let mut batch_states: Vec<usize> = Vec::new();
+    let mut t2 = t_init - 1;
+    let mut t1 = (t2 + 1).saturating_sub(w);
+    let mut total_nfe = 0usize;
+    let mut records: Vec<RefRecord> = Vec::new();
+    let mut converged = false;
+
+    for iter in 1..=cfg.s_max {
+        batch_x.clear();
+        batch_t.clear();
+        batch_states.clear();
+        let top_needed = (t2 + 1).min(t_count);
+        for j in t1 + 1..=top_needed {
+            let active = j <= t2;
+            if active || !eps_valid[j] {
+                batch_states.push(j);
+                batch_x.extend_from_slice(xs.row(j));
+                batch_t.push(coeffs.train_t[j]);
+            }
+        }
+        batch_out.resize(batch_states.len() * d, 0.0);
+        model.eps_batch(
+            &batch_x,
+            &batch_t,
+            &cond_pool[..batch_states.len()],
+            cfg.guidance,
+            &mut batch_out,
+        );
+        total_nfe += batch_states.len();
+        for (bi, &j) in batch_states.iter().enumerate() {
+            eps.set_row(j, &batch_out[bi * d..(bi + 1) * d]);
+            eps_valid[j] = true;
+        }
+
+        for p in t1..=t2 {
+            last_residual[p] = Some(residual_sq(coeffs, &xs, &eps, &problem.xi, p));
+        }
+        let mut new_t2: Option<usize> = None;
+        for p in (t1..=t2).rev() {
+            if last_residual[p].unwrap() > thresholds[p] {
+                new_t2 = Some(p);
+                break;
+            }
+        }
+        let residual_sum: f64 = last_residual.iter().flatten().sum();
+        let max_ratio = (t1..=t2)
+            .map(|p| last_residual[p].unwrap() / thresholds[p])
+            .fold(0.0f64, f64::max);
+
+        let (nt1, nt2, done) = match new_t2 {
+            None if t1 == 0 => (t1, t2, true),
+            None => {
+                let nt2 = t1 - 1;
+                ((nt2 + 1).saturating_sub(w), nt2, false)
+            }
+            Some(nt2) => ((nt2 + 1).saturating_sub(w), nt2, false),
+        };
+
+        let row_residuals: Vec<f64> =
+            last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect();
+
+        if done {
+            converged = true;
+            records.push(RefRecord {
+                iter,
+                t1,
+                t2,
+                nfe: batch_states.len(),
+                residual_sum,
+                max_residual_ratio: max_ratio,
+                converged_rows: t_count,
+                row_residuals,
+            });
+            break;
+        }
+        t1 = nt1;
+        t2 = nt2;
+
+        let boundary = if cfg.clamp_boundary { t2 + 1 } else { t_count };
+        r_vals.fill(0.0);
+        for p in t1..=t2 {
+            let row = p * d..(p + 1) * d;
+            eval_fk(coeffs, &xs, &eps, &problem.xi, k, boundary, p, &mut f_vals[row.clone()]);
+            for i in row.clone() {
+                r_vals[i] = f_vals[i] - xs.data[i];
+            }
+        }
+
+        if hist_cols > 0 {
+            if let Some((p1, p2)) = prev_active {
+                dx_buf.fill(0.0);
+                df_buf.fill(0.0);
+                let lo = t1.max(p1);
+                let hi = t2.min(p2);
+                if lo <= hi {
+                    for i in lo * d..(hi + 1) * d {
+                        dx_buf[i] = xs.data[i] - prev_x[i];
+                        df_buf[i] = r_vals[i] - prev_r[i];
+                    }
+                    history.push(&dx_buf, &df_buf);
+                }
+            }
+            prev_x.copy_from_slice(&xs.data[..t_count * d]);
+            prev_r.copy_from_slice(&r_vals);
+            prev_active = Some((t1, t2));
+        }
+
+        apply_update(
+            cfg.method,
+            &mut xs.data[..t_count * d],
+            &f_vals,
+            &r_vals,
+            &history,
+            t1,
+            t2,
+            t_count,
+            d,
+            cfg.lambda,
+            cfg.safeguard,
+        );
+
+        records.push(RefRecord {
+            iter,
+            t1,
+            t2,
+            nfe: batch_states.len(),
+            residual_sum,
+            max_residual_ratio: max_ratio,
+            converged_rows: t_count - (t2 + 1),
+            row_residuals,
+        });
+    }
+
+    let iterations = records.len();
+    RefResult { xs, iterations, total_nfe, converged, records }
+}
+
+// --- test scaffolding ------------------------------------------------------
+
+const ALL_METHODS: [Method; 4] =
+    [Method::FixedPoint, Method::AndersonStd, Method::AndersonUpperTri, Method::Taa];
+
+fn gmm(d: usize, n_comp: usize, seed: u64) -> GmmEps {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let mut rng = Pcg64::seeded(seed);
+    let means: Vec<f32> = (0..n_comp * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    GmmEps::new(means, d, 0.25, ns.alpha_bars.clone())
+}
+
+fn coeffs(steps: usize, kind: SamplerKind) -> SamplerCoeffs {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    SamplerCoeffs::new(&ns, kind, steps)
+}
+
+fn cfg_for(method: Method, steps: usize, safeguard: bool, window: usize) -> SolverConfig {
+    SolverConfig {
+        k: 4,
+        method,
+        m: 3,
+        lambda: 1e-4,
+        safeguard,
+        window,
+        tol: 1e-4,
+        s_max: 8 * steps,
+        guidance: 2.0,
+        clamp_boundary: true,
+    }
+}
+
+/// Bit-for-bit comparison of a session-driven solve against the frozen
+/// reference: trajectory, rounds, NFE, convergence flag, and every
+/// per-round record.
+fn assert_golden(problem: &Problem, cfg: &SolverConfig, label: &str) {
+    let golden = reference_solve(problem, cfg);
+    let actual = parataa::solver::solve(problem, cfg);
+    assert_eq!(actual.xs.data, golden.xs.data, "{label}: xs diverged");
+    assert_eq!(actual.iterations, golden.iterations, "{label}: iterations");
+    assert_eq!(actual.total_nfe, golden.total_nfe, "{label}: total_nfe");
+    assert_eq!(actual.converged, golden.converged, "{label}: converged");
+    assert_eq!(actual.records.len(), golden.records.len(), "{label}: record count");
+    for (a, g) in actual.records.iter().zip(golden.records.iter()) {
+        assert_eq!(a.iter, g.iter, "{label}: round index");
+        assert_eq!((a.t1, a.t2), (g.t1, g.t2), "{label}: window at round {}", g.iter);
+        assert_eq!(a.nfe, g.nfe, "{label}: nfe at round {}", g.iter);
+        assert_eq!(a.converged_rows, g.converged_rows, "{label}: front at round {}", g.iter);
+        assert_eq!(
+            a.residual_sum.to_bits(),
+            g.residual_sum.to_bits(),
+            "{label}: residual_sum at round {}",
+            g.iter
+        );
+        assert_eq!(
+            a.max_residual_ratio.to_bits(),
+            g.max_residual_ratio.to_bits(),
+            "{label}: max ratio at round {}",
+            g.iter
+        );
+        let ar: Vec<u64> = a.row_residuals.iter().map(|v| v.to_bits()).collect();
+        let gr: Vec<u64> = g.row_residuals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ar, gr, "{label}: row residuals at round {}", g.iter);
+    }
+}
+
+/// All four methods × safeguard on/off, cold start, full window.
+#[test]
+fn golden_cold_start_all_methods() {
+    let steps = 14;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(6, 4, 33);
+    for (i, method) in ALL_METHODS.iter().enumerate() {
+        let problem = Problem::new(&sc, &model, Cond::Class(i % 4), 100 + i as u64);
+        for safeguard in [true, false] {
+            let cfg = cfg_for(*method, steps, safeguard, steps);
+            assert_golden(
+                &problem,
+                &cfg,
+                &format!("cold {} safeguard={safeguard}", method.label()),
+            );
+        }
+    }
+}
+
+/// All four methods × safeguard on/off, warm start (trajectory init with a
+/// frozen tail, §4.2) — exercises the `init`/`t_init` admission path.
+#[test]
+fn golden_warm_start_all_methods() {
+    let steps = 14;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(6, 4, 34);
+    // Donor trajectory from a converged cold solve.
+    let donor_problem = Problem::new(&sc, &model, Cond::Class(0), 7);
+    let donor = parataa::solver::solve(&donor_problem, &cfg_for(Method::Taa, steps, true, steps));
+    assert!(donor.converged, "donor must converge");
+    for (i, method) in ALL_METHODS.iter().enumerate() {
+        for safeguard in [true, false] {
+            let mut problem = Problem::new(&sc, &model, Cond::Class(1), 7);
+            problem.xi = donor_problem.xi.clone();
+            problem.init = Some(donor.xs.clone());
+            problem.t_init = Some(10);
+            let cfg = cfg_for(*method, steps, safeguard, steps);
+            assert_golden(
+                &problem,
+                &cfg,
+                &format!("warm {} safeguard={safeguard} ({i})", method.label()),
+            );
+        }
+    }
+}
+
+/// DDPM (stochastic sampler, nonzero ξ coupling) and a sliding window —
+/// the window-slide/history-clamp interplay is where a state-machine port
+/// would most plausibly drift.
+#[test]
+fn golden_ddpm_and_sliding_window() {
+    let steps = 16;
+    let model = gmm(5, 3, 35);
+    let sc_ddpm = coeffs(steps, SamplerKind::Ddpm);
+    for method in [Method::FixedPoint, Method::Taa] {
+        let problem = Problem::new(&sc_ddpm, &model, Cond::Class(2), 55);
+        assert_golden(
+            &problem,
+            &cfg_for(method, steps, true, steps),
+            &format!("ddpm {}", method.label()),
+        );
+    }
+    let sc_ddim = coeffs(steps, SamplerKind::Ddim);
+    for w in [3usize, 6, 11] {
+        let problem = Problem::new(&sc_ddim, &model, Cond::Class(1), 56);
+        let mut cfg = cfg_for(Method::Taa, steps, true, w);
+        cfg.s_max = 30 * steps;
+        assert_golden(&problem, &cfg, &format!("window w={w}"));
+    }
+}
+
+/// Round-budget exhaustion must truncate identically (records, NFE, and
+/// the not-converged flag).
+#[test]
+fn golden_s_max_truncation() {
+    let steps = 12;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(4, 3, 36);
+    let problem = Problem::new(&sc, &model, Cond::Class(0), 77);
+    let mut cfg = cfg_for(Method::Taa, steps, true, steps);
+    cfg.tol = 1e-12; // unreachable: force the s_max exit
+    cfg.s_max = 5;
+    assert_golden(&problem, &cfg, "s_max truncation");
+}
