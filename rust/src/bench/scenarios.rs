@@ -25,12 +25,14 @@ use crate::coordinator::{
     Batcher, BatcherConfig, Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec,
 };
 use crate::figures::common::{fp_plus_k, method_config, ModelChoice, Scenario};
-use crate::linalg::suffix_grams;
+use crate::linalg::{suffix_grams_into, SuffixGrams};
 use crate::model::gmm::GmmEps;
 use crate::model::{Cond, EpsModel};
 use crate::runtime::{DevicePool, PoolConfig};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerKind};
-use crate::solver::{self, history::History, update::apply_update, Method, Problem};
+use crate::solver::{
+    self, history::History, update::apply_update_ws, Method, Problem, Workspace,
+};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
 use std::sync::Arc;
@@ -94,6 +96,27 @@ pub fn registry() -> Vec<ScenarioDef> {
             about: "full TAA update micro-kernel (Grams + solves + correction)",
             quick: true,
             run: micro_taa_update,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "micro_gram_incremental",
+            about: "suffix Grams via the History push-time cache vs full rescan",
+            quick: true,
+            run: micro_gram_incremental,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "micro_history_push",
+            about: "History ring push cost (fused slot + Gram-cache refresh)",
+            quick: true,
+            run: micro_history_push,
+        },
+        ScenarioDef {
+            group: "solver",
+            name: "hot_loop_w100_m8",
+            about: "Table-1 hot-loop cell: full TAA solve at W=100, m=8",
+            quick: true,
+            run: hot_loop_w100_m8,
         },
         ScenarioDef {
             group: "pool",
@@ -276,6 +299,8 @@ fn run_table1(kind: SamplerKind, steps: usize, opts: &BenchOpts) -> ScenarioRepo
     sc
 }
 
+/// The from-scratch suffix-Gram scan on the production write-into path
+/// (reused [`SuffixGrams`] workspace, vectorized kernels, no cache).
 fn micro_suffix_grams(opts: &BenchOpts) -> ScenarioReport {
     let mut sc = ScenarioReport::default();
     let mut rng = Pcg64::seeded(1);
@@ -283,12 +308,14 @@ fn micro_suffix_grams(opts: &BenchOpts) -> ScenarioReport {
         let slots: Vec<Vec<f32>> = (0..m).map(|_| rng.gaussian_vec(w * d)).collect();
         let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
         let res = rng.gaussian_vec(w * d);
+        let mut out = SuffixGrams::new();
         let t = run_timed(
             &format!("suffix_grams W={w} D={d} m={m}"),
             opts.warmup,
             opts.measure,
             || {
-                std::hint::black_box(suffix_grams(&refs, &res, w, d, 0));
+                suffix_grams_into(&mut out, &refs, &res, w, d, 0);
+                std::hint::black_box(&out);
             },
         );
         sc.push(&format!("w{w}_d{d}_m{m}_mean_us"), Metric::lower(t.mean_s * 1e6, "us"));
@@ -297,6 +324,10 @@ fn micro_suffix_grams(opts: &BenchOpts) -> ScenarioReport {
     sc
 }
 
+/// One full TAA update on the production path: cached suffix Grams,
+/// per-row ridged Cholesky solves, fused correction, session-style reused
+/// [`Workspace`]. The push-time Gram-cache refresh this relies on is
+/// measured separately by `micro_history_push`/`micro_gram_incremental`.
 fn micro_taa_update(opts: &BenchOpts) -> ScenarioReport {
     let mut sc = ScenarioReport::default();
     let mut rng = Pcg64::seeded(1);
@@ -313,13 +344,14 @@ fn micro_taa_update(opts: &BenchOpts) -> ScenarioReport {
         let r_vals: Vec<f32> =
             f_vals.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
         let mut xs = xs0.clone();
+        let mut ws = Workspace::new();
         let t = run_timed(
             &format!("taa_update W={w} D={d}"),
             opts.warmup,
             opts.measure,
             || {
                 xs.copy_from_slice(&xs0);
-                apply_update(
+                apply_update_ws(
                     Method::Taa,
                     &mut xs,
                     &f_vals,
@@ -331,6 +363,7 @@ fn micro_taa_update(opts: &BenchOpts) -> ScenarioReport {
                     d,
                     1e-4,
                     true,
+                    &mut ws,
                 );
                 std::hint::black_box(&xs);
             },
@@ -338,6 +371,121 @@ fn micro_taa_update(opts: &BenchOpts) -> ScenarioReport {
         sc.push(&format!("w{w}_d{d}_mean_us"), Metric::lower(t.mean_s * 1e6, "us"));
         sc.push(&format!("w{w}_d{d}_p95_us"), Metric::lower(t.p95_s * 1e6, "us"));
     }
+    sc
+}
+
+/// The incremental-cache payoff at the ISSUE-4 regime (W=100, D=256, m=8):
+/// suffix Grams served from the push-maintained per-row cache (O(W·m²)
+/// reduce + O(W·m·D) projection rescan) against the full O(W·m²·D) rescan
+/// over the same slots. `speedup_x` is their ratio on this machine — a
+/// structural signal (≈ the Gram-vs-projection cost share), so it is gated.
+fn micro_gram_incremental(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let (w, d, m) = (100usize, 256usize, 8usize);
+    let mut rng = Pcg64::seeded(2);
+    let mut history = History::new(m, w, d);
+    for _ in 0..m + 2 {
+        // Past capacity: the timed state includes ring wrap.
+        let dx = rng.gaussian_vec(w * d);
+        let df = rng.gaussian_vec(w * d);
+        history.push(&dx, &df);
+    }
+    let res = rng.gaussian_vec(w * d);
+
+    let mut cached = SuffixGrams::new();
+    let t_cached = run_timed(
+        &format!("suffix grams via cache W={w} D={d} m={m}"),
+        opts.warmup,
+        opts.measure,
+        || {
+            history.suffix_grams_into(&res, 0, &mut cached);
+            std::hint::black_box(&cached);
+        },
+    );
+    let slots = history.df_slots();
+    let mut rescan = SuffixGrams::new();
+    let t_scan = run_timed(
+        &format!("suffix grams full rescan W={w} D={d} m={m}"),
+        opts.warmup,
+        opts.measure,
+        || {
+            suffix_grams_into(&mut rescan, &slots, &res, w, d, 0);
+            std::hint::black_box(&rescan);
+        },
+    );
+    sc.push("cached_mean_us", Metric::lower(t_cached.mean_s * 1e6, "us"));
+    sc.push("cached_p95_us", Metric::lower(t_cached.p95_s * 1e6, "us"));
+    sc.push("scan_mean_us", Metric::lower(t_scan.mean_s * 1e6, "us"));
+    sc.push(
+        "speedup_x",
+        Metric::higher(t_scan.mean_s / t_cached.mean_s.max(1e-12), "x"),
+    );
+    sc
+}
+
+/// The cost a round pays to keep the cache fresh: one ring push at the
+/// ISSUE-4 regime — slot copies, the fused ΔX+ΔF materialization, and the
+/// O(W·m·D) refresh of the cache entries involving the overwritten slot.
+fn micro_history_push(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let (w, d, m) = (100usize, 256usize, 8usize);
+    let mut rng = Pcg64::seeded(3);
+    let mut history = History::new(m, w, d);
+    let dx = rng.gaussian_vec(w * d);
+    let df = rng.gaussian_vec(w * d);
+    for _ in 0..m {
+        history.push(&dx, &df); // warm: timed pushes all overwrite a full ring
+    }
+    let t = run_timed(
+        &format!("history push W={w} D={d} m={m}"),
+        opts.warmup,
+        opts.measure,
+        || {
+            history.push(&dx, &df);
+            std::hint::black_box(&history);
+        },
+    );
+    sc.push("push_mean_us", Metric::lower(t.mean_s * 1e6, "us"));
+    sc.push("push_p95_us", Metric::lower(t.p95_s * 1e6, "us"));
+    sc
+}
+
+/// A Table-1 cell pinned at the numeric core's stress regime: DDIM-100,
+/// full 100-row window, history depth m=8 (deeper than the paper default
+/// so the m² reduce and per-row m³ solves matter). `taa_round_ms` is the
+/// end-to-end CPU cost per parallel round — the driver-throughput number
+/// the incremental core is meant to shrink.
+fn hot_loop_w100_m8(opts: &BenchOpts) -> ScenarioReport {
+    let mut sc = ScenarioReport::default();
+    let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, 100);
+    let coeffs = scenario.coeffs();
+    let n = opts.seeds();
+    let mut rng = Pcg64::seeded(opts.seed);
+    let mut time = Summary::new();
+    let mut rounds = Summary::new();
+    let mut nfe = Summary::new();
+    for seed in 0..n {
+        let problem = Problem::new(
+            &coeffs,
+            &*scenario.model,
+            Cond::Class(rng.below(8) as usize),
+            seed,
+        );
+        let mut cfg = method_config(Method::Taa, 100, None, scenario.guidance);
+        cfg.m = 8;
+        let t0 = Instant::now();
+        let r = solver::solve(&problem, &cfg);
+        time.push(t0.elapsed().as_secs_f64());
+        rounds.push(r.iterations as f64);
+        nfe.push(r.total_nfe as f64);
+    }
+    sc.push("taa_ms", Metric::lower(time.mean() * 1e3, "ms"));
+    sc.push(
+        "taa_round_ms",
+        Metric::lower(time.mean() * 1e3 / rounds.mean().max(1e-9), "ms"),
+    );
+    sc.push("taa_rounds", Metric::lower(rounds.mean(), "rounds"));
+    sc.push("taa_nfe", Metric::lower(nfe.mean(), "evals"));
     sc
 }
 

@@ -37,10 +37,15 @@ pub mod bench;
 pub mod coordinator;
 pub mod equations;
 pub mod figures;
+// The numeric core must stay free of clippy's perf lints regardless of CI
+// flags: deny them at the source so even a bare `cargo clippy` fails on a
+// perf regression in the hot paths (ISSUE-4 lint gate).
+#[deny(clippy::perf)]
 pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod schedule;
+#[deny(clippy::perf)]
 pub mod solver;
 pub mod util;

@@ -13,27 +13,130 @@
 //! then a reverse cumulative sum (O(W·m²)). This mirrors the Pallas kernel
 //! `python/compile/kernels/taa_update.py`, and the cross-language test
 //! vectors pin the two implementations together.
+//!
+//! Storage is one flat `[W, m×m]` / `[W, m]` buffer pair with stride views
+//! ([`SuffixGrams::gram`]/[`SuffixGrams::proj`]), and the write-into entry
+//! point [`suffix_grams_into`] reuses a caller-owned [`SuffixGrams`] so the
+//! per-round scan performs **zero heap allocations** at steady state. The
+//! per-row Gram contributions themselves are cached incrementally by
+//! `solver::history::History` (one ring push refreshes only the entries
+//! involving the overwritten slot); `History::suffix_grams_into` feeds that
+//! cache through the same accumulation path, and a bitwise property test
+//! pins the two against each other.
 
-/// Per-row suffix Grams and projections.
+use super::kernels::dot8;
+
+/// Per-row suffix Grams and projections in flat storage.
+///
+/// `gram(t)` is the row-major m×m matrix G_t, `proj(t)` the m-vector b_t.
+/// The struct doubles as the reverse-scan workspace: the f64 suffix
+/// accumulators live here so refilling an existing instance allocates
+/// nothing once capacity has been reached.
+#[derive(Debug, Clone, Default)]
 pub struct SuffixGrams {
-    /// `grams[t]` is the m×m matrix G_t (row-major), length W.
-    pub grams: Vec<Vec<f32>>,
-    /// `proj[t]` is the m-vector b_t, length W.
-    pub proj: Vec<Vec<f32>>,
+    w: usize,
+    m: usize,
+    /// Flat `[w, m*m]` Gram storage.
+    grams: Vec<f32>,
+    /// Flat `[w, m]` projection storage.
+    proj: Vec<f32>,
+    /// f64 suffix accumulator for the Gram entries (`m*m`).
+    acc_g: Vec<f64>,
+    /// f64 suffix accumulator for the projections (`m`).
+    acc_b: Vec<f64>,
 }
 
-/// Compute suffix Grams.
+impl SuffixGrams {
+    /// An empty workspace; sized lazily by [`reset`](Self::reset).
+    pub fn new() -> SuffixGrams {
+        SuffixGrams::default()
+    }
+
+    /// Re-shape for a `[w, m]` scan and zero all storage and accumulators.
+    /// Allocates only when the required capacity grows.
+    pub fn reset(&mut self, w: usize, m: usize) {
+        self.w = w;
+        self.m = m;
+        self.grams.clear();
+        self.grams.resize(w * m * m, 0.0);
+        self.proj.clear();
+        self.proj.resize(w * m, 0.0);
+        self.acc_g.clear();
+        self.acc_g.resize(m * m, 0.0);
+        self.acc_b.clear();
+        self.acc_b.resize(m, 0.0);
+    }
+
+    /// Window rows W this workspace is shaped for.
+    pub fn rows(&self) -> usize {
+        self.w
+    }
+
+    /// History depth m this workspace is shaped for.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// The m×m suffix Gram G_t (row-major view into the flat buffer).
+    #[inline]
+    pub fn gram(&self, t: usize) -> &[f32] {
+        &self.grams[t * self.m * self.m..(t + 1) * self.m * self.m]
+    }
+
+    /// The m-vector suffix projection b_t.
+    #[inline]
+    pub fn proj(&self, t: usize) -> &[f32] {
+        &self.proj[t * self.m..(t + 1) * self.m]
+    }
+
+    /// Fold one per-row Gram contribution `s = ΔF_aᵀΔF_b` (row-restricted)
+    /// into the running suffix accumulator, mirroring across the diagonal.
+    #[inline]
+    pub fn accumulate_gram(&mut self, a: usize, b: usize, s: f64) {
+        self.acc_g[a * self.m + b] += s;
+        if a != b {
+            self.acc_g[b * self.m + a] += s;
+        }
+    }
+
+    /// Fold one per-row projection contribution `s = ΔF_aᵀR` into the
+    /// running suffix accumulator.
+    #[inline]
+    pub fn accumulate_proj(&mut self, a: usize, s: f64) {
+        self.acc_b[a] += s;
+    }
+
+    /// Snapshot the current accumulators as row `t`'s G_t / b_t (the
+    /// reverse scan calls this once per row, from `w−1` down to `t0`).
+    #[inline]
+    pub fn commit_row(&mut self, t: usize) {
+        let mm = self.m * self.m;
+        for (o, &v) in self.grams[t * mm..(t + 1) * mm].iter_mut().zip(self.acc_g.iter()) {
+            *o = v as f32;
+        }
+        for (o, &v) in
+            self.proj[t * self.m..(t + 1) * self.m].iter_mut().zip(self.acc_b.iter())
+        {
+            *o = v as f32;
+        }
+    }
+}
+
+/// Compute suffix Grams into a reusable workspace (zero allocations once
+/// `out` has reached capacity).
 ///
 /// Layout: `delta_f[h]` is history slot `h` (h = 0..m), a `[W*D]` row-major
 /// window; `residual` is `[W*D]`. Only rows `t0..W` participate (rows below
-/// the active window are skipped by callers passing `t0`).
-pub fn suffix_grams(
+/// the active window are skipped by callers passing `t0`); rows `< t0` of
+/// `out` are zeroed.
+pub fn suffix_grams_into(
+    out: &mut SuffixGrams,
     delta_f: &[&[f32]],
     residual: &[f32],
     w: usize,
     d: usize,
     t0: usize,
-) -> SuffixGrams {
+) {
     let m = delta_f.len();
     for h in delta_f {
         assert_eq!(h.len(), w * d, "history slot shape");
@@ -41,46 +144,34 @@ pub fn suffix_grams(
     assert_eq!(residual.len(), w * d, "residual shape");
     assert!(t0 <= w);
 
-    let mut grams = vec![vec![0.0f32; m * m]; w];
-    let mut proj = vec![vec![0.0f32; m]; w];
-
+    out.reset(w, m);
     // Accumulators carried down the reverse scan, in f64: the suffix sums
     // telescope over up to W=100 rows and the Gram conditioning matters.
-    let mut acc_g = vec![0.0f64; m * m];
-    let mut acc_b = vec![0.0f64; m];
-
     for t in (t0..w).rev() {
         let row = t * d..(t + 1) * d;
         // Per-row Gram contribution (symmetric — compute upper, mirror).
         for a in 0..m {
             let fa = &delta_f[a][row.clone()];
             for b in a..m {
-                let fb = &delta_f[b][row.clone()];
-                let mut s = 0.0f64;
-                for (x, y) in fa.iter().zip(fb.iter()) {
-                    s += (*x as f64) * (*y as f64);
-                }
-                acc_g[a * m + b] += s;
-                if a != b {
-                    acc_g[b * m + a] += s;
-                }
+                out.accumulate_gram(a, b, dot8(fa, &delta_f[b][row.clone()]));
             }
-            let r = &residual[row.clone()];
-            let mut s = 0.0f64;
-            for (x, y) in fa.iter().zip(r.iter()) {
-                s += (*x as f64) * (*y as f64);
-            }
-            acc_b[a] += s;
+            out.accumulate_proj(a, dot8(fa, &residual[row.clone()]));
         }
-        for (o, &v) in grams[t].iter_mut().zip(acc_g.iter()) {
-            *o = v as f32;
-        }
-        for (o, &v) in proj[t].iter_mut().zip(acc_b.iter()) {
-            *o = v as f32;
-        }
+        out.commit_row(t);
     }
+}
 
-    SuffixGrams { grams, proj }
+/// Allocating convenience wrapper over [`suffix_grams_into`].
+pub fn suffix_grams(
+    delta_f: &[&[f32]],
+    residual: &[f32],
+    w: usize,
+    d: usize,
+    t0: usize,
+) -> SuffixGrams {
+    let mut out = SuffixGrams::new();
+    suffix_grams_into(&mut out, delta_f, residual, w, d, t0);
+    out
 }
 
 #[cfg(test)]
@@ -89,7 +180,13 @@ mod tests {
     use crate::util::proplite::{self, forall, size_in};
 
     /// Naive reference: recompute each suffix sum from scratch.
-    fn naive(delta_f: &[&[f32]], residual: &[f32], w: usize, d: usize, t0: usize) -> SuffixGrams {
+    fn naive(
+        delta_f: &[&[f32]],
+        residual: &[f32],
+        w: usize,
+        d: usize,
+        t0: usize,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
         let m = delta_f.len();
         let mut grams = vec![vec![0.0f32; m * m]; w];
         let mut proj = vec![vec![0.0f32; m]; w];
@@ -113,7 +210,7 @@ mod tests {
                 proj[t][a] = s as f32;
             }
         }
-        SuffixGrams { grams, proj }
+        (grams, proj)
     }
 
     #[test]
@@ -129,13 +226,34 @@ mod tests {
             let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
             let res: Vec<f32> = (0..w * d).map(|_| rng.next_f32() - 0.5).collect();
             let fast = suffix_grams(&refs, &res, w, d, t0);
-            let slow = naive(&refs, &res, w, d, t0);
+            let (slow_g, slow_b) = naive(&refs, &res, w, d, t0);
             for t in t0..w {
-                proplite::assert_close(&fast.grams[t], &slow.grams[t], 1e-4, 1e-4, "gram")?;
-                proplite::assert_close(&fast.proj[t], &slow.proj[t], 1e-4, 1e-4, "proj")?;
+                proplite::assert_close(fast.gram(t), &slow_g[t], 1e-4, 1e-4, "gram")?;
+                proplite::assert_close(fast.proj(t), &slow_b[t], 1e-4, 1e-4, "proj")?;
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn reuse_across_shapes_matches_fresh() {
+        // One workspace refilled at several shapes must match a fresh
+        // allocation bit-for-bit (stale rows must not leak through).
+        let mut rng = crate::util::rng::Pcg64::seeded(14);
+        let mut ws = SuffixGrams::new();
+        for (w, d, m, t0) in [(9usize, 5usize, 3usize, 0usize), (4, 7, 1, 2), (12, 3, 2, 5)] {
+            let slots: Vec<Vec<f32>> = (0..m)
+                .map(|_| (0..w * d).map(|_| rng.next_f32() - 0.5).collect())
+                .collect();
+            let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+            let res: Vec<f32> = (0..w * d).map(|_| rng.next_f32() - 0.5).collect();
+            suffix_grams_into(&mut ws, &refs, &res, w, d, t0);
+            let fresh = suffix_grams(&refs, &res, w, d, t0);
+            for t in 0..w {
+                assert_eq!(ws.gram(t), fresh.gram(t), "gram row {t} (w={w})");
+                assert_eq!(ws.proj(t), fresh.proj(t), "proj row {t} (w={w})");
+            }
+        }
     }
 
     #[test]
@@ -148,7 +266,7 @@ mod tests {
         let res = vec![0.0f32; w * d];
         let g = suffix_grams(&[&slot], &res, w, d, 0);
         for t in 1..w {
-            assert!(g.grams[t][0] <= g.grams[t - 1][0] + 1e-6);
+            assert!(g.gram(t)[0] <= g.gram(t - 1)[0] + 1e-6);
         }
     }
 
@@ -159,9 +277,9 @@ mod tests {
         let res = vec![1.0; w * d];
         let g = suffix_grams(&[&slot], &res, w, d, 0);
         // row 2 suffix = just row 2: [3,4] -> gram 25, proj 7
-        assert!((g.grams[2][0] - 25.0).abs() < 1e-6);
-        assert!((g.proj[2][0] - 7.0).abs() < 1e-6);
+        assert!((g.gram(2)[0] - 25.0).abs() < 1e-6);
+        assert!((g.proj(2)[0] - 7.0).abs() < 1e-6);
         // row 0 suffix = all rows: 1+4+0+0+9+16 = 30
-        assert!((g.grams[0][0] - 30.0).abs() < 1e-6);
+        assert!((g.gram(0)[0] - 30.0).abs() < 1e-6);
     }
 }

@@ -1,0 +1,115 @@
+//! Vectorizable inner-loop kernels for the TAA numeric core.
+//!
+//! The suffix-Gram scan and the Anderson correction loop spend all their
+//! time in two shapes of work: f32 dot products accumulated in f64 (the
+//! Gram/projection entries steer the stopping criterion, so precision
+//! matters) and elementwise row updates. The naive forms are
+//! latency-bound — a single f64 accumulator serializes on the ~4-cycle add
+//! latency — so [`dot8`] splits the sum across 8 independent accumulators
+//! that the autovectorizer maps onto SIMD lanes, turning the loop
+//! throughput-bound. [`add_assign`]/[`sub_scaled`] are the dependency-free
+//! row primitives of the fused correction `x_p += R_p − Σ_h γ_h·fused_h[p]`
+//! (see `solver::history::History::correct_row`).
+//!
+//! Reassociating the sum changes the last-ulp rounding versus a sequential
+//! accumulator; every caller is pinned against a naive reference at
+//! tolerance, and the solver's golden tests compare two paths that share
+//! these kernels, so bit-identity across the session/driver split is
+//! preserved.
+
+/// Dot product of two f32 slices with 8 independent f64 accumulators.
+///
+/// The 8 partial sums are reduced pairwise at the end, so the result is
+/// deterministic for a given length (but differs in the last ulps from a
+/// single sequential accumulator).
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let n8 = n - n % 8;
+    let mut acc = [0.0f64; 8];
+    let mut i = 0;
+    while i < n8 {
+        // Fixed-size subslices let the compiler elide bounds checks and
+        // keep the 8 lanes independent.
+        let xa = &a[i..i + 8];
+        let xb = &b[i..i + 8];
+        for l in 0..8 {
+            acc[l] += (xa[l] as f64) * (xb[l] as f64);
+        }
+        i += 8;
+    }
+    let mut tail = 0.0f64;
+    for j in n8..n {
+        tail += (a[j] as f64) * (b[j] as f64);
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// `x += r` elementwise — the FP half of the Anderson correction.
+#[inline]
+pub fn add_assign(x: &mut [f32], r: &[f32]) {
+    debug_assert_eq!(x.len(), r.len());
+    for (o, &v) in x.iter_mut().zip(r.iter()) {
+        *o += v;
+    }
+}
+
+/// `x -= alpha * f` elementwise — one history slot's share of the
+/// correction `Σ_h γ_h·fused_h`.
+#[inline]
+pub fn sub_scaled(x: &mut [f32], f: &[f32], alpha: f32) {
+    debug_assert_eq!(x.len(), f.len());
+    for (o, &v) in x.iter_mut().zip(f.iter()) {
+        *o -= alpha * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proplite::{forall, size_in};
+    use crate::util::rng::Pcg64;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b.iter()).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    }
+
+    #[test]
+    fn dot8_matches_naive_all_lengths() {
+        // Every remainder class 0..8 plus longer sizes.
+        forall("dot8_naive", 40, |rng, _| {
+            let n = size_in(rng, 0, 67);
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let fast = dot8(&a, &b);
+            let slow = naive_dot(&a, &b);
+            if (fast - slow).abs() > 1e-9 * (1.0 + slow.abs()) {
+                return Err(format!("n={n}: dot8 {fast} vs naive {slow}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot8_is_deterministic() {
+        let mut rng = Pcg64::seeded(9);
+        let a: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
+        assert_eq!(dot8(&a, &b).to_bits(), dot8(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn dot8_empty_is_zero() {
+        assert_eq!(dot8(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn row_primitives() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        add_assign(&mut x, &[0.5, 0.5, 0.5]);
+        assert_eq!(x, vec![1.5, 2.5, 3.5]);
+        sub_scaled(&mut x, &[1.0, 2.0, 3.0], 0.5);
+        assert_eq!(x, vec![1.0, 1.5, 2.0]);
+    }
+}

@@ -2,20 +2,29 @@
 //!
 //! Everything here operates on row-major `f32` slices. Shapes are tiny by
 //! BLAS standards — `W ≤ 100` window rows, `D ≤ 1024` feature columns,
-//! `m ≤ 8` Anderson history — so clarity and cache-friendly loops beat
-//! hand-vectorization; the compiler auto-vectorizes the inner `D` loops.
+//! `m ≤ 8` Anderson history — so the layout favors cache-friendly flat
+//! buffers and the hot inner loops live in [`kernels`], written so the
+//! autovectorizer maps them onto SIMD lanes (8 independent accumulators
+//! instead of one serial dependency chain).
 //!
 //! Submodules:
 //! - [`mat`]: dense matmul / axpy / norms,
 //! - [`solve`]: Cholesky and LU factorizations for the m×m Gram systems,
+//!   with `_into` variants that write into caller-owned scratch,
 //! - [`gram`]: the suffix-Gram scan at the core of Triangular Anderson
 //!   Acceleration (native mirror of the Pallas kernel in
-//!   `python/compile/kernels/taa_update.py`).
+//!   `python/compile/kernels/taa_update.py`), flat storage + write-into API,
+//! - [`kernels`]: the vectorizable dot/axpy primitives shared by the Gram
+//!   scan and the Anderson correction loop.
 
 pub mod gram;
+pub mod kernels;
 pub mod mat;
 pub mod solve;
 
-pub use gram::{suffix_grams, SuffixGrams};
+pub use gram::{suffix_grams, suffix_grams_into, SuffixGrams};
+pub use kernels::{add_assign, dot8, sub_scaled};
 pub use mat::{add_scaled, dot, l2_norm_sq, matmul, matvec, sub};
-pub use solve::{cholesky_solve, lu_solve};
+pub use solve::{
+    cholesky_factor_into, cholesky_solve, cholesky_solve_factored, cholesky_solve_into, lu_solve,
+};

@@ -6,14 +6,17 @@
 //! LU with partial pivoting is kept as a fallback for the standard-AA path
 //! where the post-processed matrix can lose symmetry.
 
-/// Solve `A x = b` for symmetric positive-definite `A` (n×n, row-major)
-/// via Cholesky. Returns `None` if the matrix is not (numerically) SPD.
-pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
+/// Cholesky-factor symmetric positive-definite `A` (n×n, row-major f32)
+/// into the caller-owned f64 lower triangle `l` (at least `n*n` long; only
+/// the lower triangle including the diagonal is written or later read).
+/// Returns `false` if the matrix is not (numerically) SPD — `l` is then
+/// partially written and must not be fed to the substitution.
+///
+/// Factoring in f64: the Gram matrices can be ill-conditioned when Anderson
+/// histories become nearly collinear near convergence.
+pub fn cholesky_factor_into(a: &[f32], n: usize, l: &mut [f64]) -> bool {
     assert_eq!(a.len(), n * n);
-    assert_eq!(b.len(), n);
-    // Factor in f64 for stability: the Gram matrices can be ill-conditioned
-    // when Anderson histories become nearly collinear near convergence.
-    let mut l = vec![0.0f64; n * n];
+    assert!(l.len() >= n * n, "factor scratch too small");
     for i in 0..n {
         for j in 0..=i {
             let mut sum = a[i * n + j] as f64;
@@ -22,7 +25,7 @@ pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
             }
             if i == j {
                 if sum <= 0.0 || !sum.is_finite() {
-                    return None;
+                    return false;
                 }
                 l[i * n + i] = sum.sqrt();
             } else {
@@ -30,8 +33,19 @@ pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
             }
         }
     }
+    true
+}
+
+/// Solve `L Lᵀ x = b` given a factor from [`cholesky_factor_into`], writing
+/// the solution into `out` (f32). `y` is an `n`-long f64 scratch: the
+/// forward substitution fills it and the back substitution runs in place,
+/// so the whole solve is allocation-free.
+pub fn cholesky_solve_factored(l: &[f64], b: &[f32], n: usize, y: &mut [f64], out: &mut [f32]) {
+    assert!(l.len() >= n * n);
+    assert_eq!(b.len(), n);
+    assert!(y.len() >= n, "substitution scratch too small");
+    assert!(out.len() >= n);
     // Forward substitution: L y = b
-    let mut y = vec![0.0f64; n];
     for i in 0..n {
         let mut sum = b[i] as f64;
         for k in 0..i {
@@ -39,16 +53,47 @@ pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
         }
         y[i] = sum / l[i * n + i];
     }
-    // Back substitution: Lᵀ x = y
-    let mut x = vec![0.0f64; n];
+    // Back substitution in place: Lᵀ x = y. Row i reads its own forward
+    // value before overwriting it and only already-final x[k] for k > i.
     for i in (0..n).rev() {
         let mut sum = y[i];
         for k in i + 1..n {
-            sum -= l[k * n + i] * x[k];
+            sum -= l[k * n + i] * y[k];
         }
-        x[i] = sum / l[i * n + i];
+        y[i] = sum / l[i * n + i];
     }
-    Some(x.iter().map(|&v| v as f32).collect())
+    for i in 0..n {
+        out[i] = y[i] as f32;
+    }
+}
+
+/// Factor + solve `A x = b` into caller-owned scratch (`l`: `n*n` f64,
+/// `y`: `n` f64) and output (`out`: `n` f32) — the zero-allocation form of
+/// [`cholesky_solve`]. Returns `false` (without touching `out`) when `A` is
+/// not numerically SPD.
+pub fn cholesky_solve_into(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    l: &mut [f64],
+    y: &mut [f64],
+    out: &mut [f32],
+) -> bool {
+    if !cholesky_factor_into(a, n, l) {
+        return false;
+    }
+    cholesky_solve_factored(l, b, n, y, out);
+    true
+}
+
+/// Solve `A x = b` for symmetric positive-definite `A` (n×n, row-major)
+/// via Cholesky. Returns `None` if the matrix is not (numerically) SPD.
+/// Allocating wrapper over [`cholesky_solve_into`].
+pub fn cholesky_solve(a: &[f32], b: &[f32], n: usize) -> Option<Vec<f32>> {
+    let mut l = vec![0.0f64; n * n];
+    let mut y = vec![0.0f64; n];
+    let mut out = vec![0.0f32; n];
+    cholesky_solve_into(a, b, n, &mut l, &mut y, &mut out).then_some(out)
 }
 
 /// Solve `A x = b` for general square `A` via LU with partial pivoting.
@@ -116,6 +161,46 @@ mod tests {
     fn cholesky_rejects_indefinite() {
         let a = [1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
         assert!(cholesky_solve(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_solve_bitwise() {
+        // Reused (stale) scratch must not leak into results.
+        let mut rng = crate::util::rng::Pcg64::seeded(31);
+        let mut l = vec![f64::NAN; 16];
+        let mut y = vec![f64::NAN; 4];
+        let mut out = vec![0.0f32; 4];
+        for n in 1..=4usize {
+            let m: Vec<f32> = (0..n * n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut a = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        acc += m[i * n + k] * m[j * n + k];
+                    }
+                    a[i * n + j] = acc + if i == j { 0.2 } else { 0.0 };
+                }
+            }
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            assert!(cholesky_solve_into(&a, &b, n, &mut l, &mut y, &mut out));
+            let alloc = cholesky_solve(&a, &b, n).unwrap();
+            assert_eq!(&out[..n], &alloc[..], "n={n}");
+        }
+    }
+
+    #[test]
+    fn factor_then_many_rhs_matches_full_solves() {
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let mut l = vec![0.0f64; 4];
+        let mut y = vec![0.0f64; 2];
+        let mut out = vec![0.0f32; 2];
+        assert!(cholesky_factor_into(&a, 2, &mut l));
+        for b in [[2.0f32, 1.0], [1.0, -1.0], [0.5, 3.0]] {
+            cholesky_solve_factored(&l, &b, 2, &mut y, &mut out);
+            let full = cholesky_solve(&a, &b, 2).unwrap();
+            assert_eq!(&out[..], &full[..]);
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Anderson history ring buffers.
+//! Anderson history ring buffers + the incrementally-maintained Gram cache.
 //!
 //! Stores the last `cap` difference pairs (ΔX^j, ΔF^j) over the *full* state
 //! range `[T, d]` (not just the active window): the sliding window moves
@@ -6,16 +6,48 @@
 //! Rows that were inactive (frozen or outside the window) when a slot was
 //! recorded hold zeros, which contribute nothing to the suffix Grams — the
 //! λ-ridge (Remark 3.3) absorbs the resulting rank deficiency.
+//!
+//! # Layout and the incremental Gram cache
+//!
+//! All slots live in flat `[cap, rows*d]` buffers. Alongside ΔX/ΔF each
+//! push also materializes the **fused** slot `ΔX + ΔF`, which is the only
+//! thing the correction loop `x_p += R_p − Σ_h γ_h·(ΔX_h[p]+ΔF_h[p])` ever
+//! reads — one stream per slot instead of two.
+//!
+//! The expensive part of the suffix-Gram scan (`linalg::gram`) is the
+//! per-row pairwise products `g_t[a,b] = ΔF_a[t]·ΔF_b[t]` — O(W·m²·D) when
+//! recomputed from scratch every round. But a ring push replaces exactly
+//! one slot, so only the `m` pairs involving the overwritten slot change:
+//! this module caches `g_t[a,b]` (f64, `[rows, cap, cap]`) and refreshes
+//! the affected entries at push time, O(W·m·D). [`History::suffix_grams_into`]
+//! then reduces the cache in O(W·m²) and rescans only the residual
+//! projection b_t (which changes every round, O(W·m·D)). [`History::clear`]
+//! — the window-jump path — drops the cache wholesale.
+//!
+//! The cached per-row products are computed by the same [`dot8`] kernel the
+//! from-scratch scan uses, so the cached and rescanned suffix Grams are
+//! **bit-identical** (pinned by a property test below).
 
-/// Ring buffer of history difference pairs.
+use crate::linalg::gram::SuffixGrams;
+use crate::linalg::kernels::{add_assign, dot8, sub_scaled};
+
+/// Ring buffer of history difference pairs with a per-row Gram cache.
 pub struct History {
     /// Capacity = number of difference columns (paper's m − 1).
     cap: usize,
     rows: usize,
     d: usize,
-    /// Slots in insertion order; `dx[s]` and `df[s]` are `[rows*d]`.
-    dx: Vec<Vec<f32>>,
-    df: Vec<Vec<f32>>,
+    /// Slot storage, flat `[cap, rows*d]`; slot `s` starts at `s*rows*d`.
+    dx: Vec<f32>,
+    df: Vec<f32>,
+    /// Fused `dx + df` per slot, materialized at push time.
+    fused: Vec<f32>,
+    /// Active row range `[lo, hi)` per slot: rows outside are all-zero.
+    lo: Vec<usize>,
+    hi: Vec<usize>,
+    /// Per-row pairwise Gram contributions, `[rows, cap, cap]` f64:
+    /// `row_gram[t*cap*cap + a*cap + b] = ΔF_a[t]·ΔF_b[t]` (symmetric).
+    row_gram: Vec<f64>,
     /// Next slot to overwrite.
     next: usize,
     /// Number of valid slots (≤ cap).
@@ -23,13 +55,18 @@ pub struct History {
 }
 
 impl History {
+    /// A ring for `cap` difference columns over `[rows, d]` states.
     pub fn new(cap: usize, rows: usize, d: usize) -> Self {
         History {
             cap,
             rows,
             d,
-            dx: (0..cap).map(|_| vec![0.0; rows * d]).collect(),
-            df: (0..cap).map(|_| vec![0.0; rows * d]).collect(),
+            dx: vec![0.0; cap * rows * d],
+            df: vec![0.0; cap * rows * d],
+            fused: vec![0.0; cap * rows * d],
+            lo: vec![0; cap],
+            hi: vec![0; cap],
+            row_gram: vec![0.0; rows * cap * cap],
             next: 0,
             len: 0,
         }
@@ -40,54 +77,191 @@ impl History {
         self.len
     }
 
+    /// True when no difference pairs have been recorded.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Ring capacity (maximum difference columns).
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// State rows T each slot spans.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Feature dimension d of each state row.
+    pub fn dim(&self) -> usize {
+        self.d
     }
 
     /// Record a new difference pair. `dx`/`df` are full `[rows*d]` buffers;
     /// the caller zeroes rows without valid previous values.
     pub fn push(&mut self, dx: &[f32], df: &[f32]) {
+        let rows = self.rows;
+        self.push_ranged(dx, df, 0, rows);
+    }
+
+    /// Record a new difference pair whose nonzero rows all lie in
+    /// `[lo, hi)` (rows outside MUST be zero in both buffers — this is what
+    /// lets the Gram cache and the correction loop skip them). `push` is
+    /// the full-range special case; the two are numerically identical.
+    pub fn push_ranged(&mut self, dx: &[f32], df: &[f32], lo: usize, hi: usize) {
         if self.cap == 0 {
             return;
         }
-        debug_assert_eq!(dx.len(), self.rows * self.d);
-        debug_assert_eq!(df.len(), self.rows * self.d);
-        self.dx[self.next].copy_from_slice(dx);
-        self.df[self.next].copy_from_slice(df);
+        let n = self.rows * self.d;
+        debug_assert_eq!(dx.len(), n);
+        debug_assert_eq!(df.len(), n);
+        debug_assert!(lo <= hi && hi <= self.rows);
+        #[cfg(debug_assertions)]
+        for (name, buf) in [("dx", dx), ("df", df)] {
+            for (i, &v) in buf.iter().enumerate() {
+                let row = i / self.d.max(1);
+                debug_assert!(
+                    v == 0.0 || (row >= lo && row < hi),
+                    "{name} row {row} nonzero outside [{lo}, {hi})"
+                );
+            }
+        }
+
+        let s = self.next;
+        self.dx[s * n..(s + 1) * n].copy_from_slice(dx);
+        self.df[s * n..(s + 1) * n].copy_from_slice(df);
+        for (o, (&a, &b)) in
+            self.fused[s * n..(s + 1) * n].iter_mut().zip(dx.iter().zip(df.iter()))
+        {
+            *o = a + b;
+        }
+        self.lo[s] = lo;
+        self.hi[s] = hi;
         self.next = (self.next + 1) % self.cap;
         self.len = (self.len + 1).min(self.cap);
+
+        // Refresh the cache entries involving slot s (only those changed).
+        let cap = self.cap;
+        let d = self.d;
+        let df_buf = &self.df;
+        let rg = &mut self.row_gram;
+        for h in 0..self.len {
+            // Drop the previous occupant's contributions everywhere...
+            for t in 0..self.rows {
+                rg[t * cap * cap + s * cap + h] = 0.0;
+                rg[t * cap * cap + h * cap + s] = 0.0;
+            }
+            // ...then fill the rows where both slots can be nonzero.
+            let plo = lo.max(self.lo[h]);
+            let phi = hi.min(self.hi[h]);
+            for t in plo..phi {
+                let fs = &df_buf[s * n + t * d..s * n + (t + 1) * d];
+                let fh = &df_buf[h * n + t * d..h * n + (t + 1) * d];
+                let v = dot8(fs, fh);
+                rg[t * cap * cap + s * cap + h] = v;
+                rg[t * cap * cap + h * cap + s] = v;
+            }
+        }
+    }
+
+    /// ΔX slot `h` (`h < len()`), a `[rows*d]` view.
+    #[inline]
+    pub fn dx_slot(&self, h: usize) -> &[f32] {
+        let n = self.rows * self.d;
+        &self.dx[h * n..(h + 1) * n]
+    }
+
+    /// ΔF slot `h`, index-aligned with [`dx_slot`](Self::dx_slot).
+    #[inline]
+    pub fn df_slot(&self, h: usize) -> &[f32] {
+        let n = self.rows * self.d;
+        &self.df[h * n..(h + 1) * n]
+    }
+
+    /// Fused `ΔX + ΔF` slot `h` — what the correction loop reads.
+    #[inline]
+    pub fn fused_slot(&self, h: usize) -> &[f32] {
+        let n = self.rows * self.d;
+        &self.fused[h * n..(h + 1) * n]
     }
 
     /// Valid ΔX slots (arbitrary but consistent order w.r.t. [`df_slots`]).
     pub fn dx_slots(&self) -> Vec<&[f32]> {
-        (0..self.len).map(|i| self.dx[i].as_slice()).collect()
+        (0..self.len).map(|i| self.dx_slot(i)).collect()
     }
 
     /// Valid ΔF slots, index-aligned with [`dx_slots`].
     pub fn df_slots(&self) -> Vec<&[f32]> {
-        (0..self.len).map(|i| self.df[i].as_slice()).collect()
+        (0..self.len).map(|i| self.df_slot(i)).collect()
+    }
+
+    /// Suffix Grams over all `len()` slots via the incremental per-row
+    /// cache: G_t comes from the cached pairwise products (O(W·m²) here,
+    /// maintained in O(W·m·D) at push time), b_t is rescanned against the
+    /// fresh `residual` (O(W·m·D)). Bit-identical to
+    /// [`crate::linalg::suffix_grams_into`] over [`df_slots`](Self::df_slots).
+    pub fn suffix_grams_into(&self, residual: &[f32], t0: usize, out: &mut SuffixGrams) {
+        let (w, d, m) = (self.rows, self.d, self.len);
+        assert_eq!(residual.len(), w * d, "residual shape");
+        assert!(t0 <= w);
+        out.reset(w, m);
+        let cc = self.cap * self.cap;
+        let n = w * d;
+        for t in (t0..w).rev() {
+            let base = t * cc;
+            for a in 0..m {
+                for b in a..m {
+                    out.accumulate_gram(a, b, self.row_gram[base + a * self.cap + b]);
+                }
+                // Rows outside slot a's active range hold zeros — skip the
+                // dot entirely (contributes exactly +0.0).
+                if t >= self.lo[a] && t < self.hi[a] {
+                    let fa = &self.df[a * n + t * d..a * n + (t + 1) * d];
+                    out.accumulate_proj(a, dot8(fa, &residual[t * d..(t + 1) * d]));
+                }
+            }
+            out.commit_row(t);
+        }
+    }
+
+    /// The fused Anderson correction for one window row:
+    /// `x_row = (x_row + r_row) − Σ_h gamma[h]·fused_h[p]`, skipping slots
+    /// whose active range excludes `p` (their fused row is all-zero).
+    pub fn correct_row(&self, p: usize, gamma: &[f32], r_row: &[f32], x_row: &mut [f32]) {
+        debug_assert!(gamma.len() <= self.len);
+        debug_assert_eq!(r_row.len(), self.d);
+        debug_assert_eq!(x_row.len(), self.d);
+        add_assign(x_row, r_row);
+        let n = self.rows * self.d;
+        for (h, &g) in gamma.iter().enumerate() {
+            if p < self.lo[h] || p >= self.hi[h] {
+                continue;
+            }
+            let fh = &self.fused[h * n + p * self.d..h * n + (p + 1) * self.d];
+            sub_scaled(x_row, fh, g);
+        }
     }
 
     /// Drop all history (used when the window jumps discontinuously).
+    /// Invalidates the Gram cache wholesale.
     pub fn clear(&mut self) {
         self.len = 0;
         self.next = 0;
-        for s in &mut self.dx {
-            s.fill(0.0);
-        }
-        for s in &mut self.df {
-            s.fill(0.0);
-        }
+        self.dx.fill(0.0);
+        self.df.fill(0.0);
+        self.fused.fill(0.0);
+        self.row_gram.fill(0.0);
+        self.lo.fill(0);
+        self.hi.fill(0);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::gram::suffix_grams_into;
+    use crate::util::proplite::{forall, size_in};
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn ring_overwrites_oldest() {
@@ -131,5 +305,150 @@ mod tests {
         h.push(&[1.0], &[1.0]);
         h.clear();
         assert_eq!(h.len(), 0);
+    }
+
+    #[test]
+    fn fused_slot_is_dx_plus_df() {
+        let mut h = History::new(2, 2, 2);
+        h.push(&[1.0, 2.0, 3.0, 4.0], &[0.5, -0.5, 0.25, -0.25]);
+        assert_eq!(h.fused_slot(0), &[1.5, 1.5, 3.25, 3.75]);
+    }
+
+    /// Randomized ranged pushes into a History, then push the same buffers
+    /// into a fresh instance via full-range `push`: ranged and full pushes
+    /// must be indistinguishable through the cached suffix-Gram API.
+    fn random_history(rng: &mut Pcg64, cap: usize, w: usize, d: usize) -> (History, History) {
+        let mut ranged = History::new(cap, w, d);
+        let mut full = History::new(cap, w, d);
+        let pushes = size_in(rng, 1, 2 * cap.max(1) + 1);
+        for _ in 0..pushes {
+            let lo = size_in(rng, 0, w - 1);
+            let hi = size_in(rng, lo, w - 1) + 1;
+            let mut dx = vec![0.0f32; w * d];
+            let mut df = vec![0.0f32; w * d];
+            for i in lo * d..hi * d {
+                dx[i] = rng.next_f32() - 0.5;
+                df[i] = rng.next_f32() - 0.5;
+            }
+            ranged.push_ranged(&dx, &df, lo, hi);
+            full.push(&dx, &df);
+        }
+        (ranged, full)
+    }
+
+    #[test]
+    fn cached_suffix_grams_match_rescan_bitwise() {
+        forall("gram_cache_vs_rescan", 24, |rng, _| {
+            let w = size_in(rng, 1, 12);
+            let d = size_in(rng, 1, 9);
+            let cap = size_in(rng, 1, 4);
+            let (ranged, full) = random_history(rng, cap, w, d);
+            let res: Vec<f32> = (0..w * d).map(|_| rng.next_f32() - 0.5).collect();
+            let t0 = size_in(rng, 0, w - 1);
+
+            let mut cached = SuffixGrams::new();
+            ranged.suffix_grams_into(&res, t0, &mut cached);
+            let mut cached_full = SuffixGrams::new();
+            full.suffix_grams_into(&res, t0, &mut cached_full);
+            let slots = full.df_slots();
+            let mut rescan = SuffixGrams::new();
+            suffix_grams_into(&mut rescan, &slots, &res, w, d, t0);
+
+            for t in t0..w {
+                if cached.gram(t) != rescan.gram(t) || cached.proj(t) != rescan.proj(t) {
+                    return Err(format!("ranged cache != rescan at row {t}"));
+                }
+                if cached_full.gram(t) != rescan.gram(t)
+                    || cached_full.proj(t) != rescan.proj(t)
+                {
+                    return Err(format!("full-range cache != rescan at row {t}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cache_survives_clear_and_rebuild() {
+        let mut rng = Pcg64::seeded(23);
+        let (w, d, cap) = (6usize, 3usize, 2usize);
+        let mut h = History::new(cap, w, d);
+        h.push(&rng.gaussian_vec(w * d), &rng.gaussian_vec(w * d));
+        h.clear();
+        let dx = rng.gaussian_vec(w * d);
+        let df = rng.gaussian_vec(w * d);
+        h.push(&dx, &df);
+        let res = rng.gaussian_vec(w * d);
+        let mut cached = SuffixGrams::new();
+        h.suffix_grams_into(&res, 0, &mut cached);
+        let mut rescan = SuffixGrams::new();
+        suffix_grams_into(&mut rescan, &[&df], &res, w, d, 0);
+        for t in 0..w {
+            assert_eq!(cached.gram(t), rescan.gram(t), "stale cache after clear, row {t}");
+            assert_eq!(cached.proj(t), rescan.proj(t), "stale proj after clear, row {t}");
+        }
+    }
+
+    #[test]
+    fn realistic_size_cache_parity_with_wrap_and_slides() {
+        // The ISSUE-4 regime: W=100, m=8, D=256, sliding ranges, ring wrap,
+        // several t0 fronts. Cached and rescanned suffix Grams must agree
+        // bitwise.
+        let (w, d, cap) = (100usize, 256usize, 8usize);
+        let mut rng = Pcg64::seeded(41);
+        let mut h = History::new(cap, w, d);
+        for i in 0..cap + 2 {
+            // A window sliding downward, as the solver's front advances.
+            let hi = w - 4 * i.min(10);
+            let lo = hi.saturating_sub(40);
+            let mut dx = vec![0.0f32; w * d];
+            let mut df = vec![0.0f32; w * d];
+            for j in lo * d..hi * d {
+                dx[j] = rng.next_f32() - 0.5;
+                df[j] = rng.next_f32() - 0.5;
+            }
+            h.push_ranged(&dx, &df, lo, hi);
+        }
+        let res = rng.gaussian_vec(w * d);
+        let slots = h.df_slots();
+        for t0 in [0usize, 41, 99] {
+            let mut cached = SuffixGrams::new();
+            h.suffix_grams_into(&res, t0, &mut cached);
+            let mut rescan = SuffixGrams::new();
+            suffix_grams_into(&mut rescan, &slots, &res, w, d, t0);
+            for t in t0..w {
+                assert_eq!(cached.gram(t), rescan.gram(t), "gram row {t} (t0={t0})");
+                assert_eq!(cached.proj(t), rescan.proj(t), "proj row {t} (t0={t0})");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_row_matches_naive() {
+        let mut rng = Pcg64::seeded(17);
+        let (w, d, cap) = (5usize, 4usize, 3usize);
+        let (h, _) = random_history(&mut rng, cap, w, d);
+        let gamma: Vec<f32> = (0..h.len()).map(|_| rng.next_f32() - 0.5).collect();
+        for p in 0..w {
+            let x0 = rng.gaussian_vec(d);
+            let r = rng.gaussian_vec(d);
+            let mut fast = x0.clone();
+            h.correct_row(p, &gamma, &r, &mut fast);
+            // Naive: x + r − Σ_h γ_h (ΔX_h[p] + ΔF_h[p]), same accumulation
+            // order as correct_row (add r, then subtract slot by slot).
+            let mut slow = x0.clone();
+            for i in 0..d {
+                slow[i] += r[i];
+            }
+            for (hh, &g) in gamma.iter().enumerate() {
+                let dx = h.dx_slot(hh);
+                let df = h.df_slot(hh);
+                for i in 0..d {
+                    slow[i] -= g * (dx[p * d + i] + df[p * d + i]);
+                }
+            }
+            crate::util::proplite::assert_close(&fast, &slow, 1e-6, 1e-5, "correct_row")
+                .unwrap();
+        }
     }
 }

@@ -2,11 +2,16 @@
 //!
 //! - [`sequential`] — the autoregressive baseline (eq. 6), also the oracle
 //!   that parallel methods must match (Theorem 2.2 / Remark 5.3);
-//! - [`history`] — Anderson history ring buffers (ΔX, ΔF);
+//! - [`history`] — Anderson history ring buffers (ΔX, ΔF) with the fused
+//!   ΔX+ΔF slots and the incrementally-maintained per-row Gram cache (one
+//!   ring push refreshes only the entries involving the overwritten slot);
 //! - [`update`] — the update rules: fixed-point (eq. 10), standard Anderson
 //!   Acceleration (eq. 12–13), AA+ (upper-triangular extraction, Remark
 //!   3.4), and Triangular Anderson Acceleration (Theorem 3.2) with the
-//!   Theorem 3.6 safeguard;
+//!   Theorem 3.6 safeguard; `apply_update_ws` is the zero-allocation
+//!   production path;
+//! - [`workspace`] — the session-owned scratch ([`Workspace`]) that makes
+//!   steady-state rounds allocation-free;
 //! - [`session`] — Algorithm 1 as a resumable state machine
 //!   ([`SolverSession`]): sliding window, stopping criterion, history
 //!   management, iteration accounting, one `pending()`/`resume()` pair per
@@ -21,10 +26,12 @@ pub mod init;
 pub mod sequential;
 pub mod session;
 pub mod update;
+pub mod workspace;
 
 pub use driver::{solve, IterationRecord, SolveResult};
 pub use sequential::sample_sequential;
 pub use session::{EpsBatch, RoundOutcome, SolverSession};
+pub use workspace::Workspace;
 
 use crate::equations::States;
 use crate::model::{Cond, EpsModel};

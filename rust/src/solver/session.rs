@@ -38,7 +38,8 @@
 
 use super::driver::{IterationRecord, SolveResult};
 use super::history::History;
-use super::update::apply_update;
+use super::update::apply_update_ws;
+use super::workspace::Workspace;
 use super::{Problem, SolverConfig};
 use crate::equations::{eval_fk, residual_sq, States};
 use crate::model::Cond;
@@ -166,6 +167,10 @@ pub struct SolverSession {
     batch_x: Vec<f32>,
     batch_t: Vec<usize>,
     batch_states: Vec<usize>,
+    /// Update-path scratch (suffix Grams, ridge/γ/Cholesky buffers): the
+    /// session owns it so steady-state rounds allocate nothing inside
+    /// `apply_update_ws`. Plain `Vec`s — the session stays `Send`.
+    ws: Workspace,
 
     // --- round accounting -------------------------------------------------
     t1: usize,
@@ -241,6 +246,7 @@ impl SolverSession {
             batch_x: Vec::new(),
             batch_t: Vec::new(),
             batch_states: Vec::new(),
+            ws: Workspace::new(),
             t1,
             t2,
             iter: 1,
@@ -394,7 +400,10 @@ impl SolverSession {
                         self.dx_buf[i] = self.xs.data[i] - self.prev_x[i];
                         self.df_buf[i] = self.r_vals[i] - self.prev_r[i];
                     }
-                    self.history.push(&self.dx_buf, &self.df_buf);
+                    // Ranged push: rows outside [lo, hi] are zero, so the
+                    // Gram-cache refresh and correction loop can skip them
+                    // (numerically identical to a full-range push).
+                    self.history.push_ranged(&self.dx_buf, &self.df_buf, lo, hi + 1);
                 }
             }
             self.prev_x.copy_from_slice(&self.xs.data[..self.t_count * d]);
@@ -403,7 +412,7 @@ impl SolverSession {
         }
 
         // --- Update rule ----------------------------------------------------
-        apply_update(
+        apply_update_ws(
             self.cfg.method,
             &mut self.xs.data[..self.t_count * d],
             &self.f_vals,
@@ -415,6 +424,7 @@ impl SolverSession {
             d,
             self.cfg.lambda,
             self.cfg.safeguard,
+            &mut self.ws,
         );
 
         let rec = IterationRecord {

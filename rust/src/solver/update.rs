@@ -21,22 +21,140 @@
 //!
 //! An empty history makes every variant degenerate to the FP step
 //! x^{i+1} = x + R = F(x) — also the safeguarded row's update.
+//!
+//! # Allocation discipline
+//!
+//! [`apply_update_ws`] is the production path: suffix Grams come from the
+//! [`History`]'s incremental per-row cache, the Gram/γ/Cholesky scratch
+//! lives in a caller-owned [`Workspace`], and the correction loop reads the
+//! history's fused `ΔX+ΔF` slots — **zero heap allocations per call** at
+//! steady state. AA+ additionally factors its shared full-window Gram once
+//! per round instead of refactoring the same matrix for every row (AA
+//! always solved once per round; its per-row cost was a γ clone, now a
+//! shared borrow). [`apply_update`] is the allocating convenience wrapper
+//! (tests, one-shot callers).
 
 use super::history::History;
+use super::workspace::Workspace;
 use super::Method;
-use crate::linalg::{cholesky_solve, suffix_grams};
+use crate::linalg::{cholesky_factor_into, cholesky_solve_factored, cholesky_solve_into};
 
-/// Apply one parallel update over active rows `[t1, t2]` (inclusive).
+/// Apply one parallel update over active rows `[t1, t2]` (inclusive),
+/// reusing `ws` for every intermediate — no heap allocation once `ws` has
+/// reached capacity.
 ///
 /// * `xs_rows` — mutable view of the unknown states `[T*d]` (rows 0..T−1);
 /// * `f_vals` — F_p^{(k)} for active rows (`[T*d]`, other rows ignored);
 /// * `r_vals` — residuals R_p = F_p − x_p (`[T*d]`, **zero outside the
 ///   active window** — the suffix Grams rely on it);
-/// * `history` — Anderson difference pairs (may be empty);
+/// * `history` — Anderson difference pairs (may be empty), spanning the
+///   same `[T, d]` state range;
 /// * `lambda` — Gram ridge (Remark 3.3);
 /// * `safeguard` — force the top unconverged row `t2` to a plain FP step
 ///   (Theorem 3.6; rows above t2 are converged, i.e. R ≈ 0, so t2 is the
 ///   row the theorem's condition bites on).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update_ws(
+    method: Method,
+    xs_rows: &mut [f32],
+    f_vals: &[f32],
+    r_vals: &[f32],
+    history: &History,
+    t1: usize,
+    t2: usize,
+    t_rows: usize,
+    d: usize,
+    lambda: f32,
+    safeguard: bool,
+    ws: &mut Workspace,
+) {
+    debug_assert_eq!(xs_rows.len(), t_rows * d);
+    debug_assert!(t1 <= t2 && t2 < t_rows);
+
+    let m = history.len();
+    if method == Method::FixedPoint || m == 0 {
+        // x ← F(x)
+        for p in t1..=t2 {
+            xs_rows[p * d..(p + 1) * d].copy_from_slice(&f_vals[p * d..(p + 1) * d]);
+        }
+        return;
+    }
+    debug_assert_eq!(history.rows(), t_rows);
+    debug_assert_eq!(history.dim(), d);
+
+    ws.ensure(m);
+    let Workspace { sg, ridged, gamma, global_gamma, chol, y } = ws;
+
+    // Suffix Grams over the full row range (cached G, rescanned b); rows
+    // above t2 hold zeros, so G_{t1} is also the full-window Gram used by
+    // AA/AA+.
+    history.suffix_grams_into(r_vals, t1, sg);
+
+    // Round-level work: the global γ (AA) or the shared full-window Gram
+    // factor (AA+) — both were historically recomputed per row.
+    let mut have_global = false;
+    let mut shared_factor = false;
+    match method {
+        Method::AndersonStd => {
+            ridge_into(sg.gram(t1), ridged, m, lambda);
+            have_global = cholesky_solve_into(ridged, sg.proj(t1), m, chol, y, global_gamma);
+        }
+        Method::AndersonUpperTri => {
+            ridge_into(sg.gram(t1), ridged, m, lambda);
+            shared_factor = cholesky_factor_into(ridged, m, chol);
+        }
+        _ => {}
+    }
+
+    for p in t1..=t2 {
+        let row = p * d..(p + 1) * d;
+        // Safeguarded row: plain FP (γ = 0). Theorem 3.6's condition is
+        // imposed on the top unconverged row, whose suffix residuals
+        // R_{p+1:} are all (numerically) zero.
+        let fp_only = safeguard && p == t2;
+
+        let g: Option<&[f32]> = if fp_only {
+            None
+        } else {
+            match method {
+                Method::FixedPoint => None, // handled above
+                Method::AndersonStd => have_global.then_some(global_gamma.as_slice()),
+                Method::AndersonUpperTri => {
+                    // M = (full-window Gram + λI)⁻¹ applied to the *suffix*
+                    // projection b_p — the upper-triangular part of eq. (13).
+                    if shared_factor {
+                        cholesky_solve_factored(chol, sg.proj(p), m, y, gamma);
+                        Some(gamma.as_slice())
+                    } else {
+                        None
+                    }
+                }
+                Method::Taa => {
+                    ridge_into(sg.gram(p), ridged, m, lambda);
+                    if cholesky_solve_into(ridged, sg.proj(p), m, chol, y, gamma) {
+                        Some(gamma.as_slice())
+                    } else {
+                        None
+                    }
+                }
+            }
+        };
+
+        match g {
+            None => {
+                xs_rows[row.clone()].copy_from_slice(&f_vals[row]);
+            }
+            Some(g) => {
+                // x_p ← x_p + R_p − Σ_h γ_h·fused_h[p]
+                history.correct_row(p, g, &r_vals[row.clone()], &mut xs_rows[row]);
+            }
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`apply_update_ws`] — numerically
+/// identical (same kernels, same accumulation order), it just pays for a
+/// fresh [`Workspace`] per call.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_update(
     method: Method,
@@ -51,85 +169,21 @@ pub fn apply_update(
     lambda: f32,
     safeguard: bool,
 ) {
-    debug_assert_eq!(xs_rows.len(), t_rows * d);
-    debug_assert!(t1 <= t2 && t2 < t_rows);
+    let mut ws = Workspace::new();
+    apply_update_ws(
+        method, xs_rows, f_vals, r_vals, history, t1, t2, t_rows, d, lambda, safeguard, &mut ws,
+    );
+}
 
-    let m = history.len();
-    if method == Method::FixedPoint || m == 0 {
-        // x ← F(x)
-        for p in t1..=t2 {
-            xs_rows[p * d..(p + 1) * d].copy_from_slice(&f_vals[p * d..(p + 1) * d]);
-        }
-        return;
-    }
-
-    let dx = history.dx_slots();
-    let df = history.df_slots();
-
-    // Suffix Grams over the full row range; rows above t2 hold zeros, so
-    // G_{t1} is also the full-window Gram used by AA/AA+.
-    let sg = suffix_grams(&df, r_vals, t_rows, d, t1);
-
-    // Ridge the diagonal.
-    let ridge = |g: &[f32]| -> Vec<f32> {
-        let mut a = g.to_vec();
-        // Scale-aware ridge: λ·(1 + tr(G)/m) keeps conditioning stable
-        // across the wildly varying residual magnitudes of early vs late
-        // iterations.
-        let tr: f32 = (0..m).map(|i| g[i * m + i]).sum();
-        let scale = lambda * (1.0 + tr / m as f32);
-        for i in 0..m {
-            a[i * m + i] += scale;
-        }
-        a
-    };
-
-    // Global γ (AA) or the shared Gram factor (AA+).
-    let global_gamma: Option<Vec<f32>> = match method {
-        Method::AndersonStd => cholesky_solve(&ridge(&sg.grams[t1]), &sg.proj[t1], m),
-        _ => None,
-    };
-
-    for p in t1..=t2 {
-        let row = p * d..(p + 1) * d;
-        // Safeguarded row: plain FP (γ = 0). Theorem 3.6's condition is
-        // imposed on the top unconverged row, whose suffix residuals
-        // R_{p+1:} are all (numerically) zero.
-        let fp_only = safeguard && p == t2;
-
-        let gamma: Option<Vec<f32>> = if fp_only {
-            None
-        } else {
-            match method {
-                Method::FixedPoint => None,
-                Method::AndersonStd => global_gamma.clone(),
-                Method::AndersonUpperTri => {
-                    // M = (full-window Gram + λI)⁻¹ applied to the *suffix*
-                    // projection b_p — the upper-triangular part of eq. (13).
-                    cholesky_solve(&ridge(&sg.grams[t1]), &sg.proj[p], m)
-                }
-                Method::Taa => cholesky_solve(&ridge(&sg.grams[p]), &sg.proj[p], m),
-            }
-        };
-
-        match gamma {
-            None => {
-                xs_rows[row.clone()].copy_from_slice(&f_vals[row]);
-            }
-            Some(g) => {
-                // x_p ← x_p + R_p − Σ_h γ_h·(ΔX_h[p] + ΔF_h[p])
-                let (xr, rr) = (row.clone(), row.clone());
-                for i in 0..d {
-                    let idx = p * d + i;
-                    let mut corr = 0.0f32;
-                    for h in 0..m {
-                        corr += g[h] * (dx[h][idx] + df[h][idx]);
-                    }
-                    let _ = (&xr, &rr);
-                    xs_rows[idx] += r_vals[idx] - corr;
-                }
-            }
-        }
+/// Copy `g` into `out` and add the scale-aware ridge λ·(1 + tr(G)/m) to the
+/// diagonal — keeps conditioning stable across the wildly varying residual
+/// magnitudes of early vs late iterations.
+fn ridge_into(g: &[f32], out: &mut [f32], m: usize, lambda: f32) {
+    out.copy_from_slice(g);
+    let tr: f32 = (0..m).map(|i| g[i * m + i]).sum();
+    let scale = lambda * (1.0 + tr / m as f32);
+    for i in 0..m {
+        out[i * m + i] += scale;
     }
 }
 
@@ -171,6 +225,40 @@ mod tests {
         apply_update(Method::Taa, &mut xs_a, &f, &r, &h, 0, 2, t_rows, d, 1e-4, true);
         apply_update(Method::FixedPoint, &mut xs_b, &f, &r, &h, 0, 2, t_rows, d, 0.0, false);
         assert_eq!(xs_a, xs_b);
+    }
+
+    #[test]
+    fn ws_reuse_matches_fresh_workspace_bitwise() {
+        // One workspace driven across methods and shapes must be
+        // indistinguishable from a fresh allocation per call.
+        let mut rng = crate::util::rng::Pcg64::seeded(19);
+        let mut ws = Workspace::new();
+        for (t_rows, d, n_slots) in [(6usize, 3usize, 2usize), (4, 5, 1), (8, 2, 3)] {
+            let slots: Vec<(Vec<f32>, Vec<f32>)> = (0..n_slots)
+                .map(|_| {
+                    (
+                        (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect(),
+                        (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect(),
+                    )
+                })
+                .collect();
+            let h = mk_history(t_rows, d, &slots);
+            let xs0: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+            let f: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+            let r: Vec<f32> = f.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+            for method in [Method::AndersonStd, Method::AndersonUpperTri, Method::Taa] {
+                let mut reused = xs0.clone();
+                apply_update_ws(
+                    method, &mut reused, &f, &r, &h, 0, t_rows - 1, t_rows, d, 1e-4, true,
+                    &mut ws,
+                );
+                let mut fresh = xs0.clone();
+                apply_update(
+                    method, &mut fresh, &f, &r, &h, 0, t_rows - 1, t_rows, d, 1e-4, true,
+                );
+                assert_eq!(reused, fresh, "{} t_rows={t_rows}", method.label());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,54 @@
+//! Reusable scratch for the zero-allocation update path.
+//!
+//! [`apply_update_ws`](super::update::apply_update_ws) needs, per round:
+//! the suffix-Gram storage, a ridged m×m copy, per-row and global γ
+//! vectors, and the f64 Cholesky factor + substitution scratch. Allocating
+//! those per row (as the historical update did) dominated the CPU profile
+//! of small-D solves; a [`Workspace`] owns them all, is resized only when
+//! the history depth grows, and lives on the [`super::SolverSession`] so
+//! steady-state rounds perform **zero** heap allocations inside the update
+//! (asserted by `tests/zero_alloc.rs` with a counting global allocator).
+//!
+//! The workspace holds plain `Vec`s, so it is `Send` and migrates between
+//! round-driver threads with its session.
+
+use crate::linalg::gram::SuffixGrams;
+
+/// Owned scratch buffers for one solver session's update path.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Flat suffix-Gram storage + f64 scan accumulators.
+    pub(crate) sg: SuffixGrams,
+    /// Ridged m×m Gram copy (Remark 3.3) the Cholesky factors from.
+    pub(crate) ridged: Vec<f32>,
+    /// Per-row γ_p solution vector (m).
+    pub(crate) gamma: Vec<f32>,
+    /// Global γ for standard AA (m), solved once per round.
+    pub(crate) global_gamma: Vec<f32>,
+    /// f64 Cholesky factor scratch (m×m lower triangle).
+    pub(crate) chol: Vec<f64>,
+    /// f64 substitution scratch (m).
+    pub(crate) y: Vec<f64>,
+}
+
+impl Workspace {
+    /// An empty workspace; buffers are sized on first use.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Size every buffer for history depth `m`. Allocates only when `m`
+    /// outgrows the current capacity; shrinking reuses the allocation.
+    pub(crate) fn ensure(&mut self, m: usize) {
+        self.ridged.clear();
+        self.ridged.resize(m * m, 0.0);
+        self.gamma.clear();
+        self.gamma.resize(m, 0.0);
+        self.global_gamma.clear();
+        self.global_gamma.resize(m, 0.0);
+        self.chol.clear();
+        self.chol.resize(m * m, 0.0);
+        self.y.clear();
+        self.y.resize(m, 0.0);
+    }
+}
