@@ -67,16 +67,6 @@ impl SuffixGrams {
         self.acc_b.resize(m, 0.0);
     }
 
-    /// Window rows W this workspace is shaped for.
-    pub fn rows(&self) -> usize {
-        self.w
-    }
-
-    /// History depth m this workspace is shaped for.
-    pub fn m(&self) -> usize {
-        self.m
-    }
-
     /// The m×m suffix Gram G_t (row-major view into the flat buffer).
     #[inline]
     pub fn gram(&self, t: usize) -> &[f32] {

@@ -3,12 +3,13 @@
 //! The suffix-Gram scan and the Anderson correction loop spend all their
 //! time in two shapes of work: f32 dot products accumulated in f64 (the
 //! Gram/projection entries steer the stopping criterion, so precision
-//! matters) and elementwise row updates. The naive forms are
+//! matters) and elementwise row updates. The naive reduction is
 //! latency-bound — a single f64 accumulator serializes on the ~4-cycle add
 //! latency — so [`dot8`] splits the sum across 8 independent accumulators
 //! that the autovectorizer maps onto SIMD lanes, turning the loop
-//! throughput-bound. [`add_assign`]/[`sub_scaled`] are the dependency-free
-//! row primitives of the fused correction `x_p += R_p − Σ_h γ_h·fused_h[p]`
+//! throughput-bound. The fused correction
+//! `x_p += R_p − Σ_h γ_h·fused_h[p]` needs only the dependency-free axpy
+//! already provided by [`super::mat::add_scaled`]
 //! (see `solver::history::History::correct_row`).
 //!
 //! Reassociating the sum changes the last-ulp rounding versus a sequential
@@ -44,25 +45,6 @@ pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
         tail += (a[j] as f64) * (b[j] as f64);
     }
     (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
-}
-
-/// `x += r` elementwise — the FP half of the Anderson correction.
-#[inline]
-pub fn add_assign(x: &mut [f32], r: &[f32]) {
-    debug_assert_eq!(x.len(), r.len());
-    for (o, &v) in x.iter_mut().zip(r.iter()) {
-        *o += v;
-    }
-}
-
-/// `x -= alpha * f` elementwise — one history slot's share of the
-/// correction `Σ_h γ_h·fused_h`.
-#[inline]
-pub fn sub_scaled(x: &mut [f32], f: &[f32], alpha: f32) {
-    debug_assert_eq!(x.len(), f.len());
-    for (o, &v) in x.iter_mut().zip(f.iter()) {
-        *o -= alpha * v;
-    }
 }
 
 #[cfg(test)]
@@ -102,14 +84,5 @@ mod tests {
     #[test]
     fn dot8_empty_is_zero() {
         assert_eq!(dot8(&[], &[]), 0.0);
-    }
-
-    #[test]
-    fn row_primitives() {
-        let mut x = vec![1.0f32, 2.0, 3.0];
-        add_assign(&mut x, &[0.5, 0.5, 0.5]);
-        assert_eq!(x, vec![1.5, 2.5, 3.5]);
-        sub_scaled(&mut x, &[1.0, 2.0, 3.0], 0.5);
-        assert_eq!(x, vec![1.0, 1.5, 2.0]);
     }
 }

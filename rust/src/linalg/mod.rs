@@ -14,8 +14,9 @@
 //! - [`gram`]: the suffix-Gram scan at the core of Triangular Anderson
 //!   Acceleration (native mirror of the Pallas kernel in
 //!   `python/compile/kernels/taa_update.py`), flat storage + write-into API,
-//! - [`kernels`]: the vectorizable dot/axpy primitives shared by the Gram
-//!   scan and the Anderson correction loop.
+//! - [`kernels`]: the vectorizable 8-accumulator dot product shared by the
+//!   Gram scan, the incremental Gram cache, and the projection rescan
+//!   (the Anderson correction reuses [`mat::add_scaled`]).
 
 pub mod gram;
 pub mod kernels;
@@ -23,7 +24,7 @@ pub mod mat;
 pub mod solve;
 
 pub use gram::{suffix_grams, suffix_grams_into, SuffixGrams};
-pub use kernels::{add_assign, dot8, sub_scaled};
+pub use kernels::dot8;
 pub use mat::{add_scaled, dot, l2_norm_sq, matmul, matvec, sub};
 pub use solve::{
     cholesky_factor_into, cholesky_solve, cholesky_solve_factored, cholesky_solve_into, lu_solve,

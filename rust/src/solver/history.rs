@@ -9,10 +9,13 @@
 //!
 //! # Layout and the incremental Gram cache
 //!
-//! All slots live in flat `[cap, rows*d]` buffers. Alongside ΔX/ΔF each
-//! push also materializes the **fused** slot `ΔX + ΔF`, which is the only
-//! thing the correction loop `x_p += R_p − Σ_h γ_h·(ΔX_h[p]+ΔF_h[p])` ever
-//! reads — one stream per slot instead of two.
+//! All slots live in flat `[cap, rows*d]` buffers. Each push materializes
+//! the **fused** slot `ΔX + ΔF`, which is the only thing the correction
+//! loop `x_p += R_p − Σ_h γ_h·(ΔX_h[p]+ΔF_h[p])` ever reads — one stream
+//! per slot instead of two. ΔX itself is **not retained**: nothing
+//! downstream needs it once the fused slot exists, and dropping it saves a
+//! third of the slot memory and one `rows*d` copy per push (ΔF must stay:
+//! the Gram cache and the per-round b_t projection rescans read it).
 //!
 //! The expensive part of the suffix-Gram scan (`linalg::gram`) is the
 //! per-row pairwise products `g_t[a,b] = ΔF_a[t]·ΔF_b[t]` — O(W·m²·D) when
@@ -29,7 +32,8 @@
 //! **bit-identical** (pinned by a property test below).
 
 use crate::linalg::gram::SuffixGrams;
-use crate::linalg::kernels::{add_assign, dot8, sub_scaled};
+use crate::linalg::kernels::dot8;
+use crate::linalg::mat::add_scaled;
 
 /// Ring buffer of history difference pairs with a per-row Gram cache.
 pub struct History {
@@ -37,10 +41,10 @@ pub struct History {
     cap: usize,
     rows: usize,
     d: usize,
-    /// Slot storage, flat `[cap, rows*d]`; slot `s` starts at `s*rows*d`.
-    dx: Vec<f32>,
+    /// ΔF slot storage, flat `[cap, rows*d]`; slot `s` starts at `s*rows*d`.
     df: Vec<f32>,
-    /// Fused `dx + df` per slot, materialized at push time.
+    /// Fused `dx + df` per slot, materialized at push time (ΔX is not
+    /// stored separately — see the module docs).
     fused: Vec<f32>,
     /// Active row range `[lo, hi)` per slot: rows outside are all-zero.
     lo: Vec<usize>,
@@ -61,7 +65,6 @@ impl History {
             cap,
             rows,
             d,
-            dx: vec![0.0; cap * rows * d],
             df: vec![0.0; cap * rows * d],
             fused: vec![0.0; cap * rows * d],
             lo: vec![0; cap],
@@ -128,7 +131,6 @@ impl History {
         }
 
         let s = self.next;
-        self.dx[s * n..(s + 1) * n].copy_from_slice(dx);
         self.df[s * n..(s + 1) * n].copy_from_slice(df);
         for (o, (&a, &b)) in
             self.fused[s * n..(s + 1) * n].iter_mut().zip(dx.iter().zip(df.iter()))
@@ -164,33 +166,23 @@ impl History {
         }
     }
 
-    /// ΔX slot `h` (`h < len()`), a `[rows*d]` view.
-    #[inline]
-    pub fn dx_slot(&self, h: usize) -> &[f32] {
-        let n = self.rows * self.d;
-        &self.dx[h * n..(h + 1) * n]
-    }
-
-    /// ΔF slot `h`, index-aligned with [`dx_slot`](Self::dx_slot).
+    /// ΔF slot `h` (`h < len()`), a `[rows*d]` view.
     #[inline]
     pub fn df_slot(&self, h: usize) -> &[f32] {
         let n = self.rows * self.d;
         &self.df[h * n..(h + 1) * n]
     }
 
-    /// Fused `ΔX + ΔF` slot `h` — what the correction loop reads.
+    /// Fused `ΔX + ΔF` slot `h`, index-aligned with
+    /// [`df_slot`](Self::df_slot) — what the correction loop reads.
     #[inline]
     pub fn fused_slot(&self, h: usize) -> &[f32] {
         let n = self.rows * self.d;
         &self.fused[h * n..(h + 1) * n]
     }
 
-    /// Valid ΔX slots (arbitrary but consistent order w.r.t. [`df_slots`]).
-    pub fn dx_slots(&self) -> Vec<&[f32]> {
-        (0..self.len).map(|i| self.dx_slot(i)).collect()
-    }
-
-    /// Valid ΔF slots, index-aligned with [`dx_slots`].
+    /// Valid ΔF slots (arbitrary but consistent order w.r.t.
+    /// [`fused_slot`](Self::fused_slot)).
     pub fn df_slots(&self) -> Vec<&[f32]> {
         (0..self.len).map(|i| self.df_slot(i)).collect()
     }
@@ -231,14 +223,14 @@ impl History {
         debug_assert!(gamma.len() <= self.len);
         debug_assert_eq!(r_row.len(), self.d);
         debug_assert_eq!(x_row.len(), self.d);
-        add_assign(x_row, r_row);
+        add_scaled(x_row, r_row, 1.0);
         let n = self.rows * self.d;
         for (h, &g) in gamma.iter().enumerate() {
             if p < self.lo[h] || p >= self.hi[h] {
                 continue;
             }
             let fh = &self.fused[h * n + p * self.d..h * n + (p + 1) * self.d];
-            sub_scaled(x_row, fh, g);
+            add_scaled(x_row, fh, -g);
         }
     }
 
@@ -247,7 +239,6 @@ impl History {
     pub fn clear(&mut self) {
         self.len = 0;
         self.next = 0;
-        self.dx.fill(0.0);
         self.df.fill(0.0);
         self.fused.fill(0.0);
         self.row_gram.fill(0.0);
@@ -272,22 +263,26 @@ mod tests {
         h.push(&[3.0, 3.0], &[30.0, 30.0]);
         assert_eq!(h.len(), 2);
         // Slot 0 was overwritten by the third push.
-        let slots = h.dx_slots();
+        let slots = h.df_slots();
         let mut firsts: Vec<f32> = slots.iter().map(|s| s[0]).collect();
         firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(firsts, vec![2.0, 3.0]);
+        assert_eq!(firsts, vec![20.0, 30.0]);
     }
 
     #[test]
-    fn dx_df_alignment_survives_wrap() {
+    fn fused_df_alignment_survives_wrap() {
+        // dx = k, df = -2k ⇒ fused = -k: each surviving slot must keep its
+        // fused row paired with its own df row across the ring wrap.
         let mut h = History::new(2, 1, 1);
-        h.push(&[1.0], &[-1.0]);
-        h.push(&[2.0], &[-2.0]);
-        h.push(&[3.0], &[-3.0]);
-        let dx = h.dx_slots();
-        let df = h.df_slots();
+        h.push(&[1.0], &[-2.0]);
+        h.push(&[2.0], &[-4.0]);
+        h.push(&[3.0], &[-6.0]);
         for i in 0..h.len() {
-            assert_eq!(dx[i][0], -df[i][0], "slot {i} misaligned");
+            assert_eq!(
+                h.fused_slot(i)[0],
+                0.5 * h.df_slot(i)[0],
+                "slot {i} misaligned"
+            );
         }
     }
 
@@ -296,7 +291,7 @@ mod tests {
         let mut h = History::new(0, 2, 2);
         h.push(&[0.0; 4], &[0.0; 4]);
         assert!(h.is_empty());
-        assert!(h.dx_slots().is_empty());
+        assert!(h.df_slots().is_empty());
     }
 
     #[test]
@@ -425,9 +420,19 @@ mod tests {
 
     #[test]
     fn correct_row_matches_naive() {
+        // No ring wrap (cap pushes), so slot order == push order and the
+        // naive reference can recompute ΔX+ΔF from the original buffers —
+        // independent of the stored fused slots.
         let mut rng = Pcg64::seeded(17);
         let (w, d, cap) = (5usize, 4usize, 3usize);
-        let (h, _) = random_history(&mut rng, cap, w, d);
+        let mut h = History::new(cap, w, d);
+        let mut pushed: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+        for _ in 0..cap {
+            let dx = rng.gaussian_vec(w * d);
+            let df = rng.gaussian_vec(w * d);
+            h.push(&dx, &df);
+            pushed.push((dx, df));
+        }
         let gamma: Vec<f32> = (0..h.len()).map(|_| rng.next_f32() - 0.5).collect();
         for p in 0..w {
             let x0 = rng.gaussian_vec(d);
@@ -441,8 +446,7 @@ mod tests {
                 slow[i] += r[i];
             }
             for (hh, &g) in gamma.iter().enumerate() {
-                let dx = h.dx_slot(hh);
-                let df = h.df_slot(hh);
+                let (dx, df) = &pushed[hh];
                 for i in 0..d {
                     slow[i] -= g * (dx[p * d + i] + df[p * d + i]);
                 }
