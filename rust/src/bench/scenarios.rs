@@ -119,6 +119,13 @@ pub fn registry() -> Vec<ScenarioDef> {
             run: hot_loop_w100_m8,
         },
         ScenarioDef {
+            group: "solver",
+            name: "adaptive_window",
+            about: "WindowPolicy::Adaptive vs the static full window (rounds/NFE)",
+            quick: true,
+            run: adaptive_window,
+        },
+        ScenarioDef {
             group: "pool",
             name: "pool_d1",
             about: "DevicePool eps_batch throughput, 1 device",
@@ -173,6 +180,13 @@ pub fn registry() -> Vec<ScenarioDef> {
             about: "round-driver path: sessions >> drivers, merge occupancy",
             quick: true,
             run: coord_sessions,
+        },
+        ScenarioDef {
+            group: "coordinator",
+            name: "serve_stream",
+            about: "streaming prefix delivery: latency-to-first-prefix vs full solve",
+            quick: true,
+            run: coord_serve_stream,
         },
         ScenarioDef {
             group: "cache",
@@ -489,6 +503,57 @@ fn hot_loop_w100_m8(opts: &BenchOpts) -> ScenarioReport {
     sc
 }
 
+/// The §2.2 window trade-off made dynamic: the same DDIM-50 solves run
+/// with the paper's static full window and with
+/// [`crate::solver::WindowPolicy::Adaptive`] starting at a quarter window
+/// and growing on convergence velocity. The adaptive path trades a few
+/// extra rounds for materially fewer ε_θ evaluations per image (the fig4
+/// trade-off) — the knob the coordinator turns under load. Rounds/NFE are
+/// deterministic per seed, so they gate well; wall-clock is informational.
+fn adaptive_window(opts: &BenchOpts) -> ScenarioReport {
+    use crate::solver::{AdaptiveWindow, WindowPolicy};
+    let mut sc = ScenarioReport::default();
+    let steps = 50usize;
+    let scenario = Scenario::new(ModelChoice::Gmm, SamplerKind::Ddim, steps);
+    let coeffs = scenario.coeffs();
+    let n = opts.seeds();
+    let mut rng = Pcg64::seeded(opts.seed);
+    let mut fixed = (Summary::new(), Summary::new(), Summary::new());
+    let mut adaptive = (Summary::new(), Summary::new(), Summary::new());
+    for seed in 0..n {
+        let problem = Problem::new(
+            &coeffs,
+            &*scenario.model,
+            Cond::Class(rng.below(8) as usize),
+            seed,
+        );
+        let fixed_cfg = method_config(Method::Taa, steps, None, scenario.guidance);
+        let mut adaptive_cfg = fixed_cfg.clone();
+        adaptive_cfg.window = steps / 4;
+        adaptive_cfg.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(steps));
+        adaptive_cfg.s_max = 20 * steps; // narrow windows need more rounds
+        for (cfg, out) in [(&fixed_cfg, &mut fixed), (&adaptive_cfg, &mut adaptive)] {
+            let t0 = Instant::now();
+            let r = solver::solve(&problem, cfg);
+            assert!(r.converged, "adaptive_window bench solve did not converge");
+            out.0.push(r.iterations as f64);
+            out.1.push(r.total_nfe as f64);
+            out.2.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    sc.push("fixed_rounds", Metric::lower(fixed.0.mean(), "rounds"));
+    sc.push("fixed_nfe", Metric::lower(fixed.1.mean(), "evals"));
+    sc.push("fixed_ms", Metric::info(fixed.2.mean() * 1e3, "ms"));
+    sc.push("adaptive_rounds", Metric::lower(adaptive.0.mean(), "rounds"));
+    sc.push("adaptive_nfe", Metric::lower(adaptive.1.mean(), "evals"));
+    sc.push("adaptive_ms", Metric::info(adaptive.2.mean() * 1e3, "ms"));
+    sc.push(
+        "nfe_saved_pct",
+        Metric::info((1.0 - adaptive.1.mean() / fixed.1.mean().max(1e-9)) * 100.0, "%"),
+    );
+    sc
+}
+
 // --- pool -----------------------------------------------------------------
 
 fn pool_d1(o: &BenchOpts) -> ScenarioReport {
@@ -697,6 +762,85 @@ fn coord_sessions(opts: &BenchOpts) -> ScenarioReport {
     sc
 }
 
+/// Streaming prefix delivery under concurrent load: every request
+/// subscribes to its converged-prefix stream and a consumer thread records
+/// when the first chunk lands. The headline is latency-to-first-prefix —
+/// how much sooner a client starts receiving final trajectory rows than
+/// the full solve completes (`prefix_lead_frac` ≈ the fraction of request
+/// latency hidden by streaming).
+fn coord_serve_stream(opts: &BenchOpts) -> ScenarioReport {
+    use crate::util::stats::percentile_sorted;
+    let mut sc = ScenarioReport::default();
+    let coord = Coordinator::start(
+        gmm_model(),
+        CoordinatorConfig { workers: 2, drivers: 2, ..Default::default() },
+    );
+    let n_req: usize = if opts.quick { 12 } else { 32 };
+    let mut rng = Pcg64::seeded(opts.seed);
+    let threads: Vec<_> = (0..n_req)
+        .map(|i| {
+            let mut req = SampleRequest::parataa(
+                Cond::Class(rng.below(8) as usize),
+                i as u64,
+                SamplerSpec::ddim(25),
+            );
+            req.guidance = 2.0;
+            let handle = coord.submit_streaming(req);
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let mut first_s: Option<f64> = None;
+                let mut chunk_rounds: Vec<usize> = Vec::new();
+                while let Some(c) = handle.next_chunk() {
+                    if first_s.is_none() {
+                        first_s = Some(t0.elapsed().as_secs_f64());
+                    }
+                    chunk_rounds.push(c.round);
+                }
+                let full_s = t0.elapsed().as_secs_f64();
+                let resp = handle.wait().expect("bench stream request failed");
+                (first_s, full_s, chunk_rounds, resp)
+            })
+        })
+        .collect();
+    let mut first_ms: Vec<f64> = Vec::new();
+    let mut full_ms: Vec<f64> = Vec::new();
+    let mut lead = Summary::new();
+    let mut chunks = Summary::new();
+    let mut early_requests = 0usize;
+    for t in threads {
+        let (first_s, full_s, chunk_rounds, resp) = t.join().expect("consumer panicked");
+        let first_s = first_s.expect("a converged streaming solve delivers chunks");
+        first_ms.push(first_s * 1e3);
+        full_ms.push(full_s * 1e3);
+        lead.push(1.0 - first_s / full_s.max(1e-12));
+        chunks.push(chunk_rounds.len() as f64);
+        if chunk_rounds.iter().any(|&r| r < resp.rounds) {
+            early_requests += 1;
+        }
+    }
+    first_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    full_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let snap = coord.metrics();
+    sc.push("first_prefix_ms_p50", Metric::lower(percentile_sorted(&first_ms, 0.50), "ms"));
+    sc.push("first_prefix_ms_p95", Metric::lower(percentile_sorted(&first_ms, 0.95), "ms"));
+    sc.push("full_ms_p50", Metric::lower(percentile_sorted(&full_ms, 0.50), "ms"));
+    // Fraction of the request latency already "hidden" when the first
+    // prefix lands — the consumer-visible win of streaming.
+    sc.push("prefix_lead_frac", Metric::higher(lead.mean(), "frac"));
+    sc.push(
+        "early_chunk_rate",
+        Metric::higher(early_requests as f64 / n_req as f64, "frac"),
+    );
+    sc.push("chunks_mean", Metric::info(chunks.mean(), "chunks"));
+    sc.push(
+        "prefix_rows_streamed",
+        Metric::info(snap.prefix_rows_streamed as f64, "rows"),
+    );
+    sc.push("completed", Metric::info(snap.completed as f64, "req"));
+    sc.push("failed", Metric::info(snap.failed as f64, "req"));
+    sc
+}
+
 // --- cache ----------------------------------------------------------------
 
 /// Warm-start savings: for each pair, solve a cold request (populates the
@@ -814,6 +958,21 @@ mod tests {
             "the run queue must sustain more sessions than driver threads"
         );
         assert!(sessions.metrics["merge_sessions_mean"].value >= 1.0);
+        let stream = &report.groups["coordinator"]["serve_stream"];
+        assert_eq!(stream.metrics["failed"].value, 0.0);
+        assert!(stream.metrics["first_prefix_ms_p50"].value > 0.0);
+        assert!(
+            stream.metrics["first_prefix_ms_p50"].value
+                <= stream.metrics["full_ms_p50"].value,
+            "the first prefix must not land after the full solve"
+        );
+        assert_eq!(
+            stream.metrics["early_chunk_rate"].value, 1.0,
+            "every streaming request must see a prefix before completion"
+        );
+        let aw = &report.groups["solver"]["adaptive_window"];
+        assert!(aw.metrics["fixed_nfe"].value > 0.0);
+        assert!(aw.metrics["adaptive_nfe"].value > 0.0);
         assert!(report.groups["cache"]["warm_start"].metrics["cold_rounds_mean"].value > 0.0);
     }
 

@@ -29,6 +29,32 @@ pub struct CachedTrajectory {
 }
 
 /// LRU trajectory cache (thread-safe).
+///
+/// # Example
+///
+/// Donor selection is scoped by scenario and seed and bounded by an L2
+/// similarity threshold on dense condition weights — an exact-threshold
+/// donor is accepted, a cross-scenario one never is:
+///
+/// ```
+/// use parataa::coordinator::cache::{CachedTrajectory, TrajectoryCache};
+/// use parataa::equations::States;
+/// use parataa::model::Cond;
+///
+/// let cache = TrajectoryCache::new(8, 2);
+/// cache.insert(CachedTrajectory {
+///     scenario: "DDIM-50".to_string(),
+///     seed: 7,
+///     weights: Cond::Class(0).to_weights(2), // [1, 0]
+///     trajectory: States::zeros(4, 3),
+///     xi: States::zeros(4, 3),
+/// });
+/// // Class(1) is [0, 1]: distance to the donor is exactly √2.
+/// let d = std::f32::consts::SQRT_2;
+/// assert!(cache.lookup("DDIM-50", 7, &Cond::Class(1), d).is_some(), "d == max_dist counts");
+/// assert!(cache.lookup("DDIM-25", 7, &Cond::Class(1), 10.0).is_none(), "scenario must match");
+/// assert!(cache.lookup("DDIM-50", 8, &Cond::Class(1), 10.0).is_none(), "seed must match");
+/// ```
 pub struct TrajectoryCache {
     capacity: usize,
     n_components: usize,
@@ -36,14 +62,18 @@ pub struct TrajectoryCache {
 }
 
 impl TrajectoryCache {
+    /// A cache holding at most `capacity` trajectories, densifying
+    /// conditions to `n_components` weights for similarity lookups.
     pub fn new(capacity: usize, n_components: usize) -> Self {
         TrajectoryCache { capacity, n_components, entries: Mutex::new(VecDeque::new()) }
     }
 
+    /// Cached trajectories currently held.
     pub fn len(&self) -> usize {
         self.entries.lock().unwrap().len()
     }
 
+    /// True when no trajectory is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -130,6 +160,31 @@ mod tests {
         // Class(1) is weights [0,1]: distance sqrt(2) ≈ 1.41
         assert!(c.lookup("DDPM-100", 3, &Cond::Class(1), 1.0).is_none());
         assert!(c.lookup("DDPM-100", 3, &Cond::Class(1), 1.5).is_some());
+    }
+
+    /// The similarity threshold is inclusive at the boundary: a donor at
+    /// exactly `max_dist` is accepted, a donor infinitesimally beyond it
+    /// is not — and no threshold rescues a donor from another scenario.
+    #[test]
+    fn donor_selection_at_the_threshold_boundary() {
+        let c = TrajectoryCache::new(8, 2);
+        c.insert(entry("DDIM-50", 7, vec![1.0, 0.0]));
+        // Class(1) densifies to [0, 1]: distance is exactly sqrt(2).
+        let exact = 2.0f32.sqrt();
+        assert!(
+            c.lookup("DDIM-50", 7, &Cond::Class(1), exact).is_some(),
+            "donor at d == max_dist must be accepted"
+        );
+        let below = f32::from_bits(exact.to_bits() - 1);
+        assert!(
+            c.lookup("DDIM-50", 7, &Cond::Class(1), below).is_none(),
+            "donor one ulp beyond max_dist must be rejected"
+        );
+        // A cross-scenario donor is rejected no matter how generous the
+        // threshold — trajectories are only comparable on the same
+        // sampler/step grid.
+        assert!(c.lookup("DDIM-25", 7, &Cond::Class(1), f32::MAX).is_none());
+        assert!(c.lookup("DDPM-50", 7, &Cond::Class(1), f32::MAX).is_none());
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Service metrics: counters + latency/round distributions, round-driver
-//! merge occupancy and sessions-in-flight gauges, plus the per-device
-//! utilization/queue-depth breakdown of an attached
-//! [`crate::runtime::DevicePool`].
+//! merge occupancy and sessions-in-flight gauges, streaming-prefix
+//! delivery counters, plus the per-device utilization/queue-depth
+//! breakdown of an attached [`crate::runtime::DevicePool`] (which also
+//! feeds the adaptive window controller's occupancy signal).
 
 use crate::runtime::pool::{DeviceStat, PoolStats};
 use crate::util::stats::percentile_sorted;
@@ -13,6 +14,11 @@ pub struct Metrics {
     inner: Mutex<Inner>,
     started: Instant,
     pool: Mutex<Option<Arc<PoolStats>>>,
+    /// Last (timestamp, per-device busy-ns) read, so
+    /// [`device_occupancy`](Self::device_occupancy) can report utilization
+    /// over the window since the previous call instead of the since-spawn
+    /// lifetime average (which would latch high after a past load spike).
+    occ_window: Mutex<Option<(Instant, Vec<u64>)>>,
 }
 
 #[derive(Default)]
@@ -35,20 +41,36 @@ struct Inner {
     merged_sessions: u64,
     merged_rows: u64,
     merged_groups: u64,
+    /// Streaming-prefix chunks delivered to subscription channels.
+    prefix_chunks: u64,
+    /// Converged rows delivered through those chunks.
+    prefix_rows: u64,
+    /// Per streaming request: ms from enqueue to its first prefix chunk.
+    first_prefix_ms: Vec<f64>,
 }
 
 /// Point-in-time snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Requests answered successfully.
     pub completed: u64,
+    /// Requests that failed (panics, malformed input, shutdown races).
     pub failed: u64,
+    /// Completed requests that warm-started from the trajectory cache.
     pub warm_starts: u64,
+    /// Time since the metrics (≈ the coordinator) were created.
     pub uptime: Duration,
+    /// Completed requests per second of uptime.
     pub throughput_rps: f64,
+    /// Median end-to-end request latency (queue + solve), milliseconds.
     pub latency_ms_p50: f64,
+    /// 95th-percentile end-to-end request latency, milliseconds.
     pub latency_ms_p95: f64,
+    /// 99th-percentile end-to-end request latency, milliseconds.
     pub latency_ms_p99: f64,
+    /// Mean parallel rounds per completed request.
     pub mean_rounds: f64,
+    /// Mean ε_θ evaluations per completed request.
     pub mean_nfe: f64,
     /// Round-driver threads carrying the session run queue.
     pub driver_threads: u64,
@@ -65,6 +87,15 @@ pub struct MetricsSnapshot {
     pub merge_rows_mean: f64,
     /// Mean guidance groups (device calls) per round.
     pub merge_groups_mean: f64,
+    /// Streaming-prefix chunks delivered (0 unless `--stream` requests ran).
+    pub prefix_chunks_sent: u64,
+    /// Converged rows delivered through prefix chunks.
+    pub prefix_rows_streamed: u64,
+    /// Median ms from enqueue to a streaming request's first prefix chunk
+    /// — the latency-to-first-prefix the streaming layer optimizes.
+    pub first_prefix_ms_p50: f64,
+    /// 95th-percentile ms to the first prefix chunk.
+    pub first_prefix_ms_p95: f64,
     /// Per-device pool breakdown (empty unless a pool is attached).
     pub devices: Vec<DeviceStat>,
 }
@@ -76,11 +107,13 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fresh, empty metrics (uptime starts now).
     pub fn new() -> Self {
         Metrics {
             inner: Mutex::new(Inner::default()),
             started: Instant::now(),
             pool: Mutex::new(None),
+            occ_window: Mutex::new(None),
         }
     }
 
@@ -90,6 +123,7 @@ impl Metrics {
         *self.pool.lock().unwrap() = Some(stats);
     }
 
+    /// Record one successfully answered request.
     pub fn record_success(&self, latency: Duration, rounds: usize, nfe: usize, warm: bool) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
@@ -101,6 +135,7 @@ impl Metrics {
         m.nfes.push(nfe as f64);
     }
 
+    /// Record one failed request.
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
     }
@@ -129,6 +164,62 @@ impl Metrics {
         self.inner.lock().unwrap().in_flight as usize
     }
 
+    /// One streaming-prefix chunk of `rows` converged rows was delivered;
+    /// `first_latency` is set when it was the request's first chunk
+    /// (enqueue → first prefix, the streaming layer's headline latency).
+    pub fn record_prefix(&self, rows: usize, first_latency: Option<Duration>) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefix_chunks += 1;
+        m.prefix_rows += rows as u64;
+        if let Some(lat) = first_latency {
+            m.first_prefix_ms.push(lat.as_secs_f64() * 1e3);
+        }
+    }
+
+    /// The device-occupancy signal for adaptive window control, in [0, 1]:
+    /// the attached pool's utilization over the window since the previous
+    /// call (busy-ns deltas — a *current* signal that decays when load
+    /// stops, unlike the since-spawn average in [`DeviceStat`], which
+    /// would latch high after a past spike), saturating to 1 whenever
+    /// shards are queued (a backlog means the pool is at capacity right
+    /// now). The first call, with no window yet, reports the lifetime
+    /// average. `None` without an attached pool — adaptive sessions then
+    /// size on convergence velocity alone (slot-budget pressure is
+    /// deliberately *not* a fallback: adaptive sessions hold their
+    /// max_window reservation for life, so shrinking frees no budget and
+    /// such a signal would latch).
+    pub fn device_occupancy(&self) -> Option<f64> {
+        let stats = self.pool.lock().unwrap().as_ref()?.clone();
+        if stats.queued() > 0 {
+            return Some(1.0);
+        }
+        let busy = stats.busy_ns();
+        if busy.is_empty() {
+            return None;
+        }
+        let now = Instant::now();
+        let mut win = self.occ_window.lock().unwrap();
+        let windowed = match win.take() {
+            Some((t0, prev)) if prev.len() == busy.len() && now > t0 => {
+                let capacity_ns =
+                    now.duration_since(t0).as_nanos() as f64 * busy.len() as f64;
+                let busy_delta: u64 = busy
+                    .iter()
+                    .zip(prev.iter())
+                    .map(|(b, p)| b.saturating_sub(*p))
+                    .sum();
+                Some((busy_delta as f64 / capacity_ns.max(1.0)).min(1.0))
+            }
+            _ => None,
+        };
+        *win = Some((now, busy));
+        drop(win);
+        windowed.or_else(|| {
+            let snap = stats.snapshot();
+            Some(snap.iter().map(|s| s.utilization).sum::<f64>() / snap.len().max(1) as f64)
+        })
+    }
+
     /// One merged round call: `sessions` sessions contributed `rows` window
     /// rows across `groups` guidance groups (device calls).
     pub fn record_round(&self, sessions: usize, rows: usize, groups: usize) {
@@ -139,8 +230,11 @@ impl Metrics {
         m.merged_groups += groups as u64;
     }
 
+    /// Point-in-time aggregation of everything recorded so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
+        let mut first_prefix = m.first_prefix_ms.clone();
+        first_prefix.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let uptime = self.started.elapsed();
         let mean = |v: &[f64]| {
             if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
@@ -170,6 +264,10 @@ impl Metrics {
             merge_sessions_mean: per_round(m.merged_sessions),
             merge_rows_mean: per_round(m.merged_rows),
             merge_groups_mean: per_round(m.merged_groups),
+            prefix_chunks_sent: m.prefix_chunks,
+            prefix_rows_streamed: m.prefix_rows,
+            first_prefix_ms_p50: percentile_sorted(&first_prefix, 0.50),
+            first_prefix_ms_p95: percentile_sorted(&first_prefix, 0.95),
             devices: self
                 .pool
                 .lock()
@@ -210,6 +308,13 @@ impl MetricsSnapshot {
             ("merge_sessions_mean", Json::Num(self.merge_sessions_mean)),
             ("merge_rows_mean", Json::Num(self.merge_rows_mean)),
             ("merge_groups_mean", Json::Num(self.merge_groups_mean)),
+            ("prefix_chunks_sent", Json::Num(self.prefix_chunks_sent as f64)),
+            (
+                "prefix_rows_streamed",
+                Json::Num(self.prefix_rows_streamed as f64),
+            ),
+            ("first_prefix_ms_p50", Json::Num(self.first_prefix_ms_p50)),
+            ("first_prefix_ms_p95", Json::Num(self.first_prefix_ms_p95)),
             (
                 "devices",
                 Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
@@ -242,6 +347,15 @@ impl MetricsSnapshot {
                 self.merge_groups_mean,
                 self.sessions_in_flight,
                 self.peak_sessions_in_flight,
+            ));
+        }
+        if self.prefix_chunks_sent > 0 {
+            out.push_str(&format!(
+                "\n  streamed: {} prefix chunks / {} rows | first-prefix ms p50={:.1} p95={:.1}",
+                self.prefix_chunks_sent,
+                self.prefix_rows_streamed,
+                self.first_prefix_ms_p50,
+                self.first_prefix_ms_p95,
             ));
         }
         for s in &self.devices {
@@ -292,6 +406,24 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("peak_sessions_in_flight").and_then(|v| v.as_f64()), Some(3.0));
         assert_eq!(j.get("rounds_driven").and_then(|v| v.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn prefix_streaming_counters_aggregate() {
+        let m = Metrics::new();
+        m.record_prefix(5, Some(Duration::from_millis(4)));
+        m.record_prefix(3, None);
+        m.record_prefix(8, Some(Duration::from_millis(12)));
+        let s = m.snapshot();
+        assert_eq!(s.prefix_chunks_sent, 3);
+        assert_eq!(s.prefix_rows_streamed, 16);
+        assert!(s.first_prefix_ms_p50 >= 4.0 && s.first_prefix_ms_p95 <= 12.5);
+        assert!(s.report().contains("first-prefix"), "report: {}", s.report());
+        let j = s.to_json();
+        assert_eq!(j.get("prefix_chunks_sent").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("prefix_rows_streamed").and_then(|v| v.as_f64()), Some(16.0));
+        // No pool attached: no occupancy signal.
+        assert!(m.device_occupancy().is_none());
     }
 
     #[test]

@@ -6,12 +6,17 @@
 //! [`crate::solver::SolverSession`] and drives all of them, round by round,
 //! from a small fixed pool of driver threads:
 //!
-//! - [`request`]  — request/response types and handles;
+//! - [`request`]  — request/response types and handles, including the
+//!   streaming [`PrefixChunk`] event;
 //! - [`server`]   — admission (intake) + the event-driven round drivers:
 //!   ready sessions are pulled from a run queue, their pending ε batches
 //!   merged deterministically by guidance group into one pool call per
 //!   round, results scattered, live sessions requeued — so in-flight
-//!   requests are bounded by the slot budget, not by thread count;
+//!   requests are bounded by the slot budget, not by thread count. The
+//!   same scatter loop forwards each session's converged-prefix advance
+//!   to streaming subscribers ([`Coordinator::submit_streaming`]) and
+//!   feeds device occupancy to adaptive-window solves
+//!   ([`crate::solver::WindowPolicy::Adaptive`]);
 //! - [`scheduler`] — the slot budget bounding total in-flight window rows
 //!   (the "GPU memory" the paper's window size w trades against, §5.2);
 //! - [`cache`]    — trajectory cache: solved trajectories are kept and
@@ -33,6 +38,6 @@ pub mod server;
 pub use batcher::{BatchedEps, Batcher, BatcherConfig};
 pub use cache::TrajectoryCache;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{SampleRequest, SampleResponse, SamplerSpec};
+pub use request::{PrefixChunk, SampleRequest, SampleResponse, SamplerSpec};
 pub use scheduler::{OwnedSlotGuard, SlotBudget};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, ResponseHandle, StreamHandle};

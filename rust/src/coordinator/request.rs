@@ -1,25 +1,31 @@
-//! Request/response types for the sampling service.
+//! Request/response types for the sampling service, including the
+//! streaming-prefix event delivered while a solve is still running.
 
 use crate::model::Cond;
 use crate::schedule::SamplerKind;
-use crate::solver::{Method, SolverConfig};
+use crate::solver::{Method, SolverConfig, WindowPolicy};
 use std::time::Duration;
 
 /// Which sequential algorithm (and how many steps) the request wants to
 /// reproduce in parallel.
 #[derive(Debug, Clone, Copy)]
 pub struct SamplerSpec {
+    /// Sequential sampler family (DDIM / DDPM).
     pub kind: SamplerKind,
+    /// Steps on the sampler's grid (the trajectory length T).
     pub steps: usize,
 }
 
 impl SamplerSpec {
+    /// A `steps`-step DDIM (deterministic ODE sampler) spec.
     pub fn ddim(steps: usize) -> Self {
         SamplerSpec { kind: SamplerKind::Ddim, steps }
     }
+    /// A `steps`-step DDPM (stochastic SDE sampler) spec.
     pub fn ddpm(steps: usize) -> Self {
         SamplerSpec { kind: SamplerKind::Ddpm, steps }
     }
+    /// Scenario key, e.g. `"DDIM-50"` (also the trajectory-cache key).
     pub fn label(&self) -> String {
         format!("{}-{}", self.kind.label(), self.steps)
     }
@@ -32,7 +38,9 @@ pub struct SampleRequest {
     pub cond: Cond,
     /// Noise seed (determines the image; parallel == sequential per seed).
     pub seed: u64,
+    /// Sampler family + step count to reproduce in parallel.
     pub sampler: SamplerSpec,
+    /// Classifier-free guidance scale (also the cross-request merge key).
     pub guidance: f32,
     /// Solver method (ParaTAA by default).
     pub method: Method,
@@ -46,6 +54,11 @@ pub struct SampleRequest {
     pub max_rounds: Option<usize>,
     /// Consult/populate the trajectory cache (§4.2 warm starts).
     pub use_trajectory_cache: bool,
+    /// Sliding-window sizing policy. [`WindowPolicy::Fixed`] (default)
+    /// keeps the static §2.2 window; [`WindowPolicy::Adaptive`] lets the
+    /// round drivers' occupancy signal grow/shrink w each round. Adaptive
+    /// requests reserve their `max_window` bound from the slot budget.
+    pub window_policy: WindowPolicy,
 }
 
 impl SampleRequest {
@@ -62,6 +75,7 @@ impl SampleRequest {
             window: None,
             max_rounds: None,
             use_trajectory_cache: false,
+            window_policy: WindowPolicy::Fixed,
         }
     }
 
@@ -90,8 +104,34 @@ impl SampleRequest {
         } else {
             cfg.s_max = 4 * steps;
         }
+        cfg.window_policy = self.window_policy.clone();
         cfg
     }
+}
+
+/// One increment of a streaming solve's converged prefix, delivered to the
+/// request's subscription channel while the rest of the trajectory is
+/// still being solved (see [`super::Coordinator::submit_streaming`]).
+///
+/// The rows are frozen by the monotone residual front (Theorem 3.6
+/// safeguard), so the states carried here are bit-identical to what the
+/// final [`SampleResponse`] reports; successive chunks of one request tile
+/// the trajectory `[0, steps)` from the x_T side (the earliest denoising
+/// timesteps) down to the final sample row 0.
+#[derive(Debug, Clone)]
+pub struct PrefixChunk {
+    /// State-row indices `[start, end)` this chunk freezes (the final
+    /// chunk of a converged solve ends at `start == 0`).
+    pub rows: std::ops::Range<usize>,
+    /// Flattened `[rows.len(), d]` row-major states, row `rows.start`
+    /// first. Row 0, once delivered, is the final sample.
+    pub states: Vec<f32>,
+    /// Last measured residuals per row (`NaN` for rows frozen by a §4.2
+    /// warm start before any evaluation).
+    pub residuals: Vec<f64>,
+    /// 1-based parallel round that froze these rows (0 for rows frozen at
+    /// admission by a warm start, before any round ran).
+    pub round: usize,
 }
 
 /// The served result.
@@ -133,5 +173,18 @@ mod tests {
             ..SampleRequest::parataa(Cond::Class(1), 7, SamplerSpec::ddim(50))
         };
         assert_eq!(fp.solver_config().k, 50, "FP defaults to k = w (PL iteration)");
+    }
+
+    #[test]
+    fn window_policy_threads_through() {
+        use crate::solver::AdaptiveWindow;
+        let mut r = SampleRequest::parataa(Cond::Class(0), 1, SamplerSpec::ddim(40));
+        assert_eq!(r.solver_config().window_policy, WindowPolicy::Fixed);
+        assert_eq!(r.solver_config().max_window_rows(), 40);
+        let a = AdaptiveWindow::for_steps(40);
+        r.window_policy = WindowPolicy::Adaptive(a.clone());
+        let cfg = r.solver_config();
+        assert_eq!(cfg.window_policy, WindowPolicy::Adaptive(a));
+        assert_eq!(cfg.max_window_rows(), 40, "adaptive budgets its max bound");
     }
 }

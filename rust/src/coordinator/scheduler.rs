@@ -46,6 +46,7 @@ impl OwnedSlotGuard {
 }
 
 impl SlotBudget {
+    /// A budget of `total` slots (≥ 1), all initially free.
     pub fn new(total: usize) -> Self {
         assert!(total >= 1);
         SlotBudget {
@@ -55,6 +56,7 @@ impl SlotBudget {
         }
     }
 
+    /// Total slots in the budget (free + held).
     pub fn total(&self) -> usize {
         self.total
     }

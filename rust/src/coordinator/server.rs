@@ -28,10 +28,26 @@
 //! latency-linger heuristic the internal path previously inherited from
 //! [`super::batcher`]; the batcher remains as the public `EpsModel`-facing
 //! adapter for callers outside the coordinator.
+//!
+//! Two per-round signals ride on the same scatter loop:
+//!
+//! - **Streaming prefix delivery** — a request submitted through
+//!   [`Coordinator::submit_streaming`] carries a bounded subscription
+//!   channel; after each merged round the driver forwards the session's
+//!   [`crate::solver::FrontAdvance`] as a [`PrefixChunk`] (frozen rows are
+//!   final, so clients receive the converged prefix of the trajectory
+//!   while the rest is still solving). The channel is sized so a send can
+//!   never block a driver, and the stream closes when the request
+//!   finalizes — successfully or not.
+//! - **Adaptive window control** — before driving a round with any
+//!   adaptive session, each session is told the current device occupancy
+//!   (the attached pool's utilization/backlog; 0 without a pool), which
+//!   is what [`crate::solver::WindowPolicy::Adaptive`] solves trade
+//!   against.
 
 use super::cache::{CachedTrajectory, TrajectoryCache};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{SampleRequest, SampleResponse};
+use super::request::{PrefixChunk, SampleRequest, SampleResponse};
 use super::scheduler::{OwnedSlotGuard, SlotBudget};
 use crate::model::{Cond, EpsModel};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
@@ -92,6 +108,8 @@ impl Default for CoordinatorConfig {
 struct Job {
     req: SampleRequest,
     reply: Sender<Result<SampleResponse>>,
+    /// Converged-prefix subscription (`None` for plain submissions).
+    progress: Option<Sender<PrefixChunk>>,
     enqueued: Instant,
 }
 
@@ -149,6 +167,12 @@ struct ActiveSession {
     enqueued: Instant,
     warm: bool,
     scenario: String,
+    /// Converged-prefix subscription; dropping it (any finalize or failure
+    /// path) ends the client's stream.
+    progress: Option<Sender<PrefixChunk>>,
+    /// Prefix chunks already delivered (0 ⇒ the next one records the
+    /// latency-to-first-prefix metric).
+    chunks_sent: usize,
     /// Window-row slots held for the session's whole lifetime. Declared
     /// before `in_flight` so a plain drop releases budget first, then
     /// clears the gauge the shutdown path waits on.
@@ -167,6 +191,42 @@ impl ResponseHandle {
         self.rx
             .recv()
             .unwrap_or_else(|| Err(anyhow!("coordinator shut down")))
+    }
+}
+
+/// Handle to an in-flight **streaming** request (from
+/// [`Coordinator::submit_streaming`]): converged-prefix chunks arrive on
+/// [`next_chunk`](Self::next_chunk) while the solve runs; the final
+/// response is read with [`wait`](Self::wait) once the stream ends.
+///
+/// Typical client loop:
+///
+/// ```text
+/// while let Some(chunk) = handle.next_chunk() { deliver(chunk); }
+/// let response = handle.wait()?; // stream closed ⇒ response is imminent
+/// ```
+pub struct StreamHandle {
+    chunks: Receiver<PrefixChunk>,
+    response: ResponseHandle,
+}
+
+impl StreamHandle {
+    /// Block for the next converged-prefix chunk; `None` once the request
+    /// finalized (successfully or not) and no chunks remain.
+    pub fn next_chunk(&self) -> Option<PrefixChunk> {
+        self.chunks.recv()
+    }
+
+    /// Non-blocking poll for an already-delivered chunk.
+    pub fn try_chunk(&self) -> Option<PrefixChunk> {
+        self.chunks.try_recv()
+    }
+
+    /// Block until the final response. Drain the chunk stream first if you
+    /// need it — this consumes the handle (undelivered chunks are
+    /// dropped).
+    pub fn wait(self) -> Result<SampleResponse> {
+        self.response.wait()
     }
 }
 
@@ -275,10 +335,31 @@ impl Coordinator {
     /// Enqueue a request (blocking if the queue is full — backpressure).
     pub fn submit(&self, req: SampleRequest) -> ResponseHandle {
         let (rtx, rrx) = bounded(1);
-        if self.tx.send(Job { req, reply: rtx, enqueued: Instant::now() }).is_err() {
+        let job = Job { req, reply: rtx, progress: None, enqueued: Instant::now() };
+        if self.tx.send(job).is_err() {
             panic!("coordinator is down");
         }
         ResponseHandle { rx: rrx }
+    }
+
+    /// Enqueue a request with a converged-prefix subscription: the round
+    /// drivers deliver each advance of the session's residual front as a
+    /// [`PrefixChunk`] while the solve is still running, and the chunk
+    /// stream closes when the request finalizes. The streamed states are
+    /// bit-identical to the final response (frozen rows are never
+    /// rewritten), and the channel is sized so delivery can never block a
+    /// driver — a slow or abandoned consumer only buffers at most one
+    /// chunk per trajectory row.
+    pub fn submit_streaming(&self, req: SampleRequest) -> StreamHandle {
+        let (rtx, rrx) = bounded(1);
+        // ≤ steps chunks can ever be sent (each covers ≥ 1 of the steps
+        // rows), so this capacity makes `try_send` infallible in practice.
+        let (ptx, prx) = bounded(req.sampler.steps.max(1) + 1);
+        let job = Job { req, reply: rtx, progress: Some(ptx), enqueued: Instant::now() };
+        if self.tx.send(job).is_err() {
+            panic!("coordinator is down");
+        }
+        StreamHandle { chunks: prx, response: ResponseHandle { rx: rrx } }
     }
 
     /// Convenience: submit and wait.
@@ -286,6 +367,8 @@ impl Coordinator {
         self.submit(req).wait()
     }
 
+    /// Point-in-time metrics snapshot (latency/throughput, merge
+    /// occupancy, streaming counters, per-device breakdown).
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -340,7 +423,7 @@ fn admit(
     metrics: &Arc<Metrics>,
     cfg: &CoordinatorConfig,
 ) -> ActiveSession {
-    let Job { req, reply, enqueued } = job;
+    let Job { req, reply, progress, enqueued } = job;
     // Guard first: if anything below panics (malformed request), the
     // unwinding guard records exactly one failure.
     let mut in_flight = SessionGuard::new(metrics.clone());
@@ -363,11 +446,64 @@ fn admit(
 
     // Hold window-row slots for the session's lifetime. Blocking here — in
     // the intake, never in a round driver — is what bounds in-flight
-    // sessions by the budget while rounds keep flowing.
-    let slots = SlotBudget::acquire_owned(budget, solver_cfg.window.min(steps));
+    // sessions by the budget while rounds keep flowing. Adaptive-window
+    // sessions reserve their worst-case (max_window) footprint so growth
+    // mid-solve can never oversubscribe the budget.
+    let slots = SlotBudget::acquire_owned(budget, solver_cfg.max_window_rows().min(steps));
     in_flight.mark_started();
     let session = SolverSession::new(&problem, &solver_cfg);
-    ActiveSession { session, req, reply, enqueued, warm, scenario, slots, in_flight }
+    ActiveSession {
+        session,
+        req,
+        reply,
+        enqueued,
+        warm,
+        scenario,
+        progress,
+        chunks_sent: 0,
+        slots,
+        in_flight,
+    }
+}
+
+/// Forward any new converged-prefix advance of `active`'s session to its
+/// subscription channel (no-op for non-streaming requests, and purely
+/// observational for the solve itself). The channel is sized for one chunk
+/// per trajectory row, so `try_send` cannot drop chunks; an abandoned
+/// receiver merely buffers them until the request finalizes.
+fn emit_progress(active: &mut ActiveSession, metrics: &Metrics) {
+    if active.progress.is_none() {
+        return;
+    }
+    let d = active.session.dim();
+    if let Some(adv) = active.session.progress() {
+        let rows = adv.newly_converged;
+        let mut states = Vec::with_capacity(rows.len() * d);
+        for p in rows.clone() {
+            states.extend_from_slice(active.session.xs().row(p));
+        }
+        let chunk = PrefixChunk {
+            rows: rows.clone(),
+            states,
+            residuals: adv.residuals,
+            round: active.session.iterations(),
+        };
+        let first = if active.chunks_sent == 0 {
+            Some(active.enqueued.elapsed())
+        } else {
+            None
+        };
+        // Count only what actually reached the channel, so the streaming
+        // metrics never over-report delivery (the capacity bound makes a
+        // failed send unreachable in practice, but the accounting should
+        // not have to rely on that).
+        if let Some(tx) = &active.progress {
+            if tx.try_send(chunk).is_ok() {
+                active.chunks_sent += 1;
+                metrics.record_prefix(rows.len(), first);
+            }
+        }
+    }
 }
 
 /// A round-driver thread: pop every ready session, drive them one merged
@@ -422,6 +558,21 @@ fn drive_round(
     }
     if round.is_empty() {
         return;
+    }
+
+    // Device occupancy for the adaptive window controllers: the attached
+    // pool's mean utilization / backlog. Slot-budget pressure is *not* a
+    // substitute signal — adaptive sessions reserve their max_window for
+    // their whole lifetime, so shrinking frees no budget rows and a
+    // budget-based signal would latch every window at min_window under
+    // sustained load. Without a pool the signal stays 0 and adaptive
+    // solves size on convergence velocity alone. Guarded so the default
+    // all-Fixed workload never pays the per-round pool snapshot.
+    if round.iter().any(|s| s.session.is_adaptive()) {
+        let occupancy = metrics.device_occupancy().unwrap_or(0.0);
+        for s in round.iter_mut() {
+            s.session.set_occupancy(occupancy);
+        }
     }
 
     let d = model.dim();
@@ -489,6 +640,15 @@ fn drive_round(
     }
     metrics.record_round(round.len(), total_rows, n_groups);
 
+    // Forward per-session front advances to streaming subscribers right
+    // after the scatter: converged-prefix chunks land one round boundary
+    // after the rows freeze, long before the request finalizes.
+    for (i, s) in round.iter_mut().enumerate() {
+        if !poisoned[i] {
+            emit_progress(s, metrics);
+        }
+    }
+
     // Poisoned sessions fail with an accurate error (their guards record
     // the failure on drop); finished sessions finalize; live ones rejoin
     // the back of the run queue (round-robin — no session can starve).
@@ -515,13 +675,29 @@ fn drive_round(
 
 /// Send the response, populate the trajectory cache, release the slots.
 fn finalize(
-    active: ActiveSession,
+    mut active: ActiveSession,
     cache: &TrajectoryCache,
     metrics: &Metrics,
     cfg: &CoordinatorConfig,
 ) {
-    let ActiveSession { session, req, reply, enqueued, warm, scenario, slots, mut in_flight } =
-        active;
+    // Deliver any advance the round loop has not reported yet (covers
+    // sessions finalized without ever being driven, e.g. `max_rounds: 0`
+    // warm starts), then close the stream: subscribers observe "chunks,
+    // stream end, response" in that order.
+    emit_progress(&mut active, metrics);
+    let ActiveSession {
+        session,
+        req,
+        reply,
+        enqueued,
+        warm,
+        scenario,
+        progress,
+        chunks_sent: _,
+        slots,
+        mut in_flight,
+    } = active;
+    drop(progress);
     let cache_xi = if req.use_trajectory_cache && session.converged() {
         Some(session.xi().clone())
     } else {
@@ -703,6 +879,96 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.failed, 1);
         assert_eq!(m.sessions_in_flight, 0);
+    }
+
+    /// Streaming requests must deliver the converged prefix incrementally
+    /// (at least one chunk strictly before the final round), tiling the
+    /// trajectory exactly, with states bit-identical to the final
+    /// response and to a solo blocking solve.
+    #[test]
+    fn streaming_delivers_prefix_before_completion_bit_identically() {
+        let model = gmm_model();
+        let coord = Coordinator::start(model.clone(), CoordinatorConfig::default());
+        let req = basic_req(21);
+        let handle = coord.submit_streaming(req.clone());
+        let mut chunks = Vec::new();
+        while let Some(c) = handle.next_chunk() {
+            chunks.push(c);
+        }
+        let resp = handle.wait().unwrap();
+        assert!(resp.converged);
+        assert!(chunks.len() >= 2, "expected incremental delivery, got {}", chunks.len());
+        // Chunks tile [0, 16) from the x_T side down to the sample row.
+        let mut expect_end = 16;
+        for c in &chunks {
+            assert_eq!(c.rows.end, expect_end, "chunks must be contiguous top-down");
+            assert!(c.rows.start < c.rows.end);
+            assert_eq!(c.states.len(), c.rows.len() * 8);
+            assert_eq!(c.residuals.len(), c.rows.len());
+            expect_end = c.rows.start;
+        }
+        assert_eq!(expect_end, 0, "the stream must reach the final sample row");
+        assert!(
+            chunks.iter().any(|c| c.round < resp.rounds),
+            "a prefix chunk must land strictly before solve completion"
+        );
+        // The streamed sample row is bit-identical to the response and to
+        // a solo blocking solve of the same request.
+        let last = chunks.last().unwrap();
+        assert_eq!(&last.states[..8], &resp.sample[..], "streamed row 0 != response");
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        let p = Problem::new(&coeffs, &*model, req.cond.clone(), req.seed);
+        let solo = crate::solver::solve(&p, &req.solver_config());
+        assert_eq!(resp.sample, solo.xs.row(0).to_vec());
+        let m = coord.metrics();
+        assert_eq!(m.prefix_chunks_sent, chunks.len() as u64);
+        assert_eq!(m.prefix_rows_streamed, 16);
+        assert!(m.first_prefix_ms_p50 > 0.0);
+    }
+
+    /// Adaptive-window requests reserve their max_window footprint, serve
+    /// to convergence, and return every slot.
+    #[test]
+    fn adaptive_window_requests_serve_and_settle() {
+        use crate::solver::{AdaptiveWindow, WindowPolicy};
+        let model = gmm_model();
+        let coord = Coordinator::start(
+            model.clone(),
+            CoordinatorConfig { workers: 2, drivers: 2, slot_budget: 64, ..Default::default() },
+        );
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let mut r = basic_req(200 + i);
+                r.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(16));
+                // Start small so the controller actually exercises growth
+                // (no pool is attached, so occupancy stays 0 here).
+                r.window = Some(4);
+                r.max_rounds = Some(400);
+                coord.submit(r)
+            })
+            .collect();
+        let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        for (i, r) in responses.iter().enumerate() {
+            assert!(r.converged, "adaptive request {i} did not converge");
+        }
+        // Still the right answer: matches the sequential oracle.
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        let p = Problem::new(&coeffs, &*model, Cond::Class(1), 200);
+        let seq = crate::solver::sample_sequential(&p, 2.0);
+        crate::util::proplite::assert_close(
+            &responses[0].sample,
+            seq.xs.row(0),
+            5e-3,
+            5e-2,
+            "adaptive via coordinator",
+        )
+        .unwrap();
+        let m = coord.metrics();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.failed, 0);
+        assert_eq!(coord.slots_available(), 64, "adaptive sessions must return all slots");
     }
 
     #[test]

@@ -15,7 +15,14 @@
 //! the parallel-round boundary externalized (`pending()` → ε batch →
 //! `resume()`) — and the serving coordinator drives hundreds of sessions
 //! from a few round-driver threads, merging their per-round ε batches into
-//! single device calls. Execution flows through [`runtime::DevicePool`]:
+//! single device calls. Because the residual front is monotone, the
+//! coordinator can also **stream** each request's converged trajectory
+//! prefix to the client while the solve is still running
+//! ([`coordinator::Coordinator::submit_streaming`]), and an adaptive
+//! window controller ([`solver::WindowPolicy`]) sizes each solve's window
+//! from its convergence velocity and the pool's occupancy.
+//! `docs/paper_map.md` cross-references the paper's definitions, theorems
+//! and sections to the modules implementing them. Execution flows through [`runtime::DevicePool`]:
 //! N backend actors (pure-Rust in-process by default; PJRT device actors
 //! with `--features pjrt`) behind one [`model::EpsModel`] handle, with
 //! per-device queues, batch sharding and work stealing. With the `pjrt`
@@ -27,13 +34,18 @@
 //! `BENCH_repro.json` that later PRs diff against (`--baseline`); see
 //! `docs/bench.md` and the README for the workflow.
 
-// Public-API documentation coverage is tracked as warnings, not a build
-// gate: CI deliberately avoids blanket `-D warnings` (a source-level lint
-// attribute beats a CLI `-A`, so it could not be re-allowed there) — see
-// .github/workflows/ci.yml.
+// Public-API documentation coverage: tracked as warnings crate-wide, and
+// **denied at the source** for the serving layers (`coordinator`,
+// `runtime`) below — the same scoped-deny idiom as the clippy::perf gate,
+// so any build (not just the CI docs job) fails on a doc gap there.
+// Source-level lint attributes take precedence over CLI flags, which is
+// why the gate lives here rather than in .github/workflows/ci.yml.
 #![warn(missing_docs)]
 
 pub mod bench;
+// Serving-layer doc coverage is enforced (see the note above): every pub
+// item in coordinator/ and runtime/ must carry a doc comment.
+#[deny(missing_docs)]
 pub mod coordinator;
 pub mod equations;
 pub mod figures;
@@ -44,6 +56,7 @@ pub mod figures;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+#[deny(missing_docs)]
 pub mod runtime;
 pub mod schedule;
 #[deny(clippy::perf)]

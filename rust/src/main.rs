@@ -10,8 +10,10 @@
 //!   all-figures   regenerate everything into results/
 //!
 //! Common options: --model dit|gmm, --steps N, --samples N, --seed N.
-//! `serve` additionally takes --devices N (size of the execution pool) and
-//! --drivers N (round-driver threads carrying the session run queue).
+//! `serve` additionally takes --devices N (size of the execution pool),
+//! --drivers N (round-driver threads carrying the session run queue),
+//! --stream (incremental converged-prefix delivery, bitwise-verified) and
+//! --adaptive-window (occupancy-driven window sizing).
 //! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
 //! trained weights).
 
@@ -51,9 +53,13 @@ fn help() {
                        (--requests N --workers N: admission threads; --drivers N:\n\
                        round-driver threads carrying all in-flight sessions and\n\
                        merging their per-round eps batches; --devices N: N-backend\n\
-                       execution pool with sharding + work stealing; prints merge\n\
-                       occupancy + a per-device utilization breakdown; --json\n\
-                       dumps the metrics snapshot)\n\
+                       execution pool with sharding + work stealing; --stream:\n\
+                       deliver each request's converged prefix incrementally and\n\
+                       verify the streamed states bitwise against a non-streaming\n\
+                       re-run; --adaptive-window: size each solve's window from\n\
+                       convergence velocity + pool occupancy; prints merge\n\
+                       occupancy, streaming counters + a per-device utilization\n\
+                       breakdown; --json dumps the metrics snapshot)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
                        --baseline FILE [--threshold PCT]: print a regression\n\
@@ -183,6 +189,7 @@ fn cmd_serve(args: &Args) {
     use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
     use parataa::figures::common::ModelChoice;
     use parataa::model::Cond;
+    use parataa::solver::{AdaptiveWindow, WindowPolicy};
     use parataa::util::rng::Pcg64;
     use std::sync::Arc;
 
@@ -192,6 +199,8 @@ fn cmd_serve(args: &Args) {
     let workers = args.usize_or("workers", 4);
     let drivers = args.usize_or("drivers", 2).max(1);
     let devices = args.usize_or("devices", 1).max(1);
+    let stream = args.has_flag("stream");
+    let adaptive = args.has_flag("adaptive-window");
 
     // Stack: backend pool -> coordinator round drivers. The drivers merge
     // the pending ε batches of ready sessions per round (no batcher layer:
@@ -207,30 +216,44 @@ fn cmd_serve(args: &Args) {
 
     eprintln!(
         "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s), \
-         {drivers} round driver(s) ...",
-        model_choice.label()
+         {drivers} round driver(s){}{} ...",
+        model_choice.label(),
+        if stream { ", streaming prefixes" } else { "" },
+        if adaptive { ", adaptive windows" } else { "" },
     );
     let mut rng = Pcg64::seeded(args.u64_or("seed", 0));
-    let handles: Vec<_> = (0..n_requests)
-        .map(|i| {
-            let mut req = SampleRequest::parataa(
-                Cond::Class(rng.below(8) as usize),
-                i as u64,
-                SamplerSpec::ddim(steps),
-            );
-            req.guidance = guidance;
-            req.use_trajectory_cache = true;
-            coord.submit(req)
-        })
-        .collect();
-    for (i, h) in handles.into_iter().enumerate() {
-        let r = h.wait().expect("request failed");
-        if i < 4 || !r.converged {
-            // Progress goes to stderr so `--json` stdout stays parseable.
-            eprintln!(
-                "req {i}: rounds={} nfe={} warm={} conv={} latency={:?}",
-                r.rounds, r.nfe, r.warm_started, r.converged, r.latency
-            );
+    let conds: Vec<Cond> =
+        (0..n_requests).map(|_| Cond::Class(rng.below(8) as usize)).collect();
+    let make_req = |i: usize| {
+        let mut req =
+            SampleRequest::parataa(conds[i].clone(), i as u64, SamplerSpec::ddim(steps));
+        req.guidance = guidance;
+        // The streaming demo re-solves every request for the bitwise
+        // equality check, so both passes must stay cold (a warm start in
+        // one pass only would legitimately change the solve).
+        req.use_trajectory_cache = !stream;
+        if adaptive {
+            req.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(steps));
+            // Start below the cap so velocity-driven growth has room to
+            // act — at the full window the controller could only shrink.
+            req.window = Some((steps / 4).max(1));
+        }
+        req
+    };
+
+    if stream {
+        serve_stream_demo(&coord, n_requests, steps, adaptive, &make_req);
+    } else {
+        let handles: Vec<_> = (0..n_requests).map(|i| coord.submit(make_req(i))).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait().expect("request failed");
+            if i < 4 || !r.converged {
+                // Progress goes to stderr so `--json` stdout stays parseable.
+                eprintln!(
+                    "req {i}: rounds={} nfe={} warm={} conv={} latency={:?}",
+                    r.rounds, r.nfe, r.warm_started, r.converged, r.latency
+                );
+            }
         }
     }
     // The report includes the per-device breakdown (attached pool stats).
@@ -240,6 +263,87 @@ fn cmd_serve(args: &Args) {
         println!("{}", coord.metrics().report());
     }
     drop(coord);
+}
+
+/// `serve --stream`: every request goes through the streaming path with a
+/// consumer thread draining its prefix chunks, then the whole load is
+/// re-run non-streaming and checked **bitwise** against the streamed
+/// results. Process-fatal asserts make this the CI stream-smoke oracle:
+/// each request must observe ≥ 1 prefix chunk strictly before completion,
+/// the chunks must tile the trajectory, and the streamed sample must equal
+/// the non-streaming one bit-for-bit (skipped under `--adaptive-window`,
+/// where the occupancy-driven window makes runs legitimately non-identical).
+fn serve_stream_demo(
+    coord: &parataa::coordinator::Coordinator,
+    n_requests: usize,
+    steps: usize,
+    adaptive: bool,
+    make_req: &dyn Fn(usize) -> parataa::coordinator::SampleRequest,
+) {
+    let threads: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let handle = coord.submit_streaming(make_req(i));
+            std::thread::spawn(move || {
+                let t0 = std::time::Instant::now();
+                let mut chunks = Vec::new();
+                let mut first = None;
+                while let Some(c) = handle.next_chunk() {
+                    if first.is_none() {
+                        first = Some(t0.elapsed());
+                    }
+                    chunks.push(c);
+                }
+                let resp = handle.wait().expect("streaming request failed");
+                (chunks, first, resp)
+            })
+        })
+        .collect();
+    let mut streamed = Vec::with_capacity(n_requests);
+    for (i, t) in threads.into_iter().enumerate() {
+        let (chunks, first, resp) = t.join().expect("stream consumer panicked");
+        assert!(resp.converged, "req {i} did not converge");
+        assert!(
+            chunks.iter().any(|c| c.round < resp.rounds),
+            "req {i}: no prefix chunk arrived strictly before completion"
+        );
+        let mut expect_end = steps;
+        for c in &chunks {
+            assert_eq!(c.rows.end, expect_end, "req {i}: chunk gap/overlap");
+            expect_end = c.rows.start;
+        }
+        assert_eq!(expect_end, 0, "req {i}: stream never reached the sample row");
+        let last = chunks.last().expect("converged stream has chunks");
+        assert_eq!(
+            &last.states[..resp.sample.len()],
+            &resp.sample[..],
+            "req {i}: streamed sample row != final response"
+        );
+        if i < 4 {
+            eprintln!(
+                "req {i}: {} chunks, first prefix after {:?}, done after {:?} ({} rounds)",
+                chunks.len(),
+                first.expect("converged stream has a first chunk"),
+                resp.latency,
+                resp.rounds,
+            );
+        }
+        streamed.push(resp);
+    }
+    if adaptive {
+        eprintln!("stream demo OK (adaptive windows: bitwise re-run check skipped)");
+        return;
+    }
+    // Second pass, non-streaming: identical requests must produce
+    // bit-identical samples (streaming is purely observational).
+    let handles: Vec<_> = (0..n_requests).map(|i| coord.submit(make_req(i))).collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().expect("verification request failed");
+        assert_eq!(
+            r.sample, streamed[i].sample,
+            "req {i}: streamed and non-streaming samples differ"
+        );
+    }
+    eprintln!("stream demo OK: {n_requests} requests streamed and verified bitwise");
 }
 
 /// Do two paths name the same file, regardless of spelling

@@ -76,6 +76,8 @@ pub struct InProcessBackend {
 }
 
 impl InProcessBackend {
+    /// Wrap `model` for in-process evaluation on the pool worker thread
+    /// (no injected latency or jitter).
     pub fn new(model: Arc<dyn EpsModel>) -> Self {
         InProcessBackend {
             model,

@@ -24,41 +24,63 @@ pub enum DeviceRequest {
         t: Vec<i32>,
         /// Class ids (8 = CFG null), length n.
         y: Vec<i32>,
+        /// Classifier-free guidance scale.
         guidance: f32,
+        /// Channel receiving the `[n, d]` ε rows (or the failure).
         reply: Sender<Result<Vec<f32>>>,
     },
     /// One full ParaTAA round through a `solver_step_{T}` artifact
     /// (combine + residuals + TAA update fused into a single device call).
     SolverStep {
+        /// Which compiled `solver_step_{T}` variant to run.
         steps: usize,
+        /// The round's tensors (boxed: the variant is large).
         inputs: Box<SolverStepInputs>,
+        /// Channel receiving the round's outputs (or the failure).
         reply: Sender<Result<SolverStepOutputs>>,
     },
 }
 
 /// Inputs of the fused solver-step artifact (see `python/compile/aot.py`).
 pub struct SolverStepInputs {
-    pub xs_ext: Vec<f32>,   // [T+1, D]
-    pub eps_ext: Vec<f32>,  // [T+1, D]
-    pub x_win: Vec<f32>,    // [W, D]
-    pub s_mat: Vec<f32>,    // [W, T+1]
-    pub b_mat: Vec<f32>,    // [W, T+1]
-    pub xi_comb: Vec<f32>,  // [W, D]
-    pub s1_mat: Vec<f32>,   // [W, T+1]
-    pub b1_mat: Vec<f32>,   // [W, T+1]
-    pub xi1_comb: Vec<f32>, // [W, D]
-    pub dx: Vec<f32>,       // [mc, W, D]
-    pub df: Vec<f32>,       // [mc, W, D]
-    pub mask: Vec<f32>,     // [W]
-    pub fp_mask: Vec<f32>,  // [W]
+    /// Extended states x_0..x_T, `[T+1, D]`.
+    pub xs_ext: Vec<f32>,
+    /// Extended ε values, `[T+1, D]`.
+    pub eps_ext: Vec<f32>,
+    /// Active-window states, `[W, D]`.
+    pub x_win: Vec<f32>,
+    /// Order-k combine S matrix, `[W, T+1]`.
+    pub s_mat: Vec<f32>,
+    /// Order-k combine B matrix, `[W, T+1]`.
+    pub b_mat: Vec<f32>,
+    /// Combined noise terms, `[W, D]`.
+    pub xi_comb: Vec<f32>,
+    /// Order-1 (residual) S matrix, `[W, T+1]`.
+    pub s1_mat: Vec<f32>,
+    /// Order-1 (residual) B matrix, `[W, T+1]`.
+    pub b1_mat: Vec<f32>,
+    /// Order-1 combined noise terms, `[W, D]`.
+    pub xi1_comb: Vec<f32>,
+    /// Anderson ΔX history, `[mc, W, D]`.
+    pub dx: Vec<f32>,
+    /// Anderson ΔF history, `[mc, W, D]`.
+    pub df: Vec<f32>,
+    /// Active-row mask, `[W]`.
+    pub mask: Vec<f32>,
+    /// Safeguard (plain-FP) row mask, `[W]`.
+    pub fp_mask: Vec<f32>,
+    /// Ridge λ for the Gram solves (Remark 3.3).
     pub lam: f32,
 }
 
 /// Outputs of the fused solver-step artifact.
 pub struct SolverStepOutputs {
-    pub x_new: Vec<f32>, // [W, D]
-    pub r_vec: Vec<f32>, // [W, D]
-    pub r1: Vec<f32>,    // [W]
+    /// Updated window states, `[W, D]`.
+    pub x_new: Vec<f32>,
+    /// Residual vectors, `[W, D]`.
+    pub r_vec: Vec<f32>,
+    /// Per-row squared residual norms, `[W]`.
+    pub r1: Vec<f32>,
 }
 
 /// History columns compiled into the solver_step artifacts (paper m=3).
@@ -67,8 +89,11 @@ pub const SOLVER_HIST_COLS: usize = 2;
 /// Counters shared with submitters (metrics surface).
 #[derive(Default)]
 pub struct DeviceStats {
+    /// Batched ε executions served.
     pub eps_calls: AtomicU64,
+    /// ε rows served across those calls.
     pub eps_items: AtomicU64,
+    /// Fused solver-step executions served.
     pub solver_calls: AtomicU64,
 }
 
@@ -76,6 +101,7 @@ pub struct DeviceStats {
 #[derive(Clone)]
 pub struct DeviceHandle {
     tx: Sender<DeviceRequest>,
+    /// Shared call/row counters of the actor behind this handle.
     pub stats: Arc<DeviceStats>,
     dim: usize,
 }
@@ -160,6 +186,7 @@ impl DeviceActor {
         Ok(DeviceActor { handle, join: Some(join), shutdown: tx })
     }
 
+    /// A clonable submission handle to this actor.
     pub fn handle(&self) -> DeviceHandle {
         self.handle.clone()
     }

@@ -16,6 +16,7 @@ pub struct PjrtEps {
 }
 
 impl PjrtEps {
+    /// Wrap a device actor's handle as an [`crate::model::EpsModel`].
     pub fn new(handle: DeviceHandle) -> Self {
         PjrtEps { handle, name: "dit-tiny(pjrt)".to_string() }
     }

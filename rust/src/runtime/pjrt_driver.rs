@@ -21,9 +21,13 @@ use crate::util::error::{ensure, Result};
 
 /// Result of a fused-path solve.
 pub struct PjrtSolveResult {
+    /// Final trajectory x_0..x_T.
     pub xs: States,
+    /// Parallel rounds used.
     pub iterations: usize,
+    /// Total ε_θ evaluations.
     pub total_nfe: usize,
+    /// Whether the stopping criterion was met for every row.
     pub converged: bool,
 }
 

@@ -99,10 +99,15 @@ pub struct DeviceCounters {
 /// Point-in-time view of one device.
 #[derive(Debug, Clone)]
 pub struct DeviceStat {
+    /// Index of the device within its pool.
     pub device: usize,
+    /// Backend name (e.g. `"sda(in-proc)"`, `"dit-tiny(pjrt)"`).
     pub name: String,
+    /// Shards executed by this device so far.
     pub shards: u64,
+    /// ε rows executed by this device so far.
     pub items: u64,
+    /// Shards this device stole from peers' queues.
     pub stolen: u64,
     /// Busy time / pool wall time since spawn, in [0, 1].
     pub utilization: f64,
@@ -156,6 +161,21 @@ impl PoolStats {
     /// Number of devices in the pool.
     pub fn devices(&self) -> usize {
         self.counters.len()
+    }
+
+    /// Raw busy-nanosecond counters per device since spawn (the counters
+    /// behind [`DeviceStat::utilization`]'s lifetime average). Callers
+    /// wanting a *current* utilization difference two successive reads
+    /// over their own wall-clock window — see
+    /// `coordinator::Metrics::device_occupancy`.
+    pub fn busy_ns(&self) -> Vec<u64> {
+        self.counters.iter().map(|c| c.busy_ns.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Shards currently queued across all devices (a nonzero backlog means
+    /// the pool is at capacity right now).
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     /// Snapshot every device's counters.

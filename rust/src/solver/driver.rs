@@ -99,7 +99,7 @@ mod tests {
     use crate::model::Cond;
     use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
     use crate::solver::sequential::sample_sequential;
-    use crate::solver::Method;
+    use crate::solver::{Method, WindowPolicy};
     use crate::util::proplite::{self, forall, size_in};
     use crate::util::rng::Pcg64;
 
@@ -138,6 +138,7 @@ mod tests {
                     s_max: 4 * steps,
                     guidance: 2.0,
                     clamp_boundary: true,
+                    window_policy: WindowPolicy::Fixed,
                 };
                 let par = solve(&problem, &cfg);
                 if !par.converged {
@@ -177,6 +178,7 @@ mod tests {
                     s_max: steps + 1, // T rounds + the final check round
                     guidance: 1.0,
                     clamp_boundary: true,
+                    window_policy: WindowPolicy::Fixed,
                 };
                 let r = solve(&problem, &cfg);
                 if !r.converged {
@@ -228,6 +230,7 @@ mod tests {
             s_max: 3 * steps,
             guidance: 2.0,
             clamp_boundary: true,
+            window_policy: WindowPolicy::Fixed,
         });
         let taa = solve(&problem, &SolverConfig {
             k,
@@ -240,6 +243,7 @@ mod tests {
             s_max: 3 * steps,
             guidance: 2.0,
             clamp_boundary: true,
+            window_policy: WindowPolicy::Fixed,
         });
         assert!(fp.converged && taa.converged);
         assert!(
@@ -272,6 +276,7 @@ mod tests {
                 s_max: 20 * steps,
                 guidance: 1.0,
                 clamp_boundary: true,
+                window_policy: WindowPolicy::Fixed,
             };
             let par = solve(&problem, &cfg);
             if !par.converged {

@@ -18,6 +18,10 @@
 //!   parallel round;
 //! - [`driver`] — the blocking entry points [`solve`]/`solve_with`, thin
 //!   wrappers over a session (bit-identical to the historical loop);
+//! - [`window_ctrl`] — the adaptive sliding-window controller
+//!   ([`WindowPolicy`]): grows/shrinks w each round from convergence
+//!   velocity and device occupancy (default [`WindowPolicy::Fixed`] keeps
+//!   the paper's static §2.2 window bit-identically);
 //! - [`init`] — trajectory initialization (§4.2).
 
 pub mod driver;
@@ -26,11 +30,13 @@ pub mod init;
 pub mod sequential;
 pub mod session;
 pub mod update;
+pub mod window_ctrl;
 pub mod workspace;
 
 pub use driver::{solve, IterationRecord, SolveResult};
 pub use sequential::sample_sequential;
-pub use session::{EpsBatch, RoundOutcome, SolverSession};
+pub use session::{EpsBatch, FrontAdvance, RoundOutcome, SolverSession};
+pub use window_ctrl::{AdaptiveWindow, WindowController, WindowPolicy};
 pub use workspace::Workspace;
 
 use crate::equations::States;
@@ -57,6 +63,8 @@ pub enum Method {
 }
 
 impl Method {
+    /// Short display label ("FP", "AA", "AA+", "TAA") used by figures,
+    /// benches and the CLI.
     pub fn label(&self) -> &'static str {
         match self {
             Method::FixedPoint => "FP",
@@ -96,6 +104,12 @@ pub struct SolverConfig {
     /// frozen front and is kept for the `ablate` experiment, which shows
     /// the resulting convergence stall.
     pub clamp_boundary: bool,
+    /// How the sliding window is sized across rounds. The default
+    /// [`WindowPolicy::Fixed`] keeps `window` static for the whole solve
+    /// (bit-identical to the pre-controller solver);
+    /// [`WindowPolicy::Adaptive`] lets a [`WindowController`] grow/shrink
+    /// it each round from convergence velocity and device occupancy.
+    pub window_policy: WindowPolicy,
 }
 
 impl SolverConfig {
@@ -135,6 +149,7 @@ impl SolverConfig {
             s_max: steps + 1,
             guidance: 5.0,
             clamp_boundary: true,
+            window_policy: WindowPolicy::Fixed,
         }
     }
 
@@ -151,6 +166,7 @@ impl SolverConfig {
             s_max: steps + 1,
             guidance: 5.0,
             clamp_boundary: true,
+            window_policy: WindowPolicy::Fixed,
         }
     }
 
@@ -158,12 +174,27 @@ impl SolverConfig {
     pub fn fp_plus(steps: usize, k: usize) -> Self {
         SolverConfig { k, ..Self::fp_baseline(steps) }
     }
+
+    /// Worst-case sliding-window footprint in rows — what a serving
+    /// coordinator must reserve from its slot budget for the whole solve.
+    /// `Fixed` holds exactly `window` rows; `Adaptive` may grow up to its
+    /// `max_window` bound. Callers clamp to the trajectory length.
+    pub fn max_window_rows(&self) -> usize {
+        match &self.window_policy {
+            WindowPolicy::Fixed => self.window,
+            WindowPolicy::Adaptive(a) => a.max_window,
+        }
+    }
 }
 
 /// A sampling problem: one trajectory to solve.
 pub struct Problem<'a> {
+    /// Sampler coefficients (schedule + step grid) the trajectory solves on.
     pub coeffs: &'a SamplerCoeffs,
+    /// Denoiser ε_θ evaluated by the blocking drivers (sessions only
+    /// borrow its dimension — they never call it).
     pub model: &'a dyn EpsModel,
+    /// Condition ("class" or dense prompt weights).
     pub cond: Cond,
     /// Fixed noise draws ξ_0..ξ_T (row T doubles as the initial state x_T).
     pub xi: States,

@@ -35,10 +35,22 @@
 //! applied to parallel diffusion rounds, and the substrate for
 //! draft-and-refine / Parareal-style schemes that interleave rounds across
 //! requests.
+//!
+//! Two optional hooks ride on the round boundary (both inert unless used —
+//! the default path stays bit-identical):
+//!
+//! - [`SolverSession::progress`] reports each advance of the residual
+//!   front as a [`FrontAdvance`] — the rows above the front are *final*,
+//!   so a serving layer can stream the converged prefix to the client
+//!   while the rest of the solve is still running;
+//! - [`super::WindowPolicy::Adaptive`] hands the per-round window sizing
+//!   to a [`super::WindowController`] driven by convergence velocity and
+//!   the device occupancy reported via [`SolverSession::set_occupancy`].
 
 use super::driver::{IterationRecord, SolveResult};
 use super::history::History;
 use super::update::apply_update_ws;
+use super::window_ctrl::{WindowController, WindowPolicy};
 use super::workspace::Workspace;
 use super::{Problem, SolverConfig};
 use crate::equations::{eval_fk, residual_sq, States};
@@ -72,6 +84,30 @@ impl EpsBatch<'_> {
     pub fn is_empty(&self) -> bool {
         self.t.is_empty()
     }
+}
+
+/// An advance of the residual/convergence front since the last
+/// [`SolverSession::progress`] call.
+///
+/// The triangular structure (Definition 2.1) makes the front monotone:
+/// once a row's residual drops below its threshold it is frozen and never
+/// rewritten, so the rows in `newly_converged` already hold their *final*
+/// states — a serving layer can deliver them to the client immediately,
+/// long before the full solve finishes (streaming prefix delivery).
+///
+/// Observing progress never perturbs the solve: `progress()` only reads
+/// solver state plus a report cursor, so an unobserved session is
+/// bit-identical to the historical path.
+#[derive(Debug, Clone)]
+pub struct FrontAdvance {
+    /// State-row indices `[start, end)` that newly crossed the front. Row
+    /// indices count *down* toward the final sample x_0, so successive
+    /// advances tile `[0, T)` from the top (the x_T side — the earliest
+    /// denoising timesteps) downward.
+    pub newly_converged: std::ops::Range<usize>,
+    /// Last measured residuals of those rows, in `newly_converged` order
+    /// (`NaN` for rows frozen by a §4.2 warm start before any evaluation).
+    pub residuals: Vec<f64>,
 }
 
 /// What one [`SolverSession::resume`] produced.
@@ -172,6 +208,15 @@ pub struct SolverSession {
     /// `apply_update_ws`. Plain `Vec`s — the session stays `Send`.
     ws: Workspace,
 
+    /// Adaptive window controller (`None` under [`WindowPolicy::Fixed`] —
+    /// that path is bit-identical to the pre-controller solver).
+    controller: Option<WindowController>,
+    /// Lowest row index already reported by [`progress`](Self::progress)
+    /// (exclusive upper bound of the next report). Starts at `t_count`:
+    /// nothing reported, so the first advance also covers rows frozen by a
+    /// §4.2 warm start.
+    reported_front: usize,
+
     // --- round accounting -------------------------------------------------
     t1: usize,
     t2: usize,
@@ -193,7 +238,13 @@ impl SolverSession {
         let t_count = coeffs.steps;
         let d = problem.model.dim();
         let k = cfg.k.clamp(1, t_count);
-        let w = cfg.window.clamp(1, t_count);
+        let (w, controller) = match &cfg.window_policy {
+            WindowPolicy::Fixed => (cfg.window.clamp(1, t_count), None),
+            WindowPolicy::Adaptive(a) => {
+                let ctrl = WindowController::new(a.clone(), t_count);
+                (ctrl.clamp(cfg.window.clamp(1, t_count)), Some(ctrl))
+            }
+        };
         let t_init = problem.t_init.unwrap_or(t_count).clamp(1, t_count);
 
         let mut xs = States::zeros(t_count, d);
@@ -247,6 +298,8 @@ impl SolverSession {
             batch_t: Vec::new(),
             batch_states: Vec::new(),
             ws: Workspace::new(),
+            controller,
+            reported_front: t_count,
             t1,
             t2,
             iter: 1,
@@ -439,6 +492,22 @@ impl SolverSession {
         };
         self.records.push(rec.clone());
 
+        // --- Adaptive window (no-op under WindowPolicy::Fixed) -------------
+        // Decided after this round's update but before the next batch is
+        // built: rows a grown window adds have never had ε evaluated (the
+        // window only ever slides down), so they must enter through a
+        // pending batch before anything reads their ε — growing before the
+        // update would feed zeroed ε into their F rows and waste a round.
+        // `t2 - nt2` is the number of rows the front froze this round (its
+        // convergence velocity).
+        if let Some(ctrl) = self.controller.as_mut() {
+            let next_w = ctrl.decide(t2 - nt2, self.w);
+            if next_w != self.w {
+                self.w = next_w;
+                self.t1 = (self.t2 + 1).saturating_sub(self.w);
+            }
+        }
+
         self.iter += 1;
         if self.iter > self.cfg.s_max {
             self.done = true; // round budget exhausted; not converged
@@ -507,9 +576,58 @@ impl SolverSession {
         self.cfg.guidance
     }
 
-    /// Clamped sliding-window size w — the session's slot-budget footprint.
+    /// Current sliding-window size w (clamped; varies across rounds under
+    /// [`WindowPolicy::Adaptive`]). Serving layers budgeting slots should
+    /// use [`SolverConfig::max_window_rows`], the worst-case footprint.
     pub fn window_rows(&self) -> usize {
         self.w
+    }
+
+    /// The residual front's advance since the last `progress()` call (or
+    /// since construction), `None` if it has not moved. The reported rows
+    /// are frozen — their states in [`xs`](Self::xs) are final — so a
+    /// streaming layer can deliver them to the client immediately.
+    ///
+    /// Purely observational: it reads solver state and moves a report
+    /// cursor, so never calling it leaves the solve bit-identical
+    /// (golden-tested in `tests/golden_session.rs`).
+    pub fn progress(&mut self) -> Option<FrontAdvance> {
+        let front = if self.converged { 0 } else { self.t2 + 1 };
+        if front >= self.reported_front {
+            return None;
+        }
+        let newly_converged = front..self.reported_front;
+        let residuals = newly_converged
+            .clone()
+            .map(|p| self.last_residual[p].unwrap_or(f64::NAN))
+            .collect();
+        self.reported_front = front;
+        Some(FrontAdvance { newly_converged, residuals })
+    }
+
+    /// Lowest converged row index: every row in `[converged_front(), T)`
+    /// is frozen at its final state. `0` once the whole solve converged.
+    pub fn converged_front(&self) -> usize {
+        if self.converged {
+            0
+        } else {
+            self.t2 + 1
+        }
+    }
+
+    /// Report the latest device-occupancy signal in [0, 1] to the adaptive
+    /// window controller (the coordinator's round drivers derive it from
+    /// the attached pool's stats). No-op under [`WindowPolicy::Fixed`].
+    pub fn set_occupancy(&mut self, occupancy: f64) {
+        if let Some(ctrl) = self.controller.as_mut() {
+            ctrl.set_occupancy(occupancy);
+        }
+    }
+
+    /// True when this session sizes its window adaptively (callers can
+    /// skip computing the occupancy signal otherwise).
+    pub fn is_adaptive(&self) -> bool {
+        self.controller.is_some()
     }
 }
 
@@ -619,6 +737,127 @@ mod tests {
         assert!(!session.converged());
         let by_solve = solve(&problem, &cfg);
         assert_eq!(session.finish().xs.data, by_solve.xs.data);
+    }
+
+    /// Observing `progress()` every round must not perturb the solve, the
+    /// advances must tile [0, T) exactly (disjoint, top-down), and at
+    /// least one advance must land strictly before the final round —
+    /// the property streaming prefix delivery is built on.
+    #[test]
+    fn progress_tiles_the_trajectory_without_perturbing_the_solve() {
+        let (coeffs, model) = setup(16);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 3);
+        let cfg = SolverConfig { guidance: 2.0, s_max: 64, ..SolverConfig::parataa(16) };
+        let mut session = SolverSession::new(&problem, &cfg);
+        let d = session.dim();
+        let mut eps = Vec::new();
+        let mut advances: Vec<(usize, std::ops::Range<usize>)> = Vec::new();
+        let mut rounds = 0usize;
+        loop {
+            let n = match session.pending() {
+                None => break,
+                Some(b) => {
+                    eps.resize(b.len() * d, 0.0);
+                    model.eps_batch(b.x, b.t, b.conds, b.guidance, &mut eps);
+                    b.len()
+                }
+            };
+            rounds += 1;
+            let done = session.resume(&eps[..n * d]).done;
+            if let Some(adv) = session.progress() {
+                assert_eq!(adv.residuals.len(), adv.newly_converged.len());
+                advances.push((rounds, adv.newly_converged));
+            }
+            assert!(session.progress().is_none(), "no double report");
+            if done {
+                break;
+            }
+        }
+        assert!(session.converged());
+        // Advances tile [0, 16) top-down with no gaps or overlaps.
+        let mut expect_end = 16;
+        for (_, r) in &advances {
+            assert_eq!(r.end, expect_end, "advances must be contiguous top-down");
+            assert!(r.start < r.end);
+            expect_end = r.start;
+        }
+        assert_eq!(expect_end, 0, "advances must reach the final sample row");
+        assert!(
+            advances.iter().any(|(round, _)| *round < rounds),
+            "some prefix must land strictly before the final round"
+        );
+        // Observation did not perturb anything: bit-identical to solve().
+        let by_solve = solve(&problem, &cfg);
+        assert_eq!(session.finish().xs.data, by_solve.xs.data);
+    }
+
+    /// The adaptive window policy still converges to the sequential
+    /// solution, keeps w inside its bounds, and shrinks under occupancy
+    /// pressure.
+    #[test]
+    fn adaptive_window_converges_within_bounds() {
+        use crate::solver::window_ctrl::{AdaptiveWindow, WindowPolicy};
+        let (coeffs, model) = setup(24);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 5);
+        let adaptive = AdaptiveWindow {
+            min_window: 3,
+            max_window: 24,
+            step: 3,
+            high_occupancy: 0.85,
+            // One frozen row per round is enough to grow a 6-row window
+            // (the safeguard guarantees the front advances), so growth is
+            // deterministic in this test.
+            grow_velocity: 0.15,
+        };
+        let cfg = SolverConfig {
+            guidance: 2.0,
+            tol: 1e-5,
+            s_max: 20 * 24,
+            window: 6, // start small; the controller may grow it
+            window_policy: WindowPolicy::Adaptive(adaptive.clone()),
+            ..SolverConfig::parataa(24)
+        };
+        let mut session = SolverSession::new(&problem, &cfg);
+        assert_eq!(session.window_rows(), 6);
+        let mut saw_growth = false;
+        let d = session.dim();
+        let mut eps = Vec::new();
+        loop {
+            let n = match session.pending() {
+                None => break,
+                Some(b) => {
+                    eps.resize(b.len() * d, 0.0);
+                    model.eps_batch(b.x, b.t, b.conds, b.guidance, &mut eps);
+                    b.len()
+                }
+            };
+            let done = session.resume(&eps[..n * d]).done;
+            let w = session.window_rows();
+            assert!((3..=24).contains(&w), "w = {w} escaped its bounds");
+            saw_growth |= w > 6;
+            if done {
+                break;
+            }
+        }
+        assert!(session.converged());
+        assert!(saw_growth, "an idle-occupancy solve should grow its window");
+        let result = session.finish();
+        let seq = crate::solver::sample_sequential(&problem, 2.0);
+        crate::util::proplite::assert_close(
+            result.xs.row(0),
+            seq.xs.row(0),
+            5e-3,
+            5e-2,
+            "adaptive window vs sequential",
+        )
+        .unwrap();
+
+        // Saturated pool: the controller must shrink toward min_window.
+        let mut pressured = SolverSession::new(&problem, &cfg);
+        pressured.set_occupancy(1.0);
+        drive(&mut pressured, &model);
+        assert!(pressured.converged());
+        assert_eq!(pressured.window_rows(), adaptive.min_window);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Adaptive sliding-window control — closing the loop between the
+//! convergence front and device occupancy.
+//!
+//! The paper treats the window size w (§2.2) as a static hyperparameter:
+//! bigger windows finish in fewer parallel rounds but spend more ε_θ
+//! evaluations and more accelerator memory per round (the ParaDiGMS
+//! sliding-window trade-off of Shih et al., 2023, reproduced in fig4).
+//! In a serving deployment that trade-off is *dynamic*: when the pool has
+//! idle capacity, a solve should widen its window and convert spare
+//! compute into lookahead; when the pool saturates, narrower windows cut
+//! the speculative lookahead rows and free device time for other
+//! requests' rounds, at a modest round-count cost.
+//!
+//! [`WindowController`] implements that policy as a small per-session
+//! state machine driven by two signals observed every parallel round:
+//!
+//! - **convergence velocity** — rows newly frozen by the residual front
+//!   this round (Theorem 3.6's safeguard guarantees ≥ 1 once the solve is
+//!   under way). A front eating a large fraction of the window per round
+//!   means the window is *starving* — growing it turns otherwise-idle
+//!   device capacity into useful lookahead rows.
+//! - **device occupancy** — a [0, 1] pressure signal fed by the caller
+//!   (the coordinator's round drivers derive it from the attached
+//!   [`crate::runtime::DevicePool`] stats; it stays 0 — velocity-only
+//!   sizing — when nothing supplies it). Above
+//!   [`AdaptiveWindow::high_occupancy`] the controller shrinks toward
+//!   [`AdaptiveWindow::min_window`].
+//!
+//! The policy is selected per solve via [`WindowPolicy`] on
+//! [`super::SolverConfig`]; the default [`WindowPolicy::Fixed`] leaves the
+//! historical static-w behavior bit-identical (golden-tested in
+//! `tests/golden_session.rs`).
+
+/// How a solve sizes its sliding window across parallel rounds.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum WindowPolicy {
+    /// Static window: `SolverConfig::window` for the whole solve (the
+    /// paper's §2.2 setup, and the default — bit-identical to the
+    /// pre-controller solver).
+    #[default]
+    Fixed,
+    /// Grow/shrink the window each round from convergence velocity and
+    /// device occupancy, within the configured bounds.
+    Adaptive(AdaptiveWindow),
+}
+
+/// Tuning for [`WindowPolicy::Adaptive`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveWindow {
+    /// Smallest window the controller will shrink to (≥ 1; clamped to T).
+    pub min_window: usize,
+    /// Largest window the controller will grow to (clamped to T). This is
+    /// also the slot-budget footprint the coordinator reserves for the
+    /// session ([`super::SolverConfig::max_window_rows`]).
+    pub max_window: usize,
+    /// Rows added/removed per grow/shrink decision.
+    pub step: usize,
+    /// Occupancy above which the pool is considered saturated and the
+    /// window shrinks (typical: 0.85).
+    pub high_occupancy: f64,
+    /// Grow when the front froze at least this fraction of the current
+    /// window in one round (typical: 0.25) — the window is converging
+    /// faster than it slides, so lookahead rows are cheap.
+    pub grow_velocity: f64,
+}
+
+impl AdaptiveWindow {
+    /// Defaults scaled to a `steps`-step trajectory: start bounds at
+    /// `[steps/8, steps]` with `steps/8`-row moves.
+    pub fn for_steps(steps: usize) -> Self {
+        AdaptiveWindow {
+            min_window: (steps / 8).max(2).min(steps.max(1)),
+            max_window: steps.max(1),
+            step: (steps / 8).max(1),
+            high_occupancy: 0.85,
+            grow_velocity: 0.25,
+        }
+    }
+}
+
+/// Per-session adaptive window state machine (owned by a
+/// [`super::SolverSession`] when its config selects
+/// [`WindowPolicy::Adaptive`]).
+#[derive(Debug, Clone)]
+pub struct WindowController {
+    cfg: AdaptiveWindow,
+    /// Latest external pressure signal in [0, 1]; 0 (idle) until the
+    /// caller reports otherwise, so standalone solves grow freely.
+    occupancy: f64,
+}
+
+impl WindowController {
+    /// Build a controller for a `t_count`-row trajectory; the configured
+    /// bounds are clamped to `[1, t_count]` and ordered.
+    pub fn new(mut cfg: AdaptiveWindow, t_count: usize) -> Self {
+        let t = t_count.max(1);
+        cfg.min_window = cfg.min_window.clamp(1, t);
+        cfg.max_window = cfg.max_window.clamp(cfg.min_window, t);
+        cfg.step = cfg.step.max(1);
+        WindowController { cfg, occupancy: 0.0 }
+    }
+
+    /// Record the latest device-occupancy signal (clamped to [0, 1]).
+    pub fn set_occupancy(&mut self, occupancy: f64) {
+        self.occupancy = if occupancy.is_finite() { occupancy.clamp(0.0, 1.0) } else { 0.0 };
+    }
+
+    /// Latest occupancy signal the controller is acting on.
+    pub fn occupancy(&self) -> f64 {
+        self.occupancy
+    }
+
+    /// Clamp a starting window into the controller's bounds.
+    pub fn clamp(&self, w: usize) -> usize {
+        w.clamp(self.cfg.min_window, self.cfg.max_window)
+    }
+
+    /// One per-round decision: given how many rows the residual front
+    /// froze this round and the current window, return the window for the
+    /// next round. Saturated pool ⇒ shrink; fast front + spare capacity ⇒
+    /// grow; otherwise hold.
+    pub fn decide(&mut self, newly_converged: usize, w: usize) -> usize {
+        let w = self.clamp(w);
+        if self.occupancy > self.cfg.high_occupancy {
+            return w.saturating_sub(self.cfg.step).max(self.cfg.min_window);
+        }
+        if (newly_converged as f64) >= self.cfg.grow_velocity * w as f64 {
+            return (w + self.cfg.step).min(self.cfg.max_window);
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptiveWindow {
+        AdaptiveWindow {
+            min_window: 4,
+            max_window: 32,
+            step: 4,
+            high_occupancy: 0.85,
+            grow_velocity: 0.25,
+        }
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let a = AdaptiveWindow::for_steps(50);
+        assert!(a.min_window >= 1 && a.min_window <= a.max_window);
+        assert_eq!(a.max_window, 50);
+        assert!(a.step >= 1);
+        // Degenerate step counts stay in range.
+        let tiny = AdaptiveWindow::for_steps(1);
+        assert!(tiny.min_window >= 1 && tiny.min_window <= tiny.max_window);
+        assert_eq!(WindowPolicy::default(), WindowPolicy::Fixed);
+    }
+
+    #[test]
+    fn grows_on_fast_convergence() {
+        let mut c = WindowController::new(cfg(), 100);
+        // 4 of 16 rows froze (= grow_velocity): grow by one step.
+        assert_eq!(c.decide(4, 16), 20);
+        // Slow front: hold.
+        assert_eq!(c.decide(1, 16), 16);
+        // Growth saturates at max_window.
+        assert_eq!(c.decide(32, 32), 32);
+    }
+
+    #[test]
+    fn shrinks_under_occupancy_pressure() {
+        let mut c = WindowController::new(cfg(), 100);
+        c.set_occupancy(0.95);
+        assert_eq!(c.decide(8, 16), 12);
+        // Shrink saturates at min_window.
+        assert_eq!(c.decide(8, 4), 4);
+        // Pressure released: fast front grows again.
+        c.set_occupancy(0.2);
+        assert_eq!(c.decide(8, 12), 16);
+    }
+
+    #[test]
+    fn bounds_clamp_to_trajectory_length() {
+        let c = WindowController::new(cfg(), 10);
+        assert_eq!(c.clamp(100), 10);
+        assert_eq!(c.clamp(1), 4);
+        // min > t_count degenerates to [t, t].
+        let c = WindowController::new(
+            AdaptiveWindow { min_window: 64, max_window: 128, ..cfg() },
+            10,
+        );
+        assert_eq!(c.clamp(3), 10);
+    }
+
+    #[test]
+    fn non_finite_occupancy_is_ignored() {
+        let mut c = WindowController::new(cfg(), 100);
+        c.set_occupancy(f64::NAN);
+        assert_eq!(c.occupancy(), 0.0);
+        c.set_occupancy(7.0);
+        assert_eq!(c.occupancy(), 1.0);
+    }
+}

@@ -13,7 +13,9 @@ use parataa::equations::{eval_fk, residual_sq, States};
 use parataa::model::gmm::GmmEps;
 use parataa::model::Cond;
 use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
-use parataa::solver::{history::History, update::apply_update, Method, Problem, SolverConfig};
+use parataa::solver::{
+    history::History, update::apply_update, Method, Problem, SolverConfig, WindowPolicy,
+};
 use parataa::util::rng::Pcg64;
 
 /// Per-round facts the reference records (mirrors `IterationRecord`).
@@ -247,6 +249,9 @@ fn cfg_for(method: Method, steps: usize, safeguard: bool, window: usize) -> Solv
         s_max: 8 * steps,
         guidance: 2.0,
         clamp_boundary: true,
+        // The golden contract is defined for the static window; the
+        // adaptive controller is covered by its own tests.
+        window_policy: WindowPolicy::Fixed,
     }
 }
 
