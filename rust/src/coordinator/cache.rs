@@ -85,6 +85,13 @@ impl TrajectoryCache {
         while e.len() > self.capacity {
             e.pop_front();
         }
+        crate::trace::instant(
+            crate::trace::Layer::Cache,
+            crate::trace::Name::CacheInsert,
+            0,
+            e.len() as i64,
+            self.capacity as i64,
+        );
     }
 
     /// Find the closest donor for `cond` in `scenario` with the same seed,
@@ -115,6 +122,14 @@ impl TrajectoryCache {
                 best = Some((d, entry));
             }
         }
+        let hit = best.is_some();
+        crate::trace::instant(
+            crate::trace::Layer::Cache,
+            crate::trace::Name::CacheLookup,
+            0,
+            hit as i64,
+            e.len() as i64,
+        );
         best.map(|(_, e)| e.clone())
     }
 }

@@ -230,11 +230,17 @@ impl Metrics {
         m.merged_groups += groups as u64;
     }
 
+    /// Prometheus text exposition of a fresh [`snapshot`](Self::snapshot)
+    /// (what `parataa serve --prom-out` writes).
+    pub fn to_prometheus(&self) -> String {
+        self.snapshot().to_prometheus()
+    }
+
     /// Point-in-time aggregation of everything recorded so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let mut first_prefix = m.first_prefix_ms.clone();
-        first_prefix.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        first_prefix.sort_by(f64::total_cmp);
         let uptime = self.started.elapsed();
         let mean = |v: &[f64]| {
             if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
@@ -242,7 +248,7 @@ impl Metrics {
         // One clone+sort serves all three percentiles (percentile() would
         // clone and sort per call, tripling the work under the lock).
         let mut lat = m.latencies_ms.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat.sort_by(f64::total_cmp);
         let per_round = |sum: u64| {
             if m.rounds_driven == 0 { 0.0 } else { sum as f64 / m.rounds_driven as f64 }
         };
@@ -320,6 +326,13 @@ impl MetricsSnapshot {
                 Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
             ),
         ])
+    }
+
+    /// Prometheus text exposition of this snapshot, plus trace-derived
+    /// counters/histograms when the recorder holds events — see
+    /// [`crate::trace::prom`] for metric names, units and the validator.
+    pub fn to_prometheus(&self) -> String {
+        crate::trace::prom::render(self)
     }
 
     /// One-line human-readable summary plus the per-device breakdown.

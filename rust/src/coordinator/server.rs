@@ -52,6 +52,8 @@ use super::scheduler::{OwnedSlotGuard, SlotBudget};
 use crate::model::{Cond, EpsModel};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
 use crate::solver::{init::init_from_trajectory, Problem, SolverSession};
+use crate::trace::telemetry::{SessionTelemetry, TelemetryLog};
+use crate::trace::{self, Layer, Name};
 use crate::util::channel::{bounded, Receiver, Sender};
 use crate::util::error::{anyhow, Result};
 use std::sync::Arc;
@@ -87,6 +89,11 @@ pub struct CoordinatorConfig {
     /// the in-flight window-row budget scales as `slot_budget × devices`,
     /// matching the extra device memory a bigger pool brings.
     pub devices: usize,
+    /// Convergence telemetry collector: when set, every finalized session
+    /// appends its round → (residual norm, front, window, NFE) progression
+    /// (see [`crate::trace::telemetry`]). `None` (the default) records
+    /// nothing and costs nothing.
+    pub telemetry: Option<Arc<TelemetryLog>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -101,6 +108,7 @@ impl Default for CoordinatorConfig {
             cache_t_init_frac: 0.7,
             n_components: 8,
             devices: 1,
+            telemetry: None,
         }
     }
 }
@@ -325,7 +333,7 @@ impl Coordinator {
             drivers.push(
                 std::thread::Builder::new()
                     .name(format!("parataa-driver-{i}"))
-                    .spawn(move || run_driver(run_rx, run_tx, model, metrics, cache, cfg))
+                    .spawn(move || run_driver(i, run_rx, run_tx, model, metrics, cache, cfg))
                     .expect("spawn coordinator round driver"),
             );
         }
@@ -424,6 +432,9 @@ fn admit(
     cfg: &CoordinatorConfig,
 ) -> ActiveSession {
     let Job { req, reply, progress, enqueued } = job;
+    // The admit span's track id is only known once the session exists, so
+    // start deferred and complete against its trace id below.
+    let admit_span = trace::begin();
     // Guard first: if anything below panics (malformed request), the
     // unwinding guard records exactly one failure.
     let mut in_flight = SessionGuard::new(metrics.clone());
@@ -452,6 +463,15 @@ fn admit(
     let slots = SlotBudget::acquire_owned(budget, solver_cfg.max_window_rows().min(steps));
     in_flight.mark_started();
     let session = SolverSession::new(&problem, &solver_cfg);
+    // Covers cache lookup + slot wait + construction (admission latency).
+    trace::complete(
+        admit_span,
+        Layer::Session,
+        Name::Admit,
+        session.trace_id(),
+        steps as i64,
+        warm as i64,
+    );
     ActiveSession {
         session,
         req,
@@ -501,6 +521,15 @@ fn emit_progress(active: &mut ActiveSession, metrics: &Metrics) {
             if tx.try_send(chunk).is_ok() {
                 active.chunks_sent += 1;
                 metrics.record_prefix(rows.len(), first);
+                // Same branch as record_prefix, so the trace-derived chunk
+                // count always equals `prefix_chunks_sent`.
+                trace::instant(
+                    Layer::Stream,
+                    Name::ChunkEmit,
+                    active.session.trace_id(),
+                    rows.len() as i64,
+                    active.session.iterations() as i64,
+                );
             }
         }
     }
@@ -511,6 +540,7 @@ fn emit_progress(active: &mut ActiveSession, metrics: &Metrics) {
 /// polling; the Coordinator's Drop closes the run queue (after admission
 /// stops and in-flight reaches zero), which is the exit signal.
 fn run_driver(
+    driver_idx: usize,
     run_rx: Receiver<ActiveSession>,
     // Each driver keeps a sender so it can requeue live sessions; shutdown
     // is therefore an explicit close, not sender disconnection.
@@ -529,7 +559,7 @@ fn run_driver(
         // down the driver nor hang shutdown (dropped sessions' guards
         // release slots and record the failures).
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            drive_round(round, &*model, &cache, &metrics, &run_tx, &cfg)
+            drive_round(driver_idx, round, &*model, &cache, &metrics, &run_tx, &cfg)
         }));
         if outcome.is_err() {
             eprintln!("parataa: a round panicked outside the solves; its requests were failed");
@@ -539,6 +569,7 @@ fn run_driver(
 
 /// Drive one merged parallel round over `round`'s sessions.
 fn drive_round(
+    driver_idx: usize,
     mut round: Vec<ActiveSession>,
     model: &dyn EpsModel,
     cache: &TrajectoryCache,
@@ -559,6 +590,9 @@ fn drive_round(
     if round.is_empty() {
         return;
     }
+    // The early-return above skips `record_round` too, so the trace-derived
+    // driver_round count stays equal to `MetricsSnapshot::rounds_driven`.
+    let round_span = trace::begin();
 
     // Device occupancy for the adaptive window controllers: the attached
     // pool's mean utilization / backlog. Slot-budget pressure is *not* a
@@ -598,6 +632,7 @@ fn drive_round(
     let mut out: Vec<f32> = Vec::new();
     for (gbits, idxs) in &groups {
         let guidance = f32::from_bits(*gbits);
+        let merge_span = trace::begin();
         x.clear();
         t.clear();
         conds.clear();
@@ -611,6 +646,15 @@ fn drive_round(
         }
         let rows = t.len();
         total_rows += rows;
+        // The gather that builds one guidance group's merged batch.
+        trace::complete(
+            merge_span,
+            Layer::Driver,
+            Name::Merge,
+            driver_idx as u64,
+            idxs.len() as i64,
+            rows as i64,
+        );
         out.resize(rows * d, 0.0);
         // ONE merged device call per guidance group per round; the pool
         // behind `model` shards it across devices. A panicking backend
@@ -637,8 +681,25 @@ fn drive_round(
                 poisoned[i] = true;
             }
         }
+        trace::instant(
+            Layer::Driver,
+            Name::Scatter,
+            driver_idx as u64,
+            idxs.len() as i64,
+            rows as i64,
+        );
     }
     metrics.record_round(round.len(), total_rows, n_groups);
+    // Ends exactly at the `record_round` call site (see the early-return
+    // note above): Σ driver_round spans ≡ rounds_driven.
+    trace::complete(
+        round_span,
+        Layer::Driver,
+        Name::DriverRound,
+        driver_idx as u64,
+        round.len() as i64,
+        total_rows as i64,
+    );
 
     // Forward per-session front advances to streaming subscribers right
     // after the scatter: converged-prefix chunks land one round boundary
@@ -680,6 +741,8 @@ fn finalize(
     metrics: &Metrics,
     cfg: &CoordinatorConfig,
 ) {
+    let finalize_span = trace::begin();
+    let trace_id = active.session.trace_id();
     // Deliver any advance the round loop has not reported yet (covers
     // sessions finalized without ever being driven, e.g. `max_rounds: 0`
     // warm starts), then close the stream: subscribers observe "chunks,
@@ -704,6 +767,14 @@ fn finalize(
         None
     };
     let result = session.finish();
+    if let Some(log) = &cfg.telemetry {
+        log.record(SessionTelemetry::from_records(
+            trace_id,
+            req.sampler.steps,
+            result.converged,
+            &result.records,
+        ));
+    }
     if let Some(xi) = cache_xi {
         cache.insert(CachedTrajectory {
             scenario,
@@ -729,6 +800,14 @@ fn finalize(
     metrics.record_success(resp.latency, resp.rounds, resp.nfe, resp.warm_started);
     in_flight.defuse();
     drop(in_flight);
+    trace::complete(
+        finalize_span,
+        Layer::Session,
+        Name::Finalize,
+        trace_id,
+        resp.rounds as i64,
+        resp.converged as i64,
+    );
     let _ = reply.send(Ok(resp));
 }
 
@@ -969,6 +1048,119 @@ mod tests {
         assert_eq!(m.completed, 6);
         assert_eq!(m.failed, 0);
         assert_eq!(coord.slots_available(), 64, "adaptive sessions must return all slots");
+    }
+
+    /// StreamHandle poll/wait semantics, driven directly through the same
+    /// channels the coordinator wires up: `try_chunk` is `None` on an
+    /// open-but-empty stream, yields buffered chunks without blocking,
+    /// turns `None` for good once the stream closes, and `wait` surfaces
+    /// an error — instead of hanging — when the reply sender is dropped.
+    #[test]
+    fn stream_handle_try_chunk_and_wait_semantics() {
+        let (ptx, prx) = bounded::<PrefixChunk>(4);
+        let (rtx, rrx) = bounded::<Result<SampleResponse>>(1);
+        let handle = StreamHandle { chunks: prx, response: ResponseHandle { rx: rrx } };
+
+        // Open stream, nothing delivered yet: polling must not block.
+        assert!(handle.try_chunk().is_none(), "empty open stream yields no chunk");
+
+        let chunk = PrefixChunk {
+            rows: 12..16,
+            states: vec![0.0; 4 * 8],
+            residuals: vec![1e-4; 4],
+            round: 3,
+        };
+        assert!(ptx.try_send(chunk).is_ok());
+        let got = handle.try_chunk().expect("buffered chunk arrives without blocking");
+        assert_eq!(got.rows, 12..16);
+        assert_eq!(got.round, 3);
+
+        // Stream closes (any finalize path drops the sender): polls stay
+        // None and the blocking accessor must not hang.
+        drop(ptx);
+        assert!(handle.try_chunk().is_none());
+        assert!(handle.next_chunk().is_none(), "closed stream must end next_chunk");
+
+        // A reply sender dropped without a response must fail wait(), not
+        // strand the caller.
+        drop(rtx);
+        assert!(handle.wait().is_err(), "dropped reply sender must error, not hang");
+    }
+
+    /// A streaming request whose admission panics (steps == 0) must close
+    /// its chunk stream, fail its response, release every slot, and leave
+    /// the coordinator serving streaming traffic.
+    #[test]
+    fn failed_streaming_request_closes_stream_and_releases_slots() {
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 1, slot_budget: 32, ..Default::default() },
+        );
+        let bad = SampleRequest::parataa(Cond::Class(0), 3, SamplerSpec::ddim(0));
+        let handle = coord.submit_streaming(bad);
+        assert!(handle.next_chunk().is_none(), "failed request must end its stream");
+        assert!(handle.wait().is_err(), "failed request must reply with an error");
+        // The guard settles the failure before the error is observable.
+        let m = coord.metrics();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.prefix_chunks_sent, 0);
+        assert_eq!(coord.slots_available(), 32, "failed admission must leak no slots");
+        // The same (sole) intake thread keeps serving streams.
+        let good = coord.submit_streaming(basic_req(3));
+        let mut rows = 0;
+        while let Some(c) = good.next_chunk() {
+            rows += c.rows.len();
+        }
+        assert_eq!(rows, 16);
+        assert!(good.wait().unwrap().converged);
+    }
+
+    /// Streaming composes with the adaptive window controller: while the
+    /// window grows and shrinks mid-solve, the delivered chunks still tile
+    /// the trajectory exactly once, top-down, ending at the sample row.
+    #[test]
+    fn adaptive_streaming_chunks_tile_despite_window_resizes() {
+        use crate::solver::{AdaptiveWindow, WindowPolicy};
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 2, drivers: 2, slot_budget: 64, ..Default::default() },
+        );
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let mut r = basic_req(300 + i);
+                r.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(16));
+                r.window = Some(4); // start small: the controller resizes mid-run
+                r.max_rounds = Some(400);
+                coord.submit_streaming(r)
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let mut chunks = Vec::new();
+            while let Some(c) = h.next_chunk() {
+                chunks.push(c);
+            }
+            let resp = h.wait().unwrap();
+            assert!(resp.converged, "adaptive stream {i} did not converge");
+            let mut expect_end = 16;
+            for c in &chunks {
+                assert_eq!(
+                    c.rows.end, expect_end,
+                    "stream {i}: chunks must stay contiguous across window resizes"
+                );
+                assert!(c.rows.start < c.rows.end);
+                assert_eq!(c.states.len(), c.rows.len() * 8);
+                assert_eq!(c.residuals.len(), c.rows.len());
+                expect_end = c.rows.start;
+            }
+            assert_eq!(expect_end, 0, "stream {i}: tiles must reach the sample row");
+            let last = chunks.last().expect("at least one chunk per stream");
+            assert_eq!(&last.states[..8], &resp.sample[..], "stream {i}: row 0 mismatch");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.prefix_rows_streamed, 4 * 16);
+        assert_eq!(coord.slots_available(), 64);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! Residual-decay curves from **recorded serving traffic** (ISSUE 6):
+//! replays a `serve --telemetry out.jsonl` dump into the same
+//! round-vs-residual layout as Fig. 1/2, plus the residual-front and
+//! window-size trajectories behind it — the paper's convergence evidence
+//! reproduced from production telemetry instead of bespoke reruns.
+//!
+//! Not registered in [`super::ALL`]: `all-figures` must not require a
+//! previously recorded telemetry file.
+
+use crate::trace::telemetry::{parse_jsonl, SessionTelemetry};
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+/// Render recorded sessions as one long-format table: one row per
+/// (session, round) with the residual ℓ2 norm, front position, window
+/// size and per-round NFE.
+pub fn curves(sessions: &[SessionTelemetry]) -> Table {
+    let mut t = Table::new(
+        "Convergence telemetry: residual decay from recorded serving traffic",
+        &["trace_id", "steps", "converged", "round", "residual_norm", "front", "window", "nfe"],
+    );
+    for s in sessions {
+        for r in &s.rounds {
+            t.push_row(vec![
+                s.trace_id.to_string(),
+                s.steps.to_string(),
+                s.converged.to_string(),
+                r.round.to_string(),
+                format!("{:.6e}", r.residual_norm),
+                r.front.to_string(),
+                r.window.to_string(),
+                r.nfe.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Check the Theorem 3.6 invariant over recorded telemetry: within every
+/// session, the residual front position never increases round-over-round,
+/// and a session recorded as converged ends at front 0. Returns the first
+/// violation as an error — the integration tests run this over live
+/// `serve --stream` traffic.
+pub fn check_monotone_fronts(sessions: &[SessionTelemetry]) -> Result<(), String> {
+    for s in sessions {
+        let mut prev: Option<usize> = None;
+        for r in &s.rounds {
+            if r.front > s.steps {
+                return Err(format!(
+                    "session {}: round {} front {} exceeds steps {}",
+                    s.trace_id, r.round, r.front, s.steps
+                ));
+            }
+            if let Some(p) = prev {
+                if r.front > p {
+                    return Err(format!(
+                        "session {}: front moved backwards {} -> {} at round {}",
+                        s.trace_id, p, r.front, r.round
+                    ));
+                }
+            }
+            prev = Some(r.front);
+        }
+        if s.converged && prev != Some(0) {
+            return Err(format!(
+                "session {}: recorded converged but final front is {:?}",
+                s.trace_id, prev
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The `convergence` subcommand: load `--telemetry FILE` (default
+/// `results/telemetry.jsonl`), verify front monotonicity, and emit the
+/// curves. `--max-sessions N` bounds the output for huge dumps.
+pub fn convergence(args: &Args) -> Table {
+    let path = args.get_or("telemetry", "results/telemetry.jsonl");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("convergence: cannot read telemetry file {path}: {e} (record one with `parataa serve --telemetry {path}`)")
+    });
+    let mut sessions = parse_jsonl(&text).expect("convergence: corrupt telemetry file");
+    let cap = args.usize_or("max-sessions", usize::MAX);
+    if sessions.len() > cap {
+        eprintln!("convergence: keeping the first {cap} of {} sessions", sessions.len());
+        sessions.truncate(cap);
+    }
+    if let Err(e) = check_monotone_fronts(&sessions) {
+        panic!("convergence: telemetry violates front monotonicity (Thm 3.6): {e}");
+    }
+    let rounds: usize = sessions.iter().map(|s| s.rounds.len()).sum();
+    eprintln!(
+        "convergence: {} sessions, {rounds} recorded rounds, fronts monotone",
+        sessions.len()
+    );
+    curves(&sessions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::telemetry::RoundTelemetry;
+
+    fn session(trace_id: u64, converged: bool, fronts: &[usize]) -> SessionTelemetry {
+        let rounds = fronts
+            .iter()
+            .enumerate()
+            .map(|(i, &front)| RoundTelemetry {
+                round: i + 1,
+                residual_norm: 1.0 / (i + 1) as f64,
+                front,
+                window: 4,
+                nfe: 4,
+            })
+            .collect();
+        SessionTelemetry { trace_id, steps: 16, converged, rounds }
+    }
+
+    #[test]
+    fn curves_emit_one_row_per_round() {
+        let t = curves(&[session(1, true, &[16, 9, 0]), session(2, false, &[16, 12])]);
+        assert_eq!(t.rows.len(), 5);
+        assert_eq!(t.header.len(), t.rows[0].len());
+        assert_eq!(t.rows[0][0], "1");
+        assert_eq!(t.rows[1][5], "9", "front column");
+        assert_eq!(t.rows[4][3], "2", "round column");
+    }
+
+    #[test]
+    fn monotone_check_accepts_plateaus_and_rejects_regressions() {
+        assert!(check_monotone_fronts(&[session(1, true, &[16, 16, 9, 9, 0])]).is_ok());
+        let err = check_monotone_fronts(&[session(7, false, &[12, 14])]).unwrap_err();
+        assert!(err.contains("session 7"), "{err}");
+        assert!(err.contains("12 -> 14"), "{err}");
+    }
+
+    #[test]
+    fn monotone_check_rejects_inconsistent_convergence_flags() {
+        let err = check_monotone_fronts(&[session(3, true, &[16, 4])]).unwrap_err();
+        assert!(err.contains("converged"), "{err}");
+        let err = check_monotone_fronts(&[session(4, false, &[17])]).unwrap_err();
+        assert!(err.contains("exceeds steps"), "{err}");
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod ablate;
 pub mod common;
+pub mod convergence;
 pub mod grid;
 pub mod qualitative;
 pub mod quality;
@@ -41,11 +42,14 @@ pub fn run(name: &str, args: &Args) -> Vec<(String, Table)> {
         "fig14" => vec![("fig14".into(), quality::fig14(args))],
         "table1" => vec![("table1".into(), table1::table1(args))],
         "ablate" => vec![("ablate".into(), ablate::ablate(args))],
+        "convergence" => vec![("convergence".into(), convergence::convergence(args))],
         other => panic!("unknown experiment '{other}'"),
     }
 }
 
-/// All experiment names in paper order.
+/// All experiment names in paper order. `convergence` is deliberately
+/// absent: it replays a recorded `serve --telemetry` file, which
+/// `all-figures` cannot assume exists.
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig14", "table1", "ablate",
 ];

@@ -32,7 +32,11 @@
 //! Performance is tracked by the [`bench`] subsystem: `parataa bench`
 //! sweeps a registry of canonical scenarios and writes a versioned
 //! `BENCH_repro.json` that later PRs diff against (`--baseline`); see
-//! `docs/bench.md` and the README for the workflow.
+//! `docs/bench.md` and the README for the workflow. Runtime behaviour is
+//! observable through the always-compiled-in [`trace`] subsystem:
+//! lock-free per-thread span/event recording across every layer, exported
+//! as Perfetto-loadable Chrome trace JSON, Prometheus text, and
+//! per-session convergence telemetry (`docs/observability.md`).
 
 // Public-API documentation coverage: tracked as warnings crate-wide, and
 // **denied at the source** for the serving layers (`coordinator`,
@@ -61,4 +65,8 @@ pub mod runtime;
 pub mod schedule;
 #[deny(clippy::perf)]
 pub mod solver;
+// The observability layer is a contract later perf work measures against;
+// hold it to the same doc bar as the serving layers.
+#[deny(missing_docs)]
+pub mod trace;
 pub mod util;

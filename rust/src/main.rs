@@ -28,6 +28,9 @@ fn main() {
         "sample" => cmd_sample(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        // Not part of ALL: it replays a recorded --telemetry file rather
+        // than running an experiment, so all-figures must not require one.
+        "convergence" => run_experiment("convergence", &args),
         "all-figures" => {
             for name in figures::ALL {
                 run_experiment(name, &args);
@@ -48,7 +51,8 @@ fn help() {
          usage: parataa <subcommand> [--options]\n\n\
          subcommands:\n\
            sample      solve one request    (--model dit|gmm --steps N --seed N\n\
-                       --method taa|fp|aa|aa+ --class C --out img.pgm)\n\
+                       --method taa|fp|aa|aa+ --class C --out img.pgm;\n\
+                       --trace FILE: Perfetto-loadable Chrome trace of the solve)\n\
            serve       coordinator demo under synthetic load\n\
                        (--requests N --workers N: admission threads; --drivers N:\n\
                        round-driver threads carrying all in-flight sessions and\n\
@@ -59,7 +63,13 @@ fn help() {
                        re-run; --adaptive-window: size each solve's window from\n\
                        convergence velocity + pool occupancy; prints merge\n\
                        occupancy, streaming counters + a per-device utilization\n\
-                       breakdown; --json dumps the metrics snapshot)\n\
+                       breakdown; --json dumps the metrics snapshot;\n\
+                       --trace FILE: Chrome trace-event JSON of the whole run,\n\
+                       one track per session/driver/device — open in Perfetto;\n\
+                       --prom-out FILE: Prometheus text exposition (validated\n\
+                       before writing); --telemetry FILE: per-session round ->\n\
+                       residual/front/window/NFE progressions as JSON lines,\n\
+                       replayable via the convergence subcommand)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
                        --baseline FILE [--threshold PCT]: print a regression\n\
@@ -73,6 +83,8 @@ fn help() {
            fig7        (k, m) grid search\n\
            fig14       trajectory-init CS curves\n\
            table1      the headline table\n\
+           convergence residual-decay curves from a recorded --telemetry file\n\
+                       (--telemetry FILE [--max-sessions N]; not in all-figures)\n\
            all-figures regenerate everything into results/\n\n\
          common options: --model dit|gmm  --samples N  --seed N  --steps N"
     );
@@ -116,9 +128,18 @@ fn cmd_sample(args: &Args) {
     let coeffs = scenario.coeffs();
     let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(class), seed);
     let cfg = method_config(method, steps, args.get("k").map(|v| v.parse().unwrap()), scenario.guidance);
+    let trace_out = args.get("trace").map(str::to_string);
+    if trace_out.is_some() {
+        parataa::trace::enable();
+    }
     let t0 = std::time::Instant::now();
     let result = solver::solve(&problem, &cfg);
     let dt = t0.elapsed();
+    if let Some(path) = &trace_out {
+        parataa::trace::chrome::write_file(path, &parataa::trace::collect())
+            .expect("write trace file");
+        println!("wrote {path} (Chrome trace-event JSON — open in ui.perfetto.dev)");
+    }
     let seq = solver::sample_sequential(&problem, scenario.guidance);
     let rmse = parataa::metrics::match_rmse(result.xs.row(0), seq.xs.row(0));
     println!(
@@ -202,6 +223,19 @@ fn cmd_serve(args: &Args) {
     let stream = args.has_flag("stream");
     let adaptive = args.has_flag("adaptive-window");
 
+    // Observability taps (ISSUE 6): --trace wants span events, and the
+    // --prom-out exposition carries trace-derived histograms, so either
+    // flag turns the recorder on before any session is admitted.
+    let trace_out = args.get("trace").map(str::to_string);
+    let prom_out = args.get("prom-out").map(str::to_string);
+    let telemetry_out = args.get("telemetry").map(str::to_string);
+    if trace_out.is_some() || prom_out.is_some() {
+        parataa::trace::enable();
+    }
+    let telemetry = telemetry_out
+        .as_ref()
+        .map(|_| Arc::new(parataa::trace::telemetry::TelemetryLog::new()));
+
     // Stack: backend pool -> coordinator round drivers. The drivers merge
     // the pending ε batches of ready sessions per round (no batcher layer:
     // merging happens deterministically at the round boundary).
@@ -210,7 +244,13 @@ fn cmd_serve(args: &Args) {
     let pooled = Arc::new(pool.eps_handle("pooled"));
     let coord = Coordinator::start(
         pooled,
-        CoordinatorConfig { workers, drivers, devices, ..Default::default() },
+        CoordinatorConfig {
+            workers,
+            drivers,
+            devices,
+            telemetry: telemetry.clone(),
+            ..Default::default()
+        },
     );
     coord.attach_pool(pool_stats);
 
@@ -261,6 +301,24 @@ fn cmd_serve(args: &Args) {
         println!("{}", coord.metrics().to_json());
     } else {
         println!("{}", coord.metrics().report());
+    }
+    if let Some(path) = &trace_out {
+        parataa::trace::chrome::write_file(path, &parataa::trace::collect())
+            .expect("write trace file");
+        eprintln!("wrote {path} (Chrome trace-event JSON — open in ui.perfetto.dev)");
+    }
+    if let Some(path) = &prom_out {
+        let text = coord.metrics().to_prometheus();
+        // Self-check before writing: a rendering bug should fail the run,
+        // not the scrape that reads the file later.
+        let samples = parataa::trace::prom::validate(&text)
+            .expect("generated Prometheus exposition failed validation");
+        std::fs::write(path, &text).expect("write Prometheus file");
+        eprintln!("wrote {path} ({samples} Prometheus samples)");
+    }
+    if let (Some(path), Some(log)) = (&telemetry_out, &telemetry) {
+        log.write_jsonl(path).expect("write telemetry file");
+        eprintln!("wrote {path} ({} session telemetry records)", log.sessions().len());
     }
     drop(coord);
 }

@@ -234,6 +234,7 @@ impl PoolInner {
         if n == 0 {
             return Ok(());
         }
+        let dispatch_span = crate::trace::begin();
 
         // Shard and dispatch round-robin over the per-device queues.
         let rows = shard_size(n, self.devices);
@@ -271,6 +272,16 @@ impl PoolInner {
             );
             out[start * d..end * d].copy_from_slice(&eps);
         }
+        // The dispatch span covers sharding, queueing and reassembly — the
+        // caller-visible latency of one merged device call.
+        crate::trace::complete(
+            dispatch_span,
+            crate::trace::Layer::Pool,
+            crate::trace::Name::Dispatch,
+            0,
+            n as i64,
+            n_shards as i64,
+        );
         Ok(())
     }
 }
@@ -473,6 +484,7 @@ fn exec_task(
     stats: &PoolStats,
 ) {
     let items = task.t.len() as u64;
+    let exec_span = crate::trace::begin();
     let t0 = Instant::now();
     // Contain backend panics: if the worker unwound here, shards queued
     // behind it would keep their reply senders alive forever and (without
@@ -487,6 +499,15 @@ fn exec_task(
         })
     }))
     .unwrap_or_else(|_| Err(anyhow!("pool device {me}: backend panicked executing a shard")));
+    // Track = device index, so Perfetto shows one lane per device.
+    crate::trace::complete(
+        exec_span,
+        crate::trace::Layer::Pool,
+        crate::trace::Name::Execute,
+        me as u64,
+        items as i64,
+        stolen as i64,
+    );
     let c = &stats.counters[me];
     c.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     c.shards.fetch_add(1, Ordering::Relaxed);

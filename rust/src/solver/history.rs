@@ -115,6 +115,16 @@ impl History {
         if self.cap == 0 {
             return;
         }
+        // Ring-wrap evicting the oldest column is the Anderson "restart"
+        // signal: `a` is the nonzero row count pushed, `b` is 1 when this
+        // push overwrote a live column (len already at capacity).
+        crate::trace::instant(
+            crate::trace::Layer::Solver,
+            crate::trace::Name::HistoryPush,
+            0,
+            (hi - lo) as i64,
+            (self.len == self.cap) as i64,
+        );
         let n = self.rows * self.d;
         debug_assert_eq!(dx.len(), n);
         debug_assert_eq!(df.len(), n);

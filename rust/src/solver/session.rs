@@ -56,6 +56,7 @@ use super::{Problem, SolverConfig};
 use crate::equations::{eval_fk, residual_sq, States};
 use crate::model::Cond;
 use crate::schedule::SamplerCoeffs;
+use crate::trace::{self, Layer, Name};
 
 /// One pending ε job: the batched denoiser evaluation the session needs
 /// before its next [`SolverSession::resume`]. Slices borrow the session's
@@ -226,6 +227,10 @@ pub struct SolverSession {
     records: Vec<IterationRecord>,
     converged: bool,
     done: bool,
+    /// Process-unique trace track id: every span/instant this session
+    /// records carries it, so exporters can rebuild the per-session span
+    /// tree (admit → rounds → finalize) and telemetry can join on it.
+    trace_id: u64,
 }
 
 impl SolverSession {
@@ -307,6 +312,7 @@ impl SolverSession {
             records: Vec::new(),
             converged: false,
             done: cfg.s_max == 0,
+            trace_id: trace::next_track_id(),
             coeffs,
         };
         if !session.done {
@@ -359,6 +365,7 @@ impl SolverSession {
     /// pending batch's `len × dim`.
     pub fn resume(&mut self, eps_out: &[f32]) -> RoundOutcome {
         assert!(!self.done, "resume() on a finished session");
+        let round_span = trace::begin();
         let d = self.d;
         let n = self.batch_states.len();
         assert_eq!(eps_out.len(), n * d, "eps_out does not match the pending batch");
@@ -414,7 +421,28 @@ impl SolverSession {
                 row_residuals,
             };
             self.records.push(rec.clone());
+            // Final front advance: the whole remaining window froze.
+            trace::instant(Layer::Solver, Name::FrontAdvance, self.trace_id, (t2 + 1) as i64, 0);
+            trace::complete(
+                round_span,
+                Layer::Solver,
+                Name::Round,
+                self.trace_id,
+                self.iter as i64,
+                n as i64,
+            );
             return RoundOutcome { record: rec, done: true };
+        }
+        if nt2 < t2 {
+            // Front advanced: rows (nt2, t2] froze this round (Thm 3.6 —
+            // the front is monotone, so `b` never increases over a track).
+            trace::instant(
+                Layer::Solver,
+                Name::FrontAdvance,
+                self.trace_id,
+                (t2 - nt2) as i64,
+                (nt2 + 1) as i64,
+            );
         }
         self.t1 = nt1;
         self.t2 = nt2;
@@ -479,6 +507,17 @@ impl SolverSession {
             self.cfg.safeguard,
             &mut self.ws,
         );
+        if self.cfg.safeguard {
+            // The §3.2 safeguard pinned the top unconverged row t2 to the
+            // plain fixed-point iterate this round.
+            trace::instant(
+                Layer::Solver,
+                Name::Safeguard,
+                self.trace_id,
+                self.t2 as i64,
+                self.iter as i64,
+            );
+        }
 
         let rec = IterationRecord {
             iter: self.iter,
@@ -503,11 +542,26 @@ impl SolverSession {
         if let Some(ctrl) = self.controller.as_mut() {
             let next_w = ctrl.decide(t2 - nt2, self.w);
             if next_w != self.w {
+                trace::instant(
+                    Layer::Solver,
+                    Name::WindowResize,
+                    self.trace_id,
+                    self.w as i64,
+                    next_w as i64,
+                );
                 self.w = next_w;
                 self.t1 = (self.t2 + 1).saturating_sub(self.w);
             }
         }
 
+        trace::complete(
+            round_span,
+            Layer::Solver,
+            Name::Round,
+            self.trace_id,
+            self.iter as i64,
+            n as i64,
+        );
         self.iter += 1;
         if self.iter > self.cfg.s_max {
             self.done = true; // round budget exhausted; not converged
@@ -628,6 +682,14 @@ impl SolverSession {
     /// skip computing the occupancy signal otherwise).
     pub fn is_adaptive(&self) -> bool {
         self.controller.is_some()
+    }
+
+    /// Process-unique trace track id. Every span/instant this session
+    /// records carries it; serving layers reuse it for their own
+    /// admit/finalize spans and telemetry so exporters can reassemble the
+    /// full per-session tree.
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
     }
 }
 
@@ -858,6 +920,71 @@ mod tests {
         drive(&mut pressured, &model);
         assert!(pressured.converged());
         assert_eq!(pressured.window_rows(), adaptive.min_window);
+    }
+
+    /// Forcing a mid-run shrink (saturated-pool occupancy from round 3 on)
+    /// must not break streaming: the `progress()` advances still tile
+    /// `[0, T)` top-down with no gap or overlap, and the window verifiably
+    /// shrank while the front kept its monotone advance.
+    #[test]
+    fn progress_tiles_when_occupancy_forces_mid_run_shrink() {
+        use crate::solver::window_ctrl::{AdaptiveWindow, WindowPolicy};
+        let steps = 24;
+        let (coeffs, model) = setup(steps);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(2), 9);
+        let cfg = SolverConfig {
+            guidance: 2.0,
+            tol: 1e-5,
+            s_max: 20 * steps,
+            window: steps, // start at the cap so the shrink is observable
+            window_policy: WindowPolicy::Adaptive(AdaptiveWindow::for_steps(steps)),
+            ..SolverConfig::parataa(steps)
+        };
+        let mut session = SolverSession::new(&problem, &cfg);
+        assert_eq!(session.window_rows(), steps);
+        let d = session.dim();
+        let mut eps = Vec::new();
+        let mut advances: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut min_w = steps;
+        let mut rounds = 0;
+        loop {
+            let n = match session.pending() {
+                None => break,
+                Some(b) => {
+                    eps.resize(b.len() * d, 0.0);
+                    model.eps_batch(b.x, b.t, b.conds, b.guidance, &mut eps);
+                    b.len()
+                }
+            };
+            rounds += 1;
+            if rounds == 3 {
+                // Pool saturates: every decide() from here shrinks by one
+                // step until min_window.
+                session.set_occupancy(1.0);
+            }
+            let done = session.resume(&eps[..n * d]).done;
+            min_w = min_w.min(session.window_rows());
+            if let Some(adv) = session.progress() {
+                advances.push(adv.newly_converged);
+            }
+            if done {
+                break;
+            }
+        }
+        assert!(session.converged(), "shrunken windows must still converge");
+        assert!(
+            min_w < steps,
+            "occupancy 1.0 must actually shrink the window (min stayed {min_w})"
+        );
+        // The advances tile [0, steps) from the top down: each chunk ends
+        // where the previous began, regardless of the shrinking window.
+        let mut expect_end = steps;
+        for adv in &advances {
+            assert_eq!(adv.end, expect_end, "front advances must be contiguous");
+            assert!(adv.start < adv.end);
+            expect_end = adv.start;
+        }
+        assert_eq!(expect_end, 0, "the advances must reach the sample row");
     }
 
     #[test]

@@ -1,0 +1,35 @@
+//! Structured tracing and convergence telemetry (ISSUE 6).
+//!
+//! Always compiled in, near-free when off: the hot path pays one relaxed
+//! atomic load when tracing is disabled, and a handful of atomic stores
+//! into a pre-allocated per-thread seqlock ring when enabled — **zero
+//! heap allocations either way**, which is what lets `tests/zero_alloc.rs`
+//! keep its 0-allocations-per-round assertion with instrumentation live
+//! (see `docs/observability.md` for the overhead budget).
+//!
+//! The subsystem is three parts:
+//!
+//! 1. **Recorder** ([`enable`], [`span`], [`instant`], [`collect`]) — the
+//!    lock-free core. Instrumentation points live in `solver/` (round
+//!    spans, front/window/safeguard events), `coordinator/` (admission,
+//!    merged driver rounds, chunk emission, finalize), and `runtime/`
+//!    (per-device dispatch/execute).
+//! 2. **Exporters** — [`chrome`] renders Perfetto-loadable trace-event
+//!    JSON (`serve --trace out.json`); [`prom`] renders a Prometheus text
+//!    exposition from a `MetricsSnapshot` plus trace-derived histograms
+//!    (`serve --prom-out prom.txt`, `Metrics::to_prometheus()`).
+//! 3. **Telemetry** — [`telemetry`] distills per-session round →
+//!    (residual norm, front, window, NFE) progressions to JSON lines
+//!    (`serve --telemetry out.jsonl`), replayed by `figures convergence`
+//!    into the paper's residual-decay curves.
+
+pub mod chrome;
+pub mod prom;
+mod recorder;
+pub mod telemetry;
+
+pub use recorder::{
+    begin, collect, complete, disable, enable, enable_with_capacity, flush_into, instant,
+    is_enabled, next_track_id, span, Layer, Name, Ring, Span, SpanStart, TraceEvent, TraceSink,
+    DEFAULT_CAPACITY,
+};

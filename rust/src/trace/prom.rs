@@ -1,0 +1,551 @@
+//! Prometheus text exposition (version 0.0.4) rendered from a
+//! [`MetricsSnapshot`] plus trace-derived counters and histograms.
+//!
+//! Everything the snapshot carries becomes a `parataa_*` metric with
+//! `# HELP`/`# TYPE` headers; when the recorder holds events, per-layer
+//! event counters and per-span duration histograms are appended (see
+//! `docs/observability.md` for the full metric table with units).
+//! Percentile metrics over zero observations are *omitted* rather than
+//! emitted as `NaN` — absence is the honest exposition of "no samples".
+//!
+//! [`validate`] is the strict line-by-line parser the CLI runs over its
+//! own output before writing `--prom-out` files, and the CI trace-smoke
+//! step relies on: a rendering bug fails the serve run, not the scrape.
+
+use super::recorder::{Layer, Name, TraceEvent};
+use crate::coordinator::MetricsSnapshot;
+use std::fmt::Write as _;
+
+/// Histogram bucket bounds, in seconds (an `+Inf` bucket is implicit).
+/// Spans range from sub-µs cache lookups to multi-second DiT rounds.
+pub const BUCKET_BOUNDS_S: [f64; 7] = [1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0];
+
+/// Aggregated duration statistics for one span kind, trace-derived.
+#[derive(Debug, Clone)]
+pub struct SpanStats {
+    /// Originating layer.
+    pub layer: Layer,
+    /// Span name within the layer.
+    pub name: Name,
+    /// Spans observed.
+    pub count: u64,
+    /// Total duration, nanoseconds.
+    pub sum_ns: u64,
+    /// Cumulative counts per [`BUCKET_BOUNDS_S`] bucket (≤ bound).
+    pub buckets: [u64; BUCKET_BOUNDS_S.len()],
+}
+
+/// Fold span events into per-(layer, name) duration stats, in first-seen
+/// order. Instant events contribute nothing here (they are counted by the
+/// per-layer event counters instead).
+pub fn aggregate(events: &[TraceEvent]) -> Vec<SpanStats> {
+    let mut out: Vec<SpanStats> = Vec::new();
+    for e in events.iter().filter(|e| e.span) {
+        let stat = match out.iter_mut().find(|s| s.layer == e.layer && s.name == e.name) {
+            Some(s) => s,
+            None => {
+                out.push(SpanStats {
+                    layer: e.layer,
+                    name: e.name,
+                    count: 0,
+                    sum_ns: 0,
+                    buckets: [0; BUCKET_BOUNDS_S.len()],
+                });
+                out.last_mut().unwrap()
+            }
+        };
+        stat.count += 1;
+        stat.sum_ns += e.dur_ns;
+        let secs = e.dur_ns as f64 / 1e9;
+        for (i, bound) in BUCKET_BOUNDS_S.iter().enumerate() {
+            if secs <= *bound {
+                stat.buckets[i] += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Total events per layer (spans and instants), trace-derived.
+pub fn layer_counts(events: &[TraceEvent]) -> Vec<(Layer, u64)> {
+    Layer::ALL
+        .into_iter()
+        .map(|l| (l, events.iter().filter(|e| e.layer == l).count() as u64))
+        .filter(|(_, n)| *n > 0)
+        .collect()
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+struct Writer {
+    out: String,
+}
+
+impl Writer {
+    fn header(&mut self, name: &str, kind: &str, help: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        if !value.is_finite() {
+            return; // no observations — omit rather than emit NaN
+        }
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+            }
+            self.out.push('}');
+        }
+        let _ = writeln!(self.out, " {value}");
+    }
+
+    fn scalar(&mut self, name: &str, kind: &str, help: &str, value: f64) {
+        self.header(name, kind, help);
+        self.sample(name, &[], value);
+    }
+}
+
+/// Render the snapshot plus an explicit event batch. Most callers want
+/// [`render`] (which collects from the live recorder); this entry point
+/// exists so tests and replay tools can render recorded batches.
+pub fn render_with_events(snapshot: &MetricsSnapshot, events: &[TraceEvent]) -> String {
+    let mut w = Writer { out: String::new() };
+
+    // --- request counters -------------------------------------------------
+    w.scalar(
+        "parataa_requests_completed_total",
+        "counter",
+        "Requests answered successfully.",
+        snapshot.completed as f64,
+    );
+    w.scalar(
+        "parataa_requests_failed_total",
+        "counter",
+        "Requests that failed (panics, malformed input, shutdown races).",
+        snapshot.failed as f64,
+    );
+    w.scalar(
+        "parataa_warm_starts_total",
+        "counter",
+        "Completed requests warm-started from the trajectory cache.",
+        snapshot.warm_starts as f64,
+    );
+    w.scalar(
+        "parataa_rounds_driven_total",
+        "counter",
+        "Merged parallel rounds executed by the round drivers.",
+        snapshot.rounds_driven as f64,
+    );
+    w.scalar(
+        "parataa_prefix_chunks_sent_total",
+        "counter",
+        "Streaming converged-prefix chunks delivered.",
+        snapshot.prefix_chunks_sent as f64,
+    );
+    w.scalar(
+        "parataa_prefix_rows_streamed_total",
+        "counter",
+        "Converged trajectory rows delivered through prefix chunks.",
+        snapshot.prefix_rows_streamed as f64,
+    );
+
+    // --- gauges -----------------------------------------------------------
+    w.scalar(
+        "parataa_uptime_seconds",
+        "gauge",
+        "Seconds since the coordinator's metrics were created.",
+        snapshot.uptime.as_secs_f64(),
+    );
+    w.scalar(
+        "parataa_throughput_rps",
+        "gauge",
+        "Completed requests per second of uptime.",
+        snapshot.throughput_rps,
+    );
+    w.scalar(
+        "parataa_sessions_in_flight",
+        "gauge",
+        "Sessions between admission and finalization right now.",
+        snapshot.sessions_in_flight as f64,
+    );
+    w.scalar(
+        "parataa_sessions_in_flight_peak",
+        "gauge",
+        "High-water mark of concurrent sessions.",
+        snapshot.peak_sessions_in_flight as f64,
+    );
+    w.scalar(
+        "parataa_driver_threads",
+        "gauge",
+        "Round-driver threads carrying the session run queue.",
+        snapshot.driver_threads as f64,
+    );
+    w.scalar(
+        "parataa_request_rounds_mean",
+        "gauge",
+        "Mean parallel rounds per completed request.",
+        snapshot.mean_rounds,
+    );
+    w.scalar(
+        "parataa_request_nfe_mean",
+        "gauge",
+        "Mean eps evaluations per completed request.",
+        snapshot.mean_nfe,
+    );
+    w.scalar(
+        "parataa_merge_sessions_mean",
+        "gauge",
+        "Mean sessions merged per driven round.",
+        snapshot.merge_sessions_mean,
+    );
+    w.scalar(
+        "parataa_merge_rows_mean",
+        "gauge",
+        "Mean window rows per driven round.",
+        snapshot.merge_rows_mean,
+    );
+    w.scalar(
+        "parataa_merge_groups_mean",
+        "gauge",
+        "Mean guidance groups (device calls) per driven round.",
+        snapshot.merge_groups_mean,
+    );
+
+    // --- latency summaries (quantile-labelled, ms) ------------------------
+    w.header(
+        "parataa_request_latency_ms",
+        "summary",
+        "End-to-end request latency (queue + solve), milliseconds.",
+    );
+    for (q, v) in [
+        ("0.5", snapshot.latency_ms_p50),
+        ("0.95", snapshot.latency_ms_p95),
+        ("0.99", snapshot.latency_ms_p99),
+    ] {
+        w.sample("parataa_request_latency_ms", &[("quantile", q)], v);
+    }
+    w.header(
+        "parataa_first_prefix_ms",
+        "summary",
+        "Enqueue to first streamed prefix chunk, milliseconds.",
+    );
+    for (q, v) in
+        [("0.5", snapshot.first_prefix_ms_p50), ("0.95", snapshot.first_prefix_ms_p95)]
+    {
+        w.sample("parataa_first_prefix_ms", &[("quantile", q)], v);
+    }
+
+    // --- per-device breakdown --------------------------------------------
+    if !snapshot.devices.is_empty() {
+        w.header(
+            "parataa_device_utilization",
+            "gauge",
+            "Device busy time over pool wall time since spawn, in [0, 1].",
+        );
+        for d in &snapshot.devices {
+            let idx = d.device.to_string();
+            w.sample(
+                "parataa_device_utilization",
+                &[("device", &idx), ("name", &d.name)],
+                d.utilization,
+            );
+        }
+        w.header(
+            "parataa_device_queue_depth",
+            "gauge",
+            "Shards waiting in the device's queue right now.",
+        );
+        for d in &snapshot.devices {
+            let idx = d.device.to_string();
+            w.sample("parataa_device_queue_depth", &[("device", &idx)], d.queue_depth as f64);
+        }
+        for (metric, help, read) in [
+            (
+                "parataa_device_shards_total",
+                "Shards executed by the device.",
+                (|d| d.shards) as fn(&crate::runtime::pool::DeviceStat) -> u64,
+            ),
+            ("parataa_device_items_total", "Eps rows executed by the device.", |d| d.items),
+            (
+                "parataa_device_stolen_total",
+                "Shards the device stole from peers' queues.",
+                |d| d.stolen,
+            ),
+        ] {
+            w.header(metric, "counter", help);
+            for d in &snapshot.devices {
+                let idx = d.device.to_string();
+                w.sample(metric, &[("device", &idx)], read(d) as f64);
+            }
+        }
+    }
+
+    // --- trace-derived section (empty when nothing was recorded) ----------
+    let per_layer = layer_counts(events);
+    if !per_layer.is_empty() {
+        w.header(
+            "parataa_trace_events_total",
+            "counter",
+            "Trace events recorded, by instrumentation layer.",
+        );
+        for (layer, n) in per_layer {
+            w.sample("parataa_trace_events_total", &[("layer", layer.as_str())], n as f64);
+        }
+    }
+    let spans = aggregate(events);
+    if !spans.is_empty() {
+        w.header(
+            "parataa_span_duration_seconds",
+            "histogram",
+            "Span durations from the trace recorder, by span kind.",
+        );
+        for s in &spans {
+            let span = format!("{}.{}", s.layer.as_str(), s.name.as_str());
+            for (i, bound) in BUCKET_BOUNDS_S.iter().enumerate() {
+                let le = format!("{bound}");
+                w.sample(
+                    "parataa_span_duration_seconds_bucket",
+                    &[("span", &span), ("le", &le)],
+                    s.buckets[i] as f64,
+                );
+            }
+            w.sample(
+                "parataa_span_duration_seconds_bucket",
+                &[("span", &span), ("le", "+Inf")],
+                s.count as f64,
+            );
+            w.sample(
+                "parataa_span_duration_seconds_sum",
+                &[("span", &span)],
+                s.sum_ns as f64 / 1e9,
+            );
+            w.sample("parataa_span_duration_seconds_count", &[("span", &span)], s.count as f64);
+        }
+    }
+
+    w.out
+}
+
+/// Render the snapshot plus whatever the live recorder currently holds
+/// (the trace-derived section is empty when tracing never ran).
+pub fn render(snapshot: &MetricsSnapshot) -> String {
+    render_with_events(snapshot, &super::collect())
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn valid_label_set(s: &str) -> bool {
+    // `k="v"(,k="v")*` with backslash escapes inside values.
+    let mut rest = s;
+    loop {
+        let Some(eq) = rest.find('=') else { return false };
+        let key = &rest[..eq];
+        if !valid_metric_name(key) || key.contains(':') {
+            return false;
+        }
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            return false;
+        }
+        let bytes = rest.as_bytes();
+        let mut i = 1;
+        loop {
+            match bytes.get(i) {
+                None => return false, // unterminated value
+                Some(b'\\') => i += 2,
+                Some(b'"') => break,
+                Some(_) => i += 1,
+            }
+        }
+        rest = &rest[i + 1..];
+        match rest.strip_prefix(',') {
+            Some(r) => rest = r,
+            None => return rest.is_empty(),
+        }
+    }
+}
+
+/// Strict line-by-line check of a text exposition: every line must be
+/// blank, a well-formed `# HELP`/`# TYPE` header, a plain comment, or a
+/// `name[{labels}] value [timestamp]` sample. Returns the number of sample
+/// lines on success; the first offending line (1-based) otherwise.
+pub fn validate(text: &str) -> Result<usize, String> {
+    let mut samples = 0usize;
+    for (idx, line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let bad = |what: &str| Err(format!("line {lineno}: {what}: {line:?}"));
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(h) = rest.strip_prefix("HELP ") {
+                match h.split_once(' ') {
+                    Some((name, _)) if valid_metric_name(name) => {}
+                    _ => return bad("malformed HELP header"),
+                }
+            } else if let Some(t) = rest.strip_prefix("TYPE ") {
+                match t.split_once(' ') {
+                    Some((name, kind))
+                        if valid_metric_name(name)
+                            && matches!(
+                                kind,
+                                "counter" | "gauge" | "histogram" | "summary" | "untyped"
+                            ) => {}
+                    _ => return bad("malformed TYPE header"),
+                }
+            }
+            continue; // any other comment is legal
+        }
+        // Sample line: name[{labels}] value [timestamp]
+        let (name_part, value_part) = match line.find('{') {
+            Some(brace) => {
+                let Some(close) = line.rfind('}') else {
+                    return bad("unclosed label set");
+                };
+                if close < brace || !valid_label_set(&line[brace + 1..close]) {
+                    return bad("malformed label set");
+                }
+                (&line[..brace], line[close + 1..].trim_start())
+            }
+            None => match line.split_once(' ') {
+                Some((n, v)) => (n, v.trim_start()),
+                None => return bad("sample line has no value"),
+            },
+        };
+        if !valid_metric_name(name_part) {
+            return bad("invalid metric name");
+        }
+        let mut fields = value_part.split_whitespace();
+        let Some(value) = fields.next() else {
+            return bad("sample line has no value");
+        };
+        let value_ok = value.parse::<f64>().is_ok()
+            || matches!(value, "NaN" | "+Inf" | "-Inf" | "Inf");
+        if !value_ok {
+            return bad("unparseable sample value");
+        }
+        if let Some(ts) = fields.next() {
+            if ts.parse::<i64>().is_err() {
+                return bad("unparseable timestamp");
+            }
+        }
+        if fields.next().is_some() {
+            return bad("trailing fields after timestamp");
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    fn span_ev(layer: Layer, name: Name, dur_ns: u64) -> TraceEvent {
+        TraceEvent {
+            ts_ns: 0,
+            dur_ns,
+            span: true,
+            layer,
+            name,
+            track: 1,
+            a: 0,
+            b: 0,
+            thread: 0,
+        }
+    }
+
+    #[test]
+    fn renders_and_validates_a_populated_snapshot() {
+        let m = Metrics::new();
+        m.set_drivers(2);
+        m.record_success(Duration::from_millis(12), 5, 80, true);
+        m.record_success(Duration::from_millis(20), 7, 112, false);
+        m.record_failure();
+        m.record_round(2, 32, 1);
+        m.record_prefix(16, Some(Duration::from_millis(3)));
+        let events = vec![
+            span_ev(Layer::Solver, Name::Round, 2_000_000),
+            span_ev(Layer::Solver, Name::Round, 40_000),
+            span_ev(Layer::Driver, Name::DriverRound, 3_000_000),
+        ];
+        let text = render_with_events(&m.snapshot(), &events);
+        let samples = validate(&text).expect("self-rendered exposition must validate");
+        assert!(samples > 15, "expected a rich exposition, got {samples} samples:\n{text}");
+        assert!(text.contains("parataa_requests_completed_total 2"), "{text}");
+        assert!(text.contains("parataa_requests_failed_total 1"));
+        assert!(text.contains("parataa_rounds_driven_total 1"));
+        assert!(text.contains("parataa_request_latency_ms{quantile=\"0.5\"}"));
+        assert!(text.contains("# TYPE parataa_request_latency_ms summary"));
+        assert!(text.contains("parataa_trace_events_total{layer=\"solver\"} 2"));
+        assert!(text.contains(
+            "parataa_span_duration_seconds_bucket{span=\"solver.round\",le=\"+Inf\"} 2"
+        ));
+        // 40µs round lands in the 1e-4 bucket but not 1e-5.
+        assert!(text.contains(
+            "parataa_span_duration_seconds_bucket{span=\"solver.round\",le=\"0.0001\"} 1"
+        ));
+        assert!(text
+            .contains("parataa_span_duration_seconds_bucket{span=\"solver.round\",le=\"0.00001\"} 0"));
+        assert!(text.contains("parataa_span_duration_seconds_count{span=\"solver.round\"} 2"));
+    }
+
+    #[test]
+    fn empty_snapshot_omits_percentiles_but_validates() {
+        let text = render_with_events(&Metrics::new().snapshot(), &[]);
+        validate(&text).expect("empty exposition must validate");
+        // NaN percentiles are omitted, not rendered.
+        assert!(!text.contains("NaN"), "{text}");
+        assert!(!text.contains("quantile"), "no-observation summaries have no samples");
+        assert!(text.contains("parataa_requests_completed_total 0"));
+        assert!(!text.contains("parataa_span_duration_seconds"), "no trace section");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate("ok_metric 1\n").is_ok());
+        assert!(validate("ok{a=\"b\",c=\"d\"} 2.5 1700000000\n").is_ok());
+        assert!(validate("1bad_name 1\n").is_err());
+        assert!(validate("metric\n").is_err(), "no value");
+        assert!(validate("metric notanumber\n").is_err());
+        assert!(validate("metric{unclosed=\"v\" 1\n").is_err());
+        assert!(validate("metric{=\"v\"} 1\n").is_err());
+        assert!(validate("# TYPE metric nonsense\n").is_err());
+        assert!(validate("# HELP 1bad help\n").is_err());
+        assert!(validate("# any other comment\n").is_ok());
+        assert_eq!(validate("a 1\nb 2\n\n# c\nd 3\n"), Ok(3));
+    }
+
+    #[test]
+    fn aggregate_buckets_are_cumulative() {
+        let events = vec![
+            span_ev(Layer::Pool, Name::Execute, 5_000),          // 5µs
+            span_ev(Layer::Pool, Name::Execute, 500_000),        // 0.5ms
+            span_ev(Layer::Pool, Name::Execute, 50_000_000_000), // 50s: only +Inf
+        ];
+        let stats = aggregate(&events);
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.count, 3);
+        assert_eq!(s.buckets, [1, 1, 2, 2, 2, 2, 2], "cumulative ≤-bound counts");
+        assert_eq!(s.sum_ns, 50_000_505_000);
+    }
+}

@@ -1,0 +1,562 @@
+//! The recorder: per-thread lock-free ring buffers of span/instant events.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Zero cost when disabled.** Every instrumentation site starts with
+//!    one `Relaxed` atomic load of the global enable flag and returns
+//!    immediately when tracing is off — no clock read, no TLS access, no
+//!    allocation. `tests/zero_alloc.rs` pins the stronger property below.
+//! 2. **Zero steady-state allocations when enabled.** Each thread records
+//!    into its own fixed-capacity ring of *all-atomic* slots, allocated
+//!    once on the thread's first event (the warmup round in the serving
+//!    stack; explicitly before the measured window in `zero_alloc.rs`).
+//!    A recorded event is seven atomic stores — no locks, no heap.
+//! 3. **No `unsafe`.** Readers may race the writer, so every slot carries
+//!    a seqlock-style sequence word: the writer brackets its field stores
+//!    with `seq = 2n+1` (write in progress) and `seq = 2n+2` (write `n`
+//!    complete); a reader accepts a slot only if it observes the same
+//!    *even, matching* sequence before and after reading the fields.
+//!    Torn slots (being rewritten or already lapped) are skipped — trace
+//!    collection is lossy at ring-wrap by design, never corrupt.
+//!
+//! Event names and layers are `#[repr(u8)]` enums packed into one atomic
+//! word (a `&'static str` cannot be stored atomically); exporters map them
+//! back to strings. Timestamps are nanoseconds from a process-wide epoch
+//! fixed at [`enable`] time, so events from different threads order
+//! correctly on one Perfetto timeline.
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Which subsystem an event came from (the Chrome exporter's category and
+/// the Prometheus `layer` label).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Layer {
+    /// `SolverSession` round machinery (resume spans, front/window events).
+    Solver = 0,
+    /// Coordinator round drivers (merge / scatter / merged-round spans).
+    Driver = 1,
+    /// `DevicePool` dispatch and per-device shard execution.
+    Pool = 2,
+    /// Trajectory-cache lookups and inserts.
+    Cache = 3,
+    /// Streaming prefix-chunk emission.
+    Stream = 4,
+    /// Session lifecycle (admission, finalize) in the coordinator.
+    Session = 5,
+}
+
+impl Layer {
+    /// Every layer, in discriminant order.
+    pub const ALL: [Layer; 6] =
+        [Layer::Solver, Layer::Driver, Layer::Pool, Layer::Cache, Layer::Stream, Layer::Session];
+
+    /// Stable lowercase label (Chrome `cat`, Prometheus `layer` value).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Layer::Solver => "solver",
+            Layer::Driver => "driver",
+            Layer::Pool => "pool",
+            Layer::Cache => "cache",
+            Layer::Stream => "stream",
+            Layer::Session => "session",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Layer> {
+        Layer::ALL.into_iter().find(|l| *l as u8 == v)
+    }
+}
+
+/// What happened. One flat namespace across layers keeps the packed
+/// encoding trivial; [`Name::as_str`] is the exporters' label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Name {
+    /// Span: admission (cache lookup → slot grant → session construction).
+    Admit = 0,
+    /// Span: one `SolverSession::resume` parallel round.
+    Round = 1,
+    /// Instant: the residual front froze rows (`a` = rows, `b` = new front).
+    FrontAdvance = 2,
+    /// Instant: the adaptive controller resized the window (`a` → `b`).
+    WindowResize = 3,
+    /// Instant: the Theorem-3.6 safeguard pinned the top unconverged row
+    /// (`a`) to a plain fixed-point step this round.
+    Safeguard = 4,
+    /// Instant: an Anderson history push (`a` = active rows, `b` = columns
+    /// now held; a push after a restart/wrap evicts the oldest column).
+    HistoryPush = 5,
+    /// Span: a driver gathering one guidance group's merged ε batch.
+    Merge = 6,
+    /// Instant: a driver scattering a guidance group's results back
+    /// (`a` = rows, `b` = sessions).
+    Scatter = 7,
+    /// Span: one merged round across every ready session (the unit
+    /// `MetricsSnapshot::rounds_driven` counts).
+    DriverRound = 8,
+    /// Span: `DevicePool` sharding + reassembling one ε batch.
+    Dispatch = 9,
+    /// Span: one device executing one shard (`a` = rows, `b` = stolen).
+    Execute = 10,
+    /// Instant: a trajectory-cache lookup (`a` = 1 hit / 0 miss).
+    CacheLookup = 11,
+    /// Instant: a trajectory-cache insert (`a` = entries now held).
+    CacheInsert = 12,
+    /// Instant: a converged-prefix chunk sent (`a` = rows, `b` = round).
+    ChunkEmit = 13,
+    /// Span: finalize (reply, cache insert, slot release).
+    Finalize = 14,
+}
+
+impl Name {
+    /// Every event name, in discriminant order.
+    pub const ALL: [Name; 15] = [
+        Name::Admit,
+        Name::Round,
+        Name::FrontAdvance,
+        Name::WindowResize,
+        Name::Safeguard,
+        Name::HistoryPush,
+        Name::Merge,
+        Name::Scatter,
+        Name::DriverRound,
+        Name::Dispatch,
+        Name::Execute,
+        Name::CacheLookup,
+        Name::CacheInsert,
+        Name::ChunkEmit,
+        Name::Finalize,
+    ];
+
+    /// Stable dotted label, e.g. `"solver.round"` without the layer —
+    /// exporters prepend [`Layer::as_str`] where a qualified name helps.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Name::Admit => "admit",
+            Name::Round => "round",
+            Name::FrontAdvance => "front_advance",
+            Name::WindowResize => "window_resize",
+            Name::Safeguard => "safeguard",
+            Name::HistoryPush => "history_push",
+            Name::Merge => "merge",
+            Name::Scatter => "scatter",
+            Name::DriverRound => "driver_round",
+            Name::Dispatch => "dispatch",
+            Name::Execute => "execute",
+            Name::CacheLookup => "cache_lookup",
+            Name::CacheInsert => "cache_insert",
+            Name::ChunkEmit => "chunk_emit",
+            Name::Finalize => "finalize",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Name> {
+        Name::ALL.into_iter().find(|n| *n as u8 == v)
+    }
+}
+
+/// One decoded trace event, as returned by [`collect`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Nanoseconds since the [`enable`] epoch.
+    pub ts_ns: u64,
+    /// Span duration in nanoseconds (0 and meaningless for instants).
+    pub dur_ns: u64,
+    /// True for spans (have a duration), false for instant events.
+    pub span: bool,
+    /// Originating subsystem.
+    pub layer: Layer,
+    /// What happened.
+    pub name: Name,
+    /// Track identity: the session trace id for session-scoped events, the
+    /// driver index for driver events, the device index for `Execute` —
+    /// 0 when no natural track exists (the recording thread then serves).
+    pub track: u64,
+    /// First event argument (meaning documented per [`Name`]).
+    pub a: i64,
+    /// Second event argument.
+    pub b: i64,
+    /// Index of the recording thread's ring (stable per thread).
+    pub thread: usize,
+}
+
+// --- packed slot encoding ---------------------------------------------------
+
+const KIND_SPAN: u64 = 1 << 12;
+
+fn pack_meta(span: bool, layer: Layer, name: Name) -> u64 {
+    (name as u64) | ((layer as u64) << 8) | if span { KIND_SPAN } else { 0 }
+}
+
+fn unpack_meta(meta: u64) -> Option<(bool, Layer, Name)> {
+    let name = Name::from_u8((meta & 0xff) as u8)?;
+    let layer = Layer::from_u8(((meta >> 8) & 0xf) as u8)?;
+    Some((meta & KIND_SPAN != 0, layer, name))
+}
+
+/// One ring slot: all-atomic so readers can race the writer without
+/// `unsafe`. `seq` is the per-slot seqlock word (see module docs).
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    ts: AtomicU64,
+    dur: AtomicU64,
+    meta: AtomicU64,
+    track: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// A single-writer ring of trace slots. The owning thread records through
+/// its TLS handle; [`collect`] reads every registered ring concurrently.
+pub struct Ring {
+    /// Total events written by this ring's thread (not capped by capacity).
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+    /// Stable index of this ring in the registry (the `thread` field of
+    /// decoded events).
+    id: usize,
+}
+
+impl Ring {
+    /// Record one event. Single-writer: only the owning thread calls this.
+    fn write(&self, ts: u64, dur: u64, meta: u64, track: u64, a: i64, b: i64) {
+        let n = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        // Odd seq marks the write in progress; the final even value encodes
+        // *which* write completed, so a reader lapped by the writer can
+        // tell this slot no longer holds the event it started reading.
+        slot.seq.store(2 * n + 1, Ordering::Release);
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.dur.store(dur, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.track.store(track, Ordering::Relaxed);
+        slot.a.store(a as u64, Ordering::Relaxed);
+        slot.b.store(b as u64, Ordering::Relaxed);
+        slot.seq.store(2 * n + 2, Ordering::Release);
+        self.head.store(n + 1, Ordering::Release);
+    }
+
+    /// Snapshot every intact event in this ring (newest `capacity` writes;
+    /// slots the writer is mid-rewrite are skipped, never torn).
+    fn read_into(&self, out: &mut Vec<TraceEvent>) {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let lo = head.saturating_sub(cap);
+        for n in lo..head {
+            let slot = &self.slots[(n % cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * n + 2 {
+                continue; // being rewritten, or already lapped
+            }
+            let ts = slot.ts.load(Ordering::Relaxed);
+            let dur = slot.dur.load(Ordering::Relaxed);
+            let meta = slot.meta.load(Ordering::Relaxed);
+            let track = slot.track.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed) as i64;
+            let b = slot.b.load(Ordering::Relaxed) as i64;
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue; // writer lapped us mid-read
+            }
+            if let Some((span, layer, name)) = unpack_meta(meta) {
+                out.push(TraceEvent {
+                    ts_ns: ts,
+                    dur_ns: dur,
+                    span,
+                    layer,
+                    name,
+                    track,
+                    a,
+                    b,
+                    thread: self.id,
+                });
+            }
+        }
+    }
+}
+
+// --- global state -----------------------------------------------------------
+
+/// Default per-thread ring capacity (events). 4096 × 56-byte slots ≈ 224 KiB
+/// per recording thread — sized so a serve demo's full run fits.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static REGISTRY: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static NEXT_TRACK: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+/// Turn recording on with the default per-thread ring capacity. Idempotent;
+/// the timestamp epoch is fixed on the first call of the process.
+pub fn enable() {
+    enable_with_capacity(DEFAULT_CAPACITY);
+}
+
+/// Turn recording on with an explicit per-thread ring capacity. Only rings
+/// created *after* the call adopt the new capacity; existing rings keep
+/// theirs (capacity is baked in at first-event time).
+pub fn enable_with_capacity(capacity: usize) {
+    CAPACITY.store(capacity.max(16), Ordering::Relaxed);
+    let _ = EPOCH.set(Instant::now());
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Turn recording off. Instrumentation sites revert to a single relaxed
+/// load; already-recorded events stay collectable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Is the recorder currently accepting events?
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Allocate a fresh track identity (used for session trace ids — one track
+/// per session on the exported timeline). Monotone, process-global, never 0.
+pub fn next_track_id() -> u64 {
+    NEXT_TRACK.fetch_add(1, Ordering::Relaxed)
+}
+
+#[inline]
+fn now_ns() -> u64 {
+    // Saturating u64 cast: u128 nanos overflow u64 after ~580 years.
+    EPOCH.get().map(|e| e.elapsed().as_nanos() as u64).unwrap_or(0)
+}
+
+fn ring_for_this_thread() -> Arc<Ring> {
+    let capacity = CAPACITY.load(Ordering::Relaxed);
+    let mut reg = REGISTRY.lock().unwrap();
+    let ring = Arc::new(Ring {
+        head: AtomicU64::new(0),
+        slots: (0..capacity).map(|_| Slot::default()).collect(),
+        id: reg.len(),
+    });
+    reg.push(ring.clone());
+    ring
+}
+
+/// Hot-path record. The one allocation a thread ever pays is its ring,
+/// created on its first recorded event; steady state is atomic stores only.
+#[inline]
+fn record(ts: u64, dur: u64, meta: u64, track: u64, a: i64, b: i64) {
+    RING.with(|cell| {
+        cell.get_or_init(ring_for_this_thread).write(ts, dur, meta, track, a, b);
+    });
+}
+
+/// Record an instant event (a point on the timeline, no duration).
+#[inline]
+pub fn instant(layer: Layer, name: Name, track: u64, a: i64, b: i64) {
+    if !is_enabled() {
+        return;
+    }
+    record(now_ns(), 0, pack_meta(false, layer, name), track, a, b);
+}
+
+/// A captured span start: a timestamp if tracing was on, inert otherwise.
+/// Use with [`complete`] when the span's track identity is only known at
+/// the end (e.g. admission learns its session id mid-span); use [`span`]
+/// when the track is known up front.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStart {
+    ts_ns: u64,
+    armed: bool,
+}
+
+/// Capture a span's start time (no-op marker when tracing is off).
+#[inline]
+pub fn begin() -> SpanStart {
+    if !is_enabled() {
+        return SpanStart { ts_ns: 0, armed: false };
+    }
+    SpanStart { ts_ns: now_ns(), armed: true }
+}
+
+/// Record the complete span `[start, now]`. Inert if `start` was captured
+/// while tracing was off (a span must measure its whole extent or nothing).
+#[inline]
+pub fn complete(start: SpanStart, layer: Layer, name: Name, track: u64, a: i64, b: i64) {
+    if !start.armed || !is_enabled() {
+        return;
+    }
+    let end = now_ns();
+    record(
+        start.ts_ns,
+        end.saturating_sub(start.ts_ns),
+        pack_meta(true, layer, name),
+        track,
+        a,
+        b,
+    );
+}
+
+/// An in-progress span with its identity fixed at start. Ended explicitly
+/// with [`Span::end`]; a dropped (e.g. unwound) span records nothing —
+/// trace collection tolerates missing spans, not torn ones.
+#[derive(Debug)]
+pub struct Span {
+    start: SpanStart,
+    layer: Layer,
+    name: Name,
+    track: u64,
+}
+
+/// Open a span on `track` (see [`TraceEvent::track`] for id conventions).
+#[inline]
+pub fn span(layer: Layer, name: Name, track: u64) -> Span {
+    Span { start: begin(), layer, name, track }
+}
+
+impl Span {
+    /// Close the span, recording it with its two arguments.
+    #[inline]
+    pub fn end(self, a: i64, b: i64) {
+        complete(self.start, self.layer, self.name, self.track, a, b);
+    }
+}
+
+/// Consumer of collected events — the subscriber half of the recorder.
+/// Exporters ([`crate::trace::chrome::ChromeTrace`], the Prometheus
+/// aggregation) implement this; nothing in the hot path ever calls a sink.
+pub trait TraceSink {
+    /// Receive a batch of decoded events (already timestamp-sorted when
+    /// delivered via [`flush_into`]).
+    fn consume(&mut self, events: &[TraceEvent]);
+}
+
+/// Snapshot every registered ring into one timestamp-sorted event list.
+/// Non-destructive (rings keep their contents) and safe to call while
+/// recording continues — concurrently-rewritten slots are skipped.
+pub fn collect() -> Vec<TraceEvent> {
+    let rings: Vec<Arc<Ring>> = REGISTRY.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.read_into(&mut out);
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.thread));
+    out
+}
+
+/// [`collect`] and hand the batch to a sink.
+pub fn flush_into(sink: &mut dyn TraceSink) {
+    let events = collect();
+    sink.consume(&events);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests share the process-global recorder with every other lib
+    // test (which may be driving instrumented sessions concurrently), so
+    // each test filters by a track id no production code can allocate:
+    // next_track_id() is monotone from 1, far below these constants.
+    const T1: u64 = 0xFEED_0001;
+    const T2: u64 = 0xFEED_0002;
+    const T3: u64 = 0xFEED_0003;
+
+    fn mine(track: u64) -> Vec<TraceEvent> {
+        collect().into_iter().filter(|e| e.track == track).collect()
+    }
+
+    #[test]
+    fn disabled_recorder_drops_events() {
+        // Tracing starts disabled; events recorded before enable() vanish.
+        // (Another test in this binary may already have enabled tracing —
+        // order is arbitrary — so only assert when we observed it off.)
+        if !is_enabled() {
+            instant(Layer::Solver, Name::HistoryPush, T3, 1, 2);
+            assert!(mine(T3).is_empty());
+        }
+        enable();
+        instant(Layer::Solver, Name::HistoryPush, T3, 3, 4);
+        let evs = mine(T3);
+        assert_eq!(evs.len(), 1);
+        assert_eq!((evs[0].a, evs[0].b), (3, 4));
+        assert!(!evs[0].span);
+    }
+
+    #[test]
+    fn spans_and_instants_round_trip() {
+        enable();
+        let s = span(Layer::Driver, Name::DriverRound, T1);
+        instant(Layer::Stream, Name::ChunkEmit, T1, 7, -9);
+        s.end(3, 42);
+        let evs = mine(T1);
+        assert_eq!(evs.len(), 2, "events: {evs:?}");
+        let sp = evs.iter().find(|e| e.span).expect("span recorded");
+        assert_eq!(sp.layer, Layer::Driver);
+        assert_eq!(sp.name, Name::DriverRound);
+        assert_eq!((sp.a, sp.b), (3, 42));
+        let inst = evs.iter().find(|e| !e.span).expect("instant recorded");
+        assert_eq!(inst.layer, Layer::Stream);
+        assert_eq!((inst.a, inst.b), (7, -9), "negative args survive the u64 slot");
+        assert!(sp.ts_ns <= inst.ts_ns, "span start precedes the instant inside it");
+    }
+
+    #[test]
+    fn ring_wrap_keeps_the_newest_events() {
+        enable();
+        // Far more events than any ring capacity; the newest must survive
+        // with monotone non-decreasing timestamps and intact payloads.
+        for i in 0..(DEFAULT_CAPACITY as i64 + 500) {
+            instant(Layer::Pool, Name::Execute, T2, i, -i);
+        }
+        let evs = mine(T2);
+        assert!(!evs.is_empty());
+        assert!(evs.len() <= DEFAULT_CAPACITY);
+        let last = evs.last().unwrap();
+        assert_eq!(last.a, DEFAULT_CAPACITY as i64 + 499, "newest event survives the wrap");
+        assert_eq!(last.b, -last.a, "payload halves stay consistent");
+        for w in evs.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns, "collect() must sort by timestamp");
+        }
+    }
+
+    #[test]
+    fn collection_is_non_destructive_and_cross_thread() {
+        enable();
+        let track = 0xFEED_0004;
+        std::thread::spawn(move || {
+            instant(Layer::Cache, Name::CacheLookup, track, 1, 0);
+        })
+        .join()
+        .unwrap();
+        let first: Vec<_> = mine(track);
+        assert_eq!(first.len(), 1, "another thread's ring is collected");
+        assert_eq!(mine(track), first, "collect() does not drain");
+    }
+
+    #[test]
+    fn track_ids_are_unique() {
+        let a = next_track_id();
+        let b = next_track_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn meta_packing_round_trips_every_layer_and_name() {
+        for layer in Layer::ALL {
+            for name in Name::ALL {
+                for span in [false, true] {
+                    let (s, l, n) = unpack_meta(pack_meta(span, layer, name)).unwrap();
+                    assert_eq!((s, l, n), (span, layer, name));
+                }
+                assert!(!layer.as_str().is_empty());
+                assert!(!name.as_str().is_empty());
+            }
+        }
+        assert!(unpack_meta(0xff).is_none(), "unknown name rejected");
+    }
+}

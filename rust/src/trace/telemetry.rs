@@ -1,0 +1,253 @@
+//! Per-session convergence telemetry: round → residual norm, front
+//! position, window size, NFE — the raw material behind the paper's
+//! residual-decay figures (Fig. 1/2), captured from real serving traffic
+//! instead of bespoke reruns.
+//!
+//! A [`SessionTelemetry`] is distilled from the solver's per-round
+//! [`IterationRecord`]s at finalize time, appended to a shared
+//! [`TelemetryLog`] hung off `CoordinatorConfig`, and persisted as JSON
+//! lines (one session per line) so `figures convergence` and the
+//! integration tests can replay it.
+
+use crate::solver::IterationRecord;
+use crate::util::json::{obj, Json};
+use std::sync::Mutex;
+
+/// One parallel round of one session, as the convergence figures see it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundTelemetry {
+    /// 1-based parallel round index.
+    pub round: usize,
+    /// ‖r‖₂ over rows with known residuals (√ of the recorded Σ r_p²-style
+    /// sum; the Fig. 1/2 y-axis on a log scale).
+    pub residual_norm: f64,
+    /// Residual front position: rows still unconverged (`T − converged`).
+    /// Theorem 3.6 says this never increases round-over-round.
+    pub front: usize,
+    /// Active window size this round (`t2 − t1 + 1`).
+    pub window: usize,
+    /// ε_θ evaluations spent this round.
+    pub nfe: usize,
+}
+
+/// Convergence telemetry for one admitted session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionTelemetry {
+    /// Session trace id — joins against recorder span tracks.
+    pub trace_id: u64,
+    /// Trajectory length T (rows to converge).
+    pub steps: usize,
+    /// Whether the stopping criterion was met for every row.
+    pub converged: bool,
+    /// Per-round progression, in round order.
+    pub rounds: Vec<RoundTelemetry>,
+}
+
+impl SessionTelemetry {
+    /// Distill a session's per-round records into telemetry rows.
+    pub fn from_records(
+        trace_id: u64,
+        steps: usize,
+        converged: bool,
+        records: &[IterationRecord],
+    ) -> Self {
+        let rounds = records
+            .iter()
+            .map(|r| RoundTelemetry {
+                round: r.iter,
+                residual_norm: r.residual_sum.max(0.0).sqrt(),
+                front: steps.saturating_sub(r.converged_rows),
+                window: r.t2 + 1 - r.t1,
+                nfe: r.nfe,
+            })
+            .collect();
+        Self { trace_id, steps, converged, rounds }
+    }
+
+    /// Encode as one JSON object (the JSONL line payload).
+    pub fn to_json(&self) -> Json {
+        let rounds = self
+            .rounds
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("round", Json::Num(r.round as f64)),
+                    ("residual_norm", Json::Num(r.residual_norm)),
+                    ("front", Json::Num(r.front as f64)),
+                    ("window", Json::Num(r.window as f64)),
+                    ("nfe", Json::Num(r.nfe as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("trace_id", Json::Num(self.trace_id as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("rounds", Json::Arr(rounds)),
+        ])
+    }
+
+    /// Decode one JSONL line's object; `None` when fields are missing or
+    /// of the wrong shape (a short row is a corrupt line, not a default).
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let trace_id = j.get("trace_id")?.as_f64()? as u64;
+        let steps = j.get("steps")?.as_usize()?;
+        let converged = match j.get("converged")? {
+            Json::Bool(b) => *b,
+            _ => return None,
+        };
+        let mut rounds = Vec::new();
+        for r in j.get("rounds")?.as_arr()? {
+            rounds.push(RoundTelemetry {
+                round: r.get("round")?.as_usize()?,
+                residual_norm: r.get("residual_norm")?.as_f64()?,
+                front: r.get("front")?.as_usize()?,
+                window: r.get("window")?.as_usize()?,
+                nfe: r.get("nfe")?.as_usize()?,
+            });
+        }
+        Some(Self { trace_id, steps, converged, rounds })
+    }
+}
+
+/// Serialize sessions as JSON lines (one session object per line).
+pub fn to_jsonl(sessions: &[SessionTelemetry]) -> String {
+    let mut out = String::new();
+    for s in sessions {
+        out.push_str(&s.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL telemetry dump; fails on the first corrupt line.
+pub fn parse_jsonl(text: &str) -> Result<Vec<SessionTelemetry>, String> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = crate::util::json::parse(line)
+            .map_err(|e| format!("telemetry line {}: {e}", idx + 1))?;
+        out.push(
+            SessionTelemetry::from_json(&j)
+                .ok_or_else(|| format!("telemetry line {}: missing fields", idx + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Shared, thread-safe collector the coordinator appends to at session
+/// finalize. Hangs off `CoordinatorConfig::telemetry`; drivers clone the
+/// `Arc` and record after `SolverSession::finish`.
+#[derive(Default)]
+pub struct TelemetryLog {
+    sessions: Mutex<Vec<SessionTelemetry>>,
+}
+
+impl std::fmt::Debug for TelemetryLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.sessions.lock().map(|s| s.len()).unwrap_or(0);
+        write!(f, "TelemetryLog({n} sessions)")
+    }
+}
+
+impl TelemetryLog {
+    /// An empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one finished session's telemetry.
+    pub fn record(&self, session: SessionTelemetry) {
+        self.sessions.lock().unwrap().push(session);
+    }
+
+    /// Sessions recorded so far (clone — the log keeps collecting).
+    pub fn sessions(&self) -> Vec<SessionTelemetry> {
+        self.sessions.lock().unwrap().clone()
+    }
+
+    /// Render everything recorded so far as JSON lines.
+    pub fn to_jsonl(&self) -> String {
+        to_jsonl(&self.sessions())
+    }
+
+    /// Write the JSONL dump to `path`.
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, t1: usize, t2: usize, sum: f64, converged_rows: usize) -> IterationRecord {
+        IterationRecord {
+            iter,
+            t1,
+            t2,
+            nfe: t2 + 1 - t1,
+            residual_sum: sum,
+            max_residual_ratio: 2.0,
+            converged_rows,
+            row_residuals: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn from_records_derives_front_window_and_norm() {
+        let records = [rec(1, 0, 7, 16.0, 0), rec(2, 3, 10, 4.0, 3), rec(3, 9, 15, 0.25, 16)];
+        let t = SessionTelemetry::from_records(42, 16, true, &records);
+        assert_eq!(t.trace_id, 42);
+        assert_eq!(t.rounds.len(), 3);
+        assert_eq!(t.rounds[0].front, 16);
+        assert_eq!(t.rounds[1].front, 13);
+        assert_eq!(t.rounds[2].front, 0);
+        assert_eq!(t.rounds[0].window, 8);
+        assert_eq!(t.rounds[1].residual_norm, 2.0);
+        assert_eq!(t.rounds[2].nfe, 7);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let a = SessionTelemetry::from_records(7, 8, true, &[rec(1, 0, 3, 9.0, 2)]);
+        let b = SessionTelemetry::from_records(8, 8, false, &[rec(1, 0, 3, 1.0, 0)]);
+        let text = to_jsonl(&[a.clone(), b.clone()]);
+        assert_eq!(text.lines().count(), 2);
+        let parsed = parse_jsonl(&text).unwrap();
+        assert_eq!(parsed, vec![a, b]);
+    }
+
+    #[test]
+    fn parse_rejects_corrupt_lines_with_line_numbers() {
+        let err = parse_jsonl("{\"trace_id\": 1}\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = parse_jsonl("not json\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        // Blank lines are tolerated.
+        let ok = parse_jsonl("\n\n");
+        assert_eq!(ok.unwrap().len(), 0);
+    }
+
+    #[test]
+    fn log_collects_across_threads() {
+        use std::sync::Arc;
+        let log = Arc::new(TelemetryLog::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|i| {
+                let log = Arc::clone(&log);
+                std::thread::spawn(move || {
+                    log.record(SessionTelemetry::from_records(i, 4, true, &[rec(1, 0, 3, 1.0, 4)]));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.sessions().len(), 4);
+        assert_eq!(log.to_jsonl().lines().count(), 4);
+        assert!(format!("{log:?}").contains("4 sessions"));
+    }
+}

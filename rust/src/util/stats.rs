@@ -57,22 +57,35 @@ impl Summary {
 /// Percentile over a sample buffer (exact, by sorting a copy). Callers
 /// taking several percentiles of one buffer should sort once and use
 /// [`percentile_sorted`].
+///
+/// Sentinel behaviour (shared with [`percentile_sorted`]): an empty buffer
+/// or a non-finite `p` returns `NaN` — "no answer", never a panic. The
+/// JSON writer serializes that as `null` and the Prometheus renderer omits
+/// the sample, so the sentinel is safe to propagate. NaN *samples* are
+/// ordered by IEEE total order (`f64::total_cmp`), i.e. above +inf — they
+/// distort nothing below the rank they occupy.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     if samples.is_empty() {
         return f64::NAN;
     }
     let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): one NaN sample (e.g. a 0/0
+    // upstream) must not panic the metrics path.
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
-/// Percentile over an already ascending-sorted buffer.
+/// Percentile over an already ascending-sorted buffer. Exact (no
+/// interpolation): the sample at rank `round(p · (n−1))`, so `n = 1`
+/// returns the lone sample for every `p` and `p` outside [0, 1] clamps to
+/// the extremes. Empty buffer or non-finite `p` ⇒ `NaN` (see
+/// [`percentile`] for why the sentinel, not a panic).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
+    if sorted.is_empty() || !p.is_finite() {
         return f64::NAN;
     }
     let rank = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[rank]
+    sorted[rank.min(sorted.len() - 1)]
 }
 
 #[cfg(test)]
@@ -101,5 +114,37 @@ mod tests {
         assert!(percentile(&[], 0.5).is_nan());
         assert_eq!(percentile_sorted(&v, 0.95), 95.0);
         assert!(percentile_sorted(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn percentile_edge_cases_return_sentinels_not_panics() {
+        // n = 0: NaN for every p, both helpers.
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert!(percentile(&[], p).is_nan());
+            assert!(percentile_sorted(&[], p).is_nan());
+        }
+        // n = 1: the lone sample for every p, including out-of-range p.
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0, -3.0, 7.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0);
+            assert_eq!(percentile_sorted(&[42.0], p), 42.0);
+        }
+        // p outside [0, 1] clamps to the extremes.
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&v, -1.0), 1.0);
+        assert_eq!(percentile(&v, 2.0), 3.0);
+        // Non-finite p: NaN sentinel, not an arbitrary rank.
+        assert!(percentile(&v, f64::NAN).is_nan());
+        assert!(percentile(&v, f64::INFINITY).is_nan());
+        assert!(percentile_sorted(&v, f64::NEG_INFINITY).is_nan());
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_sort_above_inf() {
+        // Regression: partial_cmp().unwrap() panicked here.
+        let v = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        // total order: [1, 2, 3, NaN] — rank round(0.5·3) = 2 → 3.0.
+        assert_eq!(percentile(&v, 0.5), 3.0);
+        assert!(percentile(&v, 1.0).is_nan(), "NaN sorts last under total order");
     }
 }

@@ -1,0 +1,154 @@
+//! End-to-end round trip of the ISSUE-6 tracing subsystem over live
+//! streaming coordinator traffic: every admitted session must leave a
+//! complete span tree (admission → N rounds → finalize) joined on its
+//! trace id, the trace-derived counters must equal the metrics the
+//! coordinator reports, and all three exporters — Chrome trace JSON,
+//! Prometheus text, convergence telemetry — must round-trip what the
+//! run recorded.
+//!
+//! One `#[test]` only: the span recorder is process-global, and
+//! concurrent tests in the same binary would interleave their events
+//! into the count-equality assertions below.
+
+use std::sync::Arc;
+
+use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
+use parataa::figures::convergence::{check_monotone_fronts, curves};
+use parataa::model::gmm::GmmEps;
+use parataa::model::Cond;
+use parataa::runtime::{DevicePool, PoolConfig};
+use parataa::schedule::{BetaSchedule, NoiseSchedule};
+use parataa::trace::telemetry::{parse_jsonl, TelemetryLog};
+use parataa::trace::{self, chrome, prom, Layer, Name};
+use parataa::util::json::parse;
+use parataa::util::rng::Pcg64;
+
+fn gmm_model() -> Arc<GmmEps> {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let mut rng = Pcg64::seeded(7);
+    let d = 8;
+    let means: Vec<f32> = (0..8 * d).map(|_| 2.0 * rng.next_f32() - 1.0).collect();
+    Arc::new(GmmEps::new(means, d, 0.25, ns.alpha_bars.clone()))
+}
+
+#[test]
+fn streaming_run_round_trips_through_every_exporter() {
+    trace::enable();
+    let telemetry = Arc::new(TelemetryLog::new());
+    let model = gmm_model();
+    // A real device pool behind the coordinator, so the pool layer's
+    // dispatch/execute spans are part of the round trip.
+    let pool = DevicePool::in_process(model, 2, PoolConfig::default()).unwrap();
+    let handle = Arc::new(pool.eps_handle("gmm-pooled"));
+    let coord = Coordinator::start(
+        handle,
+        CoordinatorConfig {
+            workers: 2,
+            drivers: 2,
+            devices: pool.devices(),
+            telemetry: Some(telemetry.clone()),
+            ..Default::default()
+        },
+    );
+    coord.attach_pool(pool.stats());
+
+    const N: usize = 6;
+    const STEPS: usize = 16;
+    let handles: Vec<_> = (0..N)
+        .map(|i| {
+            let mut r =
+                SampleRequest::parataa(Cond::Class(1), 700 + i as u64, SamplerSpec::ddim(STEPS));
+            r.guidance = 2.0;
+            coord.submit_streaming(r)
+        })
+        .collect();
+    let mut resp_rounds: Vec<usize> = Vec::new();
+    let mut chunks_seen = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let mut rows = 0usize;
+        while let Some(c) = h.next_chunk() {
+            rows += c.rows.len();
+            chunks_seen += 1;
+        }
+        let resp = h.wait().unwrap();
+        assert!(resp.converged, "stream {i} did not converge");
+        assert_eq!(rows, STEPS, "stream {i}: chunks tile the trajectory");
+        resp_rounds.push(resp.rounds);
+    }
+    let snapshot = coord.metrics();
+    drop(coord); // drivers quiesce before the event log is read
+    drop(pool);
+
+    let events = trace::collect();
+    let sessions = telemetry.sessions();
+    assert_eq!(sessions.len(), N, "one telemetry record per admitted session");
+
+    // --- span-tree completeness, joined on the session trace id ---------
+    for s in &sessions {
+        let count = |layer: Layer, name: Name| {
+            events
+                .iter()
+                .filter(|e| e.span && e.layer == layer && e.name == name && e.track == s.trace_id)
+                .count()
+        };
+        assert_eq!(count(Layer::Session, Name::Admit), 1, "session {}", s.trace_id);
+        assert_eq!(count(Layer::Session, Name::Finalize), 1, "session {}", s.trace_id);
+        assert!(!s.rounds.is_empty(), "session {} recorded no rounds", s.trace_id);
+        assert_eq!(
+            count(Layer::Solver, Name::Round),
+            s.rounds.len(),
+            "session {}: solver round spans == telemetry rounds",
+            s.trace_id
+        );
+    }
+    // The responses' round counts match the telemetry as a multiset
+    // (responses do not carry trace ids, so the join is by distribution).
+    let mut by_telemetry: Vec<usize> = sessions.iter().map(|s| s.rounds.len()).collect();
+    by_telemetry.sort_unstable();
+    resp_rounds.sort_unstable();
+    assert_eq!(by_telemetry, resp_rounds, "telemetry rounds == response rounds");
+
+    // --- trace-derived counters equal the coordinator's metrics ---------
+    let driver_rounds =
+        events.iter().filter(|e| e.span && e.name == Name::DriverRound).count() as u64;
+    assert_eq!(driver_rounds, snapshot.rounds_driven, "Σ driver_round spans == rounds_driven");
+    let chunk_emits = events.iter().filter(|e| !e.span && e.name == Name::ChunkEmit).count() as u64;
+    assert_eq!(chunk_emits, snapshot.prefix_chunks_sent);
+    assert_eq!(chunks_seen, snapshot.prefix_chunks_sent, "every emitted chunk was delivered");
+
+    // The pool layer recorded work on both devices.
+    assert!(events.iter().any(|e| e.span && e.layer == Layer::Pool && e.name == Name::Dispatch));
+    for dev in 0..2u64 {
+        assert!(
+            events.iter().any(|e| e.span && e.name == Name::Execute && e.track == dev),
+            "device {dev} executed no shards"
+        );
+    }
+
+    // --- exporter 1: Chrome trace JSON ----------------------------------
+    let rendered = chrome::render(&events).to_string();
+    let json = parse(&rendered).expect("chrome trace re-parses");
+    let trace_events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(trace_events.len() > events.len(), "events plus metadata records");
+    for cat in ["solver", "driver", "pool", "session", "stream"] {
+        let n = trace_events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some(cat))
+            .count();
+        assert!(n > 0, "no Chrome events for instrumented layer {cat}");
+    }
+
+    // --- exporter 2: Prometheus text exposition -------------------------
+    let prom_text = prom::render(&snapshot);
+    let samples = prom::validate(&prom_text).expect("prometheus exposition validates");
+    assert!(samples > 0);
+    assert!(prom_text.contains("parataa_requests_completed_total 6"), "{prom_text}");
+    assert!(prom_text.contains("parataa_trace_events_total{layer=\"driver\"}"));
+
+    // --- exporter 3: convergence telemetry ------------------------------
+    check_monotone_fronts(&sessions).expect("Thm 3.6: fronts are monotone");
+    let reparsed = parse_jsonl(&telemetry.to_jsonl()).expect("telemetry JSONL round-trips");
+    assert_eq!(reparsed, sessions);
+    let table = curves(&sessions);
+    assert_eq!(table.rows.len(), sessions.iter().map(|s| s.rounds.len()).sum::<usize>());
+}

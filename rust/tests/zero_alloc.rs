@@ -5,6 +5,12 @@
 //! history pushes, cached suffix-Gram scans, and `apply_update_ws` for all
 //! three Anderson variants — must perform **zero** heap allocations.
 //!
+//! Tracing is **enabled** (but unsubscribed) for the whole window: the
+//! ISSUE-6 recorder must cost at most a few atomic stores into the
+//! thread's pre-allocated ring per instrumented call, never a heap
+//! allocation. The ring itself is allocated at the thread's first recorded
+//! event, which the warmup below triggers before the measured window.
+//!
 //! One `#[test]` only: the counter is process-global, and concurrent tests
 //! in the same binary would pollute the window.
 
@@ -47,6 +53,10 @@ fn steady_state_rounds_allocate_nothing() {
     // The ISSUE-4 regime: W=100 rows, D=256 features, m=8 history columns.
     let (w, d, m) = (100usize, 256usize, 8usize);
     let mut rng = Pcg64::seeded(77);
+
+    // Tracing on, nobody collecting — the hot loop's instrumentation
+    // (history pushes) must still allocate nothing in steady state.
+    parataa::trace::enable();
 
     let mut history = History::new(m, w, d);
     let dx = rng.gaussian_vec(w * d);
