@@ -47,6 +47,9 @@ struct Inner {
     prefix_rows: u64,
     /// Per streaming request: ms from enqueue to its first prefix chunk.
     first_prefix_ms: Vec<f64>,
+    /// Multi-fidelity coarse rounds (draft rounds + Parareal sweeps)
+    /// across finalized sessions.
+    coarse_rounds: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -96,6 +99,10 @@ pub struct MetricsSnapshot {
     pub first_prefix_ms_p50: f64,
     /// 95th-percentile ms to the first prefix chunk.
     pub first_prefix_ms_p95: f64,
+    /// Multi-fidelity coarse rounds (draft-phase rounds plus Parareal
+    /// sweeps) across finalized sessions — 0 when every request ran the
+    /// plain single-fidelity path.
+    pub coarse_rounds_total: u64,
     /// Per-device pool breakdown (empty unless a pool is attached).
     pub devices: Vec<DeviceStat>,
 }
@@ -220,6 +227,12 @@ impl Metrics {
         })
     }
 
+    /// Record a finalized session's multi-fidelity coarse-round count
+    /// (draft rounds + Parareal sweeps; 0 under the plain strategy).
+    pub fn record_coarse_rounds(&self, n: usize) {
+        self.inner.lock().unwrap().coarse_rounds += n as u64;
+    }
+
     /// One merged round call: `sessions` sessions contributed `rows` window
     /// rows across `groups` guidance groups (device calls).
     pub fn record_round(&self, sessions: usize, rows: usize, groups: usize) {
@@ -274,6 +287,7 @@ impl Metrics {
             prefix_rows_streamed: m.prefix_rows,
             first_prefix_ms_p50: percentile_sorted(&first_prefix, 0.50),
             first_prefix_ms_p95: percentile_sorted(&first_prefix, 0.95),
+            coarse_rounds_total: m.coarse_rounds,
             devices: self
                 .pool
                 .lock()
@@ -321,6 +335,7 @@ impl MetricsSnapshot {
             ),
             ("first_prefix_ms_p50", Json::Num(self.first_prefix_ms_p50)),
             ("first_prefix_ms_p95", Json::Num(self.first_prefix_ms_p95)),
+            ("coarse_rounds_total", Json::Num(self.coarse_rounds_total as f64)),
             (
                 "devices",
                 Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
@@ -407,7 +422,14 @@ mod tests {
         m.session_finished();
         m.record_round(3, 75, 1);
         m.record_round(1, 25, 1);
+        m.record_coarse_rounds(4);
+        m.record_coarse_rounds(0); // plain sessions contribute nothing
         let s = m.snapshot();
+        assert_eq!(s.coarse_rounds_total, 4);
+        assert_eq!(
+            s.to_json().get("coarse_rounds_total").and_then(|v| v.as_f64()),
+            Some(4.0)
+        );
         assert_eq!(s.driver_threads, 2);
         assert_eq!(s.sessions_in_flight, 2);
         assert_eq!(s.peak_sessions_in_flight, 3);

@@ -3,7 +3,7 @@
 
 use crate::model::Cond;
 use crate::schedule::SamplerKind;
-use crate::solver::{Method, SolverConfig, WindowPolicy};
+use crate::solver::{Method, SolveStrategy, SolverConfig, WindowPolicy};
 use std::time::Duration;
 
 /// Which sequential algorithm (and how many steps) the request wants to
@@ -59,6 +59,12 @@ pub struct SampleRequest {
     /// round drivers' occupancy signal grow/shrink w each round. Adaptive
     /// requests reserve their `max_window` bound from the slot budget.
     pub window_policy: WindowPolicy,
+    /// Multi-fidelity solve strategy. [`SolveStrategy::PlainTaa`] (default)
+    /// runs the single-fidelity paper path; `DraftRefine`/`Parareal`
+    /// sessions interleave coarse rounds. Heterogeneous strategies co-batch
+    /// freely: coarse ε batches carry the same guidance as fine ones, so
+    /// the round drivers' merge path is unchanged.
+    pub strategy: SolveStrategy,
 }
 
 impl SampleRequest {
@@ -76,6 +82,7 @@ impl SampleRequest {
             max_rounds: None,
             use_trajectory_cache: false,
             window_policy: WindowPolicy::Fixed,
+            strategy: SolveStrategy::PlainTaa,
         }
     }
 
@@ -105,6 +112,7 @@ impl SampleRequest {
             cfg.s_max = 4 * steps;
         }
         cfg.window_policy = self.window_policy.clone();
+        cfg.strategy = self.strategy.clone();
         cfg
     }
 }
@@ -173,6 +181,20 @@ mod tests {
             ..SampleRequest::parataa(Cond::Class(1), 7, SamplerSpec::ddim(50))
         };
         assert_eq!(fp.solver_config().k, 50, "FP defaults to k = w (PL iteration)");
+    }
+
+    #[test]
+    fn strategy_threads_through() {
+        use crate::solver::{DraftRefineConfig, PararealConfig};
+        let mut r = SampleRequest::parataa(Cond::Class(0), 3, SamplerSpec::ddim(32));
+        assert!(r.solver_config().strategy.is_plain(), "plain is the default");
+        r.strategy = SolveStrategy::DraftRefine(DraftRefineConfig::default());
+        assert_eq!(r.solver_config().strategy.label(), "draft_refine");
+        r.strategy = SolveStrategy::Parareal(PararealConfig { stride: 5 });
+        assert_eq!(
+            r.solver_config().strategy,
+            SolveStrategy::Parareal(PararealConfig { stride: 5 })
+        );
     }
 
     #[test]

@@ -766,6 +766,7 @@ fn finalize(
     } else {
         None
     };
+    metrics.record_coarse_rounds(session.coarse_rounds());
     let result = session.finish();
     if let Some(log) = &cfg.telemetry {
         log.record(SessionTelemetry::from_records(
@@ -900,6 +901,66 @@ mod tests {
             assert_eq!(resp.rounds, solo.iterations, "request {i}");
             assert_eq!(resp.nfe, solo.total_nfe, "request {i}");
         }
+    }
+
+    /// Heterogeneous solve strategies co-exist in the same merged rounds:
+    /// plain, draft-refine and Parareal sessions share one service, their
+    /// ε batches co-batch into a single guidance group per round (coarse
+    /// batches carry the same guidance, so the merge path needs nothing
+    /// special), and every response is bit-identical to a solo blocking
+    /// solve of the same request.
+    #[test]
+    fn mixed_strategies_cobatch_and_match_solo_solves() {
+        use crate::solver::{DraftRefineConfig, PararealConfig, SolveStrategy};
+        let model = gmm_model();
+        let coord = Coordinator::start(
+            model.clone(),
+            CoordinatorConfig { workers: 2, drivers: 2, ..Default::default() },
+        );
+        let strategies = [
+            SolveStrategy::PlainTaa,
+            SolveStrategy::DraftRefine(DraftRefineConfig::default()),
+            SolveStrategy::Parareal(PararealConfig::default()),
+        ];
+        let reqs: Vec<SampleRequest> = (0..6)
+            .map(|i| {
+                let mut r = basic_req(40 + i as u64);
+                r.strategy = strategies[i % strategies.len()].clone();
+                r.max_rounds = Some(400);
+                r
+            })
+            .collect();
+        let handles: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone())).collect();
+        let responses: Vec<_> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        for (i, (req, resp)) in reqs.iter().zip(&responses).enumerate() {
+            assert!(resp.converged, "request {i} ({})", req.strategy.label());
+            let p = Problem::new(&coeffs, &*model, req.cond.clone(), req.seed);
+            let solo = crate::solver::solve(&p, &req.solver_config());
+            assert_eq!(
+                resp.sample,
+                solo.xs.row(0).to_vec(),
+                "request {i} ({})",
+                req.strategy.label()
+            );
+            assert_eq!(resp.rounds, solo.iterations, "request {i}");
+            assert_eq!(resp.nfe, solo.total_nfe, "request {i}");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.failed, 0);
+        // Every request shares the guidance scale, so co-batched rounds
+        // still collapse into one device call each.
+        assert!(
+            (m.merge_groups_mean - 1.0).abs() < 1e-9,
+            "same-guidance mixed strategies must form one group per round (got {})",
+            m.merge_groups_mean
+        );
+        assert!(
+            m.coarse_rounds_total > 0,
+            "draft/parareal sessions must have recorded coarse rounds"
+        );
     }
 
     /// One round driver fairly carries many sessions with heterogeneous

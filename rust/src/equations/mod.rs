@@ -117,6 +117,35 @@ pub fn eval_fk(
     }
 }
 
+/// DDIM(η) bridge coefficients `(a, b, σ)` for one step from a noisier
+/// state at signal level `abar_hi` down to a cleaner state at `abar_lo` —
+/// the `SamplerCoeffs::new` formulas applied to an *arbitrary* pair of
+/// schedule points instead of adjacent grid entries:
+///
+///   a = √(ᾱ_lo/ᾱ_hi),
+///   σ = η·√((1−ᾱ_lo)/(1−ᾱ_hi))·√(1−ᾱ_hi/ᾱ_lo)   (0 when ᾱ_lo = 1),
+///   b = √(max(0, 1−ᾱ_lo−σ²)) − a·√(1−ᾱ_hi).
+///
+/// This is the coarse-operator primitive of the multi-fidelity strategies
+/// (`solver/strategy.rs`): `SamplerCoeffs::coarsen` bridges subsetted
+/// nodes of an existing fine grid, and the Parareal sweep bridges window
+/// rows directly. The `ᾱ_lo = 1` target (the clean sample) is exactly
+/// deterministic, matching the fine grid's final-step convention.
+pub fn bridge_coeffs(abar_hi: f64, abar_lo: f64, eta: f64) -> (f64, f64, f64) {
+    debug_assert!(
+        abar_hi > 0.0 && abar_lo >= abar_hi && abar_lo <= 1.0,
+        "bridge requires 0 < ᾱ_hi ≤ ᾱ_lo ≤ 1 (got hi={abar_hi}, lo={abar_lo})"
+    );
+    let a = (abar_lo / abar_hi).sqrt();
+    let sigma = if abar_lo < 1.0 {
+        eta * ((1.0 - abar_lo) / (1.0 - abar_hi)).sqrt() * (1.0 - abar_hi / abar_lo).sqrt()
+    } else {
+        0.0
+    };
+    let b = (1.0 - abar_lo - sigma * sigma).max(0.0).sqrt() - a * (1.0 - abar_hi).sqrt();
+    (a, b, sigma)
+}
+
 /// First-order residual r_p = ‖x_p − a_{p+1}x_{p+1} − b_{p+1}ε_{p+1} −
 /// c_p ξ_p‖² (eq. 11) — the universal stopping criterion for every order k.
 pub fn residual_sq(
@@ -400,6 +429,51 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn bridge_recovers_the_grid_coefficients() {
+        // Bridging adjacent per-state ᾱ values must reproduce the grid's
+        // own (a, b, c) — SamplerCoeffs::new and bridge_coeffs are the
+        // same formulas on different inputs.
+        forall("bridge_vs_grid", 12, |rng, _| {
+            let steps = size_in(rng, 2, 24);
+            let eta = rng.next_f32() as f64;
+            let coeffs = setup(steps, SamplerKind::Eta(eta));
+            let abar = coeffs.state_alpha_bars();
+            for t in 1..=steps {
+                let (a, b, sigma) = bridge_coeffs(abar[t], abar[t - 1], eta);
+                if (a - coeffs.a[t]).abs() > 1e-9 {
+                    return Err(format!("a[{t}]: {a} vs {}", coeffs.a[t]));
+                }
+                if (b - coeffs.b[t]).abs() > 1e-9 {
+                    return Err(format!("b[{t}]: {b} vs {}", coeffs.b[t]));
+                }
+                if (sigma - coeffs.c[t - 1]).abs() > 1e-9 {
+                    return Err(format!("c[{}]: {sigma} vs {}", t - 1, coeffs.c[t - 1]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bridge_composes_across_skipped_nodes() {
+        // A single bridge over [lo, hi] and the two-hop path through any
+        // midpoint transport the signal identically: a and the total noise
+        // magnitude (b+a·√(1−ᾱ_hi) combined with σ in quadrature) depend
+        // only on the endpoints.
+        let coeffs = setup(16, SamplerKind::Ddpm);
+        let abar = coeffs.state_alpha_bars();
+        let (lo, mid, hi) = (2usize, 7usize, 13usize);
+        let (a_direct, b_direct, s_direct) = bridge_coeffs(abar[hi], abar[lo], 1.0);
+        let (a1, _, _) = bridge_coeffs(abar[hi], abar[mid], 1.0);
+        let (a2, _, _) = bridge_coeffs(abar[mid], abar[lo], 1.0);
+        assert!((a_direct - a1 * a2).abs() < 1e-12, "a composes multiplicatively");
+        // Endpoint-only variance identity (the same one the grid
+        // satisfies): (b + a·√(1−ᾱ_hi))² + σ² = 1 − ᾱ_lo.
+        let dir = b_direct + a_direct * (1.0 - abar[hi]).sqrt();
+        assert!((dir * dir + s_direct * s_direct - (1.0 - abar[lo])).abs() < 1e-10);
     }
 
     #[test]

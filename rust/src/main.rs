@@ -61,7 +61,10 @@ fn help() {
                        deliver each request's converged prefix incrementally and\n\
                        verify the streamed states bitwise against a non-streaming\n\
                        re-run; --adaptive-window: size each solve's window from\n\
-                       convergence velocity + pool occupancy; prints merge\n\
+                       convergence velocity + pool occupancy;\n\
+                       --strategies plain|mixed: 'mixed' cycles the requests\n\
+                       through plain / draft-and-refine / Parareal\n\
+                       multi-fidelity solve strategies; prints merge\n\
                        occupancy, streaming counters + a per-device utilization\n\
                        breakdown; --json dumps the metrics snapshot;\n\
                        --trace FILE: Chrome trace-event JSON of the whole run,\n\
@@ -222,6 +225,12 @@ fn cmd_serve(args: &Args) {
     let devices = args.usize_or("devices", 1).max(1);
     let stream = args.has_flag("stream");
     let adaptive = args.has_flag("adaptive-window");
+    let strategies = args.get_or("strategies", "plain");
+    let mixed = match strategies.as_str() {
+        "plain" => false,
+        "mixed" => true,
+        other => panic!("unknown --strategies '{other}' (expected plain|mixed)"),
+    };
 
     // Observability taps (ISSUE 6): --trace wants span events, and the
     // --prom-out exposition carries trace-derived histograms, so either
@@ -256,10 +265,11 @@ fn cmd_serve(args: &Args) {
 
     eprintln!(
         "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s), \
-         {drivers} round driver(s){}{} ...",
+         {drivers} round driver(s){}{}{} ...",
         model_choice.label(),
         if stream { ", streaming prefixes" } else { "" },
         if adaptive { ", adaptive windows" } else { "" },
+        if mixed { ", mixed strategies" } else { "" },
     );
     let mut rng = Pcg64::seeded(args.u64_or("seed", 0));
     let conds: Vec<Cond> =
@@ -277,6 +287,17 @@ fn cmd_serve(args: &Args) {
             // Start below the cap so velocity-driven growth has room to
             // act — at the full window the controller could only shrink.
             req.window = Some((steps / 4).max(1));
+        }
+        if mixed {
+            // Cycle the multi-fidelity strategies so every serve round
+            // co-batches coarse and fine ε sources (the CI strategy smoke
+            // asserts coarse_round spans + zero failures on this path).
+            use parataa::solver::{DraftRefineConfig, PararealConfig, SolveStrategy};
+            req.strategy = match i % 3 {
+                0 => SolveStrategy::PlainTaa,
+                1 => SolveStrategy::DraftRefine(DraftRefineConfig::default()),
+                _ => SolveStrategy::Parareal(PararealConfig::default()),
+            };
         }
         req
     };

@@ -122,6 +122,59 @@ impl SamplerCoeffs {
     pub fn is_ode(&self) -> bool {
         self.c.iter().all(|&x| x == 0.0)
     }
+
+    /// The schedule ᾱ at every solver state row (length T+1, `[0] = 1`),
+    /// recovered from the step coefficients alone: a_t = √(ᾱ_{t-1}/ᾱ_t)
+    /// telescopes to ᾱ_t = ᾱ_{t-1} / a_t². This is what lets a coarse
+    /// operator be built *from an existing fine grid* without re-deriving
+    /// the noise schedule (multi-fidelity strategies,
+    /// `solver/strategy.rs`).
+    pub fn state_alpha_bars(&self) -> Vec<f64> {
+        let mut ab = vec![1.0f64; self.steps + 1];
+        for t in 1..=self.steps {
+            ab[t] = ab[t - 1] / (self.a[t] * self.a[t]);
+        }
+        ab
+    }
+
+    /// Build a coarse operator over a `coarse_steps`-row subset of this
+    /// grid. Returns the coarse coefficients plus the node map `idx0`
+    /// (length C+1, strictly increasing, `idx0[0] = 0`, `idx0[C] = T`):
+    /// coarse state row c lives at fine state row `idx0[c]`, so coarse ξ
+    /// rows, thresholds and the lifted trajectory all index through it.
+    ///
+    /// Each coarse step bridges two fine states with the same DDIM(η)
+    /// formulas the fine grid uses ([`crate::equations::bridge_coeffs`]
+    /// over the telescoped [`Self::state_alpha_bars`]), so the coarse
+    /// sequential rollout follows the *same* probability-flow path at
+    /// lower resolution — the draft a `DraftRefine` solve refines.
+    pub fn coarsen(&self, coarse_steps: usize) -> (SamplerCoeffs, Vec<usize>) {
+        let t_count = self.steps;
+        let c_count = coarse_steps.clamp(1, t_count);
+        let mut idx0 = Vec::with_capacity(c_count + 1);
+        for c in 0..=c_count {
+            idx0.push(c * t_count / c_count);
+        }
+        let abar = self.state_alpha_bars();
+        let eta = self.kind.eta();
+        let mut a = vec![0.0; c_count + 1];
+        let mut b = vec![0.0; c_count + 1];
+        let mut c_vec = vec![0.0; c_count];
+        let mut train_t = vec![0usize; c_count + 1];
+        let mut g2 = vec![0.0; c_count];
+        for c in 1..=c_count {
+            let (lo, hi) = (idx0[c - 1], idx0[c]);
+            let (a_c, b_c, sigma) = crate::equations::bridge_coeffs(abar[hi], abar[lo], eta);
+            a[c] = a_c;
+            b[c] = b_c;
+            c_vec[c - 1] = sigma;
+            // The coarse state *is* the fine state at the node row: same
+            // training timestep in, same residual threshold out.
+            train_t[c] = self.train_t[hi];
+            g2[c - 1] = self.g2[hi - 1];
+        }
+        (SamplerCoeffs { kind: self.kind, steps: c_count, a, b, c: c_vec, train_t, g2 }, idx0)
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +273,90 @@ mod tests {
         let e2 = sc.threshold(10, 1e-3, 512);
         assert!((e2 / e1 - 2.0).abs() < 1e-12);
         assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn state_alpha_bars_match_the_schedule() {
+        let ns = sched();
+        for kind in [SamplerKind::Ddim, SamplerKind::Ddpm, SamplerKind::Eta(0.3)] {
+            let sc = SamplerCoeffs::new(&ns, kind, 25);
+            let abar = sc.state_alpha_bars();
+            let taus = ns.subset_timesteps(25);
+            assert_eq!(abar[0], 1.0);
+            for t in 1..=25usize {
+                let want = ns.alpha_bar(taus[t - 1]);
+                assert!(
+                    (abar[t] - want).abs() < 1e-10,
+                    "{} state {t}: {} vs {want}",
+                    kind.label(),
+                    abar[t]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coarsen_node_map_tiles_the_grid() {
+        let sc = SamplerCoeffs::new(&sched(), SamplerKind::Ddim, 50);
+        for c_steps in [1usize, 3, 10, 12, 50] {
+            let (coarse, idx0) = sc.coarsen(c_steps);
+            assert_eq!(coarse.steps, c_steps);
+            assert_eq!(idx0.len(), c_steps + 1);
+            assert_eq!(idx0[0], 0);
+            assert_eq!(idx0[c_steps], 50);
+            for c in 1..=c_steps {
+                assert!(idx0[c] > idx0[c - 1], "node map must be strictly increasing");
+                // Node alignment: same training timestep and threshold
+                // inputs as the fine state it represents.
+                assert_eq!(coarse.train_t[c], sc.train_t[idx0[c]]);
+                assert_eq!(coarse.g2[c - 1], sc.g2[idx0[c] - 1]);
+            }
+        }
+        // Oversized requests clamp to the fine grid (identity node map).
+        let (full, idx0) = sc.coarsen(500);
+        assert_eq!(full.steps, 50);
+        assert_eq!(idx0, (0..=50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coarsen_preserves_signal_and_variance() {
+        // The coarse steps must satisfy the same signal-preservation and
+        // (for η=1) variance-preservation identities as the fine grid,
+        // evaluated on the telescoped per-state ᾱ.
+        let ns = sched();
+        for kind in [SamplerKind::Ddim, SamplerKind::Ddpm] {
+            let sc = SamplerCoeffs::new(&ns, kind, 48);
+            let abar = sc.state_alpha_bars();
+            let (coarse, idx0) = sc.coarsen(12);
+            for c in 1..=12usize {
+                let (abar_lo, abar_hi) = (abar[idx0[c - 1]], abar[idx0[c]]);
+                let lhs_sig = coarse.a[c] * abar_hi.sqrt();
+                assert!((lhs_sig - abar_lo.sqrt()).abs() < 1e-10, "signal at c={c}");
+                let dir = coarse.a[c] * (1.0 - abar_hi).sqrt() + coarse.b[c];
+                let total = dir * dir + coarse.c[c - 1] * coarse.c[c - 1];
+                assert!(
+                    (total - (1.0 - abar_lo)).abs() < 1e-9,
+                    "{} variance at c={c}: {total} vs {}",
+                    kind.label(),
+                    1.0 - abar_lo
+                );
+            }
+            // Telescoping: the coarse a-product over a segment equals the
+            // fine a-product over the same rows (both are √(ᾱ_lo/ᾱ_hi)).
+            let fine_prod: f64 = (idx0[1] + 1..=idx0[3]).map(|j| sc.a[j]).product();
+            let coarse_prod = coarse.a[2] * coarse.a[3];
+            assert!((fine_prod - coarse_prod).abs() < 1e-10);
+            // Final coarse step to the clean sample stays deterministic.
+            assert_eq!(coarse.c[0], 0.0);
+        }
+        // An identity coarsening reproduces the fine coefficients.
+        let sc = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 20);
+        let (same, _) = sc.coarsen(20);
+        for t in 1..=20usize {
+            assert!((same.a[t] - sc.a[t]).abs() < 1e-10, "a[{t}]");
+            assert!((same.b[t] - sc.b[t]).abs() < 1e-10, "b[{t}]");
+            assert!((same.c[t - 1] - sc.c[t - 1]).abs() < 1e-10, "c[{}]", t - 1);
+        }
     }
 
     #[test]

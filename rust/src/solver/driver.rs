@@ -99,7 +99,7 @@ mod tests {
     use crate::model::Cond;
     use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
     use crate::solver::sequential::sample_sequential;
-    use crate::solver::{Method, WindowPolicy};
+    use crate::solver::{Method, SolveStrategy, WindowPolicy};
     use crate::util::proplite::{self, forall, size_in};
     use crate::util::rng::Pcg64;
 
@@ -139,6 +139,7 @@ mod tests {
                     guidance: 2.0,
                     clamp_boundary: true,
                     window_policy: WindowPolicy::Fixed,
+                    strategy: SolveStrategy::PlainTaa,
                 };
                 let par = solve(&problem, &cfg);
                 if !par.converged {
@@ -179,6 +180,7 @@ mod tests {
                     guidance: 1.0,
                     clamp_boundary: true,
                     window_policy: WindowPolicy::Fixed,
+                    strategy: SolveStrategy::PlainTaa,
                 };
                 let r = solve(&problem, &cfg);
                 if !r.converged {
@@ -231,6 +233,7 @@ mod tests {
             guidance: 2.0,
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
+            strategy: SolveStrategy::PlainTaa,
         });
         let taa = solve(&problem, &SolverConfig {
             k,
@@ -244,6 +247,7 @@ mod tests {
             guidance: 2.0,
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
+            strategy: SolveStrategy::PlainTaa,
         });
         assert!(fp.converged && taa.converged);
         assert!(
@@ -277,6 +281,7 @@ mod tests {
                 guidance: 1.0,
                 clamp_boundary: true,
                 window_policy: WindowPolicy::Fixed,
+                strategy: SolveStrategy::PlainTaa,
             };
             let par = solve(&problem, &cfg);
             if !par.converged {

@@ -29,6 +29,7 @@ pub mod history;
 pub mod init;
 pub mod sequential;
 pub mod session;
+pub mod strategy;
 pub mod update;
 pub mod window_ctrl;
 pub mod workspace;
@@ -36,6 +37,7 @@ pub mod workspace;
 pub use driver::{solve, IterationRecord, SolveResult};
 pub use sequential::sample_sequential;
 pub use session::{EpsBatch, FrontAdvance, RoundOutcome, SolverSession};
+pub use strategy::{DraftRefineConfig, PararealConfig, SolveStrategy};
 pub use window_ctrl::{AdaptiveWindow, WindowController, WindowPolicy};
 pub use workspace::Workspace;
 
@@ -110,6 +112,13 @@ pub struct SolverConfig {
     /// [`WindowPolicy::Adaptive`] lets a [`WindowController`] grow/shrink
     /// it each round from convergence velocity and device occupancy.
     pub window_policy: WindowPolicy,
+    /// Multi-fidelity strategy (`solver/strategy.rs`). The default
+    /// [`SolveStrategy::PlainTaa`] runs single-fidelity rounds,
+    /// byte-for-byte the historical path; [`SolveStrategy::DraftRefine`]
+    /// seeds the window from a cheap coarse solve, and
+    /// [`SolveStrategy::Parareal`] alternates coarse sweeps with fine
+    /// parallel-correction rounds.
+    pub strategy: SolveStrategy,
 }
 
 impl SolverConfig {
@@ -150,6 +159,7 @@ impl SolverConfig {
             guidance: 5.0,
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
+            strategy: SolveStrategy::PlainTaa,
         }
     }
 
@@ -167,6 +177,7 @@ impl SolverConfig {
             guidance: 5.0,
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
+            strategy: SolveStrategy::PlainTaa,
         }
     }
 

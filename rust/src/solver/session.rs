@@ -49,11 +49,12 @@
 
 use super::driver::{IterationRecord, SolveResult};
 use super::history::History;
+use super::strategy::{interpolate_segment, lift_trajectory, SolveStrategy};
 use super::update::apply_update_ws;
 use super::window_ctrl::{WindowController, WindowPolicy};
 use super::workspace::Workspace;
 use super::{Problem, SolverConfig};
-use crate::equations::{eval_fk, residual_sq, States};
+use crate::equations::{bridge_coeffs, eval_fk, residual_sq, States};
 use crate::model::Cond;
 use crate::schedule::SamplerCoeffs;
 use crate::trace::{self, Layer, Name};
@@ -109,6 +110,42 @@ pub struct FrontAdvance {
     /// Last measured residuals of those rows, in `newly_converged` order
     /// (`NaN` for rows frozen by a §4.2 warm start before any evaluation).
     pub residuals: Vec<f64>,
+}
+
+/// Multi-fidelity phase state (`None` under [`SolveStrategy::PlainTaa`] —
+/// that path is byte-for-byte the single-fidelity solver). Boxed on the
+/// session so the plain path pays one pointer of storage.
+enum Fidelity {
+    /// Draft phase of [`SolveStrategy::DraftRefine`]: a nested PlainTaa
+    /// session solves the coarsened grid; when it finishes, its trajectory
+    /// is lifted onto the fine grid as the window initialization (the same
+    /// hand-off as a §4.2 warm start) and the fine phase runs the plain
+    /// path.
+    Draft {
+        /// The coarse solve. Shares the outer guidance, so its ε batches
+        /// co-batch with fine sessions' in the coordinator's merge path.
+        session: SolverSession,
+        /// Coarse-node → fine-row map from `SamplerCoeffs::coarsen`.
+        idx0: Vec<usize>,
+        /// Fine per-state ᾱ for the lift.
+        abar: Vec<f64>,
+    },
+    /// [`SolveStrategy::Parareal`]: coarse strided sweeps alternate with
+    /// the standard fine parallel-correction rounds. `nodes` holds the
+    /// sweep's row list exactly while a coarse batch is pending (emptied
+    /// when the sweep resumes, refilled after the next fine round).
+    Parareal {
+        /// Node stride over the active window (≥ 2, so the first written
+        /// node sits strictly below the safeguarded row t2).
+        stride: usize,
+        /// Sampler η for the bridge coefficients.
+        eta: f64,
+        /// Fine per-state ᾱ the bridges and segment fills read.
+        abar: Vec<f64>,
+        /// Descending sweep rows, anchor (t2+1) first, window base (t1)
+        /// last. Non-empty ⇔ the pending batch is a coarse batch.
+        nodes: Vec<usize>,
+    },
 }
 
 /// What one [`SolverSession::resume`] produced.
@@ -218,12 +255,18 @@ pub struct SolverSession {
     /// §4.2 warm start.
     reported_front: usize,
 
+    /// Multi-fidelity phase state (`None` ⇒ plain single-fidelity rounds;
+    /// see [`SolveStrategy`]).
+    fidelity: Option<Box<Fidelity>>,
+
     // --- round accounting -------------------------------------------------
     t1: usize,
     t2: usize,
     /// 1-based index of the round the pending batch belongs to.
     iter: usize,
     total_nfe: usize,
+    /// Coarse rounds completed (draft-phase rounds + Parareal sweeps).
+    coarse_rounds: usize,
     records: Vec<IterationRecord>,
     converged: bool,
     done: bool,
@@ -305,10 +348,12 @@ impl SolverSession {
             ws: Workspace::new(),
             controller,
             reported_front: t_count,
+            fidelity: None,
             t1,
             t2,
             iter: 1,
             total_nfe: 0,
+            coarse_rounds: 0,
             records: Vec::new(),
             converged: false,
             done: cfg.s_max == 0,
@@ -317,6 +362,59 @@ impl SolverSession {
         };
         if !session.done {
             session.build_batch();
+        }
+        match &cfg.strategy {
+            SolveStrategy::PlainTaa => {}
+            SolveStrategy::DraftRefine(dr) => {
+                // An explicit §4.2 init already seeds the window — a draft
+                // would only overwrite it, so the strategy degrades to the
+                // plain path.
+                if problem.init.is_none() && !session.done {
+                    let c_steps = dr.resolve_coarse_steps(t_count);
+                    let (coarse_coeffs, idx0) = session.coeffs.coarsen(c_steps);
+                    // Coarse ξ rows are the fine ξ rows at the nodes, so
+                    // the coarse solve starts from the same x_T draw and
+                    // its DDPM noise is consistent with the fine grid's.
+                    let mut cxi = States::zeros(c_steps, d);
+                    for (c, &r) in idx0.iter().enumerate() {
+                        cxi.set_row(c, problem.xi.row(r));
+                    }
+                    let coarse_problem = Problem {
+                        coeffs: &coarse_coeffs,
+                        model: problem.model,
+                        cond: problem.cond.clone(),
+                        xi: cxi,
+                        init: None,
+                        t_init: None,
+                        seed: problem.seed,
+                    };
+                    let mut ccfg = cfg.clone();
+                    ccfg.strategy = SolveStrategy::PlainTaa;
+                    ccfg.safeguard = true; // ≤ C+1-round draft guarantee
+                    ccfg.window = c_steps;
+                    ccfg.window_policy = WindowPolicy::Fixed;
+                    ccfg.tol = dr.resolve_tol(cfg.tol);
+                    ccfg.s_max = dr.resolve_rounds(c_steps);
+                    let inner = SolverSession::new(&coarse_problem, &ccfg);
+                    let abar = session.coeffs.state_alpha_bars();
+                    session.fidelity =
+                        Some(Box::new(Fidelity::Draft { session: inner, idx0, abar }));
+                }
+            }
+            SolveStrategy::Parareal(pr) => {
+                if !session.done {
+                    session.fidelity = Some(Box::new(Fidelity::Parareal {
+                        stride: pr.resolve_stride(session.w),
+                        eta: session.coeffs.kind.eta(),
+                        abar: session.coeffs.state_alpha_bars(),
+                        nodes: Vec::new(),
+                    }));
+                    // Parareal opens with a coarse sweep: it propagates
+                    // real signal from x_T down the Gaussian-initialized
+                    // window before the first fine correction.
+                    session.maybe_schedule_coarse();
+                }
+            }
         }
         session
     }
@@ -327,6 +425,12 @@ impl SolverSession {
     pub fn pending(&self) -> Option<EpsBatch<'_>> {
         if self.done {
             return None;
+        }
+        if let Some(Fidelity::Draft { session, .. }) = self.fidelity.as_deref() {
+            // Draft phase: the coarse session's ε job is this session's
+            // pending batch (same guidance, so it merges with fine
+            // sessions' batches in the coordinator unchanged).
+            return session.pending();
         }
         Some(EpsBatch {
             x: &self.batch_x,
@@ -365,6 +469,13 @@ impl SolverSession {
     /// pending batch's `len × dim`.
     pub fn resume(&mut self, eps_out: &[f32]) -> RoundOutcome {
         assert!(!self.done, "resume() on a finished session");
+        match self.fidelity.as_deref() {
+            Some(Fidelity::Draft { .. }) => return self.resume_draft(eps_out),
+            Some(Fidelity::Parareal { nodes, .. }) if !nodes.is_empty() => {
+                return self.resume_coarse_sweep(eps_out)
+            }
+            _ => {}
+        }
         let round_span = trace::begin();
         let d = self.d;
         let n = self.batch_states.len();
@@ -567,6 +678,194 @@ impl SolverSession {
             self.done = true; // round budget exhausted; not converged
         } else {
             self.build_batch();
+            // Under SolveStrategy::Parareal the next round may instead be
+            // a coarse sweep (no-op for every other strategy).
+            self.maybe_schedule_coarse();
+        }
+        RoundOutcome { record: rec, done: self.done }
+    }
+
+    /// A draft-phase round ([`SolveStrategy::DraftRefine`]): delegate to
+    /// the nested coarse session, account its cost on this session, and —
+    /// once the draft finishes (converged or out of draft budget) — lift
+    /// its trajectory onto the fine grid and open the fine phase.
+    fn resume_draft(&mut self, eps_out: &[f32]) -> RoundOutcome {
+        let span = trace::begin();
+        let fid = self.fidelity.take().expect("draft state present");
+        let (mut inner, idx0, abar) = match *fid {
+            Fidelity::Draft { session, idx0, abar } => (session, idx0, abar),
+            Fidelity::Parareal { .. } => unreachable!("resume_draft outside the draft phase"),
+        };
+        let inner_out = inner.resume(eps_out);
+        let n = inner_out.record.nfe;
+        self.total_nfe += n;
+        self.coarse_rounds += 1;
+        let rec = IterationRecord {
+            iter: self.iter,
+            t1: self.t1,
+            t2: self.t2,
+            nfe: n,
+            residual_sum: inner_out.record.residual_sum,
+            max_residual_ratio: inner_out.record.max_residual_ratio,
+            // The fine front has not moved: draft rounds refine the
+            // initialization, they never freeze fine rows.
+            converged_rows: self.t_count - (self.t2 + 1),
+            row_residuals: self.last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect(),
+        };
+        self.records.push(rec.clone());
+        trace::complete(
+            span,
+            Layer::Solver,
+            Name::CoarseRound,
+            self.trace_id,
+            self.iter as i64,
+            n as i64,
+        );
+        self.iter += 1;
+        if inner_out.done {
+            // Hand the draft to the fine phase — exactly the §4.2
+            // warm-start path, with the init produced in-band instead of
+            // donated by a cache.
+            let draft = inner.finish();
+            lift_trajectory(&abar, &draft.xs, &idx0, &mut self.xs);
+            if self.iter > self.cfg.s_max {
+                self.done = true; // outer budget exhausted; not converged
+            } else {
+                self.build_batch();
+            }
+        } else {
+            self.fidelity = Some(Box::new(Fidelity::Draft { session: inner, idx0, abar }));
+            if self.iter > self.cfg.s_max {
+                self.done = true; // outer budget exhausted mid-draft
+            }
+        }
+        RoundOutcome { record: rec, done: self.done }
+    }
+
+    /// After a fine round (or at construction) under
+    /// [`SolveStrategy::Parareal`]: if the active window has room for a
+    /// strided sweep, replace the pending fine batch with the sweep's ε
+    /// sources. No-op for every other strategy.
+    fn maybe_schedule_coarse(&mut self) {
+        let (stride, mut nodes) = match self.fidelity.as_deref_mut() {
+            Some(Fidelity::Parareal { stride, nodes, .. }) => (*stride, std::mem::take(nodes)),
+            _ => return,
+        };
+        nodes.clear();
+        let (t1, t2) = (self.t1, self.t2);
+        if t2 + 1 - t1 >= stride {
+            // Descending sweep rows: the frozen anchor t2+1 (never
+            // written), strided interior nodes — the first at t2+1−stride
+            // ≤ t2−1, strictly below the safeguarded row — then the
+            // window base t1.
+            let anchor = t2 + 1;
+            let mut r = anchor;
+            while r > t1 + stride {
+                nodes.push(r);
+                r -= stride;
+            }
+            nodes.push(r);
+            if r != t1 {
+                nodes.push(t1);
+            }
+            // The sweep's ε sources: every node it steps *from*. The
+            // anchor is frozen, so its ε is served from the cache once
+            // filled; interior nodes re-evaluate every sweep.
+            self.batch_x.clear();
+            self.batch_t.clear();
+            self.batch_states.clear();
+            for (i, &j) in nodes[..nodes.len() - 1].iter().enumerate() {
+                if i == 0 && self.eps_valid[j] {
+                    continue;
+                }
+                self.batch_states.push(j);
+                self.batch_x.extend_from_slice(self.xs.row(j));
+                self.batch_t.push(self.coeffs.train_t[j]);
+            }
+        }
+        // Non-empty nodes mark the pending batch as a coarse batch.
+        if let Some(Fidelity::Parareal { nodes: slot, .. }) = self.fidelity.as_deref_mut() {
+            *slot = nodes;
+        }
+    }
+
+    /// A Parareal coarse round: one strided sequential bridge sweep from
+    /// the frozen anchor down the active window — ε batched from the *old*
+    /// iterate, new states propagated through the linear term (the
+    /// Parareal coarse propagator), intermediate rows re-noised from each
+    /// segment's implied (x0, ε) pair. The sweep never writes row t2 or
+    /// anything above it, so the residual front stays monotone
+    /// (Theorem 3.6); the Anderson history is untouched (any iterate pair
+    /// is a valid secant pair, so the next fine round's difference
+    /// columns stay consistent).
+    fn resume_coarse_sweep(&mut self, eps_out: &[f32]) -> RoundOutcome {
+        let span = trace::begin();
+        let d = self.d;
+        let n = self.batch_states.len();
+        assert_eq!(eps_out.len(), n * d, "eps_out does not match the pending batch");
+        self.total_nfe += n;
+        for (bi, &j) in self.batch_states.iter().enumerate() {
+            self.eps.set_row(j, &eps_out[bi * d..(bi + 1) * d]);
+            self.eps_valid[j] = true;
+        }
+        let mut fid = self.fidelity.take().expect("parareal state present");
+        if let Fidelity::Parareal { eta, abar, nodes, .. } = &mut *fid {
+            let mut x_prev: Vec<f32> = self.xs.row(nodes[0]).to_vec();
+            let mut x_new = vec![0.0f32; d];
+            for l in 0..nodes.len() - 1 {
+                let (hi, lo) = (nodes[l], nodes[l + 1]);
+                let (a, b, sg) = bridge_coeffs(abar[hi], abar[lo], *eta);
+                let (af, bf, sf) = (a as f32, b as f32, sg as f32);
+                {
+                    let e = self.eps.row(hi);
+                    let xr = self.xi.row(lo);
+                    for i in 0..d {
+                        x_new[i] = af * x_prev[i] + bf * e[i] + sf * xr[i];
+                    }
+                }
+                self.xs.set_row(lo, &x_new);
+                if hi - lo >= 2 {
+                    interpolate_segment(abar, lo, hi, &x_new, &x_prev, self.t2, &mut self.xs);
+                }
+                std::mem::swap(&mut x_prev, &mut x_new);
+            }
+            nodes.clear();
+        }
+        self.fidelity = Some(fid);
+        self.coarse_rounds += 1;
+        // No residuals are measured on a coarse round (its rows are
+        // re-evaluated by the next fine round anyway): the record carries
+        // the last fine round's convergence picture forward, keeping the
+        // telemetry's front monotonicity intact.
+        let (residual_sum, max_ratio) = self
+            .records
+            .last()
+            .map(|r| (r.residual_sum, r.max_residual_ratio))
+            .unwrap_or((0.0, 0.0));
+        let rec = IterationRecord {
+            iter: self.iter,
+            t1: self.t1,
+            t2: self.t2,
+            nfe: n,
+            residual_sum,
+            max_residual_ratio: max_ratio,
+            converged_rows: self.t_count - (self.t2 + 1),
+            row_residuals: self.last_residual.iter().map(|r| r.unwrap_or(f64::NAN)).collect(),
+        };
+        self.records.push(rec.clone());
+        trace::complete(
+            span,
+            Layer::Solver,
+            Name::CoarseRound,
+            self.trace_id,
+            self.iter as i64,
+            n as i64,
+        );
+        self.iter += 1;
+        if self.iter > self.cfg.s_max {
+            self.done = true; // round budget exhausted; not converged
+        } else {
+            self.build_batch(); // the fine correction round comes next
         }
         RoundOutcome { record: rec, done: self.done }
     }
@@ -608,6 +907,19 @@ impl SolverSession {
     /// Total ε_θ evaluations so far.
     pub fn total_nfe(&self) -> usize {
         self.total_nfe
+    }
+
+    /// Multi-fidelity rounds completed so far: draft-phase rounds under
+    /// [`SolveStrategy::DraftRefine`] plus coarse sweeps under
+    /// [`SolveStrategy::Parareal`]. Always 0 under
+    /// [`SolveStrategy::PlainTaa`].
+    pub fn coarse_rounds(&self) -> usize {
+        self.coarse_rounds
+    }
+
+    /// The multi-fidelity strategy this session runs under.
+    pub fn strategy(&self) -> &SolveStrategy {
+        &self.cfg.strategy
     }
 
     /// Per-round diagnostics so far.
@@ -985,6 +1297,82 @@ mod tests {
             expect_end = adv.start;
         }
         assert_eq!(expect_end, 0, "the advances must reach the sample row");
+    }
+
+    /// Draft-and-refine: the session runs a coarse draft phase first
+    /// (visible via `coarse_rounds()`), then converges on the fine grid
+    /// to the sequential solution within tolerance.
+    #[test]
+    fn draft_refine_converges_to_the_sequential_solution() {
+        use crate::solver::strategy::DraftRefineConfig;
+        let steps = 16;
+        let (coeffs, model) = setup(steps);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 11);
+        let cfg = SolverConfig {
+            guidance: 2.0,
+            tol: 1e-4,
+            s_max: 8 * steps,
+            strategy: SolveStrategy::DraftRefine(DraftRefineConfig::default()),
+            ..SolverConfig::parataa(steps)
+        };
+        let mut session = SolverSession::new(&problem, &cfg);
+        drive(&mut session, &model);
+        assert!(session.converged());
+        assert!(session.coarse_rounds() > 0, "the draft phase must have run");
+        assert!(session.coarse_rounds() < session.iterations());
+        let result = session.finish();
+        let seq = crate::solver::sample_sequential(&problem, 2.0);
+        crate::util::proplite::assert_close(
+            result.xs.row(0),
+            seq.xs.row(0),
+            5e-3,
+            5e-2,
+            "draft-refine vs sequential",
+        )
+        .unwrap();
+    }
+
+    /// Parareal: coarse sweeps interleave with fine rounds, the residual
+    /// front never retreats (the sweep writes strictly below the
+    /// safeguarded row), and the solve converges to the sequential
+    /// solution within tolerance.
+    #[test]
+    fn parareal_converges_with_a_monotone_front() {
+        use crate::solver::strategy::PararealConfig;
+        let steps = 16;
+        let (coeffs, model) = setup(steps);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(2), 13);
+        let cfg = SolverConfig {
+            guidance: 2.0,
+            tol: 1e-4,
+            s_max: 8 * steps,
+            strategy: SolveStrategy::Parareal(PararealConfig::default()),
+            ..SolverConfig::parataa(steps)
+        };
+        let mut session = SolverSession::new(&problem, &cfg);
+        drive(&mut session, &model);
+        assert!(session.converged());
+        assert!(session.coarse_rounds() > 0, "coarse sweeps must have run");
+        let result = session.finish();
+        let mut prev = 0;
+        for rec in &result.records {
+            assert!(
+                rec.converged_rows >= prev,
+                "front retreated: {} < {prev} at iter {}",
+                rec.converged_rows,
+                rec.iter
+            );
+            prev = rec.converged_rows;
+        }
+        let seq = crate::solver::sample_sequential(&problem, 2.0);
+        crate::util::proplite::assert_close(
+            result.xs.row(0),
+            seq.xs.row(0),
+            5e-3,
+            5e-2,
+            "parareal vs sequential",
+        )
+        .unwrap();
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Multi-fidelity solve strategies (ROADMAP item 2).
+//!
+//! The session substrate (one `pending()`/`resume()` pair per parallel
+//! round, see [`super::session`]) was built to host iteration schemes that
+//! mix *fidelities* — not just the paper's single-grid TAA rounds. This
+//! module adds the strategy layer choosing how a solve schedules fidelity:
+//!
+//! - [`SolveStrategy::PlainTaa`] — the default: single-fidelity rounds on
+//!   the full step grid, byte-for-byte the historical path (golden-tested
+//!   in `tests/golden_session.rs`);
+//! - [`SolveStrategy::DraftRefine`] — DRiffusion-style draft-and-refine: a
+//!   cheap coarse solve (C ≪ T steps on a subsetted grid) runs first, its
+//!   trajectory is lifted onto the fine grid ([`lift_trajectory`]) and
+//!   seeds the window exactly like a §4.2 warm start, then fine TAA rounds
+//!   refine it;
+//! - [`SolveStrategy::Parareal`] — Self-Refining-style Parareal: coarse
+//!   sweeps (a strided sequential pass over the active window using bridge
+//!   coefficients, [`crate::equations::bridge_coeffs`]) alternate with the
+//!   standard fine parallel-correction rounds.
+//!
+//! Both multi-fidelity schemes preserve the Theorem 3.6 invariants: the
+//! coarse phases never write the safeguarded row t2 or any frozen row
+//! above it, so the residual front stays monotone and the fixed point is
+//! unchanged (Theorem 2.2 — every strategy converges to the sequential
+//! trajectory). Property-tested in `tests/strategy_properties.rs`.
+//!
+//! The coarse operator is constructed *from the fine problem*, not from
+//! the schedule: [`crate::schedule::SamplerCoeffs::coarsen`] subsets the
+//! existing step grid (recovering per-state ᾱ by telescoping the `a`
+//! coefficients), so a coarse step bridges two fine states with the same
+//! DDIM(η) formulas the fine grid uses.
+
+use crate::equations::States;
+
+/// How a [`SolverSession`](super::SolverSession) schedules fidelity across
+/// its parallel rounds.
+///
+/// # Example
+///
+/// Draft-and-refine lands on the same fixed point as plain TAA
+/// (Theorem 2.2) while seeding the window from a cheap coarse pass:
+///
+/// ```
+/// use parataa::model::{gmm::GmmEps, Cond};
+/// use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+/// use parataa::solver::{self, DraftRefineConfig, Problem, SolveStrategy, SolverConfig};
+///
+/// let schedule = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+/// let model = GmmEps::sd_analog(schedule.alpha_bars.clone());
+/// let coeffs = SamplerCoeffs::new(&schedule, SamplerKind::Ddim, 16);
+/// let problem = Problem::new(&coeffs, &model, Cond::Class(0), 3);
+///
+/// let mut cfg = SolverConfig::parataa(16);
+/// cfg.guidance = 2.0;
+/// cfg.s_max = 64;
+/// assert_eq!(cfg.strategy, SolveStrategy::PlainTaa); // the default
+/// let plain = solver::solve(&problem, &cfg);
+///
+/// cfg.strategy = SolveStrategy::DraftRefine(DraftRefineConfig::default());
+/// let draft = solver::solve(&problem, &cfg);
+///
+/// assert!(plain.converged && draft.converged);
+/// // Same fixed point: the sample rows agree to solver tolerance.
+/// for (a, b) in draft.xs.row(0).iter().zip(plain.xs.row(0)) {
+///     assert!((a - b).abs() < 5e-2);
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum SolveStrategy {
+    /// Single-fidelity TAA rounds on the full grid — byte-for-byte the
+    /// historical solver path.
+    #[default]
+    PlainTaa,
+    /// Draft-and-refine: solve a coarse subset of the grid first, lift the
+    /// result onto the fine grid as the window initialization, then run
+    /// standard fine rounds.
+    DraftRefine(DraftRefineConfig),
+    /// Alternating coarse sweep + fine parallel correction over the active
+    /// window (Self-Refining Parareal scheme).
+    Parareal(PararealConfig),
+}
+
+impl SolveStrategy {
+    /// Short display label used by benches, metrics and the CLI.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SolveStrategy::PlainTaa => "plain",
+            SolveStrategy::DraftRefine(_) => "draft_refine",
+            SolveStrategy::Parareal(_) => "parareal",
+        }
+    }
+
+    /// True for the default single-fidelity path.
+    pub fn is_plain(&self) -> bool {
+        matches!(self, SolveStrategy::PlainTaa)
+    }
+}
+
+/// Parameters of the [`SolveStrategy::DraftRefine`] draft phase. All
+/// fields accept a zero sentinel meaning "derive from the fine problem",
+/// so `Default` (all zeros) is the fully-automatic configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DraftRefineConfig {
+    /// Coarse grid size C (number of coarse solver steps over the same
+    /// schedule span). `0` ⇒ auto: `max(2, T / 4)`, clamped to `[1, T]`.
+    pub coarse_steps: usize,
+    /// Stopping tolerance of the draft solve. `0.0` ⇒ inherit the fine
+    /// tolerance (`SolverConfig::tol`).
+    pub coarse_tol: f64,
+    /// Round budget of the draft solve. `0` ⇒ auto: `C + 1`, the
+    /// Theorem 3.6 worst case for the coarse system.
+    pub max_draft_rounds: usize,
+}
+
+impl DraftRefineConfig {
+    /// Resolve the coarse grid size against a fine grid of `steps` rows.
+    pub fn resolve_coarse_steps(&self, steps: usize) -> usize {
+        let c = if self.coarse_steps == 0 { (steps / 4).max(2) } else { self.coarse_steps };
+        c.clamp(1, steps)
+    }
+
+    /// Resolve the draft tolerance against the fine tolerance.
+    pub fn resolve_tol(&self, fine_tol: f64) -> f64 {
+        if self.coarse_tol > 0.0 {
+            self.coarse_tol
+        } else {
+            fine_tol
+        }
+    }
+
+    /// Resolve the draft round budget for a coarse grid of `coarse_steps`.
+    pub fn resolve_rounds(&self, coarse_steps: usize) -> usize {
+        if self.max_draft_rounds == 0 {
+            coarse_steps + 1
+        } else {
+            self.max_draft_rounds
+        }
+    }
+}
+
+/// Parameters of the [`SolveStrategy::Parareal`] coarse sweeps. The zero
+/// `Default` derives the stride from the window.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PararealConfig {
+    /// Node stride of the coarse sweep: every `stride`-th window row is a
+    /// Parareal node (the rows the sequential bridge pass writes). `0` ⇒
+    /// auto: `max(2, w / 4)` against the configured window; any explicit
+    /// value is clamped to ≥ 2 so the sweep can never touch the
+    /// safeguarded row t2 (its first written node sits at `t2 + 1 −
+    /// stride ≤ t2 − 1`).
+    pub stride: usize,
+}
+
+impl PararealConfig {
+    /// Resolve the node stride against a window of `window` rows.
+    pub fn resolve_stride(&self, window: usize) -> usize {
+        if self.stride == 0 {
+            (window / 4).max(2)
+        } else {
+            self.stride.max(2)
+        }
+    }
+}
+
+/// Re-noise the two-point signal model between fine rows `lo` and `hi`
+/// into every intermediate row strictly below `row_cap`.
+///
+/// Under the signal model x_r = √ᾱ_r·x0 + √(1−ᾱ_r)·ε, the states at the
+/// segment ends determine the pair (x0, ε) uniquely (the 2×2 system has
+/// determinant √ᾱ_lo·√(1−ᾱ_hi) − √ᾱ_hi·√(1−ᾱ_lo) > 0 whenever ᾱ_lo >
+/// ᾱ_hi); each intermediate row is that pair re-noised to its own ᾱ.
+/// Rows ≥ `row_cap` are left untouched — the Parareal sweep passes
+/// `row_cap = t2` so the safeguarded row (and everything frozen above it)
+/// is never rewritten, preserving the Theorem 3.6 front monotonicity.
+pub fn interpolate_segment(
+    fine_abar: &[f64],
+    lo: usize,
+    hi: usize,
+    x_lo: &[f32],
+    x_hi: &[f32],
+    row_cap: usize,
+    out: &mut States,
+) {
+    debug_assert!(lo < hi && hi < fine_abar.len());
+    let d = out.d;
+    debug_assert!(x_lo.len() == d && x_hi.len() == d);
+    let (s_lo, n_lo) = (fine_abar[lo].sqrt(), (1.0 - fine_abar[lo]).max(0.0).sqrt());
+    let (s_hi, n_hi) = (fine_abar[hi].sqrt(), (1.0 - fine_abar[hi]).max(0.0).sqrt());
+    let det = s_lo * n_hi - s_hi * n_lo;
+    for r in lo + 1..hi.min(row_cap) {
+        let (s_r, n_r) = (fine_abar[r].sqrt(), (1.0 - fine_abar[r]).max(0.0).sqrt());
+        let dst = out.row_mut(r);
+        for i in 0..d {
+            let (xl, xh) = (x_lo[i] as f64, x_hi[i] as f64);
+            dst[i] = if det.abs() > 1e-9 {
+                let x0 = (n_hi * xl - n_lo * xh) / det;
+                let e = (s_lo * xh - s_hi * xl) / det;
+                (s_r * x0 + n_r * e) as f32
+            } else {
+                // Degenerate segment (ᾱ barely moves): hold the cleaner
+                // node's value.
+                x_lo[i]
+            };
+        }
+    }
+}
+
+/// Lift a solved coarse trajectory onto the fine state grid — the
+/// draft-and-refine hand-off into the §4.2 warm-start path.
+///
+/// `fine_abar` is the fine grid's per-state ᾱ (length T+1, from
+/// [`crate::schedule::SamplerCoeffs::state_alpha_bars`]); `idx0` maps
+/// coarse state row c to its fine row (length C+1, from
+/// [`crate::schedule::SamplerCoeffs::coarsen`]). Node rows transfer
+/// bitwise; intermediate rows come from [`interpolate_segment`]. The fixed
+/// row T (= ξ_T on both grids) is never written.
+pub fn lift_trajectory(fine_abar: &[f64], coarse: &States, idx0: &[usize], out: &mut States) {
+    let d = out.d;
+    assert_eq!(coarse.d, d, "coarse/fine dimension mismatch");
+    assert_eq!(coarse.rows(), idx0.len(), "one coarse row per node");
+    let t_fine = fine_abar.len() - 1;
+    assert_eq!(out.rows(), t_fine + 1, "fine trajectory length mismatch");
+    for (c, &r) in idx0.iter().enumerate() {
+        if r < t_fine {
+            out.set_row(r, coarse.row(c));
+        }
+    }
+    for c in 0..idx0.len() - 1 {
+        let (lo, hi) = (idx0[c], idx0[c + 1]);
+        if hi - lo >= 2 {
+            interpolate_segment(fine_abar, lo, hi, coarse.row(c), coarse.row(c + 1), t_fine, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+
+    #[test]
+    fn config_resolution_defaults_and_clamps() {
+        let dr = DraftRefineConfig::default();
+        assert_eq!(dr.resolve_coarse_steps(50), 12);
+        assert_eq!(dr.resolve_coarse_steps(4), 2); // floor of max(2, _)
+        assert_eq!(dr.resolve_coarse_steps(2), 2);
+        let explicit = DraftRefineConfig { coarse_steps: 99, ..Default::default() };
+        assert_eq!(explicit.resolve_coarse_steps(8), 8); // clamped to T
+        assert_eq!(dr.resolve_tol(1e-3), 1e-3);
+        let loose = DraftRefineConfig { coarse_tol: 5e-3, ..Default::default() };
+        assert_eq!(loose.resolve_tol(1e-3), 5e-3);
+        assert_eq!(dr.resolve_rounds(12), 13);
+        let capped = DraftRefineConfig { max_draft_rounds: 4, ..Default::default() };
+        assert_eq!(capped.resolve_rounds(12), 4);
+
+        let pr = PararealConfig::default();
+        assert_eq!(pr.resolve_stride(16), 4);
+        assert_eq!(pr.resolve_stride(4), 2);
+        // Explicit strides below 2 would let the sweep write the
+        // safeguarded row; they are clamped up.
+        assert_eq!(PararealConfig { stride: 1 }.resolve_stride(16), 2);
+
+        assert_eq!(SolveStrategy::default(), SolveStrategy::PlainTaa);
+        assert!(SolveStrategy::PlainTaa.is_plain());
+        assert_eq!(SolveStrategy::DraftRefine(dr).label(), "draft_refine");
+        assert_eq!(SolveStrategy::Parareal(pr).label(), "parareal");
+    }
+
+    #[test]
+    fn lift_is_exact_on_the_signal_model() {
+        // If the coarse trajectory follows x = √ᾱ·x0 + √(1−ᾱ)·ε exactly,
+        // the lift must reproduce the same model on every fine row.
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let fine = SamplerCoeffs::new(&ns, SamplerKind::Ddim, 12);
+        let (coarse, idx0) = fine.coarsen(4);
+        assert_eq!(coarse.steps, 4);
+        let abar = fine.state_alpha_bars();
+        let d = 3;
+        let x0 = [0.7f32, -0.3, 1.1];
+        let e = [-0.2f32, 0.9, 0.4];
+        let mut cs = States::zeros(coarse.steps, d);
+        for (c, &r) in idx0.iter().enumerate() {
+            let (s, n) = (abar[r].sqrt() as f32, (1.0 - abar[r]).sqrt() as f32);
+            let row: Vec<f32> = (0..d).map(|i| s * x0[i] + n * e[i]).collect();
+            cs.set_row(c, &row);
+        }
+        let sentinel = 77.0f32;
+        let mut out = States { d, data: vec![sentinel; (fine.steps + 1) * d] };
+        lift_trajectory(&abar, &cs, &idx0, &mut out);
+        for r in 0..fine.steps {
+            let (s, n) = (abar[r].sqrt(), (1.0 - abar[r]).sqrt());
+            for i in 0..d {
+                let want = (s * x0[i] as f64 + n * e[i] as f64) as f32;
+                assert!(
+                    (out.row(r)[i] - want).abs() < 1e-4,
+                    "row {r} dim {i}: {} vs {want}",
+                    out.row(r)[i]
+                );
+            }
+        }
+        // Node rows transfer bitwise; the fixed row T is never written.
+        for (c, &r) in idx0.iter().enumerate() {
+            if r < fine.steps {
+                assert_eq!(out.row(r), cs.row(c), "node row {r} must be bitwise");
+            }
+        }
+        assert!(out.row(fine.steps).iter().all(|&v| v == sentinel), "row T untouched");
+    }
+
+    #[test]
+    fn interpolate_segment_respects_the_row_cap() {
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let fine = SamplerCoeffs::new(&ns, SamplerKind::Ddpm, 10);
+        let abar = fine.state_alpha_bars();
+        let d = 2;
+        let sentinel = -9.0f32;
+        let mut out = States { d, data: vec![sentinel; 11 * d] };
+        let x_lo = [1.0f32, 0.0];
+        let x_hi = [0.0f32, 1.0];
+        // Segment (2, 8) capped at row 5: rows 3,4 written; 5,6,7 untouched.
+        interpolate_segment(&abar, 2, 8, &x_lo, &x_hi, 5, &mut out);
+        for r in 3..5 {
+            assert!(out.row(r).iter().all(|&v| v != sentinel), "row {r} written");
+        }
+        for r in 5..8 {
+            assert!(out.row(r).iter().all(|&v| v == sentinel), "row {r} capped out");
+        }
+    }
+}

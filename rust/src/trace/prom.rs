@@ -156,6 +156,12 @@ pub fn render_with_events(snapshot: &MetricsSnapshot, events: &[TraceEvent]) -> 
         "Converged trajectory rows delivered through prefix chunks.",
         snapshot.prefix_rows_streamed as f64,
     );
+    w.scalar(
+        "parataa_coarse_rounds_total",
+        "counter",
+        "Multi-fidelity coarse rounds (draft rounds + Parareal sweeps).",
+        snapshot.coarse_rounds_total as f64,
+    );
 
     // --- gauges -----------------------------------------------------------
     w.scalar(

@@ -110,11 +110,16 @@ pub enum Name {
     ChunkEmit = 13,
     /// Span: finalize (reply, cache insert, slot release).
     Finalize = 14,
+    /// Span: one multi-fidelity coarse round — a draft-phase round or a
+    /// Parareal coarse sweep (`a` = round index, `b` = ε evaluations).
+    /// Recorded instead of [`Name::Round`] so exporters can separate the
+    /// fidelities on a session's track.
+    CoarseRound = 15,
 }
 
 impl Name {
     /// Every event name, in discriminant order.
-    pub const ALL: [Name; 15] = [
+    pub const ALL: [Name; 16] = [
         Name::Admit,
         Name::Round,
         Name::FrontAdvance,
@@ -130,6 +135,7 @@ impl Name {
         Name::CacheInsert,
         Name::ChunkEmit,
         Name::Finalize,
+        Name::CoarseRound,
     ];
 
     /// Stable dotted label, e.g. `"solver.round"` without the layer —
@@ -151,6 +157,7 @@ impl Name {
             Name::CacheInsert => "cache_insert",
             Name::ChunkEmit => "chunk_emit",
             Name::Finalize => "finalize",
+            Name::CoarseRound => "coarse_round",
         }
     }
 

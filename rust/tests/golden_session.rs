@@ -14,7 +14,8 @@ use parataa::model::gmm::GmmEps;
 use parataa::model::Cond;
 use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
 use parataa::solver::{
-    history::History, update::apply_update, Method, Problem, SolverConfig, WindowPolicy,
+    history::History, update::apply_update, Method, Problem, SolveStrategy, SolverConfig,
+    WindowPolicy,
 };
 use parataa::util::rng::Pcg64;
 
@@ -252,6 +253,10 @@ fn cfg_for(method: Method, steps: usize, safeguard: bool, window: usize) -> Solv
         // The golden contract is defined for the static window; the
         // adaptive controller is covered by its own tests.
         window_policy: WindowPolicy::Fixed,
+        // Likewise for the single-fidelity path: the multi-fidelity
+        // strategies have their own goldens below (compositional for
+        // DraftRefine, determinism for Parareal).
+        strategy: SolveStrategy::PlainTaa,
     }
 }
 
@@ -358,6 +363,139 @@ fn golden_ddpm_and_sliding_window() {
         cfg.s_max = 30 * steps;
         assert_golden(&problem, &cfg, &format!("window w={w}"));
     }
+}
+
+/// DraftRefine golden: the strategy run must be bit-identical to its
+/// composition — a frozen-reference coarse solve on the subsetted grid,
+/// `lift_trajectory`, and a frozen-reference fine solve warm-started from
+/// the lift (the same three pieces `SolverSession` wires together).
+#[test]
+fn golden_draft_refine_composes_from_the_reference() {
+    use parataa::solver::strategy::lift_trajectory;
+    use parataa::solver::DraftRefineConfig;
+
+    let steps = 16;
+    let d = 5;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(d, 3, 38);
+    let problem = Problem::new(&sc, &model, Cond::Class(1), 91);
+
+    let dr = DraftRefineConfig::default();
+    let mut cfg = cfg_for(Method::Taa, steps, true, steps);
+    cfg.strategy = SolveStrategy::DraftRefine(dr.clone());
+    let actual = parataa::solver::solve(&problem, &cfg);
+    assert!(actual.converged, "strategy run must converge");
+
+    // Piece 1: the draft, solved by the frozen reference on the coarsened
+    // grid (node-mapped ξ, same seed — the construction SolverSession::new
+    // uses).
+    let c_steps = dr.resolve_coarse_steps(steps);
+    let (coarse_coeffs, idx0) = sc.coarsen(c_steps);
+    let mut coarse_problem = Problem::new(&coarse_coeffs, &model, Cond::Class(1), 91);
+    let mut cxi = States::zeros(c_steps, d);
+    for (c, &r) in idx0.iter().enumerate() {
+        cxi.set_row(c, problem.xi.row(r));
+    }
+    coarse_problem.xi = cxi;
+    let mut ccfg = cfg_for(Method::Taa, steps, true, steps);
+    ccfg.window = c_steps;
+    ccfg.tol = dr.resolve_tol(cfg.tol);
+    ccfg.s_max = dr.resolve_rounds(c_steps);
+    let coarse = reference_solve(&coarse_problem, &ccfg);
+
+    // Piece 2: lift onto the fine grid; piece 3: the fine refinement,
+    // warm-started from the lift.
+    let mut lifted = States::zeros(steps, d);
+    lift_trajectory(&sc.state_alpha_bars(), &coarse.xs, &idx0, &mut lifted);
+    let mut fine_problem = Problem::new(&sc, &model, Cond::Class(1), 91);
+    fine_problem.init = Some(lifted);
+    let fine = reference_solve(&fine_problem, &cfg_for(Method::Taa, steps, true, steps));
+    assert!(fine.converged, "composition must converge");
+
+    assert_eq!(actual.xs.data, fine.xs.data, "draft-refine xs != composition");
+    assert_eq!(actual.total_nfe, coarse.total_nfe + fine.total_nfe, "NFE must sum");
+    assert_eq!(actual.iterations, coarse.iterations + fine.iterations, "rounds must sum");
+    // Draft rounds account the coarse solve's per-round cost on the outer
+    // session without moving the fine front.
+    for (a, g) in actual.records.iter().take(coarse.iterations).zip(&coarse.records) {
+        assert_eq!(a.nfe, g.nfe, "draft round {} nfe", g.iter);
+        assert_eq!(a.converged_rows, 0, "draft rounds freeze no fine rows");
+        assert_eq!(
+            a.residual_sum.to_bits(),
+            g.residual_sum.to_bits(),
+            "draft round {} residual_sum",
+            g.iter
+        );
+    }
+    // The fine phase replays the reference records with the round index
+    // offset by the draft length.
+    for (a, g) in actual.records.iter().skip(coarse.iterations).zip(&fine.records) {
+        assert_eq!(a.iter, g.iter + coarse.iterations, "fine round index");
+        assert_eq!((a.t1, a.t2), (g.t1, g.t2), "fine round {} window", g.iter);
+        assert_eq!(a.nfe, g.nfe, "fine round {} nfe", g.iter);
+        assert_eq!(
+            a.residual_sum.to_bits(),
+            g.residual_sum.to_bits(),
+            "fine round {} residual_sum",
+            g.iter
+        );
+    }
+}
+
+/// Parareal golden: run-twice bitwise determinism, coarse sweeps actually
+/// interleaving, and the manual session drive bit-identical to the
+/// blocking `solve()` wrapper.
+#[test]
+fn golden_parareal_is_deterministic() {
+    use parataa::model::EpsModel;
+    use parataa::solver::{PararealConfig, SolverSession};
+
+    let steps = 16;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(5, 3, 39);
+    let problem = Problem::new(&sc, &model, Cond::Class(2), 92);
+    let mut cfg = cfg_for(Method::Taa, steps, true, steps);
+    cfg.strategy = SolveStrategy::Parareal(PararealConfig::default());
+
+    let a = parataa::solver::solve(&problem, &cfg);
+    let b = parataa::solver::solve(&problem, &cfg);
+    assert!(a.converged, "parareal run must converge");
+    assert_eq!(a.xs.data, b.xs.data, "parareal must be run-twice deterministic");
+    assert_eq!(a.total_nfe, b.total_nfe, "NFE must be deterministic");
+    assert_eq!(a.iterations, b.iterations, "rounds must be deterministic");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!((x.t1, x.t2, x.nfe), (y.t1, y.t2, y.nfe), "round {} facts", x.iter);
+        assert_eq!(
+            x.residual_sum.to_bits(),
+            y.residual_sum.to_bits(),
+            "round {} residual_sum",
+            x.iter
+        );
+    }
+
+    // Manual drive of the session state machine == the wrapper, and the
+    // coarse sweeps really ran (zero would mean the strategy degraded to
+    // plain TAA silently).
+    let mut session = SolverSession::new(&problem, &cfg);
+    let d = session.dim();
+    let mut eps = Vec::new();
+    loop {
+        let n = match session.pending() {
+            None => break,
+            Some(batch) => {
+                eps.resize(batch.len() * d, 0.0);
+                model.eps_batch(batch.x, batch.t, batch.conds, batch.guidance, &mut eps);
+                batch.len()
+            }
+        };
+        if session.resume(&eps[..n * d]).done {
+            break;
+        }
+    }
+    assert!(session.coarse_rounds() > 0, "parareal must run coarse sweeps");
+    let by_session = session.finish();
+    assert_eq!(by_session.xs.data, a.xs.data, "session drive != solve()");
+    assert_eq!(by_session.total_nfe, a.total_nfe, "session drive NFE != solve()");
 }
 
 /// Round-budget exhaustion must truncate identically (records, NFE, and
