@@ -34,6 +34,10 @@ pub struct BenchOpts {
     pub seed: u64,
     /// Optional substring filter on scenario names (`--only`).
     pub filter: Option<String>,
+    /// Session `parallelism` used by the threaded hot-loop scenarios
+    /// (`--threads`). Timings change with it; results never do (the knob
+    /// is bitwise inert — see `SolverConfig::parallelism`).
+    pub threads: usize,
 }
 
 impl BenchOpts {
@@ -46,6 +50,7 @@ impl BenchOpts {
             measure: Duration::from_millis(600),
             seed: 42,
             filter: None,
+            threads: 1,
         }
     }
 
@@ -57,6 +62,7 @@ impl BenchOpts {
             measure: Duration::from_millis(80),
             seed: 42,
             filter: None,
+            threads: 1,
         }
     }
 

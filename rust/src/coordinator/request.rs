@@ -65,6 +65,11 @@ pub struct SampleRequest {
     /// freely: coarse ε batches carry the same guidance as fine ones, so
     /// the round drivers' merge path is unchanged.
     pub strategy: SolveStrategy,
+    /// Intra-round row-parallelism for this request's solver session (see
+    /// [`SolverConfig::parallelism`]). `1` (default) is the exact
+    /// historical single-threaded path; any setting is bitwise identical.
+    /// CLI: `--threads N`.
+    pub parallelism: usize,
 }
 
 impl SampleRequest {
@@ -83,6 +88,7 @@ impl SampleRequest {
             use_trajectory_cache: false,
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
+            parallelism: 1,
         }
     }
 
@@ -113,6 +119,7 @@ impl SampleRequest {
         }
         cfg.window_policy = self.window_policy.clone();
         cfg.strategy = self.strategy.clone();
+        cfg.parallelism = self.parallelism.max(1);
         cfg
     }
 }
@@ -195,6 +202,16 @@ mod tests {
             r.solver_config().strategy,
             SolveStrategy::Parareal(PararealConfig { stride: 5 })
         );
+    }
+
+    #[test]
+    fn parallelism_threads_through() {
+        let mut r = SampleRequest::parataa(Cond::Class(0), 2, SamplerSpec::ddim(16));
+        assert_eq!(r.solver_config().parallelism, 1, "sequential by default");
+        r.parallelism = 4;
+        assert_eq!(r.solver_config().parallelism, 4);
+        r.parallelism = 0; // degenerate: clamped to the sequential path
+        assert_eq!(r.solver_config().parallelism, 1);
     }
 
     #[test]

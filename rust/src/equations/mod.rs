@@ -148,6 +148,9 @@ pub fn bridge_coeffs(abar_hi: f64, abar_lo: f64, eta: f64) -> (f64, f64, f64) {
 
 /// First-order residual r_p = ‖x_p − a_{p+1}x_{p+1} − b_{p+1}ε_{p+1} −
 /// c_p ξ_p‖² (eq. 11) — the universal stopping criterion for every order k.
+/// Routed through the fused [`crate::linalg::residual_norm_sq`] kernel:
+/// one SIMD pass over the four streams, residual in f32, squares
+/// accumulated in f64 under the shared reduction-order contract.
 pub fn residual_sq(
     coeffs: &SamplerCoeffs,
     xs: &States,
@@ -159,16 +162,7 @@ pub fn residual_sq(
     let a = coeffs.a[t] as f32;
     let b = coeffs.b[t] as f32;
     let c = coeffs.c[p] as f32;
-    let xp = xs.row(p);
-    let xt = xs.row(t);
-    let e = eps.row(t);
-    let xi_p = xi.row(p);
-    let mut acc = 0.0f64;
-    for i in 0..xs.d {
-        let r = xp[i] - a * xt[i] - b * e[i] - c * xi_p[i];
-        acc += (r as f64) * (r as f64);
-    }
-    acc
+    crate::linalg::residual_norm_sq(xs.row(p), xs.row(t), eps.row(t), xi.row(p), a, b, c)
 }
 
 /// Combined noise vectors ξ̄_p = Σ_j ā_{t,j-1}·c_{j-1}·ξ_{j-1} for rows

@@ -24,7 +24,11 @@
 //! cache through the same accumulation path, and a bitwise property test
 //! pins the two against each other.
 
-use super::kernels::dot8;
+use super::kernels::{multi_dot8, LANES};
+
+/// History slots batched per `multi_dot8` call (m ≤ 8 everywhere in
+/// practice, so one batch usually covers a whole anchor's group).
+const BATCH: usize = 8;
 
 /// Per-row suffix Grams and projections in flat storage.
 ///
@@ -137,15 +141,44 @@ pub fn suffix_grams_into(
     out.reset(w, m);
     // Accumulators carried down the reverse scan, in f64: the suffix sums
     // telescope over up to W=100 rows and the Gram conditioning matters.
+    //
+    // Per-row contributions are batched: for each anchor slot `a`, one
+    // tiled `multi_dot8` pass computes ΔF_aᵀΔF_b for every b ≥ a *and*
+    // ΔF_aᵀR — the anchor row streams through L1 once per group instead
+    // of once per pair. Bitwise identical to per-pair `dot8` by the
+    // kernel reduction-order contract. Symmetric Gram: compute upper,
+    // `accumulate_gram` mirrors.
     for t in (t0..w).rev() {
         let row = t * d..(t + 1) * d;
-        // Per-row Gram contribution (symmetric — compute upper, mirror).
         for a in 0..m {
             let fa = &delta_f[a][row.clone()];
-            for b in a..m {
-                out.accumulate_gram(a, b, dot8(fa, &delta_f[b][row.clone()]));
+            // Products anchored at `a`: slots a..m, then the residual row.
+            let k = m - a + 1;
+            let mut j0 = 0;
+            while j0 < k {
+                let take = (k - j0).min(BATCH);
+                let mut slots: [&[f32]; BATCH] = [&[]; BATCH];
+                for (i, s) in slots.iter_mut().enumerate().take(take) {
+                    let j = j0 + i;
+                    *s = if a + j < m {
+                        &delta_f[a + j][row.clone()]
+                    } else {
+                        &residual[row.clone()]
+                    };
+                }
+                let mut acc = [0.0f64; BATCH * LANES];
+                let mut vals = [0.0f64; BATCH];
+                multi_dot8(fa, &slots[..take], &mut acc, &mut vals);
+                for (i, &v) in vals.iter().enumerate().take(take) {
+                    let j = j0 + i;
+                    if a + j < m {
+                        out.accumulate_gram(a, a + j, v);
+                    } else {
+                        out.accumulate_proj(a, v);
+                    }
+                }
+                j0 += take;
             }
-            out.accumulate_proj(a, dot8(fa, &residual[row.clone()]));
         }
         out.commit_row(t);
     }

@@ -1,61 +1,394 @@
-//! Vectorizable inner-loop kernels for the TAA numeric core.
+//! Explicit-SIMD inner-loop kernels for the TAA numeric core.
 //!
-//! The suffix-Gram scan and the Anderson correction loop spend all their
-//! time in two shapes of work: f32 dot products accumulated in f64 (the
-//! Gram/projection entries steer the stopping criterion, so precision
-//! matters) and elementwise row updates. The naive reduction is
-//! latency-bound — a single f64 accumulator serializes on the ~4-cycle add
-//! latency — so [`dot8`] splits the sum across 8 independent accumulators
-//! that the autovectorizer maps onto SIMD lanes, turning the loop
-//! throughput-bound. The fused correction
-//! `x_p += R_p − Σ_h γ_h·fused_h[p]` needs only the dependency-free axpy
-//! already provided by [`super::mat::add_scaled`]
-//! (see `solver::history::History::correct_row`).
+//! The per-round hot path spends its time in four shapes of work, each of
+//! which has a kernel here:
 //!
-//! Reassociating the sum changes the last-ulp rounding versus a sequential
-//! accumulator; every caller is pinned against a naive reference at
-//! tolerance, and the solver's golden tests compare two paths that share
-//! these kernels, so bit-identity across the session/driver split is
-//! preserved.
+//! - [`dot8`] — f32 dot product accumulated in f64 (Gram/projection
+//!   entries steer the stopping criterion, so precision matters);
+//! - [`multi_dot8`] — one pass of a single `a` row against many history
+//!   slots, tiled so `a` streams through L1 once per slot group instead of
+//!   once per slot (the Gram-cache refresh and the b_t projection rescan);
+//! - [`axpy`] — the dependency-free row update `out += α·x` behind
+//!   `mat::add_scaled` and the fused Anderson correction;
+//! - [`residual_norm_sq`] — the fused first-order residual norm
+//!   `Σ (x_p − a·x_t − b·ε − c·ξ)²` (eq. 11) in one pass, no staging
+//!   buffer.
+//!
+//! # The reduction-order contract
+//!
+//! Every reducing kernel shares **one** summation order, so any two code
+//! paths that compute the same quantity are bitwise identical:
+//!
+//! 1. element `i` accumulates into f64 lane `i mod 8` (tail elements
+//!    included — there is no separate tail accumulator);
+//! 2. within a lane, elements are added in increasing index order;
+//! 3. the 8 lanes are reduced by the fixed pairwise tree
+//!    `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+//!
+//! The contract makes the result independent of *how* the elements were
+//! fed in (whole-slice, or tile-by-tile with 8-aligned tiles as
+//! [`multi_dot8`] does) and of which instruction set ran the loop. The
+//! `#[cfg(target_arch = "x86_64")]` AVX paths use two 4×f64 vector
+//! accumulators holding exactly the 8 contract lanes and multiply-then-add
+//! (never FMA — Rust does not contract float expressions, so a fused
+//! multiply-add would *break* bit-equality with the scalar fallback).
+//! Every kernel exposes its `*_scalar` fallback publicly and
+//! `tests/kernel_properties.rs` sweeps SIMD vs scalar vs a naive oracle
+//! across lengths 0..257 for bitwise agreement.
+//!
+//! Reassociating a sum changes last-ulp rounding versus a single
+//! sequential accumulator, but every consumer (session, blocking driver,
+//! golden reference) shares these kernels, so the solver's bit-identity
+//! tests hold exactly.
 
-/// Dot product of two f32 slices with 8 independent f64 accumulators.
-///
-/// The 8 partial sums are reduced pairwise at the end, so the result is
-/// deterministic for a given length (but differs in the last ulps from a
-/// single sequential accumulator).
+/// f64 accumulator lanes per reducing kernel (the contract's modulus).
+pub const LANES: usize = 8;
+
+/// Tile length (elements) for [`multi_dot8`]'s cache blocking. A multiple
+/// of [`LANES`] so tiling never changes which lane an element lands in;
+/// 2048 f32 = 8 KiB keeps the shared `a` tile resident in L1 while the
+/// history slots stream past it.
+pub const DOT_TILE: usize = 2048;
+
+/// The fixed pairwise reduction tree closing the 8-lane contract.
 #[inline]
-pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len().min(b.len());
-    let n8 = n - n % 8;
-    let mut acc = [0.0f64; 8];
+fn reduce_tree8(acc: &[f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Is the AVX path available at runtime? Cached after the first query so
+/// hot loops pay one relaxed load, not a cpuid.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static AVX: AtomicU8 = AtomicU8::new(0); // 0 = unknown, 1 = yes, 2 = no
+    match AVX.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx");
+            AVX.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// True when the explicit-SIMD kernel paths are active on this machine
+/// (x86_64 with AVX); false means every kernel runs its scalar fallback.
+/// The `micro_kernels_simd` bench scenario reports this.
+pub fn simd_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        avx_available()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// --- lane accumulators (the composable core) ------------------------------
+
+/// Scalar reference accumulator: fold `a·b` into `acc` per the lane
+/// contract (element `i` → lane `i mod 8`, tail included).
+#[inline]
+pub(crate) fn dot_accum_scalar(a: &[f32], b: &[f32], acc: &mut [f64; LANES]) {
+    let n = a.len();
+    debug_assert_eq!(b.len(), n);
+    let n8 = n - n % LANES;
     let mut i = 0;
     while i < n8 {
         // Fixed-size subslices let the compiler elide bounds checks and
         // keep the 8 lanes independent.
-        let xa = &a[i..i + 8];
-        let xb = &b[i..i + 8];
-        for l in 0..8 {
+        let xa = &a[i..i + LANES];
+        let xb = &b[i..i + LANES];
+        for l in 0..LANES {
             acc[l] += (xa[l] as f64) * (xb[l] as f64);
         }
-        i += 8;
+        i += LANES;
     }
-    let mut tail = 0.0f64;
     for j in n8..n {
-        tail += (a[j] as f64) * (b[j] as f64);
+        acc[j - n8] += (a[j] as f64) * (b[j] as f64);
     }
-    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// AVX accumulator: two 4×f64 vectors hold the 8 contract lanes.
+/// Multiply-then-add only — FMA would fuse the rounding step and diverge
+/// from [`dot_accum_scalar`] bitwise.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn dot_accum_avx(a: &[f32], b: &[f32], acc: &mut [f64; LANES]) {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let n8 = n - n % LANES;
+    let mut acc_lo = _mm256_loadu_pd(acc.as_ptr());
+    let mut acc_hi = _mm256_loadu_pd(acc.as_ptr().add(4));
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let va = _mm256_loadu_ps(pa.add(i));
+        let vb = _mm256_loadu_ps(pb.add(i));
+        let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(va));
+        let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(va));
+        let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(vb));
+        let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(vb));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(a_lo, b_lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(a_hi, b_hi));
+        i += LANES;
+    }
+    _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+    for j in n8..n {
+        acc[j - n8] += (*pa.add(j) as f64) * (*pb.add(j) as f64);
+    }
+}
+
+/// Dispatching accumulator — SIMD when available, scalar otherwise;
+/// bitwise identical either way.
+#[inline]
+pub(crate) fn dot_accum(a: &[f32], b: &[f32], acc: &mut [f64; LANES]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx_available() {
+        // SAFETY: guarded by the runtime AVX check above.
+        unsafe { dot_accum_avx(a, b, acc) };
+        return;
+    }
+    dot_accum_scalar(a, b, acc);
+}
+
+// --- dot8 -----------------------------------------------------------------
+
+/// Dot product of two f32 slices accumulated in f64 under the 8-lane
+/// reduction-order contract (see the module docs). Dispatches to AVX when
+/// available; [`dot8_scalar`] is the bitwise-identical fallback.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f64; LANES];
+    dot_accum(&a[..n], &b[..n], &mut acc);
+    reduce_tree8(&acc)
+}
+
+/// [`dot8`] forced onto the scalar fallback — exposed so property tests
+/// (and the `micro_kernels_simd` scenario) can pin SIMD ≡ scalar bitwise.
+#[inline]
+pub fn dot8_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f64; LANES];
+    dot_accum_scalar(&a[..n], &b[..n], &mut acc);
+    reduce_tree8(&acc)
+}
+
+// --- multi_dot8 -----------------------------------------------------------
+
+fn multi_dot8_impl(
+    a: &[f32],
+    slots: &[&[f32]],
+    acc: &mut [f64],
+    out: &mut [f64],
+    accum: fn(&[f32], &[f32], &mut [f64; LANES]),
+) {
+    let k = slots.len();
+    assert!(acc.len() >= k * LANES, "multi_dot8 needs {} acc lanes", k * LANES);
+    assert!(out.len() >= k, "multi_dot8 needs {k} output slots");
+    for v in &mut acc[..k * LANES] {
+        *v = 0.0;
+    }
+    let n = a.len();
+    let mut t0 = 0;
+    while t0 < n {
+        let t1 = (t0 + DOT_TILE).min(n);
+        let at = &a[t0..t1];
+        for (j, s) in slots.iter().enumerate() {
+            let lanes: &mut [f64; LANES] =
+                (&mut acc[j * LANES..(j + 1) * LANES]).try_into().unwrap();
+            accum(at, &s[t0..t1], lanes);
+        }
+        t0 = t1;
+    }
+    for j in 0..k {
+        let lanes: &[f64; LANES] = (&acc[j * LANES..(j + 1) * LANES]).try_into().unwrap();
+        out[j] = reduce_tree8(lanes);
+    }
+}
+
+/// Batched dot: `out[j] = dot8(a, slots[j])` for every history slot in one
+/// tiled pass over `a` ([`DOT_TILE`]-element blocks, so `a`'s tile stays in
+/// L1 across the slot group instead of being re-streamed per slot).
+///
+/// Each slot must be at least `a.len()` long. `acc` is caller-owned lane
+/// scratch (`slots.len() * `[`LANES`] f64s) so steady-state callers
+/// allocate nothing. Because tiles are 8-aligned, every element lands in
+/// the same contract lane as in a whole-slice [`dot8`] — the results are
+/// **bitwise identical** to calling [`dot8`] per slot.
+#[inline]
+pub fn multi_dot8(a: &[f32], slots: &[&[f32]], acc: &mut [f64], out: &mut [f64]) {
+    multi_dot8_impl(a, slots, acc, out, dot_accum);
+}
+
+/// [`multi_dot8`] forced onto the scalar fallback (property-test oracle).
+#[inline]
+pub fn multi_dot8_scalar(a: &[f32], slots: &[&[f32]], acc: &mut [f64], out: &mut [f64]) {
+    multi_dot8_impl(a, slots, acc, out, dot_accum_scalar);
+}
+
+// --- axpy -----------------------------------------------------------------
+
+/// Scalar fallback for [`axpy`]: `out[i] += alpha * x[i]`. Elementwise
+/// (no reduction), so SIMD vs scalar agreement is exact per element.
+#[inline]
+pub fn axpy_scalar(out: &mut [f32], x: &[f32], alpha: f32) {
+    let n = out.len().min(x.len());
+    for i in 0..n {
+        out[i] += alpha * x[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn axpy_avx(out: &mut [f32], x: &[f32], alpha: f32) {
+    use std::arch::x86_64::*;
+    let n = out.len().min(x.len());
+    let n8 = n - n % LANES;
+    let va = _mm256_set1_ps(alpha);
+    let po = out.as_mut_ptr();
+    let px = x.as_ptr();
+    let mut i = 0;
+    while i < n8 {
+        let vo = _mm256_loadu_ps(po.add(i));
+        let vx = _mm256_loadu_ps(px.add(i));
+        // mul then add — no FMA, matching the scalar `out + alpha * x`.
+        _mm256_storeu_ps(po.add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vx)));
+        i += LANES;
+    }
+    for j in n8..n {
+        *po.add(j) += alpha * *px.add(j);
+    }
+}
+
+/// The Anderson-correction axpy `out[i] += alpha * x[i]` over
+/// `min(out.len(), x.len())` elements. Dispatches to AVX when available;
+/// bitwise identical to [`axpy_scalar`] either way.
+#[inline]
+pub fn axpy(out: &mut [f32], x: &[f32], alpha: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if avx_available() {
+        // SAFETY: guarded by the runtime AVX check.
+        unsafe { axpy_avx(out, x, alpha) };
+        return;
+    }
+    axpy_scalar(out, x, alpha);
+}
+
+// --- fused residual norm --------------------------------------------------
+
+/// Scalar fallback for [`residual_norm_sq`] under the same lane contract.
+pub fn residual_norm_sq_scalar(xp: &[f32], xt: &[f32], e: &[f32], xi: &[f32], a: f32, b: f32, c: f32) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    residual_accum_scalar(xp, xt, e, xi, a, b, c, &mut acc);
+    reduce_tree8(&acc)
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn residual_accum_scalar(
+    xp: &[f32],
+    xt: &[f32],
+    e: &[f32],
+    xi: &[f32],
+    a: f32,
+    b: f32,
+    c: f32,
+    acc: &mut [f64; LANES],
+) {
+    let n = xp.len();
+    debug_assert!(xt.len() >= n && e.len() >= n && xi.len() >= n);
+    let n8 = n - n % LANES;
+    let mut i = 0;
+    while i < n8 {
+        for l in 0..LANES {
+            let r = xp[i + l] - a * xt[i + l] - b * e[i + l] - c * xi[i + l];
+            acc[l] += (r as f64) * (r as f64);
+        }
+        i += LANES;
+    }
+    for j in n8..n {
+        let r = xp[j] - a * xt[j] - b * e[j] - c * xi[j];
+        acc[j - n8] += (r as f64) * (r as f64);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx")]
+unsafe fn residual_accum_avx(
+    xp: &[f32],
+    xt: &[f32],
+    e: &[f32],
+    xi: &[f32],
+    a: f32,
+    b: f32,
+    c: f32,
+    acc: &mut [f64; LANES],
+) {
+    use std::arch::x86_64::*;
+    let n = xp.len();
+    let n8 = n - n % LANES;
+    let va = _mm256_set1_ps(a);
+    let vb = _mm256_set1_ps(b);
+    let vc = _mm256_set1_ps(c);
+    let mut acc_lo = _mm256_loadu_pd(acc.as_ptr());
+    let mut acc_hi = _mm256_loadu_pd(acc.as_ptr().add(4));
+    let mut i = 0;
+    while i < n8 {
+        // r = ((xp − a·xt) − b·e) − c·ξ in f32, exactly the scalar
+        // expression's evaluation order, then widen and square-accumulate.
+        let mut r = _mm256_sub_ps(
+            _mm256_loadu_ps(xp.as_ptr().add(i)),
+            _mm256_mul_ps(va, _mm256_loadu_ps(xt.as_ptr().add(i))),
+        );
+        r = _mm256_sub_ps(r, _mm256_mul_ps(vb, _mm256_loadu_ps(e.as_ptr().add(i))));
+        r = _mm256_sub_ps(r, _mm256_mul_ps(vc, _mm256_loadu_ps(xi.as_ptr().add(i))));
+        let r_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(r));
+        let r_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(r));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(r_lo, r_lo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(r_hi, r_hi));
+        i += LANES;
+    }
+    _mm256_storeu_pd(acc.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(acc.as_mut_ptr().add(4), acc_hi);
+    for j in n8..n {
+        let r = xp[j] - a * xt[j] - b * e[j] - c * xi[j];
+        acc[j - n8] += (r as f64) * (r as f64);
+    }
+}
+
+/// Fused first-order residual norm (eq. 11):
+/// `Σ_i (xp[i] − a·xt[i] − b·e[i] − c·xi[i])²` with the residual computed
+/// in f32 (matching the historical staging-free loop) and the squares
+/// accumulated in f64 under the 8-lane contract. One pass over four
+/// streams, no intermediate buffer. Wrong-way scalar expressions here
+/// would break bit-equality: the AVX path evaluates the exact scalar
+/// operation order per element.
+pub fn residual_norm_sq(xp: &[f32], xt: &[f32], e: &[f32], xi: &[f32], a: f32, b: f32, c: f32) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    #[cfg(target_arch = "x86_64")]
+    if avx_available() {
+        // SAFETY: guarded by the runtime AVX check.
+        unsafe { residual_accum_avx(xp, xt, e, xi, a, b, c, &mut acc) };
+        return reduce_tree8(&acc);
+    }
+    residual_accum_scalar(xp, xt, e, xi, a, b, c, &mut acc);
+    reduce_tree8(&acc)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proplite::{forall, size_in};
+    use crate::util::proplite::{forall, naive_dot, size_in};
     use crate::util::rng::Pcg64;
-
-    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
-        a.iter().zip(b.iter()).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
-    }
 
     #[test]
     fn dot8_matches_naive_all_lengths() {
@@ -84,5 +417,64 @@ mod tests {
     #[test]
     fn dot8_empty_is_zero() {
         assert_eq!(dot8(&[], &[]), 0.0);
+        assert_eq!(dot8_scalar(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_bitwise() {
+        // The full-width sweep lives in tests/kernel_properties.rs; this is
+        // the in-module smoke over a few odd lengths.
+        let mut rng = Pcg64::seeded(11);
+        for n in [1usize, 7, 8, 9, 63, 257] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            assert_eq!(dot8(&a, &b).to_bits(), dot8_scalar(&a, &b).to_bits(), "dot n={n}");
+            let mut o1 = a.clone();
+            let mut o2 = a.clone();
+            axpy(&mut o1, &b, -0.37);
+            axpy_scalar(&mut o2, &b, -0.37);
+            assert_eq!(o1, o2, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn multi_dot8_is_bitwise_per_slot_dot8() {
+        // Tiling + batching must not change a single bit vs dot8 per slot,
+        // including lengths spanning several DOT_TILE blocks.
+        let mut rng = Pcg64::seeded(13);
+        for n in [0usize, 5, 8, 100, DOT_TILE - 3, DOT_TILE, 2 * DOT_TILE + 17] {
+            let a: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let slots: Vec<Vec<f32>> =
+                (0..3).map(|_| (0..n).map(|_| rng.next_f32() - 0.5).collect()).collect();
+            let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+            let mut acc = vec![0.0f64; refs.len() * LANES];
+            let mut out = vec![0.0f64; refs.len()];
+            multi_dot8(&a, &refs, &mut acc, &mut out);
+            for (j, s) in refs.iter().enumerate() {
+                assert_eq!(out[j].to_bits(), dot8(&a, s).to_bits(), "slot {j}, n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_norm_matches_unfused_loop() {
+        let mut rng = Pcg64::seeded(15);
+        for n in [0usize, 3, 8, 40, 257] {
+            let xp: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let xt: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let e: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let xi: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let (a, b, c) = (0.97f32, 0.21f32, 0.04f32);
+            let fused = residual_norm_sq(&xp, &xt, &e, &xi, a, b, c);
+            let scalar = residual_norm_sq_scalar(&xp, &xt, &e, &xi, a, b, c);
+            assert_eq!(fused.to_bits(), scalar.to_bits(), "simd vs scalar, n={n}");
+            let naive: f64 = (0..n)
+                .map(|i| {
+                    let r = xp[i] - a * xt[i] - b * e[i] - c * xi[i];
+                    (r as f64) * (r as f64)
+                })
+                .sum();
+            assert!((fused - naive).abs() <= 1e-9 * (1.0 + naive.abs()), "n={n}");
+        }
     }
 }

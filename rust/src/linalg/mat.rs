@@ -55,13 +55,13 @@ pub fn l2_norm_sq(a: &[f32]) -> f64 {
     acc
 }
 
-/// `out += alpha * x` elementwise.
+/// `out += alpha * x` elementwise. Routed through the explicit-SIMD
+/// [`kernels::axpy`](super::kernels::axpy); elementwise, so the SIMD and
+/// scalar paths agree bitwise per element.
 #[inline]
 pub fn add_scaled(out: &mut [f32], x: &[f32], alpha: f32) {
     debug_assert_eq!(out.len(), x.len());
-    for (o, &v) in out.iter_mut().zip(x.iter()) {
-        *o += alpha * v;
-    }
+    super::kernels::axpy(out, x, alpha);
 }
 
 /// `out = a - b` elementwise.

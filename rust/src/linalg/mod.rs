@@ -14,9 +14,12 @@
 //! - [`gram`]: the suffix-Gram scan at the core of Triangular Anderson
 //!   Acceleration (native mirror of the Pallas kernel in
 //!   `python/compile/kernels/taa_update.py`), flat storage + write-into API,
-//! - [`kernels`]: the vectorizable 8-accumulator dot product shared by the
-//!   Gram scan, the incremental Gram cache, and the projection rescan
-//!   (the Anderson correction reuses [`mat::add_scaled`]).
+//! - [`kernels`]: the explicit-SIMD inner-loop suite — [`kernels::dot8`],
+//!   the batched [`kernels::multi_dot8`] (one tiled pass of a row against
+//!   several history slots), the correction [`kernels::axpy`], and the
+//!   fused [`kernels::residual_norm_sq`] — all sharing one 8-lane
+//!   reduction-order contract so SIMD, scalar fallback, and tiled callers
+//!   are bitwise identical (see the module docs for the contract).
 
 pub mod gram;
 pub mod kernels;
@@ -24,7 +27,7 @@ pub mod mat;
 pub mod solve;
 
 pub use gram::{suffix_grams, suffix_grams_into, SuffixGrams};
-pub use kernels::dot8;
+pub use kernels::{axpy, dot8, multi_dot8, residual_norm_sq};
 pub use mat::{add_scaled, dot, l2_norm_sq, matmul, matvec, sub};
 pub use solve::{
     cholesky_factor_into, cholesky_solve, cholesky_solve_factored, cholesky_solve_into, lu_solve,

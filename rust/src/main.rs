@@ -52,12 +52,15 @@ fn help() {
          subcommands:\n\
            sample      solve one request    (--model dit|gmm --steps N --seed N\n\
                        --method taa|fp|aa|aa+ --class C --out img.pgm;\n\
+                       --threads N: intra-round row-parallelism for the\n\
+                       numeric core — bitwise identical at every setting;\n\
                        --trace FILE: Perfetto-loadable Chrome trace of the solve)\n\
            serve       coordinator demo under synthetic load\n\
                        (--requests N --workers N: admission threads; --drivers N:\n\
                        round-driver threads carrying all in-flight sessions and\n\
                        merging their per-round eps batches; --devices N: N-backend\n\
-                       execution pool with sharding + work stealing; --stream:\n\
+                       execution pool with sharding + work stealing;\n\
+                       --threads N: per-session row-parallelism; --stream:\n\
                        deliver each request's converged prefix incrementally and\n\
                        verify the streamed states bitwise against a non-streaming\n\
                        re-run; --adaptive-window: size each solve's window from\n\
@@ -75,6 +78,8 @@ fn help() {
                        replayable via the convergence subcommand)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
+                       --threads N: session parallelism for the hot-loop\n\
+                       scenarios;\n\
                        --baseline FILE [--threshold PCT]: print a regression\n\
                        table and exit 3 if any metric is >PCT pct worse)\n\
            fig1        FP residual convergence vs order k\n\
@@ -130,7 +135,10 @@ fn cmd_sample(args: &Args) {
     let scenario = Scenario::new(model, kind, steps);
     let coeffs = scenario.coeffs();
     let problem = Problem::new(&coeffs, &*scenario.model, Cond::Class(class), seed);
-    let cfg = method_config(method, steps, args.get("k").map(|v| v.parse().unwrap()), scenario.guidance);
+    let mut cfg = method_config(method, steps, args.get("k").map(|v| v.parse().unwrap()), scenario.guidance);
+    // Intra-round row-parallelism for the numeric core; bitwise identical
+    // at every setting, so --threads is purely a wall-clock knob.
+    cfg.parallelism = args.usize_or("threads", 1).max(1);
     let trace_out = args.get("trace").map(str::to_string);
     if trace_out.is_some() {
         parataa::trace::enable();
@@ -225,6 +233,7 @@ fn cmd_serve(args: &Args) {
     let devices = args.usize_or("devices", 1).max(1);
     let stream = args.has_flag("stream");
     let adaptive = args.has_flag("adaptive-window");
+    let threads = args.usize_or("threads", 1).max(1);
     let strategies = args.get_or("strategies", "plain");
     let mixed = match strategies.as_str() {
         "plain" => false,
@@ -278,6 +287,9 @@ fn cmd_serve(args: &Args) {
         let mut req =
             SampleRequest::parataa(conds[i].clone(), i as u64, SamplerSpec::ddim(steps));
         req.guidance = guidance;
+        // Intra-round row-parallelism per session (bitwise inert, so the
+        // streaming re-run equality check below is unaffected).
+        req.parallelism = threads;
         // The streaming demo re-solves every request for the bitwise
         // equality check, so both passes must stay cold (a warm start in
         // one pass only would legitimately change the solve).
@@ -457,6 +469,7 @@ fn cmd_bench(args: &Args) {
 
     let mut opts = if args.has_flag("quick") { BenchOpts::quick() } else { BenchOpts::full() };
     opts.seed = args.u64_or("seed", opts.seed);
+    opts.threads = args.usize_or("threads", opts.threads).max(1);
     if let Some(f) = args.get("only") {
         opts.filter = Some(f.to_string());
     }

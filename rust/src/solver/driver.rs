@@ -140,6 +140,7 @@ mod tests {
                     clamp_boundary: true,
                     window_policy: WindowPolicy::Fixed,
                     strategy: SolveStrategy::PlainTaa,
+                    parallelism: 1,
                 };
                 let par = solve(&problem, &cfg);
                 if !par.converged {
@@ -181,6 +182,7 @@ mod tests {
                     clamp_boundary: true,
                     window_policy: WindowPolicy::Fixed,
                     strategy: SolveStrategy::PlainTaa,
+                    parallelism: 1,
                 };
                 let r = solve(&problem, &cfg);
                 if !r.converged {
@@ -234,6 +236,7 @@ mod tests {
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
+            parallelism: 1,
         });
         let taa = solve(&problem, &SolverConfig {
             k,
@@ -248,6 +251,7 @@ mod tests {
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
+            parallelism: 1,
         });
         assert!(fp.converged && taa.converged);
         assert!(
@@ -282,6 +286,7 @@ mod tests {
                 clamp_boundary: true,
                 window_policy: WindowPolicy::Fixed,
                 strategy: SolveStrategy::PlainTaa,
+                parallelism: 1,
             };
             let par = solve(&problem, &cfg);
             if !par.converged {

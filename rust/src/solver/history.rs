@@ -27,13 +27,31 @@
 //! projection b_t (which changes every round, O(W·m·D)). [`History::clear`]
 //! — the window-jump path — drops the cache wholesale.
 //!
-//! The cached per-row products are computed by the same [`dot8`] kernel the
-//! from-scratch scan uses, so the cached and rescanned suffix Grams are
+//! The cached per-row products are computed by the same kernel contract
+//! the from-scratch scan uses ([`multi_dot8`] is bitwise-identical to
+//! per-pair `dot8`), so the cached and rescanned suffix Grams are
 //! **bit-identical** (pinned by a property test below).
+//!
+//! # Tiling and row-parallelism
+//!
+//! The refresh is structured **row-outer**: for each window row `t`, one
+//! tiled [`multi_dot8`] pass streams the new slot's row against every live
+//! slot's row, so the `[rows*d]`-strided buffers are walked row-at-a-time
+//! instead of slot-at-a-time and the new row stays in L1 across the slot
+//! group. Because each `t` writes only its own `cap×cap` block of the
+//! cache, rows are independent — [`History::push_ranged_par`] fans them
+//! across an optional [`RowPool`]. Chunking never changes any value (each
+//! entry is computed by exactly one row's pass), so results are bitwise
+//! identical at every thread count.
 
 use crate::linalg::gram::SuffixGrams;
-use crate::linalg::kernels::dot8;
+use crate::linalg::kernels::{multi_dot8, LANES};
 use crate::linalg::mat::add_scaled;
+use crate::util::threadpool::{chunk_range, RowPool, SyncSlice};
+
+/// Slots batched per `multi_dot8` call in the cache refresh and the
+/// projection rescan (cap ≤ 8 in practice, so one batch usually suffices).
+const GRAM_BATCH: usize = 8;
 
 /// Ring buffer of history difference pairs with a per-row Gram cache.
 pub struct History {
@@ -112,6 +130,20 @@ impl History {
     /// lets the Gram cache and the correction loop skip them). `push` is
     /// the full-range special case; the two are numerically identical.
     pub fn push_ranged(&mut self, dx: &[f32], df: &[f32], lo: usize, hi: usize) {
+        self.push_ranged_par(dx, df, lo, hi, None);
+    }
+
+    /// [`push_ranged`](Self::push_ranged) with the Gram-cache refresh
+    /// fanned across `pool` (row-partitioned; bitwise identical to the
+    /// sequential path at every thread count — see the module docs).
+    pub fn push_ranged_par(
+        &mut self,
+        dx: &[f32],
+        df: &[f32],
+        lo: usize,
+        hi: usize,
+        pool: Option<&RowPool>,
+    ) {
         if self.cap == 0 {
             return;
         }
@@ -153,25 +185,68 @@ impl History {
         self.len = (self.len + 1).min(self.cap);
 
         // Refresh the cache entries involving slot s (only those changed).
+        // Row-outer: each window row owns its cap×cap block, computed by
+        // one tiled multi_dot8 pass of the new slot's row against every
+        // live in-range slot's row. Rows are independent, so they fan
+        // across the pool; every entry is produced by exactly one row's
+        // pass, making the result bitwise chunking-invariant.
         let cap = self.cap;
         let d = self.d;
+        let len = self.len;
+        let rows = self.rows;
         let df_buf = &self.df;
-        let rg = &mut self.row_gram;
-        for h in 0..self.len {
-            // Drop the previous occupant's contributions everywhere...
-            for t in 0..self.rows {
-                rg[t * cap * cap + s * cap + h] = 0.0;
-                rg[t * cap * cap + h * cap + s] = 0.0;
+        let slot_lo = &self.lo;
+        let slot_hi = &self.hi;
+        let rg_view = SyncSlice::new(&mut self.row_gram);
+
+        let refresh_row = |t: usize| {
+            // SAFETY: row t's cap×cap block is touched by no other row.
+            let rgt = unsafe { rg_view.slice_mut(t * cap * cap, cap * cap) };
+            // Drop the previous occupant's contributions...
+            for h in 0..len {
+                rgt[s * cap + h] = 0.0;
+                rgt[h * cap + s] = 0.0;
             }
-            // ...then fill the rows where both slots can be nonzero.
-            let plo = lo.max(self.lo[h]);
-            let phi = hi.min(self.hi[h]);
-            for t in plo..phi {
-                let fs = &df_buf[s * n + t * d..s * n + (t + 1) * d];
-                let fh = &df_buf[h * n + t * d..h * n + (t + 1) * d];
-                let v = dot8(fs, fh);
-                rg[t * cap * cap + s * cap + h] = v;
-                rg[t * cap * cap + h * cap + s] = v;
+            // ...then fill where both the new slot and a live slot can be
+            // nonzero on this row.
+            if t < lo || t >= hi {
+                return;
+            }
+            let fs = &df_buf[s * n + t * d..s * n + (t + 1) * d];
+            let mut hs = [0usize; GRAM_BATCH];
+            let mut slots: [&[f32]; GRAM_BATCH] = [&[]; GRAM_BATCH];
+            let mut cnt = 0;
+            for h in 0..len {
+                if t < slot_lo[h] || t >= slot_hi[h] {
+                    continue;
+                }
+                hs[cnt] = h;
+                slots[cnt] = &df_buf[h * n + t * d..h * n + (t + 1) * d];
+                cnt += 1;
+                if cnt == GRAM_BATCH {
+                    fill_gram_row(fs, &hs[..cnt], &slots[..cnt], rgt, s, cap);
+                    cnt = 0;
+                }
+            }
+            if cnt > 0 {
+                fill_gram_row(fs, &hs[..cnt], &slots[..cnt], rgt, s, cap);
+            }
+        };
+
+        match pool {
+            Some(pool) if rows > 1 => {
+                let chunks = pool.threads();
+                pool.run(chunks, &|c| {
+                    let (c0, c1) = chunk_range(rows, chunks, c);
+                    for t in c0..c1 {
+                        refresh_row(t);
+                    }
+                });
+            }
+            _ => {
+                for t in 0..rows {
+                    refresh_row(t);
+                }
             }
         }
     }
@@ -215,12 +290,31 @@ impl History {
                 for b in a..m {
                     out.accumulate_gram(a, b, self.row_gram[base + a * self.cap + b]);
                 }
-                // Rows outside slot a's active range hold zeros — skip the
-                // dot entirely (contributes exactly +0.0).
-                if t >= self.lo[a] && t < self.hi[a] {
-                    let fa = &self.df[a * n + t * d..a * n + (t + 1) * d];
-                    out.accumulate_proj(a, dot8(fa, &residual[t * d..(t + 1) * d]));
+            }
+            // Projection rescan, batched: one tiled multi_dot8 pass of the
+            // residual row against every in-range slot row (the dot is
+            // bitwise symmetric — per-lane products commute and the
+            // reduction order is fixed by the kernel contract). Rows
+            // outside a slot's active range hold zeros and are skipped
+            // entirely (contributes exactly +0.0).
+            let r_row = &residual[t * d..(t + 1) * d];
+            let mut idx = [0usize; GRAM_BATCH];
+            let mut slots: [&[f32]; GRAM_BATCH] = [&[]; GRAM_BATCH];
+            let mut cnt = 0;
+            for a in 0..m {
+                if t < self.lo[a] || t >= self.hi[a] {
+                    continue;
                 }
+                idx[cnt] = a;
+                slots[cnt] = &self.df[a * n + t * d..a * n + (t + 1) * d];
+                cnt += 1;
+                if cnt == GRAM_BATCH {
+                    accumulate_proj_batch(r_row, &idx[..cnt], &slots[..cnt], out);
+                    cnt = 0;
+                }
+            }
+            if cnt > 0 {
+                accumulate_proj_batch(r_row, &idx[..cnt], &slots[..cnt], out);
             }
             out.commit_row(t);
         }
@@ -254,6 +348,29 @@ impl History {
         self.row_gram.fill(0.0);
         self.lo.fill(0);
         self.hi.fill(0);
+    }
+}
+
+/// One batched Gram fill: `rgt[s,h] = rgt[h,s] = fs·slots[i]` for each
+/// batched slot `h = hs[i]`, bitwise identical to per-pair `dot8`.
+fn fill_gram_row(fs: &[f32], hs: &[usize], slots: &[&[f32]], rgt: &mut [f64], s: usize, cap: usize) {
+    let mut acc = [0.0f64; GRAM_BATCH * LANES];
+    let mut vals = [0.0f64; GRAM_BATCH];
+    multi_dot8(fs, slots, &mut acc, &mut vals);
+    for (&h, &v) in hs.iter().zip(vals.iter()) {
+        rgt[s * cap + h] = v;
+        rgt[h * cap + s] = v;
+    }
+}
+
+/// One batched projection fill: `b[a] += r_row·slots[i]` for each batched
+/// slot `a = idx[i]`.
+fn accumulate_proj_batch(r_row: &[f32], idx: &[usize], slots: &[&[f32]], out: &mut SuffixGrams) {
+    let mut acc = [0.0f64; GRAM_BATCH * LANES];
+    let mut vals = [0.0f64; GRAM_BATCH];
+    multi_dot8(r_row, slots, &mut acc, &mut vals);
+    for (&a, &v) in idx.iter().zip(vals.iter()) {
+        out.accumulate_proj(a, v);
     }
 }
 
@@ -424,6 +541,43 @@ mod tests {
             for t in t0..w {
                 assert_eq!(cached.gram(t), rescan.gram(t), "gram row {t} (t0={t0})");
                 assert_eq!(cached.proj(t), rescan.proj(t), "proj row {t} (t0={t0})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_push_is_bitwise_identical_to_sequential() {
+        // Same pushes through push_ranged (sequential) and push_ranged_par
+        // at several thread counts: the Gram cache must not differ by a
+        // single bit (chunking invariance).
+        use crate::util::threadpool::RowPool;
+        let (w, d, cap) = (37usize, 129usize, 5usize);
+        for threads in [2usize, 4, 8] {
+            let pool = RowPool::new(threads);
+            let mut rng = Pcg64::seeded(31);
+            let mut seq = History::new(cap, w, d);
+            let mut par = History::new(cap, w, d);
+            for i in 0..cap + 3 {
+                let hi = w - 2 * i.min(8);
+                let lo = hi.saturating_sub(20);
+                let mut dx = vec![0.0f32; w * d];
+                let mut df = vec![0.0f32; w * d];
+                for j in lo * d..hi * d {
+                    dx[j] = rng.next_f32() - 0.5;
+                    df[j] = rng.next_f32() - 0.5;
+                }
+                seq.push_ranged(&dx, &df, lo, hi);
+                par.push_ranged_par(&dx, &df, lo, hi, Some(&pool));
+            }
+            assert_eq!(seq.row_gram, par.row_gram, "gram cache drift at {threads} threads");
+            let res = rng.gaussian_vec(w * d);
+            let mut a = SuffixGrams::new();
+            let mut b = SuffixGrams::new();
+            seq.suffix_grams_into(&res, 0, &mut a);
+            par.suffix_grams_into(&res, 0, &mut b);
+            for t in 0..w {
+                assert_eq!(a.gram(t), b.gram(t), "gram row {t} at {threads} threads");
+                assert_eq!(a.proj(t), b.proj(t), "proj row {t} at {threads} threads");
             }
         }
     }

@@ -119,6 +119,14 @@ pub struct SolverConfig {
     /// [`SolveStrategy::Parareal`] alternates coarse sweeps with fine
     /// parallel-correction rounds.
     pub strategy: SolveStrategy,
+    /// Intra-round row-parallelism: the per-round Gram refresh, Anderson
+    /// correction, and residual-front evaluation fan across this many
+    /// threads (a session-owned `RowPool`; the solver thread participates).
+    /// `1` (the default) runs the exact historical single-threaded path
+    /// with no pool at all. Results are **bitwise identical** at every
+    /// setting — per-row outputs have fixed owners and all reductions stay
+    /// sequential on the solver thread (CLI: `--threads N`).
+    pub parallelism: usize,
 }
 
 impl SolverConfig {
@@ -160,6 +168,7 @@ impl SolverConfig {
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
+            parallelism: 1,
         }
     }
 
@@ -178,6 +187,7 @@ impl SolverConfig {
             clamp_boundary: true,
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
+            parallelism: 1,
         }
     }
 

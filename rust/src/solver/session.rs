@@ -50,7 +50,7 @@
 use super::driver::{IterationRecord, SolveResult};
 use super::history::History;
 use super::strategy::{interpolate_segment, lift_trajectory, SolveStrategy};
-use super::update::apply_update_ws;
+use super::update::apply_update_par;
 use super::window_ctrl::{WindowController, WindowPolicy};
 use super::workspace::Workspace;
 use super::{Problem, SolverConfig};
@@ -58,6 +58,7 @@ use crate::equations::{bridge_coeffs, eval_fk, residual_sq, States};
 use crate::model::Cond;
 use crate::schedule::SamplerCoeffs;
 use crate::trace::{self, Layer, Name};
+use crate::util::threadpool::{chunk_range, RowPool, SyncSlice};
 
 /// One pending ε job: the batched denoiser evaluation the session needs
 /// before its next [`SolverSession::resume`]. Slices borrow the session's
@@ -243,8 +244,15 @@ pub struct SolverSession {
     batch_states: Vec<usize>,
     /// Update-path scratch (suffix Grams, ridge/γ/Cholesky buffers): the
     /// session owns it so steady-state rounds allocate nothing inside
-    /// `apply_update_ws`. Plain `Vec`s — the session stays `Send`.
+    /// the update path. Plain `Vec`s — the session stays `Send`.
     ws: Workspace,
+    /// Intra-round worker pool (`None` when `cfg.parallelism <= 1` — the
+    /// exact historical single-threaded path, no threads spawned). The
+    /// session owns it so thread startup amortizes across every round;
+    /// per-row work fans over it in fixed-owner contiguous chunks and all
+    /// reductions stay on the solver thread, so results are bitwise
+    /// identical at every thread count (see [`SolverConfig::parallelism`]).
+    row_pool: Option<RowPool>,
 
     /// Adaptive window controller (`None` under [`WindowPolicy::Fixed`] —
     /// that path is bit-identical to the pre-controller solver).
@@ -346,6 +354,7 @@ impl SolverSession {
             batch_t: Vec::new(),
             batch_states: Vec::new(),
             ws: Workspace::new(),
+            row_pool: (cfg.parallelism > 1).then(|| RowPool::new(cfg.parallelism)),
             controller,
             reported_front: t_count,
             fidelity: None,
@@ -391,6 +400,9 @@ impl SolverSession {
                     let mut ccfg = cfg.clone();
                     ccfg.strategy = SolveStrategy::PlainTaa;
                     ccfg.safeguard = true; // ≤ C+1-round draft guarantee
+                    // The coarse grid is small; a nested pool would spawn a
+                    // second thread set for negligible row counts.
+                    ccfg.parallelism = 1;
                     ccfg.window = c_steps;
                     ccfg.window_policy = WindowPolicy::Fixed;
                     ccfg.tol = dr.resolve_tol(cfg.tol);
@@ -488,10 +500,35 @@ impl SolverSession {
         }
 
         // --- Residuals + convergence front (§2.1) --------------------------
+        let eval_span = trace::begin();
         let (t1, t2) = (self.t1, self.t2);
-        for p in t1..=t2 {
-            self.last_residual[p] =
-                Some(residual_sq(&self.coeffs, &self.xs, &self.eps, &self.xi, p));
+        let rows = t2 - t1 + 1;
+        match self.row_pool.as_ref() {
+            Some(pool) if rows > 1 => {
+                // Each row's residual has exactly one owner (fixed by
+                // `chunk_range`), and the f64 lands in that row's slot, so
+                // the result is bitwise chunking-invariant; the front scan
+                // below stays sequential on the solver thread.
+                let coeffs = &self.coeffs;
+                let (xs, eps, xi) = (&self.xs, &self.eps, &self.xi);
+                let lr = SyncSlice::new(&mut self.last_residual);
+                let chunks = pool.threads();
+                pool.run(chunks, &|c| {
+                    let (c0, c1) = chunk_range(rows, chunks, c);
+                    for r in c0..c1 {
+                        let p = t1 + r;
+                        // SAFETY: row p is owned by exactly one chunk.
+                        let slot = unsafe { &mut lr.slice_mut(p, 1)[0] };
+                        *slot = Some(residual_sq(coeffs, xs, eps, xi, p));
+                    }
+                });
+            }
+            _ => {
+                for p in t1..=t2 {
+                    self.last_residual[p] =
+                        Some(residual_sq(&self.coeffs, &self.xs, &self.eps, &self.xi, p));
+                }
+            }
         }
         let mut new_t2: Option<usize> = None;
         for p in (t1..=t2).rev() {
@@ -535,6 +572,14 @@ impl SolverSession {
             // Final front advance: the whole remaining window froze.
             trace::instant(Layer::Solver, Name::FrontAdvance, self.trace_id, (t2 + 1) as i64, 0);
             trace::complete(
+                eval_span,
+                Layer::Solver,
+                Name::RoundEval,
+                self.trace_id,
+                self.iter as i64,
+                rows as i64,
+            );
+            trace::complete(
                 round_span,
                 Layer::Solver,
                 Name::Round,
@@ -563,22 +608,61 @@ impl SolverSession {
         // the front (Definition 2.1 verbatim) — kept only for `ablate`.
         let boundary = if self.cfg.clamp_boundary { self.t2 + 1 } else { self.t_count };
         self.r_vals.fill(0.0);
-        for p in self.t1..=self.t2 {
-            let row = p * d..(p + 1) * d;
-            eval_fk(
-                &self.coeffs,
-                &self.xs,
-                &self.eps,
-                &self.xi,
-                self.k,
-                boundary,
-                p,
-                &mut self.f_vals[row.clone()],
-            );
-            for i in row.clone() {
-                self.r_vals[i] = self.f_vals[i] - self.xs.data[i];
+        let new_rows = self.t2 - self.t1 + 1;
+        match self.row_pool.as_ref() {
+            Some(pool) if new_rows > 1 => {
+                // `eval_fk` reads shared state and writes only row p of its
+                // output; with fixed row owners and disjoint f/r rows the
+                // sweep is bitwise identical to the sequential loop.
+                let (nt1, k) = (self.t1, self.k);
+                let coeffs = &self.coeffs;
+                let (xs, eps, xi) = (&self.xs, &self.eps, &self.xi);
+                let f_view = SyncSlice::new(&mut self.f_vals);
+                let r_view = SyncSlice::new(&mut self.r_vals);
+                let chunks = pool.threads();
+                pool.run(chunks, &|c| {
+                    let (c0, c1) = chunk_range(new_rows, chunks, c);
+                    for r in c0..c1 {
+                        let p = nt1 + r;
+                        // SAFETY: row p of f_vals/r_vals has one owner.
+                        let f_row = unsafe { f_view.slice_mut(p * d, d) };
+                        let r_row = unsafe { r_view.slice_mut(p * d, d) };
+                        eval_fk(coeffs, xs, eps, xi, k, boundary, p, f_row);
+                        let x_row = &xs.data[p * d..(p + 1) * d];
+                        for i in 0..d {
+                            r_row[i] = f_row[i] - x_row[i];
+                        }
+                    }
+                });
+            }
+            _ => {
+                for p in self.t1..=self.t2 {
+                    let row = p * d..(p + 1) * d;
+                    eval_fk(
+                        &self.coeffs,
+                        &self.xs,
+                        &self.eps,
+                        &self.xi,
+                        self.k,
+                        boundary,
+                        p,
+                        &mut self.f_vals[row.clone()],
+                    );
+                    for i in row.clone() {
+                        self.r_vals[i] = self.f_vals[i] - self.xs.data[i];
+                    }
+                }
             }
         }
+        trace::complete(
+            eval_span,
+            Layer::Solver,
+            Name::RoundEval,
+            self.trace_id,
+            self.iter as i64,
+            new_rows as i64,
+        );
+        let update_span = trace::begin();
 
         // --- Anderson history push (Δx^{i-1}, ΔR^{i-1}) ---------------------
         if self.hist_cols > 0 {
@@ -595,7 +679,13 @@ impl SolverSession {
                     // Ranged push: rows outside [lo, hi] are zero, so the
                     // Gram-cache refresh and correction loop can skip them
                     // (numerically identical to a full-range push).
-                    self.history.push_ranged(&self.dx_buf, &self.df_buf, lo, hi + 1);
+                    self.history.push_ranged_par(
+                        &self.dx_buf,
+                        &self.df_buf,
+                        lo,
+                        hi + 1,
+                        self.row_pool.as_ref(),
+                    );
                 }
             }
             self.prev_x.copy_from_slice(&self.xs.data[..self.t_count * d]);
@@ -604,7 +694,7 @@ impl SolverSession {
         }
 
         // --- Update rule ----------------------------------------------------
-        apply_update_ws(
+        apply_update_par(
             self.cfg.method,
             &mut self.xs.data[..self.t_count * d],
             &self.f_vals,
@@ -617,6 +707,15 @@ impl SolverSession {
             self.cfg.lambda,
             self.cfg.safeguard,
             &mut self.ws,
+            self.row_pool.as_ref(),
+        );
+        trace::complete(
+            update_span,
+            Layer::Solver,
+            Name::RoundUpdate,
+            self.trace_id,
+            self.iter as i64,
+            new_rows as i64,
         );
         if self.cfg.safeguard {
             // The §3.2 safeguard pinned the top unconverged row t2 to the
@@ -1066,6 +1165,32 @@ mod tests {
             assert_eq!(by_session.iterations, by_solve.iterations);
             assert_eq!(by_session.total_nfe, by_solve.total_nfe);
             assert_eq!(by_session.converged, by_solve.converged);
+        }
+    }
+
+    /// The `parallelism` knob must never change a single bit of the
+    /// output: per-row outputs have fixed owners and every reduction stays
+    /// sequential on the solver thread, so any thread count reproduces the
+    /// historical single-threaded trajectory exactly.
+    #[test]
+    fn parallel_sessions_are_bitwise_identical_to_sequential() {
+        let (coeffs, model) = setup(16);
+        let problem = Problem::new(&coeffs, &model, crate::model::Cond::Class(1), 6);
+        let base =
+            SolverConfig { guidance: 2.0, tol: 1e-4, s_max: 48, ..SolverConfig::parataa(16) };
+        let mut seq_session = SolverSession::new(&problem, &base);
+        drive(&mut seq_session, &model);
+        let seq = seq_session.finish();
+        assert!(seq.converged);
+        for threads in [2usize, 4, 8] {
+            let cfg = SolverConfig { parallelism: threads, ..base.clone() };
+            let mut session = SolverSession::new(&problem, &cfg);
+            drive(&mut session, &model);
+            let par = session.finish();
+            assert_eq!(par.xs.data, seq.xs.data, "threads = {threads}");
+            assert_eq!(par.iterations, seq.iterations, "threads = {threads}");
+            assert_eq!(par.total_nfe, seq.total_nfe, "threads = {threads}");
+            assert_eq!(par.converged, seq.converged, "threads = {threads}");
         }
     }
 

@@ -35,9 +35,11 @@
 //! (tests, one-shot callers).
 
 use super::history::History;
-use super::workspace::Workspace;
+use super::workspace::{RowScratch, Workspace};
 use super::Method;
+use crate::linalg::gram::SuffixGrams;
 use crate::linalg::{cholesky_factor_into, cholesky_solve_factored, cholesky_solve_into};
+use crate::util::threadpool::{chunk_range, RowPool, SyncSlice};
 
 /// Apply one parallel update over active rows `[t1, t2]` (inclusive),
 /// reusing `ws` for every intermediate — no heap allocation once `ws` has
@@ -68,6 +70,37 @@ pub fn apply_update_ws(
     safeguard: bool,
     ws: &mut Workspace,
 ) {
+    apply_update_par(
+        method, xs_rows, f_vals, r_vals, history, t1, t2, t_rows, d, lambda, safeguard, ws, None,
+    );
+}
+
+/// [`apply_update_ws`] with the per-row loop fanned across `pool`.
+///
+/// Rows are independent given the shared round inputs (the triangular
+/// structure serializes *rounds*, not rows): each row reads the shared
+/// suffix Grams / history and writes only its own `x_p` slice, using its
+/// chunk's private [`RowScratch`] for the γ solve. Scratch carries only
+/// intermediates, so which chunk ran a row never shows in the output —
+/// results are **bitwise identical** at every thread count. The
+/// round-level work (standard-AA global γ, AA+ shared factor, the suffix
+/// scan itself) stays sequential on the calling thread.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update_par(
+    method: Method,
+    xs_rows: &mut [f32],
+    f_vals: &[f32],
+    r_vals: &[f32],
+    history: &History,
+    t1: usize,
+    t2: usize,
+    t_rows: usize,
+    d: usize,
+    lambda: f32,
+    safeguard: bool,
+    ws: &mut Workspace,
+    pool: Option<&RowPool>,
+) {
     debug_assert_eq!(xs_rows.len(), t_rows * d);
     debug_assert!(t1 <= t2 && t2 < t_rows);
 
@@ -82,8 +115,10 @@ pub fn apply_update_ws(
     debug_assert_eq!(history.rows(), t_rows);
     debug_assert_eq!(history.dim(), d);
 
+    let chunks = pool.map_or(1, |p| p.threads()).max(1);
     ws.ensure(m);
-    let Workspace { sg, ridged, gamma, global_gamma, chol, y } = ws;
+    ws.ensure_rows(chunks, m);
+    let Workspace { sg, ridged, global_gamma, chol, y, row_scratch, .. } = ws;
 
     // Suffix Grams over the full row range (cached G, rescanned b); rows
     // above t2 hold zeros, so G_{t1} is also the full-window Gram used by
@@ -106,48 +141,141 @@ pub fn apply_update_ws(
         _ => {}
     }
 
-    for p in t1..=t2 {
-        let row = p * d..(p + 1) * d;
-        // Safeguarded row: plain FP (γ = 0). Theorem 3.6's condition is
-        // imposed on the top unconverged row, whose suffix residuals
-        // R_{p+1:} are all (numerically) zero.
-        let fp_only = safeguard && p == t2;
+    let sg: &SuffixGrams = sg;
+    let global_gamma: &[f32] = global_gamma;
+    let shared_chol: &[f64] = chol;
 
-        let g: Option<&[f32]> = if fp_only {
-            None
-        } else {
-            match method {
-                Method::FixedPoint => None, // handled above
-                Method::AndersonStd => have_global.then_some(global_gamma.as_slice()),
-                Method::AndersonUpperTri => {
-                    // M = (full-window Gram + λI)⁻¹ applied to the *suffix*
-                    // projection b_p — the upper-triangular part of eq. (13).
-                    if shared_factor {
-                        cholesky_solve_factored(chol, sg.proj(p), m, y, gamma);
-                        Some(gamma.as_slice())
-                    } else {
-                        None
-                    }
+    match pool {
+        Some(pool) if chunks > 1 => {
+            let nrows = t2 - t1 + 1;
+            let xs_view = SyncSlice::new(xs_rows);
+            let scratch_view = SyncSlice::new(&mut row_scratch[..chunks]);
+            pool.run(chunks, &|c| {
+                // SAFETY: chunk c exclusively owns scratch set c and the
+                // disjoint row range chunk_range hands it.
+                let scratch = unsafe { &mut scratch_view.slice_mut(c, 1)[0] };
+                let (s, e) = chunk_range(nrows, chunks, c);
+                for p in (t1 + s)..(t1 + e) {
+                    let row = p * d..(p + 1) * d;
+                    let x_row = unsafe { xs_view.slice_mut(p * d, d) };
+                    update_row(
+                        method,
+                        p,
+                        safeguard && p == t2,
+                        &f_vals[row.clone()],
+                        &r_vals[row],
+                        x_row,
+                        history,
+                        sg,
+                        m,
+                        lambda,
+                        have_global,
+                        global_gamma,
+                        shared_factor,
+                        shared_chol,
+                        scratch,
+                    );
                 }
-                Method::Taa => {
-                    ridge_into(sg.gram(p), ridged, m, lambda);
-                    if cholesky_solve_into(ridged, sg.proj(p), m, chol, y, gamma) {
-                        Some(gamma.as_slice())
-                    } else {
-                        None
-                    }
-                }
+            });
+        }
+        _ => {
+            let scratch = &mut row_scratch[0];
+            for p in t1..=t2 {
+                let row = p * d..(p + 1) * d;
+                update_row(
+                    method,
+                    p,
+                    safeguard && p == t2,
+                    &f_vals[row.clone()],
+                    &r_vals[row.clone()],
+                    &mut xs_rows[row],
+                    history,
+                    sg,
+                    m,
+                    lambda,
+                    have_global,
+                    global_gamma,
+                    shared_factor,
+                    shared_chol,
+                    scratch,
+                );
             }
-        };
+        }
+    }
+}
 
-        match g {
-            None => {
-                xs_rows[row.clone()].copy_from_slice(&f_vals[row]);
+/// One row's update: compute γ_p per the method, then apply the fused
+/// correction (or the FP copy when γ is unavailable or safeguarded).
+/// Mutates only `x_row` and `scratch` — the parallel loop's independence
+/// argument rests on exactly that.
+#[allow(clippy::too_many_arguments)]
+fn update_row(
+    method: Method,
+    p: usize,
+    fp_only: bool,
+    f_row: &[f32],
+    r_row: &[f32],
+    x_row: &mut [f32],
+    history: &History,
+    sg: &SuffixGrams,
+    m: usize,
+    lambda: f32,
+    have_global: bool,
+    global_gamma: &[f32],
+    shared_factor: bool,
+    shared_chol: &[f64],
+    scratch: &mut RowScratch,
+) {
+    // Safeguarded row: plain FP (γ = 0). Theorem 3.6's condition is
+    // imposed on the top unconverged row, whose suffix residuals
+    // R_{p+1:} are all (numerically) zero.
+    let g: Option<&[f32]> = if fp_only {
+        None
+    } else {
+        match method {
+            Method::FixedPoint => None, // handled by the caller's early path
+            Method::AndersonStd => have_global.then_some(global_gamma),
+            Method::AndersonUpperTri => {
+                // M = (full-window Gram + λI)⁻¹ applied to the *suffix*
+                // projection b_p — the upper-triangular part of eq. (13).
+                if shared_factor {
+                    cholesky_solve_factored(
+                        shared_chol,
+                        sg.proj(p),
+                        m,
+                        &mut scratch.y,
+                        &mut scratch.gamma,
+                    );
+                    Some(scratch.gamma.as_slice())
+                } else {
+                    None
+                }
             }
-            Some(g) => {
-                // x_p ← x_p + R_p − Σ_h γ_h·fused_h[p]
-                history.correct_row(p, g, &r_vals[row.clone()], &mut xs_rows[row]);
+            Method::Taa => {
+                ridge_into(sg.gram(p), &mut scratch.ridged, m, lambda);
+                if cholesky_solve_into(
+                    &scratch.ridged,
+                    sg.proj(p),
+                    m,
+                    &mut scratch.chol,
+                    &mut scratch.y,
+                    &mut scratch.gamma,
+                ) {
+                    Some(scratch.gamma.as_slice())
+                } else {
+                    None
+                }
             }
+        }
+    };
+
+    match g {
+        None => {
+            x_row.copy_from_slice(f_row);
+        }
+        Some(g) => {
+            // x_p ← x_p + R_p − Σ_h γ_h·fused_h[p]
+            history.correct_row(p, g, r_row, x_row);
         }
     }
 }
@@ -257,6 +385,54 @@ mod tests {
                     method, &mut fresh, &f, &r, &h, 0, t_rows - 1, t_rows, d, 1e-4, true,
                 );
                 assert_eq!(reused, fresh, "{} t_rows={t_rows}", method.label());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_update_is_bitwise_identical_to_sequential() {
+        // The fanned per-row loop must not differ from the sequential path
+        // by a single bit, for every method and several thread counts.
+        let mut rng = crate::util::rng::Pcg64::seeded(29);
+        let (t_rows, d, n_slots) = (23usize, 17usize, 3usize);
+        let slots: Vec<(Vec<f32>, Vec<f32>)> = (0..n_slots)
+            .map(|_| {
+                (
+                    (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect(),
+                    (0..t_rows * d).map(|_| rng.next_f32() - 0.5).collect(),
+                )
+            })
+            .collect();
+        let h = mk_history(t_rows, d, &slots);
+        let xs0: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let f: Vec<f32> = (0..t_rows * d).map(|_| rng.next_f32()).collect();
+        let r: Vec<f32> = f.iter().zip(xs0.iter()).map(|(a, b)| a - b).collect();
+        for method in [Method::AndersonStd, Method::AndersonUpperTri, Method::Taa] {
+            let mut seq = xs0.clone();
+            let mut ws_seq = Workspace::new();
+            apply_update_ws(
+                method, &mut seq, &f, &r, &h, 0, t_rows - 1, t_rows, d, 1e-4, true, &mut ws_seq,
+            );
+            for threads in [2usize, 4, 8] {
+                let pool = RowPool::new(threads);
+                let mut par = xs0.clone();
+                let mut ws_par = Workspace::new();
+                apply_update_par(
+                    method,
+                    &mut par,
+                    &f,
+                    &r,
+                    &h,
+                    0,
+                    t_rows - 1,
+                    t_rows,
+                    d,
+                    1e-4,
+                    true,
+                    &mut ws_par,
+                    Some(&pool),
+                );
+                assert_eq!(seq, par, "{} drift at {threads} threads", method.label());
             }
         }
     }

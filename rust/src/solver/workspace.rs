@@ -9,10 +9,49 @@
 //! steady-state rounds perform **zero** heap allocations inside the update
 //! (asserted by `tests/zero_alloc.rs` with a counting global allocator).
 //!
+//! With `parallelism > 1` the per-row loop fans across a
+//! [`RowPool`](crate::util::threadpool::RowPool) in contiguous chunks, and
+//! each chunk needs its own ridge/γ/Cholesky scratch ([`RowScratch`]) so
+//! concurrent rows never share a mutable buffer. The chunk scratch is
+//! sized once at session setup ([`Workspace::ensure_rows`] reuses
+//! capacity), keeping steady-state rounds allocation-free at every thread
+//! count — and since the scratch only carries *intermediate* values, which
+//! buffer a row used never shows in the output: results stay bitwise
+//! identical to the sequential path.
+//!
 //! The workspace holds plain `Vec`s, so it is `Send` and migrates between
 //! round-driver threads with its session.
 
 use crate::linalg::gram::SuffixGrams;
+
+/// Per-chunk scratch for the parallel per-row update loop: everything a
+/// row's γ solve mutates, duplicated per chunk so chunks never contend.
+#[derive(Debug, Default)]
+pub struct RowScratch {
+    /// Ridged m×m Gram copy (Remark 3.3).
+    pub(crate) ridged: Vec<f32>,
+    /// Per-row γ_p solution vector (m).
+    pub(crate) gamma: Vec<f32>,
+    /// f64 Cholesky factor scratch (m×m lower triangle).
+    pub(crate) chol: Vec<f64>,
+    /// f64 substitution scratch (m).
+    pub(crate) y: Vec<f64>,
+}
+
+impl RowScratch {
+    /// Size every buffer for history depth `m`; allocation-free once
+    /// capacity has been reached.
+    pub(crate) fn ensure(&mut self, m: usize) {
+        self.ridged.clear();
+        self.ridged.resize(m * m, 0.0);
+        self.gamma.clear();
+        self.gamma.resize(m, 0.0);
+        self.chol.clear();
+        self.chol.resize(m * m, 0.0);
+        self.y.clear();
+        self.y.resize(m, 0.0);
+    }
+}
 
 /// Owned scratch buffers for one solver session's update path.
 #[derive(Debug, Default)]
@@ -29,6 +68,9 @@ pub struct Workspace {
     pub(crate) chol: Vec<f64>,
     /// f64 substitution scratch (m).
     pub(crate) y: Vec<f64>,
+    /// Per-chunk scratch for the parallel row loop (empty until
+    /// [`ensure_rows`](Self::ensure_rows) is called with `chunks > 0`).
+    pub(crate) row_scratch: Vec<RowScratch>,
 }
 
 impl Workspace {
@@ -50,5 +92,18 @@ impl Workspace {
         self.chol.resize(m * m, 0.0);
         self.y.clear();
         self.y.resize(m, 0.0);
+    }
+
+    /// Size `chunks` per-chunk [`RowScratch`] sets for history depth `m`.
+    /// The `Vec` of scratch sets grows only the first time a chunk count
+    /// is seen (session setup); per-round calls at steady state just
+    /// re-zero within existing capacity — no heap traffic.
+    pub(crate) fn ensure_rows(&mut self, chunks: usize, m: usize) {
+        if self.row_scratch.len() < chunks {
+            self.row_scratch.resize_with(chunks, RowScratch::default);
+        }
+        for rs in &mut self.row_scratch[..chunks] {
+            rs.ensure(m);
+        }
     }
 }

@@ -115,11 +115,21 @@ pub enum Name {
     /// Recorded instead of [`Name::Round`] so exporters can separate the
     /// fidelities on a session's track.
     CoarseRound = 15,
+    /// Span: the evaluation half of a fine round — residual measurement,
+    /// convergence front, and the F^{(k)}/residual-vector sweep over the
+    /// window (`a` = round index, `b` = active rows). Nested inside
+    /// [`Name::Round`] so profiles attribute round time between the two
+    /// row-parallel halves.
+    RoundEval = 16,
+    /// Span: the update half of a fine round — Anderson history push,
+    /// Gram refresh, and the per-row correction (`a` = round index,
+    /// `b` = active rows). Nested inside [`Name::Round`].
+    RoundUpdate = 17,
 }
 
 impl Name {
     /// Every event name, in discriminant order.
-    pub const ALL: [Name; 16] = [
+    pub const ALL: [Name; 18] = [
         Name::Admit,
         Name::Round,
         Name::FrontAdvance,
@@ -136,6 +146,8 @@ impl Name {
         Name::ChunkEmit,
         Name::Finalize,
         Name::CoarseRound,
+        Name::RoundEval,
+        Name::RoundUpdate,
     ];
 
     /// Stable dotted label, e.g. `"solver.round"` without the layer —
@@ -158,6 +170,8 @@ impl Name {
             Name::ChunkEmit => "chunk_emit",
             Name::Finalize => "finalize",
             Name::CoarseRound => "coarse_round",
+            Name::RoundEval => "round_eval",
+            Name::RoundUpdate => "round_update",
         }
     }
 

@@ -41,6 +41,19 @@ where
     }
 }
 
+/// The shared naive dot-product oracle for kernel property tests: one
+/// sequential f64 accumulator, no lanes, no tree. Every kernel in
+/// `linalg::kernels` is compared against this single reference so the
+/// tests can't drift apart on what "correct" means.
+pub fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        acc += (a[i] as f64) * (b[i] as f64);
+    }
+    acc
+}
+
 /// Draw a random size in [lo, hi].
 pub fn size_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
     debug_assert!(hi >= lo);

@@ -1,12 +1,25 @@
-//! Fixed-size thread pool.
+//! Thread pools: the coarse boxed-job [`ThreadPool`] and the fine-grained
+//! fork-join [`RowPool`].
 //!
-//! Used by the figure/benchmark harness to fan parameter sweeps across cores
-//! and by the coordinator for worker loops. `tokio` is unavailable offline;
-//! the workloads here are coarse (each job is at least one full solver run or
-//! device call), so a plain worker-pool over the bounded channel is ideal.
+//! [`ThreadPool`] is used by the figure/benchmark harness to fan parameter
+//! sweeps across cores and by the coordinator for worker loops. `tokio` is
+//! unavailable offline; those workloads are coarse (each job is at least
+//! one full solver run or device call), so a plain worker-pool over the
+//! bounded channel is ideal.
+//!
+//! [`RowPool`] exists for the opposite regime: the solver's intra-round
+//! row loops, where a "job" is microseconds of work and a boxed-closure
+//! channel round trip per row would dominate. One `run()` call fans a
+//! borrowed closure across persistent workers with **zero heap
+//! allocations** (no boxing — the closure is lifetime-erased for the
+//! blocking duration of the call), which the allocation-counting test
+//! `tests/zero_alloc.rs` relies on: steady-state solver rounds must stay
+//! allocation-free at every `parallelism` setting.
 
 use super::channel::{bounded, Sender};
-use std::sync::{Arc, Mutex};
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -112,6 +125,262 @@ impl Drop for ThreadPool {
     }
 }
 
+// --- fork-join row pool ---------------------------------------------------
+
+/// Lifetime-erased pointer to the current fork-join task. Only ever
+/// dereferenced between `run()` publishing it and `run()` returning, and
+/// `run()` blocks until every claimed index has completed, so the borrow
+/// it was erased from is still live at every dereference.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared by reference across workers) and
+// the pointer is only shipped to threads that outlive no borrow — see the
+// lifetime argument above.
+unsafe impl Send for TaskPtr {}
+
+/// Shared fork-join state, guarded by one mutex.
+struct FjState {
+    /// The published task, `None` between `run()` calls.
+    task: Option<TaskPtr>,
+    /// Number of indices in the current run.
+    n: usize,
+    /// Next unclaimed index.
+    next: usize,
+    /// Indices finished (claimed AND executed).
+    completed: usize,
+    /// A task panicked; `run()` re-raises after the join.
+    panicked: bool,
+    /// Pool is shutting down; workers exit.
+    shutdown: bool,
+}
+
+struct RowPoolInner {
+    state: Mutex<FjState>,
+    /// Workers wait here for a published task.
+    work_cv: Condvar,
+    /// `run()` waits here for stragglers.
+    done_cv: Condvar,
+}
+
+/// A persistent fork-join pool for the solver's intra-round row loops.
+///
+/// `run(n, f)` executes `f(0), f(1), …, f(n−1)` across the pool's threads
+/// **and the calling thread** (a pool built with `RowPool::new(p)` spawns
+/// `p − 1` workers, so total concurrency is `p`), blocking until all
+/// indices complete. Indices are claimed dynamically from a shared
+/// counter, so uneven rows load-balance; callers must make concurrent
+/// `f(i)` calls write to disjoint outputs (see [`SyncSlice`]).
+///
+/// `run()` performs no heap allocation: the closure is passed by
+/// reference and lifetime-erased only for the blocking duration of the
+/// call. Panics inside `f` are caught per index, the round is drained,
+/// and the panic is re-raised on the calling thread.
+pub struct RowPool {
+    inner: Arc<RowPoolInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RowPool {
+    /// Pool with total concurrency `threads` (≥ 1): `threads − 1` workers
+    /// plus the thread that calls [`run`](Self::run).
+    pub fn new(threads: usize) -> RowPool {
+        let inner = Arc::new(RowPoolInner {
+            state: Mutex::new(FjState {
+                task: None,
+                n: 0,
+                next: 0,
+                completed: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("parataa-row-{i}"))
+                    .spawn(move || row_worker(&inner))
+                    .expect("spawn row worker")
+            })
+            .collect();
+        RowPool { inner, workers }
+    }
+
+    /// Total concurrency (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `f(i)` for every `i < n` across the pool, blocking until
+    /// all complete. Not reentrant. No-op when `n == 0`.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        // SAFETY: the erased 'static lifetime never outlives `f` — this
+        // call publishes the pointer, blocks until `completed == n`, and
+        // unpublishes it before returning, so no worker can hold it after
+        // the borrow ends.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            debug_assert!(st.task.is_none(), "RowPool::run is not reentrant");
+            st.task = Some(TaskPtr(task as *const _));
+            st.n = n;
+            st.next = 0;
+            st.completed = 0;
+            st.panicked = false;
+            self.inner.work_cv.notify_all();
+        }
+        // The caller participates: claim and execute until indices run out.
+        loop {
+            let i = {
+                let mut st = self.inner.state.lock().unwrap();
+                if st.next >= st.n {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                i
+            };
+            let ok = catch_unwind(AssertUnwindSafe(|| task(i))).is_ok();
+            let mut st = self.inner.state.lock().unwrap();
+            if !ok {
+                st.panicked = true;
+            }
+            st.completed += 1;
+            if st.completed == st.n {
+                self.inner.done_cv.notify_all();
+            }
+        }
+        // Wait for workers still executing claimed indices.
+        let mut st = self.inner.state.lock().unwrap();
+        while st.completed < st.n {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("RowPool task panicked");
+        }
+    }
+}
+
+impl Drop for RowPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for RowPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RowPool").field("threads", &self.threads()).finish()
+    }
+}
+
+fn row_worker(inner: &RowPoolInner) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(TaskPtr(ptr)) = st.task {
+            if st.next < st.n {
+                let i = st.next;
+                st.next += 1;
+                drop(st);
+                // SAFETY: `run()` keeps the pointee alive until
+                // `completed == n`, and this index counts toward that.
+                let task: &(dyn Fn(usize) + Sync) = unsafe { &*ptr };
+                let ok = catch_unwind(AssertUnwindSafe(|| task(i))).is_ok();
+                st = inner.state.lock().unwrap();
+                if !ok {
+                    st.panicked = true;
+                }
+                st.completed += 1;
+                if st.completed == st.n {
+                    inner.done_cv.notify_all();
+                }
+                continue;
+            }
+        }
+        st = inner.work_cv.wait(st).unwrap();
+    }
+}
+
+/// Balanced contiguous partition of `rows` items into `chunks` ranges:
+/// the half-open row range `[start, end)` of chunk `c`. The first
+/// `rows % chunks` chunks get one extra row; empty chunks are legal.
+pub fn chunk_range(rows: usize, chunks: usize, c: usize) -> (usize, usize) {
+    debug_assert!(c < chunks.max(1));
+    let chunks = chunks.max(1);
+    let base = rows / chunks;
+    let rem = rows % chunks;
+    let start = c * base + c.min(rem);
+    let end = start + base + usize::from(c < rem);
+    (start, end)
+}
+
+/// A shared view over a mutable slice for fork-join row loops, where each
+/// task writes a *disjoint* sub-range. Rust's aliasing rules can't express
+/// "disjoint writes decided at runtime", so the disjointness proof moves
+/// to the caller via the unsafe accessor.
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _pd: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is only through `slice_mut`, whose contract requires
+// concurrent callers to take disjoint ranges; `T: Send` suffices because
+// each element is only ever touched by one thread at a time.
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    /// Wrap a mutable slice for the duration of a fork-join round.
+    pub fn new(s: &'a mut [T]) -> SyncSlice<'a, T> {
+        SyncSlice { ptr: s.as_mut_ptr(), len: s.len(), _pd: PhantomData }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mutable sub-slice `[start, start + len)`.
+    ///
+    /// # Safety
+    /// Concurrent callers must request **disjoint** ranges; the range must
+    /// lie inside the wrapped slice (debug-asserted).
+    #[allow(clippy::mut_from_ref)] // the whole point: caller-proved disjoint writes
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start.checked_add(len).is_some_and(|e| e <= self.len));
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+impl<T> std::fmt::Debug for SyncSlice<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SyncSlice").field("len", &self.len).finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +417,97 @@ mod tests {
     #[test]
     fn size_respects_minimum() {
         assert_eq!(ThreadPool::new(0).size(), 1);
+    }
+
+    #[test]
+    fn row_pool_covers_every_index_exactly_once() {
+        for threads in [1usize, 2, 4, 8] {
+            let pool = RowPool::new(threads);
+            assert_eq!(pool.threads(), threads.max(1));
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn row_pool_is_reusable_across_runs() {
+        let pool = RowPool::new(3);
+        let total = AtomicUsize::new(0);
+        for round in 0..50 {
+            pool.run(round % 7, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let expect: usize = (0..50).map(|r| r % 7).sum();
+        assert_eq!(total.load(Ordering::SeqCst), expect);
+    }
+
+    #[test]
+    fn row_pool_zero_rows_is_noop() {
+        let pool = RowPool::new(4);
+        pool.run(0, &|_| panic!("must not be called"));
+    }
+
+    #[test]
+    fn row_pool_propagates_task_panic() {
+        let pool = RowPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|i| {
+                if i == 9 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must surface on the calling thread");
+        // The pool must stay usable after a panicked round.
+        let count = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn chunk_range_partitions_exactly() {
+        for rows in [0usize, 1, 7, 100, 101] {
+            for chunks in [1usize, 2, 4, 8] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for c in 0..chunks {
+                    let (s, e) = chunk_range(rows, chunks, c);
+                    assert_eq!(s, prev_end, "chunks must be contiguous");
+                    assert!(e >= s && e <= rows);
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, rows, "rows={rows} chunks={chunks}");
+                assert_eq!(prev_end, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn sync_slice_disjoint_writes_land() {
+        let mut data = vec![0u32; 64];
+        {
+            let view = SyncSlice::new(&mut data);
+            let pool = RowPool::new(4);
+            pool.run(8, &|c| {
+                let (s, e) = chunk_range(view.len(), 8, c);
+                // SAFETY: chunk_range partitions disjointly.
+                let part = unsafe { view.slice_mut(s, e - s) };
+                for (k, v) in part.iter_mut().enumerate() {
+                    *v = (s + k) as u32;
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
     }
 }

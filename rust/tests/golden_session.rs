@@ -257,6 +257,9 @@ fn cfg_for(method: Method, steps: usize, safeguard: bool, window: usize) -> Solv
         // strategies have their own goldens below (compositional for
         // DraftRefine, determinism for Parareal).
         strategy: SolveStrategy::PlainTaa,
+        // Single-threaded by default; the parallelism sweep below pins the
+        // multi-threaded paths against this same reference.
+        parallelism: 1,
     }
 }
 
@@ -362,6 +365,34 @@ fn golden_ddpm_and_sliding_window() {
         let mut cfg = cfg_for(Method::Taa, steps, true, w);
         cfg.s_max = 30 * steps;
         assert_golden(&problem, &cfg, &format!("window w={w}"));
+    }
+}
+
+/// The `parallelism` knob must be invisible in the output: every thread
+/// count reproduces the frozen single-threaded reference bit-for-bit —
+/// trajectory, record stream, and residual bits included. Fixed per-row
+/// owners plus solver-thread reductions are what make this hold.
+#[test]
+fn golden_parallelism_sweep() {
+    let steps = 14;
+    let sc = coeffs(steps, SamplerKind::Ddim);
+    let model = gmm(6, 4, 37);
+    let problem = Problem::new(&sc, &model, Cond::Class(1), 101);
+    for method in [Method::Taa, Method::AndersonStd, Method::AndersonUpperTri] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut cfg = cfg_for(method, steps, true, steps);
+            cfg.parallelism = threads;
+            assert_golden(&problem, &cfg, &format!("{} threads={threads}", method.label()));
+        }
+    }
+    // A sliding window at every thread count — ranged history pushes and
+    // clamped active rows are where chunked ownership could most
+    // plausibly drift from the sequential path.
+    for threads in [2usize, 4, 8] {
+        let mut cfg = cfg_for(Method::Taa, steps, true, 5);
+        cfg.s_max = 30 * steps;
+        cfg.parallelism = threads;
+        assert_golden(&problem, &cfg, &format!("windowed threads={threads}"));
     }
 }
 

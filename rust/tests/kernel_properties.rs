@@ -1,0 +1,211 @@
+//! Property sweep for the explicit-SIMD kernel suite
+//! (`linalg::kernels`): every reducing kernel must honor the 8-lane
+//! reduction-order contract *bitwise*, regardless of which instruction
+//! set executed it.
+//!
+//! Three oracles, in decreasing strictness:
+//!
+//! 1. **the contract itself** — a from-the-docs reimplementation (lane
+//!    `i mod 8`, tail element `j` into lane `j − n8`, fixed pairwise
+//!    tree) that the dispatched kernel must match bit-for-bit;
+//! 2. **the `*_scalar` fallback** — the dispatched path (AVX where the
+//!    machine has it) must agree bitwise, across every length 0..=257 so
+//!    all eight remainder classes and several full-lane blocks are hit;
+//! 3. **[`proplite::naive_dot`]** — the sequential-accumulator oracle,
+//!    matched to f64 relative tolerance (reassociation moves last-ulp
+//!    rounding; the contract changes the order on purpose).
+//!
+//! The batched/tiled forms (`multi_dot8`, and its `DOT_TILE` blocking)
+//! additionally must be bitwise equal to their one-slot-at-a-time
+//! composition — that equivalence is what lets the Gram refresh batch
+//! slots without perturbing the solver's goldens.
+
+use parataa::linalg::kernels::{
+    axpy, axpy_scalar, dot8, dot8_scalar, multi_dot8, multi_dot8_scalar, residual_norm_sq,
+    residual_norm_sq_scalar, DOT_TILE, LANES,
+};
+use parataa::util::proplite::{f32_in, forall, naive_dot, size_in};
+use parataa::util::rng::Pcg64;
+
+fn vec_of(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| f32_in(rng, -1.5, 1.5)).collect()
+}
+
+/// The documented reduction-order contract, reimplemented verbatim from
+/// the module docs (not shared with the kernel code, so a kernel bug
+/// can't hide in a shared helper): element `i` → lane `i mod 8`, tail
+/// element `j ∈ [n8, n)` → lane `j − n8`, lanes closed by the fixed
+/// pairwise tree.
+fn contract_dot(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let n8 = n - n % LANES;
+    let mut lanes = [0.0f64; LANES];
+    for i in 0..n8 {
+        lanes[i % LANES] += (a[i] as f64) * (b[i] as f64);
+    }
+    for j in n8..n {
+        lanes[j - n8] += (a[j] as f64) * (b[j] as f64);
+    }
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+/// Every length 0..=257 (all remainder classes, several full blocks):
+/// dispatched == scalar == the documented contract, bit for bit; and
+/// all three sit within f64 noise of the sequential naive oracle.
+#[test]
+fn dot8_honors_the_contract_at_every_length() {
+    let mut rng = Pcg64::seeded(0xd07);
+    for n in 0..=257usize {
+        let a = vec_of(&mut rng, n);
+        let b = vec_of(&mut rng, n);
+        let fast = dot8(&a, &b);
+        let slow = dot8_scalar(&a, &b);
+        let contract = contract_dot(&a, &b);
+        assert_eq!(fast.to_bits(), slow.to_bits(), "dispatch vs scalar, n={n}");
+        assert_eq!(fast.to_bits(), contract.to_bits(), "dispatch vs contract, n={n}");
+        let oracle = naive_dot(&a, &b);
+        assert!(
+            (fast - oracle).abs() <= 1e-9 * (1.0 + oracle.abs()),
+            "n={n}: dot8 {fast} vs naive {oracle}"
+        );
+    }
+}
+
+/// IEEE multiplication commutes elementwise and the lane assignment
+/// depends only on the index, so dot8 is exactly symmetric — the property
+/// the b-projection batching relies on to flip argument order freely.
+#[test]
+fn dot8_is_bitwise_symmetric() {
+    forall("dot8 symmetry", 32, |rng, _| {
+        let n = size_in(rng, 0, 300);
+        let a = vec_of(rng, n);
+        let b = vec_of(rng, n);
+        if dot8(&a, &b).to_bits() != dot8(&b, &a).to_bits() {
+            return Err(format!("n={n}: dot8(a,b) != dot8(b,a)"));
+        }
+        Ok(())
+    });
+}
+
+/// The batched kernel must reproduce its per-slot composition bitwise —
+/// including lengths straddling the `DOT_TILE` cache blocks, where a
+/// broken (non-8-aligned) tiling would move elements between lanes.
+#[test]
+fn multi_dot8_is_bitwise_per_slot_composition() {
+    let mut rng = Pcg64::seeded(0x3017);
+    let lengths = [
+        0usize,
+        1,
+        7,
+        LANES,
+        129,
+        DOT_TILE - 1,
+        DOT_TILE,
+        DOT_TILE + LANES,
+        2 * DOT_TILE + 13,
+    ];
+    for &n in &lengths {
+        for k in [1usize, 3, 8] {
+            let a = vec_of(&mut rng, n);
+            let slots: Vec<Vec<f32>> = (0..k).map(|_| vec_of(&mut rng, n)).collect();
+            let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+            let mut acc = vec![0.0f64; k * LANES];
+            let mut out = vec![0.0f64; k];
+            let mut out_scalar = vec![0.0f64; k];
+            multi_dot8(&a, &refs, &mut acc, &mut out);
+            multi_dot8_scalar(&a, &refs, &mut acc, &mut out_scalar);
+            for j in 0..k {
+                let per_slot = dot8(&a, &slots[j]);
+                assert_eq!(
+                    out[j].to_bits(),
+                    per_slot.to_bits(),
+                    "batched vs per-slot dot8, n={n} k={k} slot={j}"
+                );
+                assert_eq!(
+                    out_scalar[j].to_bits(),
+                    per_slot.to_bits(),
+                    "scalar batch vs per-slot dot8, n={n} k={k} slot={j}"
+                );
+            }
+        }
+    }
+}
+
+/// axpy is elementwise (no reduction), so SIMD vs scalar agreement must be
+/// exact per element at every length and for awkward alphas.
+#[test]
+fn axpy_matches_scalar_at_every_length() {
+    let mut rng = Pcg64::seeded(0xa999);
+    for n in 0..=257usize {
+        let base = vec_of(&mut rng, n);
+        let x = vec_of(&mut rng, n);
+        let alpha = f32_in(&mut rng, -2.0, 2.0);
+        let mut fast = base.clone();
+        let mut slow = base.clone();
+        axpy(&mut fast, &x, alpha);
+        axpy_scalar(&mut slow, &x, alpha);
+        assert_eq!(fast, slow, "axpy dispatch vs scalar, n={n} alpha={alpha}");
+    }
+}
+
+/// The fused residual kernel: dispatched == scalar bitwise at every
+/// length, and both within f64 noise of the unfused naive loop. The f32
+/// inner expression's evaluation order is part of the contract — the AVX
+/// path replays `((xp − a·xt) − b·e) − c·ξ` exactly.
+#[test]
+fn residual_norm_sq_matches_scalar_at_every_length() {
+    let mut rng = Pcg64::seeded(0x4e5);
+    for n in 0..=257usize {
+        let xp = vec_of(&mut rng, n);
+        let xt = vec_of(&mut rng, n);
+        let e = vec_of(&mut rng, n);
+        let xi = vec_of(&mut rng, n);
+        let (a, b, c) = (
+            f32_in(&mut rng, 0.5, 1.0),
+            f32_in(&mut rng, -0.5, 0.5),
+            f32_in(&mut rng, -0.2, 0.2),
+        );
+        let fast = residual_norm_sq(&xp, &xt, &e, &xi, a, b, c);
+        let slow = residual_norm_sq_scalar(&xp, &xt, &e, &xi, a, b, c);
+        assert_eq!(fast.to_bits(), slow.to_bits(), "dispatch vs scalar, n={n}");
+        let naive: f64 = (0..n)
+            .map(|i| {
+                let r = xp[i] - a * xt[i] - b * e[i] - c * xi[i];
+                (r as f64) * (r as f64)
+            })
+            .sum();
+        assert!(
+            (fast - naive).abs() <= 1e-9 * (1.0 + naive.abs()),
+            "n={n}: fused {fast} vs naive {naive}"
+        );
+        assert!(fast >= 0.0, "a sum of squares cannot go negative (n={n})");
+    }
+}
+
+/// Randomized cross-check of the whole suite on one draw: feeding the
+/// same data through the batched, per-slot, scalar, and contract paths
+/// yields one bit pattern.
+#[test]
+fn all_dot_paths_agree_on_random_draws() {
+    forall("all dot paths agree", 24, |rng, _| {
+        let n = size_in(rng, 0, 2 * DOT_TILE + 64);
+        let k = size_in(rng, 1, 8);
+        let a = vec_of(rng, n);
+        let slots: Vec<Vec<f32>> = (0..k).map(|_| vec_of(rng, n)).collect();
+        let refs: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+        let mut acc = vec![0.0f64; k * LANES];
+        let mut out = vec![0.0f64; k];
+        multi_dot8(&a, &refs, &mut acc, &mut out);
+        for j in 0..k {
+            let bits = out[j].to_bits();
+            if bits != dot8(&a, &slots[j]).to_bits()
+                || bits != dot8_scalar(&a, &slots[j]).to_bits()
+                || bits != contract_dot(&a, &slots[j]).to_bits()
+            {
+                return Err(format!("n={n} k={k} slot={j}: path divergence"));
+            }
+        }
+        Ok(())
+    });
+}

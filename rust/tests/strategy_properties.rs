@@ -202,6 +202,37 @@ fn strategies_are_bitwise_deterministic() {
     });
 }
 
+/// The `parallelism` knob is bitwise inert under every strategy: thread
+/// counts 2/4/8 reproduce the single-threaded trajectory, rounds and NFE
+/// exactly — including DraftRefine (whose nested coarse session pins
+/// parallelism = 1) and Parareal (whose coarse sweeps stay on the solver
+/// thread while the fine rounds fan out).
+#[test]
+fn parallelism_is_bitwise_inert_under_every_strategy() {
+    forall("parallelism inert", 6, |rng, case| {
+        let c = draw_case(rng, case);
+        for strategy in all_strategies() {
+            let base_cfg = c.with_strategy(strategy);
+            let base = solver::solve(&c.problem(), &base_cfg);
+            for threads in [2usize, 4, 8] {
+                let mut cfg = base_cfg.clone();
+                cfg.parallelism = threads;
+                let r = solver::solve(&c.problem(), &cfg);
+                if r.xs.data != base.xs.data
+                    || r.total_nfe != base.total_nfe
+                    || r.iterations != base.iterations
+                {
+                    return Err(format!(
+                        "{}: threads = {threads} drifted from the single-threaded path",
+                        cfg.strategy.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The draft-and-refine economics (the §4.2 warm-start argument applied
 /// in-band): seeding the window from a cheap coarse solve must never cost
 /// more ε_θ evaluations than the cold plain solve. Pinned to the Table-1

@@ -3,7 +3,10 @@
 //! A counting `#[global_allocator]` wraps the system allocator; after a
 //! warmup round has sized every workspace, a window of solver-round work —
 //! history pushes, cached suffix-Gram scans, and `apply_update_ws` for all
-//! three Anderson variants — must perform **zero** heap allocations.
+//! three Anderson variants — must perform **zero** heap allocations. A
+//! second window repeats the rounds through the `RowPool` fork-join path
+//! (parallelism = 4): the allocator counts every thread, so the window
+//! proves the workers are allocation-free too.
 //!
 //! Tracing is **enabled** (but unsubscribed) for the whole window: the
 //! ISSUE-6 recorder must cost at most a few atomic stores into the
@@ -19,9 +22,10 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
 use parataa::linalg::{suffix_grams_into, SuffixGrams};
 use parataa::solver::history::History;
-use parataa::solver::update::apply_update_ws;
+use parataa::solver::update::{apply_update_par, apply_update_ws};
 use parataa::solver::{Method, Workspace};
 use parataa::util::rng::Pcg64;
+use parataa::util::threadpool::RowPool;
 
 struct CountingAlloc;
 
@@ -108,6 +112,38 @@ fn steady_state_rounds_allocate_nothing() {
     assert_eq!(
         delta, 0,
         "steady-state numeric core allocated {delta} times in 25 rounds"
+    );
+
+    // The same discipline holds with the intra-round row pool engaged
+    // (parallelism = 4): pool spawn and the per-chunk `RowScratch` sizing
+    // are one-time session-construction costs, and `RowPool::run` hands
+    // out borrowed work (no boxing, no per-round channels). The counting
+    // allocator is process-global, so this window also proves the three
+    // *worker* threads allocate nothing in steady state.
+    let pool = RowPool::new(4);
+    history.push_ranged_par(&dx, &df, 0, w, Some(&pool));
+    for method in methods {
+        xs.copy_from_slice(&xs0);
+        apply_update_par(
+            method, &mut xs, &f_vals, &r_vals, &history, 0, w - 1, w, d, 1e-4, true,
+            &mut ws, Some(&pool),
+        );
+    }
+    let before_par = ALLOCS.load(Relaxed);
+    for _ in 0..25 {
+        history.push_ranged_par(&dx, &df, 0, w, Some(&pool));
+        for method in methods {
+            xs.copy_from_slice(&xs0);
+            apply_update_par(
+                method, &mut xs, &f_vals, &r_vals, &history, 0, w - 1, w, d, 1e-4, true,
+                &mut ws, Some(&pool),
+            );
+        }
+    }
+    let delta_par = ALLOCS.load(Relaxed) - before_par;
+    assert_eq!(
+        delta_par, 0,
+        "steady-state parallel (threads = 4) rounds allocated {delta_par} times in 25 rounds"
     );
 
     // The work above must not have been optimized away.
