@@ -239,6 +239,13 @@ pub fn registry() -> Vec<ScenarioDef> {
             run: coord_serve_stream,
         },
         ScenarioDef {
+            group: "coordinator",
+            name: "chaos_serve",
+            about: "fault-injected pool: retries/quarantine absorb an erroring device",
+            quick: true,
+            run: coord_chaos_serve,
+        },
+        ScenarioDef {
             group: "cache",
             name: "warm_start",
             about: "trajectory-cache warm-start round/latency savings",
@@ -1145,6 +1152,85 @@ fn coord_serve_stream(opts: &BenchOpts) -> ScenarioReport {
     sc
 }
 
+/// Chaos serving (ISSUE 9): a 2-device pool whose device 1 errors on every
+/// ε shard from its 3rd call on — a deterministic mid-run device failure —
+/// with the pool's retry/quarantine path enabled (`shard_timeout` + NaN
+/// output validation). The scenario measures what fault tolerance costs
+/// end-to-end and records the recovery counters. All metrics are
+/// informational (recovery timing depends on the fault schedule meeting
+/// the dispatch order, not on code speed); the *structural* contract —
+/// every request completes, zero failures surface to clients, at least one
+/// retry actually happened — is asserted by the registry test and CI.
+fn coord_chaos_serve(opts: &BenchOpts) -> ScenarioReport {
+    use crate::runtime::{EpsBackend, FaultControl, FaultSpec, FaultyBackend, InProcessBackend};
+    use std::time::Duration;
+
+    let mut sc = ScenarioReport::default();
+    let model = gmm_model();
+    let devices = 2usize;
+    let spec = FaultSpec::parse("1:error@2..").expect("static fault spec").with_seed(opts.seed);
+    let control = FaultControl::new();
+    let backends: Vec<Box<dyn EpsBackend>> = (0..devices)
+        .map(|dev| -> Box<dyn EpsBackend> {
+            let inner: Box<dyn EpsBackend> = Box::new(InProcessBackend::new(model.clone()));
+            Box::new(FaultyBackend::new(inner, dev, &spec, control.clone()))
+        })
+        .collect();
+    let cfg = PoolConfig {
+        shard_timeout: Some(Duration::from_millis(200)),
+        validate_output: true,
+        ..Default::default()
+    };
+    let pool = DevicePool::spawn(backends, cfg).expect("spawn chaos pool");
+    let pool_stats = pool.stats();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let coord = Coordinator::start(
+        pooled,
+        CoordinatorConfig { workers: 2, drivers: 2, devices, ..Default::default() },
+    );
+    coord.attach_pool(pool_stats);
+
+    let n_req: usize = if opts.quick { 8 } else { 24 };
+    let mut rng = Pcg64::seeded(opts.seed);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_req)
+        .map(|i| {
+            let mut req = SampleRequest::parataa(
+                Cond::Class(rng.below(8) as usize),
+                i as u64,
+                SamplerSpec::ddim(25),
+            );
+            req.guidance = 2.0;
+            coord.submit(req)
+        })
+        .collect();
+    let mut completed = 0usize;
+    for h in handles {
+        if h.wait().is_ok() {
+            completed += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    sc.push(
+        "throughput_rps",
+        Metric::info(n_req as f64 / wall.as_secs_f64().max(1e-9), "req/s"),
+    );
+    sc.push("latency_ms_p95", Metric::info(snap.latency_ms_p95, "ms"));
+    sc.push("completed", Metric::info(completed as f64, "req"));
+    sc.push("failed", Metric::info(snap.failed as f64, "req"));
+    sc.push("retries_total", Metric::info(snap.retries_total as f64, "retries"));
+    sc.push(
+        "devices_quarantined",
+        Metric::info(snap.devices_quarantined as f64, "devices"),
+    );
+    sc.push("degraded_total", Metric::info(snap.degraded_total as f64, "req"));
+    sc.devices = snap.devices.iter().map(|s| s.to_json()).collect();
+    drop(coord); // join drivers before the pool unwinds
+    control.cancel(); // no hangs in this spec, but keep shutdown unconditional
+    sc
+}
+
 // --- cache ----------------------------------------------------------------
 
 /// Warm-start savings: for each pair, solve a cold request (populates the
@@ -1275,6 +1361,17 @@ mod tests {
             stream.metrics["early_chunk_rate"].value, 1.0,
             "every streaming request must see a prefix before completion"
         );
+        let chaos = &report.groups["coordinator"]["chaos_serve"];
+        assert_eq!(
+            chaos.metrics["failed"].value, 0.0,
+            "injected device faults must be absorbed by retries, not surface to clients"
+        );
+        assert!(chaos.metrics["completed"].value > 0.0);
+        assert!(
+            chaos.metrics["retries_total"].value >= 1.0,
+            "the erroring device must have triggered at least one retry"
+        );
+        assert_eq!(chaos.devices.len(), 2);
         let aw = &report.groups["solver"]["adaptive_window"];
         assert!(aw.metrics["fixed_nfe"].value > 0.0);
         assert!(aw.metrics["adaptive_nfe"].value > 0.0);

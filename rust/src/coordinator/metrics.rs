@@ -50,6 +50,15 @@ struct Inner {
     /// Multi-fidelity coarse rounds (draft rounds + Parareal sweeps)
     /// across finalized sessions.
     coarse_rounds: u64,
+    /// Requests served by the graceful-degradation path (sequential
+    /// rollout on the intake thread). Degraded requests also count as
+    /// `completed`.
+    degraded: u64,
+    /// Requests failed (at admission or between rounds) because their
+    /// deadline expired.
+    deadline_misses: u64,
+    /// Requests rejected outright by load shedding (no degraded fallback).
+    shed: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -103,6 +112,21 @@ pub struct MetricsSnapshot {
     /// sweeps) across finalized sessions — 0 when every request ran the
     /// plain single-fidelity path.
     pub coarse_rounds_total: u64,
+    /// Requests served by the graceful-degradation path — a sequential
+    /// rollout on the intake thread instead of a parallel solve. These
+    /// also count in `completed`.
+    pub degraded_total: u64,
+    /// Requests failed because their [`deadline`](crate::coordinator::SampleRequest::deadline_ms)
+    /// expired (at admission or between parallel rounds).
+    pub deadline_misses: u64,
+    /// Requests rejected outright by load shedding.
+    pub shed_total: u64,
+    /// Shard re-dispatches performed by the attached device pool
+    /// (0 without a pool or with retries disabled).
+    pub retries_total: u64,
+    /// Quarantine events recorded by the attached pool — devices pulled
+    /// from dispatch after repeated consecutive failures.
+    pub devices_quarantined: u64,
     /// Per-device pool breakdown (empty unless a pool is attached).
     pub devices: Vec<DeviceStat>,
 }
@@ -145,6 +169,32 @@ impl Metrics {
     /// Record one failed request.
     pub fn record_failure(&self) {
         self.inner.lock().unwrap().failed += 1;
+    }
+
+    /// Record one request served by the graceful-degradation path (call
+    /// alongside [`record_success`](Self::record_success) — a degraded
+    /// request still completes).
+    pub fn record_degraded(&self) {
+        self.inner.lock().unwrap().degraded += 1;
+    }
+
+    /// Record one request failed because its deadline expired (call
+    /// alongside [`record_failure`](Self::record_failure)).
+    pub fn deadline_miss(&self) {
+        self.inner.lock().unwrap().deadline_misses += 1;
+    }
+
+    /// Record one request rejected outright by load shedding (call
+    /// alongside [`record_failure`](Self::record_failure)).
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Healthy (non-quarantined) devices in the attached pool — the
+    /// load-shedding trigger consults this; `None` without a pool.
+    pub fn pool_healthy_devices(&self) -> Option<usize> {
+        let stats = self.pool.lock().unwrap().as_ref()?.clone();
+        Some(stats.healthy_devices())
     }
 
     /// Record the round-driver pool size (reported in snapshots).
@@ -251,6 +301,7 @@ impl Metrics {
 
     /// Point-in-time aggregation of everything recorded so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let pool = self.pool.lock().unwrap().clone();
         let m = self.inner.lock().unwrap();
         let mut first_prefix = m.first_prefix_ms.clone();
         first_prefix.sort_by(f64::total_cmp);
@@ -288,13 +339,15 @@ impl Metrics {
             first_prefix_ms_p50: percentile_sorted(&first_prefix, 0.50),
             first_prefix_ms_p95: percentile_sorted(&first_prefix, 0.95),
             coarse_rounds_total: m.coarse_rounds,
-            devices: self
-                .pool
-                .lock()
-                .unwrap()
+            degraded_total: m.degraded,
+            deadline_misses: m.deadline_misses,
+            shed_total: m.shed,
+            retries_total: pool.as_ref().map(|p| p.retries()).unwrap_or(0),
+            devices_quarantined: pool
                 .as_ref()
-                .map(|p| p.snapshot())
-                .unwrap_or_default(),
+                .map(|p| p.quarantine_events())
+                .unwrap_or(0),
+            devices: pool.as_ref().map(|p| p.snapshot()).unwrap_or_default(),
         }
     }
 }
@@ -336,6 +389,14 @@ impl MetricsSnapshot {
             ("first_prefix_ms_p50", Json::Num(self.first_prefix_ms_p50)),
             ("first_prefix_ms_p95", Json::Num(self.first_prefix_ms_p95)),
             ("coarse_rounds_total", Json::Num(self.coarse_rounds_total as f64)),
+            ("degraded_total", Json::Num(self.degraded_total as f64)),
+            ("deadline_misses", Json::Num(self.deadline_misses as f64)),
+            ("shed_total", Json::Num(self.shed_total as f64)),
+            ("retries_total", Json::Num(self.retries_total as f64)),
+            (
+                "devices_quarantined",
+                Json::Num(self.devices_quarantined as f64),
+            ),
             (
                 "devices",
                 Json::Arr(self.devices.iter().map(|d| d.to_json()).collect()),
@@ -384,6 +445,19 @@ impl MetricsSnapshot {
                 self.prefix_rows_streamed,
                 self.first_prefix_ms_p50,
                 self.first_prefix_ms_p95,
+            ));
+        }
+        if self.degraded_total + self.deadline_misses + self.shed_total + self.retries_total
+            + self.devices_quarantined
+            > 0
+        {
+            out.push_str(&format!(
+                "\n  robustness: degraded={} deadline misses={} shed={} | pool retries={} quarantines={}",
+                self.degraded_total,
+                self.deadline_misses,
+                self.shed_total,
+                self.retries_total,
+                self.devices_quarantined,
             ));
         }
         for s in &self.devices {
@@ -501,6 +575,30 @@ mod tests {
         assert_eq!(s.devices.iter().map(|d| d.items).sum::<u64>(), 3);
         assert!(s.report().contains("dev0"), "report: {}", s.report());
         assert!(s.report().contains("dev1"), "report: {}", s.report());
+    }
+
+    #[test]
+    fn robustness_counters_aggregate() {
+        let m = Metrics::new();
+        m.record_success(Duration::from_millis(8), 0, 20, false);
+        m.record_degraded();
+        m.record_failure();
+        m.deadline_miss();
+        m.record_failure();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.degraded_total, 1);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.shed_total, 1);
+        assert_eq!(s.retries_total, 0, "no pool attached");
+        assert_eq!(s.devices_quarantined, 0);
+        assert!(s.report().contains("robustness:"), "report: {}", s.report());
+        let j = s.to_json();
+        assert_eq!(j.get("degraded_total").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("deadline_misses").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("shed_total").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("retries_total").and_then(|v| v.as_f64()), Some(0.0));
+        assert!(m.pool_healthy_devices().is_none(), "no pool attached");
     }
 
     #[test]

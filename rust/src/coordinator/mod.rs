@@ -40,4 +40,6 @@ pub use cache::TrajectoryCache;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{PrefixChunk, SampleRequest, SampleResponse, SamplerSpec};
 pub use scheduler::{OwnedSlotGuard, SlotBudget};
-pub use server::{Coordinator, CoordinatorConfig, ResponseHandle, StreamHandle};
+pub use server::{
+    Coordinator, CoordinatorConfig, ResponseHandle, RobustnessConfig, ShedMode, StreamHandle,
+};

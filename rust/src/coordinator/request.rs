@@ -70,6 +70,14 @@ pub struct SampleRequest {
     /// historical single-threaded path; any setting is bitwise identical.
     /// CLI: `--threads N`.
     pub parallelism: usize,
+    /// End-to-end deadline in milliseconds, measured from admission
+    /// (queue wait included). `None` (default) = infinitely patient — the
+    /// historical behavior. With a deadline set, admission rejects requests
+    /// it cannot serve in time (or degrades them to the sequential
+    /// fallback), the round drivers fail expired sessions between rounds
+    /// with a `DeadlineExceeded` error, and the adaptive window controller
+    /// stops shrinking an urgent session's window. CLI: `--deadline-ms N`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SampleRequest {
@@ -89,6 +97,7 @@ impl SampleRequest {
             window_policy: WindowPolicy::Fixed,
             strategy: SolveStrategy::PlainTaa,
             parallelism: 1,
+            deadline_ms: None,
         }
     }
 
@@ -162,6 +171,10 @@ pub struct SampleResponse {
     pub converged: bool,
     /// Whether a cached trajectory seeded this solve.
     pub warm_started: bool,
+    /// Whether the request was served by the graceful-degradation path —
+    /// a sequential DDIM rollout on the intake thread (bitwise-equal to
+    /// [`crate::solver::sample_sequential`]) instead of a parallel solve.
+    pub degraded: bool,
     /// End-to-end latency (queue + solve).
     pub latency: Duration,
 }

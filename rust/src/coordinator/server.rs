@@ -51,11 +51,11 @@ use super::request::{PrefixChunk, SampleRequest, SampleResponse};
 use super::scheduler::{OwnedSlotGuard, SlotBudget};
 use crate::model::{Cond, EpsModel};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
-use crate::solver::{init::init_from_trajectory, Problem, SolverSession};
+use crate::solver::{init::init_from_trajectory, sample_sequential, Problem, SolverSession};
 use crate::trace::telemetry::{SessionTelemetry, TelemetryLog};
 use crate::trace::{self, Layer, Name};
 use crate::util::channel::{bounded, Receiver, Sender};
-use crate::util::error::{anyhow, Result};
+use crate::util::error::{anyhow, Error, Result};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -94,6 +94,36 @@ pub struct CoordinatorConfig {
     /// (see [`crate::trace::telemetry`]). `None` (the default) records
     /// nothing and costs nothing.
     pub telemetry: Option<Arc<TelemetryLog>>,
+    /// Fault-tolerance knobs: load-shedding watermark and shed behavior.
+    /// The default is fully inert — identical to the historical service.
+    pub robustness: RobustnessConfig,
+}
+
+/// How the service behaves at the edge of capacity or health: when to shed
+/// an incoming request, and what shedding means. Every trigger is opt-in
+/// (a watermark, a request deadline) or only reachable under faults (an
+/// attached pool with every device quarantined), so the default
+/// configuration never changes the historical admission path.
+#[derive(Debug, Clone, Default)]
+pub struct RobustnessConfig {
+    /// Slot-budget occupancy fraction in `[0, 1]` at or above which new
+    /// requests are shed (degraded or failed per `shed_mode`). `None`
+    /// (default) disables watermark shedding. CLI: `--shed-watermark F`.
+    pub shed_watermark: Option<f64>,
+    /// What to do with a shed request.
+    pub shed_mode: ShedMode,
+}
+
+/// What "shedding" an admitted-but-unservable request means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedMode {
+    /// Graceful degradation (the default): serve a sequential rollout on
+    /// the intake thread — slower, but correct (bitwise-equal to
+    /// [`sample_sequential`]) and off the saturated parallel path.
+    #[default]
+    DegradeSequential,
+    /// Reject with an [`crate::util::error::ErrorKind::Shed`] error.
+    Fail,
 }
 
 impl Default for CoordinatorConfig {
@@ -109,6 +139,7 @@ impl Default for CoordinatorConfig {
             n_components: 8,
             devices: 1,
             telemetry: None,
+            robustness: RobustnessConfig::default(),
         }
     }
 }
@@ -181,11 +212,50 @@ struct ActiveSession {
     /// Prefix chunks already delivered (0 ⇒ the next one records the
     /// latency-to-first-prefix metric).
     chunks_sent: usize,
+    /// Absolute deadline (admission time + `req.deadline_ms`), checked by
+    /// the round drivers between rounds; `None` = infinitely patient.
+    deadline: Option<Instant>,
     /// Window-row slots held for the session's whole lifetime. Declared
     /// before `in_flight` so a plain drop releases budget first, then
     /// clears the gauge the shutdown path waits on.
     slots: OwnedSlotGuard,
     in_flight: SessionGuard,
+}
+
+impl ActiveSession {
+    /// The request's deadline has already passed.
+    fn deadline_expired(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(dl) if now >= dl)
+    }
+
+    /// Less than half the request's deadline budget remains. The round
+    /// drivers then pin the session's occupancy signal to 0 so the
+    /// adaptive window controller grows (never shrinks) the window,
+    /// trading device rows for wall-clock rounds.
+    fn deadline_urgent(&self) -> bool {
+        match (self.deadline, self.req.deadline_ms) {
+            (Some(dl), Some(ms)) => {
+                dl.saturating_duration_since(Instant::now()) < Duration::from_millis(ms) / 2
+            }
+            _ => false,
+        }
+    }
+}
+
+/// What admission produced for one job.
+enum Admission {
+    /// A live session bound for the run queue.
+    Run(Box<ActiveSession>),
+    /// The request was fully answered on the intake thread (degraded,
+    /// shed, or already past its deadline) — nothing reaches the drivers.
+    Handled,
+}
+
+/// Everything needed to answer a request at admission time.
+struct PendingReply {
+    reply: Sender<Result<SampleResponse>>,
+    progress: Option<Sender<PrefixChunk>>,
+    enqueued: Instant,
 }
 
 /// Handle to an in-flight request.
@@ -299,7 +369,8 @@ impl Coordinator {
                                     )
                                 }));
                             let active = match admitted {
-                                Ok(active) => active,
+                                Ok(Admission::Run(active)) => *active,
+                                Ok(Admission::Handled) => continue,
                                 Err(_) => {
                                     eprintln!(
                                         "parataa: admission panicked; failing the request"
@@ -420,8 +491,9 @@ impl Drop for Coordinator {
     }
 }
 
-/// Admission: build the problem (with a §4.2 warm start when the cache has
-/// a donor), block FIFO on the slot budget, and construct the session.
+/// Admission: enforce the deadline and load-shedding policy, then build
+/// the problem (with a §4.2 warm start when the cache has a donor), block
+/// FIFO on the slot budget, and construct the session.
 fn admit(
     job: Job,
     model: &dyn EpsModel,
@@ -430,7 +502,7 @@ fn admit(
     budget: &Arc<SlotBudget>,
     metrics: &Arc<Metrics>,
     cfg: &CoordinatorConfig,
-) -> ActiveSession {
+) -> Admission {
     let Job { req, reply, progress, enqueued } = job;
     // The admit span's track id is only known once the session exists, so
     // start deferred and complete against its trace id below.
@@ -438,6 +510,41 @@ fn admit(
     // Guard first: if anything below panics (malformed request), the
     // unwinding guard records exactly one failure.
     let mut in_flight = SessionGuard::new(metrics.clone());
+    let deadline = req.deadline_ms.map(|ms| enqueued + Duration::from_millis(ms));
+
+    // Deadline already blown in the queue: reject before doing any work.
+    if matches!(deadline, Some(dl) if Instant::now() >= dl) {
+        metrics.deadline_miss();
+        // The guard records the failure — and the stream closes — before
+        // the error becomes observable, mirroring the finalize ordering.
+        drop(in_flight);
+        drop(progress);
+        let _ = reply.send(Err(Error::deadline(format!(
+            "deadline of {} ms expired in the queue (waited {:.1} ms)",
+            req.deadline_ms.unwrap_or(0),
+            enqueued.elapsed().as_secs_f64() * 1e3,
+        ))));
+        return Admission::Handled;
+    }
+
+    // Load shedding: at the capacity/health edge, answer on the intake
+    // thread instead of queueing work the drivers cannot serve in time.
+    if let Some((code, why)) = shed_reason(deadline, budget, metrics, &cfg.robustness) {
+        match cfg.robustness.shed_mode {
+            ShedMode::DegradeSequential => {
+                let out = PendingReply { reply, progress, enqueued };
+                return degrade_sequential(&req, out, in_flight, model, schedule, metrics, code);
+            }
+            ShedMode::Fail => {
+                metrics.record_shed();
+                drop(in_flight);
+                drop(progress);
+                let _ = reply.send(Err(Error::shed(format!("request shed: {why}"))));
+                return Admission::Handled;
+            }
+        }
+    }
+
     let steps = req.sampler.steps;
     let coeffs = SamplerCoeffs::new(schedule, req.sampler.kind, steps);
     let solver_cfg = req.solver_config();
@@ -472,7 +579,7 @@ fn admit(
         steps as i64,
         warm as i64,
     );
-    ActiveSession {
+    Admission::Run(Box::new(ActiveSession {
         session,
         req,
         reply,
@@ -481,9 +588,110 @@ fn admit(
         scenario,
         progress,
         chunks_sent: 0,
+        deadline,
         slots,
         in_flight,
+    }))
+}
+
+/// Should this request be shed? Returns a trace reason code (0 = slot
+/// watermark, 1 = no healthy devices, 2 = deadline unmeetable) plus a
+/// human-readable cause. `None` under normal operation — every trigger
+/// requires an opt-in watermark, an attached pool with every device
+/// quarantined, or a request deadline.
+fn shed_reason(
+    deadline: Option<Instant>,
+    budget: &SlotBudget,
+    metrics: &Metrics,
+    rb: &RobustnessConfig,
+) -> Option<(i64, String)> {
+    if let Some(w) = rb.shed_watermark {
+        let total = budget.total().max(1);
+        let used = total - budget.available().min(total);
+        if used as f64 / total as f64 >= w {
+            return Some((0, format!("slot budget at {used}/{total} ≥ watermark {w}")));
+        }
     }
+    if metrics.pool_healthy_devices() == Some(0) {
+        return Some((1, "every pool device is quarantined".to_string()));
+    }
+    if let Some(dl) = deadline {
+        // With latency history, reject-or-degrade a request whose
+        // remaining budget is under the observed median: queueing it onto
+        // the parallel path would most likely end in a mid-solve miss.
+        let snap = metrics.snapshot();
+        if snap.completed >= 8 {
+            let p50 = Duration::from_secs_f64(snap.latency_ms_p50.max(0.0) / 1e3);
+            if dl.saturating_duration_since(Instant::now()) < p50 {
+                return Some((
+                    2,
+                    format!(
+                        "deadline unmeetable: remaining budget < p50 latency {:.1} ms",
+                        snap.latency_ms_p50
+                    ),
+                ));
+            }
+        }
+    }
+    None
+}
+
+/// Graceful degradation: serve the request with a sequential rollout on
+/// the intake thread — slower, but correct (bitwise-equal to
+/// [`sample_sequential`] on a fresh, un-warm-started problem) and off the
+/// saturated or unhealthy parallel path. A streaming subscriber receives
+/// the whole trajectory as one chunk before the stream closes.
+fn degrade_sequential(
+    req: &SampleRequest,
+    out: PendingReply,
+    mut guard: SessionGuard,
+    model: &dyn EpsModel,
+    schedule: &NoiseSchedule,
+    metrics: &Metrics,
+    reason: i64,
+) -> Admission {
+    let PendingReply { reply, progress, enqueued } = out;
+    let steps = req.sampler.steps;
+    let coeffs = SamplerCoeffs::new(schedule, req.sampler.kind, steps);
+    let problem = Problem::new(&coeffs, model, req.cond.clone(), req.seed);
+    let seq = sample_sequential(&problem, req.guidance);
+    trace::instant(Layer::Session, Name::Degrade, req.seed, steps as i64, reason);
+    if let Some(tx) = &progress {
+        // Every row freezes at once, so the stream contract collapses to a
+        // single chunk tiling [0, steps) (round 0, like warm-start rows).
+        let d = model.dim();
+        let mut states = Vec::with_capacity(steps * d);
+        for r in 0..steps {
+            states.extend_from_slice(seq.xs.row(r));
+        }
+        let chunk = PrefixChunk {
+            rows: 0..steps,
+            states,
+            residuals: vec![f64::NAN; steps],
+            round: 0,
+        };
+        if tx.try_send(chunk).is_ok() {
+            metrics.record_prefix(steps, Some(enqueued.elapsed()));
+        }
+    }
+    drop(progress);
+    let resp = SampleResponse {
+        sample: seq.xs.row(0).to_vec(),
+        rounds: steps,
+        nfe: seq.nfe,
+        converged: true,
+        warm_started: false,
+        degraded: true,
+        latency: enqueued.elapsed(),
+    };
+    // Success accounting settles before the response is observable, like
+    // finalize: a degraded request completed, it did not fail.
+    metrics.record_success(resp.latency, resp.rounds, resp.nfe, false);
+    metrics.record_degraded();
+    guard.defuse();
+    drop(guard);
+    let _ = reply.send(Ok(resp));
+    Admission::Handled
 }
 
 /// Forward any new converged-prefix advance of `active`'s session to its
@@ -578,11 +786,24 @@ fn drive_round(
     cfg: &CoordinatorConfig,
 ) {
     // Sessions that arrived already done (e.g. `max_rounds: 0`) finalize
-    // without a device call.
+    // without a device call; sessions past their deadline fail here, at
+    // the round boundary — the only place a live session is owned.
     let mut i = 0;
+    let now = Instant::now();
     while i < round.len() {
         if round[i].session.is_done() {
             finalize(round.swap_remove(i), cache, metrics, cfg);
+        } else if round[i].deadline_expired(now) {
+            metrics.deadline_miss();
+            let s = round.swap_remove(i);
+            let rounds_run = s.session.iterations();
+            // Drop everything but the reply first: the guard records the
+            // failure and the slots free before the error is observable.
+            let ActiveSession { reply, req, .. } = s;
+            let _ = reply.send(Err(Error::deadline(format!(
+                "deadline of {} ms expired after {rounds_run} parallel round(s)",
+                req.deadline_ms.unwrap_or(0)
+            ))));
         } else {
             i += 1;
         }
@@ -605,7 +826,11 @@ fn drive_round(
     if round.iter().any(|s| s.session.is_adaptive()) {
         let occupancy = metrics.device_occupancy().unwrap_or(0.0);
         for s in round.iter_mut() {
-            s.session.set_occupancy(occupancy);
+            // An urgent deadline pins the signal to 0: the controller then
+            // grows (never shrinks) the window, spending device rows to
+            // save wall-clock rounds.
+            let occ = if s.deadline_urgent() { 0.0 } else { occupancy };
+            s.session.set_occupancy(occ);
         }
     }
 
@@ -624,7 +849,8 @@ fn drive_round(
 
     let n_groups = groups.len();
     let mut total_rows = 0usize;
-    let mut poisoned = vec![false; round.len()];
+    // A poisoned session carries the classified error it will fail with.
+    let mut poisoned: Vec<Option<Error>> = vec![None; round.len()];
     let mut x: Vec<f32> = Vec::new();
     let mut t: Vec<usize> = Vec::new();
     let mut conds: Vec<Cond> = Vec::new();
@@ -657,14 +883,22 @@ fn drive_round(
         );
         out.resize(rows * d, 0.0);
         // ONE merged device call per guidance group per round; the pool
-        // behind `model` shards it across devices. A panicking backend
-        // poisons only this guidance group, not the whole round.
+        // behind `model` shards it across devices. The fallible entry
+        // point surfaces classified device errors (the pool's retry layer
+        // has already done what it could); a panicking in-process backend
+        // is contained the same way. Either poisons only this guidance
+        // group, not the whole round.
         let call = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.eps_batch(&x, &t, &conds, guidance, &mut out);
+            model.try_eps_batch(&x, &t, &conds, guidance, &mut out)
         }));
-        if call.is_err() {
+        let failure = match call {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(e.context("parallel round ε batch failed")),
+            Err(_) => Some(Error::msg("ε backend panicked during a parallel round")),
+        };
+        if let Some(e) = failure {
             for &i in idxs {
-                poisoned[i] = true;
+                poisoned[i] = Some(e.clone());
             }
             continue;
         }
@@ -678,7 +912,7 @@ fn drive_round(
                 round[i].session.resume(slice);
             }));
             if stepped.is_err() {
-                poisoned[i] = true;
+                poisoned[i] = Some(Error::msg("solve panicked during a parallel round"));
             }
         }
         trace::instant(
@@ -705,7 +939,7 @@ fn drive_round(
     // after the scatter: converged-prefix chunks land one round boundary
     // after the rows freeze, long before the request finalizes.
     for (i, s) in round.iter_mut().enumerate() {
-        if !poisoned[i] {
+        if poisoned[i].is_none() {
             emit_progress(s, metrics);
         }
     }
@@ -714,13 +948,13 @@ fn drive_round(
     // the failure on drop); finished sessions finalize; live ones rejoin
     // the back of the run queue (round-robin — no session can starve).
     for (i, s) in round.into_iter().enumerate() {
-        if poisoned[i] {
-            eprintln!("parataa: a solve panicked; failing its request");
+        if let Some(err) = poisoned[i].take() {
+            eprintln!("parataa: a solve failed ({}); failing its request", err.kind().label());
             // Drop everything but the reply first, so the failure count,
             // slots and gauge are settled before the caller can observe
             // the error (mirroring finalize's ordering for successes).
             let ActiveSession { reply, .. } = s;
-            let _ = reply.send(Err(anyhow!("solve panicked during a parallel round")));
+            let _ = reply.send(Err(err));
         } else if s.session.is_done() {
             finalize(s, cache, metrics, cfg);
         } else if let Err(back) = run_tx.send(s) {
@@ -757,6 +991,7 @@ fn finalize(
         scenario,
         progress,
         chunks_sent: _,
+        deadline: _,
         slots,
         mut in_flight,
     } = active;
@@ -791,6 +1026,7 @@ fn finalize(
         nfe: result.total_nfe,
         converged: result.converged,
         warm_started: warm,
+        degraded: false,
         latency: enqueued.elapsed(),
     };
     // Return budget and clear the in-flight gauge before replying (the
@@ -1222,6 +1458,129 @@ mod tests {
         assert_eq!(m.failed, 0);
         assert_eq!(m.prefix_rows_streamed, 4 * 16);
         assert_eq!(coord.slots_available(), 64);
+    }
+
+    /// A request whose deadline already expired in the queue is rejected
+    /// with a classified error and accurate counters, leaking nothing.
+    #[test]
+    fn expired_deadline_is_rejected_at_admission() {
+        use crate::util::error::ErrorKind;
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig { workers: 1, slot_budget: 32, ..Default::default() },
+        );
+        let mut r = basic_req(1);
+        r.deadline_ms = Some(0); // expired on arrival
+        let err = coord.sample(r).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::DeadlineExceeded, "{err}");
+        let m = coord.metrics();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.completed, 0);
+        assert_eq!(coord.slots_available(), 32, "no slots may leak");
+        // The same (sole) intake still serves patient requests.
+        assert!(coord.sample(basic_req(2)).unwrap().converged);
+    }
+
+    /// A generous deadline changes nothing: the request runs the normal
+    /// parallel path and completes un-degraded.
+    #[test]
+    fn generous_deadline_serves_normally() {
+        let coord = Coordinator::start(gmm_model(), CoordinatorConfig::default());
+        let mut r = basic_req(8);
+        r.deadline_ms = Some(60_000);
+        let resp = coord.sample(r).unwrap();
+        assert!(resp.converged);
+        assert!(!resp.degraded);
+        let m = coord.metrics();
+        assert_eq!(m.deadline_misses, 0);
+        assert_eq!(m.degraded_total, 0);
+    }
+
+    /// A saturated watermark degrades requests to the sequential fallback:
+    /// served on the intake thread, bitwise-equal to the sequential oracle.
+    #[test]
+    fn watermark_shedding_degrades_bitwise_to_sequential() {
+        let model = gmm_model();
+        let coord = Coordinator::start(
+            model.clone(),
+            CoordinatorConfig {
+                workers: 1,
+                robustness: RobustnessConfig {
+                    shed_watermark: Some(0.0), // shed everything
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let resp = coord.sample(basic_req(11)).unwrap();
+        assert!(resp.degraded, "watermark 0.0 must shed every request");
+        assert!(resp.converged);
+        assert_eq!(resp.rounds, 16, "sequential rollout: one round per step");
+        assert_eq!(resp.nfe, 16);
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        let p = Problem::new(&coeffs, &*model, Cond::Class(1), 11);
+        let seq = crate::solver::sample_sequential(&p, 2.0);
+        assert_eq!(resp.sample, seq.xs.row(0).to_vec(), "degraded must match the oracle bitwise");
+        let m = coord.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.degraded_total, 1);
+        assert_eq!(m.failed, 0);
+    }
+
+    /// Fail-mode shedding rejects with a classified `Shed` error instead
+    /// of degrading.
+    #[test]
+    fn fail_mode_shedding_rejects_with_classified_error() {
+        use crate::util::error::ErrorKind;
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig {
+                workers: 1,
+                robustness: RobustnessConfig {
+                    shed_watermark: Some(0.0),
+                    shed_mode: ShedMode::Fail,
+                },
+                ..Default::default()
+            },
+        );
+        let err = coord.sample(basic_req(4)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Shed, "{err}");
+        let m = coord.metrics();
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.shed_total, 1);
+        assert_eq!(m.completed, 0);
+    }
+
+    /// A degraded *streaming* request still honors the stream contract:
+    /// one chunk covering the whole trajectory, then stream end, then the
+    /// response — with bit-identical states.
+    #[test]
+    fn degraded_streaming_delivers_one_full_chunk() {
+        let coord = Coordinator::start(
+            gmm_model(),
+            CoordinatorConfig {
+                workers: 1,
+                robustness: RobustnessConfig {
+                    shed_watermark: Some(0.0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let h = coord.submit_streaming(basic_req(21));
+        let chunk = h.next_chunk().expect("degraded stream must deliver the trajectory");
+        assert_eq!(chunk.rows, 0..16);
+        assert_eq!(chunk.states.len(), 16 * 8);
+        assert_eq!(chunk.round, 0, "degraded rows freeze before any parallel round");
+        assert!(h.next_chunk().is_none(), "exactly one chunk, then stream end");
+        let resp = h.wait().unwrap();
+        assert!(resp.degraded);
+        assert_eq!(&chunk.states[..8], &resp.sample[..], "streamed row 0 != response");
+        let m = coord.metrics();
+        assert_eq!(m.prefix_chunks_sent, 1);
+        assert_eq!(m.prefix_rows_streamed, 16);
     }
 
     #[test]

@@ -12,8 +12,11 @@
 //! Common options: --model dit|gmm, --steps N, --samples N, --seed N.
 //! `serve` additionally takes --devices N (size of the execution pool),
 //! --drivers N (round-driver threads carrying the session run queue),
-//! --stream (incremental converged-prefix delivery, bitwise-verified) and
-//! --adaptive-window (occupancy-driven window sizing).
+//! --stream (incremental converged-prefix delivery, bitwise-verified),
+//! --adaptive-window (occupancy-driven window sizing), and the robustness
+//! knobs --inject-faults SPEC / --deadline-ms N / --shed-watermark F
+//! (deterministic chaos, request deadlines, graceful degradation — see
+//! docs/robustness.md).
 //! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
 //! trained weights).
 
@@ -75,7 +78,15 @@ fn help() {
                        --prom-out FILE: Prometheus text exposition (validated\n\
                        before writing); --telemetry FILE: per-session round ->\n\
                        residual/front/window/NFE progressions as JSON lines,\n\
-                       replayable via the convergence subcommand)\n\
+                       replayable via the convergence subcommand;\n\
+                       --inject-faults SPEC: deterministic fault injection\n\
+                       behind the device pool, e.g. '1:error@4..' — activates\n\
+                       the retry/quarantine path (see docs/robustness.md);\n\
+                       --deadline-ms N: per-request end-to-end deadline,\n\
+                       enforced at admission and between rounds;\n\
+                       --shed-watermark F: above this slot-occupancy fraction\n\
+                       new requests degrade to a bitwise-exact sequential\n\
+                       solve instead of queueing)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
                        --threads N: session parallelism for the hot-loop\n\
@@ -174,39 +185,69 @@ fn cmd_sample(args: &Args) {
 /// for `--model dit` (pjrt builds only). Deliberately does NOT go through
 /// `figures::common::Scenario`, which would spawn and warm a shared device
 /// actor that serve never uses — everything runs through this pool.
+///
+/// With `--inject-faults` each backend is wrapped in a
+/// [`parataa::runtime::FaultyBackend`] applying the scheduled faults for
+/// its device index, and the pool runs the retry/quarantine path
+/// (`shard_timeout` + NaN output validation) so the injected faults
+/// surface as retries and quarantines rather than bad samples. Without the
+/// flag the configuration is the exact historical default.
 fn build_pool(
     model_choice: parataa::figures::common::ModelChoice,
     devices: usize,
+    faults: Option<(&parataa::runtime::FaultSpec, &parataa::runtime::FaultControl)>,
 ) -> (parataa::runtime::DevicePool, f32) {
     use parataa::figures::common::ModelChoice;
     use parataa::model::gmm::GmmEps;
-    use parataa::runtime::{DevicePool, PoolConfig};
+    use parataa::runtime::{DevicePool, EpsBackend, FaultyBackend, InProcessBackend, PoolConfig};
     use parataa::schedule::{BetaSchedule, NoiseSchedule};
     use std::sync::Arc;
+    use std::time::Duration;
+
+    let pool_cfg = |warm: Vec<usize>| {
+        let mut cfg = PoolConfig { warm, ..Default::default() };
+        if faults.is_some() {
+            cfg.shard_timeout = Some(Duration::from_millis(250));
+            cfg.validate_output = true;
+        }
+        cfg
+    };
+    let wrap = |backend: Box<dyn EpsBackend>, device: usize| -> Box<dyn EpsBackend> {
+        match faults {
+            Some((spec, control)) => {
+                Box::new(FaultyBackend::new(backend, device, spec, control.clone()))
+            }
+            None => backend,
+        }
+    };
 
     match model_choice {
         ModelChoice::Gmm => {
             let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
             let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
-            let pool = DevicePool::in_process(model, devices, PoolConfig::default())
-                .expect("spawn device pool");
+            let pool = if faults.is_some() {
+                let backends: Vec<Box<dyn EpsBackend>> = (0..devices)
+                    .map(|dev| wrap(Box::new(InProcessBackend::new(model.clone())), dev))
+                    .collect();
+                DevicePool::spawn(backends, pool_cfg(Vec::new()))
+            } else {
+                DevicePool::in_process(model, devices, PoolConfig::default())
+            }
+            .expect("spawn device pool");
             (pool, 2.0)
         }
         ModelChoice::Dit => {
             #[cfg(feature = "pjrt")]
             {
-                use parataa::runtime::{EpsBackend, PjrtBackend};
+                use parataa::runtime::PjrtBackend;
                 let mut backends: Vec<Box<dyn EpsBackend>> = Vec::with_capacity(devices);
-                for _ in 0..devices {
+                for dev in 0..devices {
                     let b =
                         PjrtBackend::spawn(parataa::runtime::default_artifacts_dir(), 256)
                             .expect("artifacts missing — run `make artifacts`");
-                    backends.push(Box::new(b));
+                    backends.push(wrap(Box::new(b), dev));
                 }
-                let cfg = PoolConfig {
-                    warm: parataa::runtime::EPS_BATCH_SIZES.to_vec(),
-                    ..Default::default()
-                };
+                let cfg = pool_cfg(parataa::runtime::EPS_BATCH_SIZES.to_vec());
                 (DevicePool::spawn(backends, cfg).expect("spawn device pool"), 5.0)
             }
             #[cfg(not(feature = "pjrt"))]
@@ -218,9 +259,12 @@ fn build_pool(
 }
 
 fn cmd_serve(args: &Args) {
-    use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
+    use parataa::coordinator::{
+        Coordinator, CoordinatorConfig, RobustnessConfig, SampleRequest, SamplerSpec,
+    };
     use parataa::figures::common::ModelChoice;
     use parataa::model::Cond;
+    use parataa::runtime::{FaultControl, FaultSpec};
     use parataa::solver::{AdaptiveWindow, WindowPolicy};
     use parataa::util::rng::Pcg64;
     use std::sync::Arc;
@@ -241,6 +285,23 @@ fn cmd_serve(args: &Args) {
         other => panic!("unknown --strategies '{other}' (expected plain|mixed)"),
     };
 
+    // Robustness knobs (ISSUE 9) — all default off, leaving the exact
+    // historical service when unset.
+    let deadline_ms: Option<u64> = args
+        .get("deadline-ms")
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --deadline-ms '{v}'")));
+    let shed_watermark: Option<f64> = args
+        .get("shed-watermark")
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --shed-watermark '{v}'")));
+    let faults: Option<FaultSpec> = args.get("inject-faults").map(|spec| {
+        FaultSpec::parse(spec)
+            .unwrap_or_else(|e| panic!("bad --inject-faults: {e}"))
+            .with_seed(args.u64_or("seed", 0))
+    });
+    // One cancel token shared by every injected hang: cancelled after the
+    // run so wedged worker threads release before the pool joins them.
+    let fault_control = faults.as_ref().map(|_| FaultControl::new());
+
     // Observability taps (ISSUE 6): --trace wants span events, and the
     // --prom-out exposition carries trace-derived histograms, so either
     // flag turns the recorder on before any session is admitted.
@@ -257,7 +318,8 @@ fn cmd_serve(args: &Args) {
     // Stack: backend pool -> coordinator round drivers. The drivers merge
     // the pending ε batches of ready sessions per round (no batcher layer:
     // merging happens deterministically at the round boundary).
-    let (pool, guidance) = build_pool(model_choice, devices);
+    let (pool, guidance) =
+        build_pool(model_choice, devices, faults.as_ref().zip(fault_control.as_ref()));
     let pool_stats = pool.stats();
     let pooled = Arc::new(pool.eps_handle("pooled"));
     let coord = Coordinator::start(
@@ -267,6 +329,7 @@ fn cmd_serve(args: &Args) {
             drivers,
             devices,
             telemetry: telemetry.clone(),
+            robustness: RobustnessConfig { shed_watermark, ..Default::default() },
             ..Default::default()
         },
     );
@@ -274,11 +337,12 @@ fn cmd_serve(args: &Args) {
 
     eprintln!(
         "serving {n_requests} requests ({} DDIM-{steps}) on {devices} device(s), \
-         {drivers} round driver(s){}{}{} ...",
+         {drivers} round driver(s){}{}{}{} ...",
         model_choice.label(),
         if stream { ", streaming prefixes" } else { "" },
         if adaptive { ", adaptive windows" } else { "" },
         if mixed { ", mixed strategies" } else { "" },
+        if faults.is_some() { ", fault injection ON" } else { "" },
     );
     let mut rng = Pcg64::seeded(args.u64_or("seed", 0));
     let conds: Vec<Cond> =
@@ -287,6 +351,7 @@ fn cmd_serve(args: &Args) {
         let mut req =
             SampleRequest::parataa(conds[i].clone(), i as u64, SamplerSpec::ddim(steps));
         req.guidance = guidance;
+        req.deadline_ms = deadline_ms;
         // Intra-round row-parallelism per session (bitwise inert, so the
         // streaming re-run equality check below is unaffected).
         req.parallelism = threads;
@@ -319,13 +384,22 @@ fn cmd_serve(args: &Args) {
     } else {
         let handles: Vec<_> = (0..n_requests).map(|i| coord.submit(make_req(i))).collect();
         for (i, h) in handles.into_iter().enumerate() {
-            let r = h.wait().expect("request failed");
-            if i < 4 || !r.converged {
-                // Progress goes to stderr so `--json` stdout stays parseable.
-                eprintln!(
-                    "req {i}: rounds={} nfe={} warm={} conv={} latency={:?}",
-                    r.rounds, r.nfe, r.warm_started, r.converged, r.latency
-                );
+            // Per-request failures (deadline expiry, shedding in Fail mode,
+            // exhausted retries) are reported, not fatal: the metrics
+            // snapshot below is the run's verdict, and a chaos run is
+            // expected to retry/degrade its way through injected faults.
+            match h.wait() {
+                Ok(r) => {
+                    if i < 4 || !r.converged || r.degraded {
+                        // Progress goes to stderr so `--json` stdout stays
+                        // parseable.
+                        eprintln!(
+                            "req {i}: rounds={} nfe={} warm={} conv={} degraded={} latency={:?}",
+                            r.rounds, r.nfe, r.warm_started, r.converged, r.degraded, r.latency
+                        );
+                    }
+                }
+                Err(e) => eprintln!("req {i}: FAILED ({}): {e}", e.kind().label()),
             }
         }
     }
@@ -353,7 +427,11 @@ fn cmd_serve(args: &Args) {
         log.write_jsonl(path).expect("write telemetry file");
         eprintln!("wrote {path} ({} session telemetry records)", log.sessions().len());
     }
-    drop(coord);
+    drop(coord); // join drivers first ...
+    if let Some(control) = &fault_control {
+        control.cancel(); // ... then release scripted hangs so the pool's
+                          // worker threads return and join on drop.
+    }
 }
 
 /// `serve --stream`: every request goes through the streaming path with a

@@ -80,6 +80,22 @@ pub trait EpsModel: Send + Sync {
         out: &mut [f32],
     );
 
+    /// Fallible ε evaluation for callers that must survive device failures
+    /// (the coordinator's round drivers). The default wraps the infallible
+    /// [`EpsModel::eps_batch`]; fallible substrates (the device pool)
+    /// override it to propagate classified errors instead of panicking.
+    fn try_eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) -> crate::util::error::Result<()> {
+        self.eps_batch(xs, train_ts, conds, guidance, out);
+        Ok(())
+    }
+
     /// Human-readable model name for reports.
     fn name(&self) -> &str;
 }

@@ -1,0 +1,518 @@
+//! Deterministic fault injection behind any [`EpsBackend`].
+//!
+//! [`FaultyBackend`] wraps a real backend and intercepts `execute` according
+//! to a seed-scheduled [`FaultSpec`]: it can error, slow down, hang until
+//! cancelled, or corrupt its output with NaNs. Faults are scheduled on the
+//! per-device execute-call counter, so a given spec + seed reproduces the
+//! same fault storm every run — chaos tests stay deterministic.
+//!
+//! The spec grammar (CLI `--inject-faults`):
+//!
+//! ```text
+//! SPEC    := RULE ("," RULE)*
+//! RULE    := <device> ":" KIND ["=" <millis>] ["@" WINDOW] ["~" <prob>]
+//! KIND    := "error" | "slow" | "hang" | "corrupt"
+//! WINDOW  := <from> | <from> ".." | <from> ".." <to>
+//! ```
+//!
+//! Examples: `1:error@4..` (device 1 errors every call from its 4th on),
+//! `0:slow=25@4..12` (device 0 sleeps 25 ms on calls 4–11),
+//! `2:corrupt@6..8~0.5` (device 2 corrupts calls 6–7 with probability ½).
+//! A bare window `@4` means exactly call 4; omitting `@` means every call.
+//!
+//! Hangs park the worker thread until the shared [`FaultControl`] is
+//! cancelled (or a safety cap elapses), modelling a wedged device without
+//! ever deadlocking a test or pool shutdown: cancel the control before
+//! dropping the pool and every hung `execute` returns promptly.
+
+use super::backend::{EpsBackend, EpsShard};
+use crate::util::error::{anyhow, bail, ensure, Error, Result};
+use crate::util::rng::Pcg64;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// What a matching rule does to the intercepted `execute` call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Return a [`crate::util::error::ErrorKind::Retryable`] error without
+    /// touching the inner backend.
+    Error,
+    /// Sleep the fixed delay, then execute normally (a straggler device).
+    Slow(Duration),
+    /// Block until the shared [`FaultControl`] is cancelled (or the safety
+    /// cap elapses), then return a retryable error (a wedged device).
+    Hang,
+    /// Execute normally, then overwrite the first element of every output
+    /// row with NaN (silent data corruption).
+    Corrupt,
+}
+
+/// One scheduled fault: a kind, the device it applies to, the window of
+/// per-device execute-call indices it covers, and a firing probability.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    /// Pool device index the rule targets.
+    pub device: usize,
+    /// The fault to inject.
+    pub kind: FaultKind,
+    /// First execute-call index (0-based, counted per device) covered.
+    pub from: u64,
+    /// One-past-last covered call index; `None` = open-ended.
+    pub to: Option<u64>,
+    /// Probability in `(0, 1]` that a covered call actually faults
+    /// (`1.0` = always; coin flips are drawn from the spec seed).
+    pub prob: f64,
+}
+
+impl FaultRule {
+    fn covers(&self, call: u64) -> bool {
+        call >= self.from
+            && match self.to {
+                Some(to) => call < to,
+                None => true,
+            }
+    }
+}
+
+/// A parsed fault schedule: rules plus the seed for probabilistic rules.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Scheduled faults, applied first-match per call.
+    pub rules: Vec<FaultRule>,
+    /// Seed for the per-device coin-flip streams.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse the `--inject-faults` grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut rules = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            rules.push(parse_rule(part).map_err(|e| e.context(format!("fault rule `{part}`")))?);
+        }
+        ensure!(!rules.is_empty(), "fault spec `{spec}` contains no rules");
+        Ok(FaultSpec { rules, seed: 0 })
+    }
+
+    /// Same spec with a different coin-flip seed.
+    pub fn with_seed(mut self, seed: u64) -> FaultSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// True when no rule targets `device`.
+    pub fn is_inert_for(&self, device: usize) -> bool {
+        self.rules.iter().all(|r| r.device != device)
+    }
+}
+
+fn parse_rule(rule: &str) -> Result<FaultRule> {
+    let (dev, rest) =
+        rule.split_once(':').ok_or_else(|| anyhow!("expected `<device>:<kind>...`"))?;
+    let device: usize =
+        dev.trim().parse().map_err(|_| anyhow!("bad device index `{dev}`"))?;
+
+    // Peel the optional suffixes right-to-left: ~prob, then @window.
+    let (rest, prob) = match rest.rsplit_once('~') {
+        Some((head, p)) => {
+            let prob: f64 = p.trim().parse().map_err(|_| anyhow!("bad probability `{p}`"))?;
+            ensure!(prob > 0.0 && prob <= 1.0, "probability {prob} outside (0, 1]");
+            (head, prob)
+        }
+        None => (rest, 1.0),
+    };
+    let (rest, from, to) = match rest.rsplit_once('@') {
+        Some((head, win)) => {
+            let (from, to) = parse_window(win.trim())?;
+            (head, from, to)
+        }
+        None => (rest, 0, None),
+    };
+
+    let (kind_str, param) = match rest.split_once('=') {
+        Some((k, p)) => (k.trim(), Some(p.trim())),
+        None => (rest.trim(), None),
+    };
+    let kind = match kind_str {
+        "error" => FaultKind::Error,
+        "slow" => {
+            let ms: u64 = param
+                .ok_or_else(|| anyhow!("slow needs a delay, e.g. `slow=25` (ms)"))?
+                .parse()
+                .map_err(|_| anyhow!("bad slow delay `{}`", param.unwrap_or("")))?;
+            FaultKind::Slow(Duration::from_millis(ms))
+        }
+        "hang" => FaultKind::Hang,
+        "corrupt" => FaultKind::Corrupt,
+        other => bail!("unknown fault kind `{other}` (error|slow|hang|corrupt)"),
+    };
+    if !matches!(kind, FaultKind::Slow(_)) {
+        ensure!(param.is_none(), "`{kind_str}` takes no `=` parameter");
+    }
+    Ok(FaultRule { device, kind, from, to, prob })
+}
+
+fn parse_window(win: &str) -> Result<(u64, Option<u64>)> {
+    match win.split_once("..") {
+        Some((from, "")) => Ok((parse_u64(from)?, None)),
+        Some((from, to)) => {
+            let (from, to) = (parse_u64(from)?, parse_u64(to)?);
+            ensure!(from < to, "empty fault window {from}..{to}");
+            Ok((from, Some(to)))
+        }
+        None => {
+            let at = parse_u64(win)?;
+            Ok((at, Some(at + 1)))
+        }
+    }
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    s.trim().parse().map_err(|_| anyhow!("bad call index `{s}`"))
+}
+
+struct ControlInner {
+    cancelled: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Shared cancel token for [`FaultKind::Hang`] faults.
+///
+/// Clone it into every [`FaultyBackend`]; call [`FaultControl::cancel`]
+/// before dropping the pool so hung worker threads return and join.
+#[derive(Clone)]
+pub struct FaultControl {
+    inner: Arc<ControlInner>,
+}
+
+impl Default for FaultControl {
+    fn default() -> Self {
+        FaultControl {
+            inner: Arc::new(ControlInner { cancelled: Mutex::new(false), cv: Condvar::new() }),
+        }
+    }
+}
+
+impl FaultControl {
+    /// A fresh, un-cancelled control.
+    pub fn new() -> FaultControl {
+        FaultControl::default()
+    }
+
+    /// Release every current and future hang immediately.
+    pub fn cancel(&self) {
+        *self.inner.cancelled.lock().unwrap() = true;
+        self.inner.cv.notify_all();
+    }
+
+    /// True once [`FaultControl::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        *self.inner.cancelled.lock().unwrap()
+    }
+
+    /// Block until cancelled or `cap` elapses; true if cancelled.
+    fn wait(&self, cap: Duration) -> bool {
+        let deadline = std::time::Instant::now() + cap;
+        let mut cancelled = self.inner.cancelled.lock().unwrap();
+        while !*cancelled {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.inner.cv.wait_timeout(cancelled, deadline - now).unwrap();
+            cancelled = guard;
+        }
+        true
+    }
+}
+
+/// An [`EpsBackend`] decorator that injects the faults a [`FaultSpec`]
+/// schedules for its device; all other calls pass straight through.
+pub struct FaultyBackend {
+    inner: Box<dyn EpsBackend>,
+    device: usize,
+    rules: Vec<FaultRule>,
+    rng: Pcg64,
+    calls: u64,
+    control: FaultControl,
+    hang_cap: Duration,
+}
+
+impl FaultyBackend {
+    /// Wrap `inner` as pool device `device`, applying the rules `spec`
+    /// schedules for that device. `control` releases hangs.
+    pub fn new(
+        inner: Box<dyn EpsBackend>,
+        device: usize,
+        spec: &FaultSpec,
+        control: FaultControl,
+    ) -> FaultyBackend {
+        let rules: Vec<FaultRule> =
+            spec.rules.iter().filter(|r| r.device == device).cloned().collect();
+        // Distinct deterministic coin stream per device.
+        let rng = Pcg64::seeded(spec.seed ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        FaultyBackend {
+            inner,
+            device,
+            rules,
+            rng,
+            calls: 0,
+            control,
+            hang_cap: Duration::from_secs(30),
+        }
+    }
+
+    /// Cap how long a hang can park the worker even without a cancel
+    /// (default 30 s); keeps tests and shutdown bounded.
+    pub fn with_hang_cap(mut self, cap: Duration) -> FaultyBackend {
+        self.hang_cap = cap;
+        self
+    }
+}
+
+impl EpsBackend for FaultyBackend {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn name(&self) -> String {
+        format!("faulty({})", self.inner.name())
+    }
+
+    fn warm(&mut self, batch_sizes: &[usize]) -> Result<()> {
+        self.inner.warm(batch_sizes)
+    }
+
+    fn execute(&mut self, shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+        let call = self.calls;
+        self.calls += 1;
+        // One coin per call regardless of rule windows, so the stream (and
+        // therefore which calls fault) is independent of rule order.
+        let coin = self.rng.next_f64();
+        let fault = self
+            .rules
+            .iter()
+            .find(|r| r.covers(call) && (r.prob >= 1.0 || coin < r.prob))
+            .map(|r| r.kind);
+        match fault {
+            None => self.inner.execute(shard),
+            Some(FaultKind::Error) => Err(Error::retryable(format!(
+                "injected fault: device {} errored on call {call}",
+                self.device
+            ))),
+            Some(FaultKind::Slow(delay)) => {
+                std::thread::sleep(delay);
+                self.inner.execute(shard)
+            }
+            Some(FaultKind::Hang) => {
+                let cancelled = self.control.wait(self.hang_cap);
+                Err(Error::retryable(format!(
+                    "injected fault: device {} hang on call {call} {}",
+                    self.device,
+                    if cancelled { "cancelled" } else { "exceeded safety cap" }
+                )))
+            }
+            Some(FaultKind::Corrupt) => {
+                let mut out = self.inner.execute(shard)?;
+                for row in out.chunks_mut(self.inner.dim().max(1)) {
+                    row[0] = f32::NAN;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Cond;
+    use crate::util::error::ErrorKind;
+
+    /// Inner backend returning `row_index + 1` in every element.
+    struct SeqBackend {
+        d: usize,
+    }
+
+    impl EpsBackend for SeqBackend {
+        fn dim(&self) -> usize {
+            self.d
+        }
+        fn name(&self) -> String {
+            "seq".into()
+        }
+        fn execute(&mut self, shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+            let mut out = vec![0.0; shard.len() * self.d];
+            for (i, chunk) in out.chunks_mut(self.d).enumerate() {
+                chunk.fill((i + 1) as f32);
+            }
+            Ok(out)
+        }
+    }
+
+    fn shard_inputs(n: usize, d: usize) -> (Vec<f32>, Vec<usize>, Vec<Cond>) {
+        (vec![0.5; n * d], vec![500; n], vec![Cond::Uncond; n])
+    }
+
+    fn run(backend: &mut dyn EpsBackend, n: usize, d: usize) -> Result<Vec<f32>> {
+        let (xs, ts, conds) = shard_inputs(n, d);
+        backend.execute(&EpsShard { xs: &xs, train_ts: &ts, conds: &conds, guidance: 1.0 })
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let spec = FaultSpec::parse("1:error@4.., 0:slow=25@4..12, 2:corrupt@6..8~0.5").unwrap();
+        assert_eq!(spec.rules.len(), 3);
+        assert_eq!(
+            spec.rules[0],
+            FaultRule { device: 1, kind: FaultKind::Error, from: 4, to: None, prob: 1.0 }
+        );
+        assert_eq!(
+            spec.rules[1],
+            FaultRule {
+                device: 0,
+                kind: FaultKind::Slow(Duration::from_millis(25)),
+                from: 4,
+                to: Some(12),
+                prob: 1.0
+            }
+        );
+        assert_eq!(
+            spec.rules[2],
+            FaultRule { device: 2, kind: FaultKind::Corrupt, from: 6, to: Some(8), prob: 0.5 }
+        );
+        // Bare `@4` covers exactly call 4; no `@` covers every call.
+        assert_eq!(FaultSpec::parse("0:hang@4").unwrap().rules[0].to, Some(5));
+        let all = FaultSpec::parse("0:error").unwrap();
+        assert_eq!((all.rules[0].from, all.rules[0].to), (0, None));
+        assert!(all.is_inert_for(1));
+        assert!(!all.is_inert_for(0));
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed_rules() {
+        for bad in [
+            "",
+            "error",
+            "x:error",
+            "0:explode",
+            "0:slow",
+            "0:slow=abc",
+            "0:error=5",
+            "0:error@7..3",
+            "0:error~1.5",
+            "0:error~0",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn error_fault_is_scheduled_and_retryable() {
+        let spec = FaultSpec::parse("0:error@2..4").unwrap();
+        let mut b =
+            FaultyBackend::new(Box::new(SeqBackend { d: 3 }), 0, &spec, FaultControl::new());
+        assert!(run(&mut b, 2, 3).is_ok(), "call 0 passes through");
+        assert!(run(&mut b, 2, 3).is_ok(), "call 1 passes through");
+        for call in 2..4 {
+            let e = run(&mut b, 2, 3).unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::Retryable, "call {call}");
+        }
+        assert!(run(&mut b, 2, 3).is_ok(), "call 4 is past the window");
+    }
+
+    #[test]
+    fn rules_only_apply_to_their_device() {
+        let spec = FaultSpec::parse("1:error").unwrap();
+        let mut b =
+            FaultyBackend::new(Box::new(SeqBackend { d: 2 }), 0, &spec, FaultControl::new());
+        for _ in 0..5 {
+            assert!(run(&mut b, 1, 2).is_ok(), "device 0 is untouched by a device-1 rule");
+        }
+    }
+
+    #[test]
+    fn slow_fault_delays_but_preserves_output() {
+        let spec = FaultSpec::parse("0:slow=20@0").unwrap();
+        let mut b =
+            FaultyBackend::new(Box::new(SeqBackend { d: 2 }), 0, &spec, FaultControl::new());
+        let t0 = std::time::Instant::now();
+        let out = run(&mut b, 2, 2).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(out, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn corrupt_fault_nans_every_row() {
+        let spec = FaultSpec::parse("0:corrupt@0").unwrap();
+        let mut b =
+            FaultyBackend::new(Box::new(SeqBackend { d: 3 }), 0, &spec, FaultControl::new());
+        let out = run(&mut b, 2, 3).unwrap();
+        assert!(out[0].is_nan() && out[3].is_nan());
+        assert_eq!(&out[1..3], &[1.0, 1.0]);
+        assert!(run(&mut b, 2, 3).unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn hang_fault_parks_until_cancelled() {
+        let spec = FaultSpec::parse("0:hang@0").unwrap();
+        let control = FaultControl::new();
+        let mut b = FaultyBackend::new(Box::new(SeqBackend { d: 2 }), 0, &spec, control.clone())
+            .with_hang_cap(Duration::from_secs(10));
+        let canceller = {
+            let control = control.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                control.cancel();
+            })
+        };
+        let t0 = std::time::Instant::now();
+        let e = run(&mut b, 1, 2).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(30), "parked until cancel");
+        assert!(t0.elapsed() < Duration::from_secs(5), "released promptly, not by cap");
+        assert_eq!(e.kind(), ErrorKind::Retryable);
+        assert!(control.is_cancelled());
+        canceller.join().unwrap();
+    }
+
+    #[test]
+    fn hang_fault_respects_safety_cap() {
+        let spec = FaultSpec::parse("0:hang@0").unwrap();
+        let mut b = FaultyBackend::new(Box::new(SeqBackend { d: 2 }), 0, &spec, FaultControl::new())
+            .with_hang_cap(Duration::from_millis(25));
+        let t0 = std::time::Instant::now();
+        let e = run(&mut b, 1, 2).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert!(e.to_string().contains("safety cap"));
+    }
+
+    #[test]
+    fn probabilistic_faults_are_deterministic_per_seed() {
+        let spec = FaultSpec::parse("0:error~0.5").unwrap().with_seed(7);
+        let outcomes = |spec: &FaultSpec| -> Vec<bool> {
+            let mut b =
+                FaultyBackend::new(Box::new(SeqBackend { d: 2 }), 0, spec, FaultControl::new());
+            (0..32).map(|_| run(&mut b, 1, 2).is_ok()).collect()
+        };
+        let a = outcomes(&spec);
+        assert_eq!(a, outcomes(&spec), "same seed, same storm");
+        assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok), "p=0.5 mixes outcomes");
+        let b = outcomes(&spec.clone().with_seed(8));
+        assert_ne!(a, b, "different seed, different storm");
+    }
+
+    #[test]
+    fn delegation_preserves_dim_name_and_warm() {
+        let spec = FaultSpec::parse("0:error@1000..").unwrap();
+        let mut b =
+            FaultyBackend::new(Box::new(SeqBackend { d: 5 }), 0, &spec, FaultControl::new());
+        assert_eq!(b.dim(), 5);
+        assert_eq!(b.name(), "faulty(seq)");
+        assert!(b.warm(&[1, 5, 10]).is_ok());
+        assert_eq!(run(&mut b, 1, 5).unwrap(), vec![1.0; 5]);
+    }
+}

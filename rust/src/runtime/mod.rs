@@ -36,6 +36,7 @@ pub mod backend;
 pub mod device;
 #[cfg(feature = "pjrt")]
 pub mod eps;
+pub mod fault;
 #[cfg(feature = "pjrt")]
 pub mod pjrt_driver;
 pub mod pool;
@@ -49,6 +50,7 @@ pub use backend::{EpsBackend, EpsShard, InProcessBackend};
 pub use device::{DeviceActor, DeviceHandle};
 #[cfg(feature = "pjrt")]
 pub use eps::PjrtEps;
+pub use fault::{FaultControl, FaultKind, FaultRule, FaultSpec, FaultyBackend};
 pub use pool::{DevicePool, DeviceStat, PoolConfig, PoolStats, PooledEps};
 
 /// Default artifacts directory, overridable with `PARATAA_ARTIFACTS`.

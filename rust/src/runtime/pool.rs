@@ -25,8 +25,8 @@
 use super::backend::{EpsBackend, EpsShard, InProcessBackend};
 use crate::model::{Cond, EpsModel};
 use crate::util::channel::{bounded, Receiver, Sender};
-use crate::util::error::{anyhow, ensure, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::error::{anyhow, ensure, Error, ErrorKind, Result};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -46,6 +46,28 @@ pub struct PoolConfig {
     /// [`super::EPS_BATCH_SIZES`] so XLA compilation never lands on a
     /// request).
     pub warm: Vec<usize>,
+    /// Per-attempt shard reply deadline. `None` (default) keeps the
+    /// historical behavior: the submitter blocks until every shard replies
+    /// and a backend `Err` fails the batch immediately, with no retries.
+    /// `Some(t)` activates the fault-tolerant path: a shard that errors
+    /// (retryably) or produces no reply within `t` is re-dispatched, up to
+    /// [`PoolConfig::max_retries`] times, preferring healthy devices.
+    pub shard_timeout: Option<Duration>,
+    /// Re-dispatch attempts per shard beyond the first (retry mode only).
+    pub max_retries: u32,
+    /// Base backoff before a retry, doubled per attempt (retry mode only).
+    pub retry_backoff: Duration,
+    /// Quarantine a device after this many *consecutive* failures
+    /// (`0` disables quarantine). Quarantined devices are skipped by
+    /// dispatch — shards reshard over the healthy survivors — until a
+    /// periodic probe succeeds and readmits them.
+    pub quarantine_after: u32,
+    /// Minimum interval between probe shards routed to a quarantined
+    /// device to test it for readmission.
+    pub probe_interval: Duration,
+    /// Reject shard outputs containing non-finite values as retryable
+    /// device failures (catches silent corruption; off by default).
+    pub validate_output: bool,
 }
 
 impl Default for PoolConfig {
@@ -55,6 +77,12 @@ impl Default for PoolConfig {
             work_stealing: true,
             steal_poll: Duration::from_micros(500),
             warm: Vec::new(),
+            shard_timeout: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            quarantine_after: 3,
+            probe_interval: Duration::from_millis(50),
+            validate_output: false,
         }
     }
 }
@@ -72,6 +100,9 @@ pub fn shard_size(n: usize, devices: usize) -> usize {
     per_device.min(*super::EPS_BATCH_SIZES.last().unwrap()).max(1)
 }
 
+/// A shard reply: (shard index, dispatch attempt, result).
+type Reply = (usize, u32, Result<Vec<f32>>);
+
 /// One queued sub-batch.
 struct ShardTask {
     x: Vec<f32>,
@@ -80,7 +111,25 @@ struct ShardTask {
     guidance: f32,
     /// Index of this shard within its parent batch (reassembly key).
     shard: usize,
-    reply: Sender<(usize, Result<Vec<f32>>)>,
+    /// Dispatch attempt (0 = first); stale replies from earlier attempts
+    /// of a re-dispatched shard are discarded by the submitter.
+    attempt: u32,
+    reply: Sender<Reply>,
+}
+
+/// Per-device health (lock-free; failures recorded by the executing worker,
+/// timeouts by the submitting thread).
+#[derive(Debug, Default)]
+struct DeviceHealth {
+    /// Consecutive failures since the last success.
+    consecutive: AtomicU32,
+    /// Total failures since spawn.
+    failures: AtomicU64,
+    /// Device is quarantined: dispatch skips it except for probes.
+    quarantined: AtomicBool,
+    /// Nanoseconds since pool start when the device was last probed (or
+    /// quarantined), gating [`PoolConfig::probe_interval`].
+    last_probe_ns: AtomicU64,
 }
 
 /// Per-device counters (lock-free; written by the executing worker).
@@ -113,6 +162,12 @@ pub struct DeviceStat {
     pub utilization: f64,
     /// Shards currently waiting in this device's queue.
     pub queue_depth: usize,
+    /// Total shard failures (errors, panics, timeouts) attributed to this
+    /// device since spawn.
+    pub failures: u64,
+    /// Whether the device is currently quarantined (skipped by dispatch
+    /// except for readmission probes).
+    pub quarantined: bool,
 }
 
 impl DeviceStat {
@@ -128,6 +183,8 @@ impl DeviceStat {
             ("stolen", Json::Num(self.stolen as f64)),
             ("utilization", Json::Num(self.utilization)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("quarantined", Json::Bool(self.quarantined)),
         ])
     }
 }
@@ -136,7 +193,7 @@ impl std::fmt::Display for DeviceStat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "dev{} [{}] shards={} items={} stolen={} util={:.1}% queue={}",
+            "dev{} [{}] shards={} items={} stolen={} util={:.1}% queue={} failures={}{}",
             self.device,
             self.name,
             self.shards,
@@ -144,6 +201,8 @@ impl std::fmt::Display for DeviceStat {
             self.stolen,
             100.0 * self.utilization,
             self.queue_depth,
+            self.failures,
+            if self.quarantined { " QUARANTINED" } else { "" },
         )
     }
 }
@@ -154,7 +213,12 @@ pub struct PoolStats {
     started: Instant,
     names: Vec<String>,
     counters: Vec<DeviceCounters>,
+    health: Vec<DeviceHealth>,
     queues: Vec<Sender<ShardTask>>,
+    /// Shards re-dispatched after a failure or timeout (monotonic).
+    retries: AtomicU64,
+    /// Devices quarantined since spawn (monotonic event count).
+    quarantine_events: AtomicU64,
 }
 
 impl PoolStats {
@@ -178,6 +242,90 @@ impl PoolStats {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Devices currently *not* quarantined. Zero means every device is
+    /// failing — the coordinator degrades new requests to the sequential
+    /// fallback until a probe readmits one.
+    pub fn healthy_devices(&self) -> usize {
+        self.health.iter().filter(|h| !h.quarantined.load(Ordering::Acquire)).count()
+    }
+
+    /// Whether `device` is currently quarantined.
+    pub fn is_quarantined(&self, device: usize) -> bool {
+        self.health[device].quarantined.load(Ordering::Acquire)
+    }
+
+    /// Shards re-dispatched after a failure or timeout since spawn.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Quarantine events (devices crossing the consecutive-failure
+    /// threshold) since spawn; monotonic, counts re-quarantines too.
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events.load(Ordering::Relaxed)
+    }
+
+    /// Record a successful shard on `device`: reset its failure streak and
+    /// readmit it if it was quarantined (the probe succeeded).
+    fn device_ok(&self, device: usize) {
+        let h = &self.health[device];
+        h.consecutive.store(0, Ordering::Relaxed);
+        if h.quarantined.swap(false, Ordering::AcqRel) {
+            crate::trace::instant(
+                crate::trace::Layer::Pool,
+                crate::trace::Name::Quarantine,
+                device as u64,
+                0,
+                0,
+            );
+        }
+    }
+
+    /// Record a failed shard on `device`; quarantine it once the streak
+    /// reaches `quarantine_after` (0 disables).
+    fn device_failed(&self, device: usize, quarantine_after: u32) {
+        let h = &self.health[device];
+        h.failures.fetch_add(1, Ordering::Relaxed);
+        let streak = h.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if quarantine_after > 0
+            && streak >= quarantine_after
+            && !h.quarantined.swap(true, Ordering::AcqRel)
+        {
+            h.last_probe_ns
+                .store(self.started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.quarantine_events.fetch_add(1, Ordering::Relaxed);
+            crate::trace::instant(
+                crate::trace::Layer::Pool,
+                crate::trace::Name::Quarantine,
+                device as u64,
+                streak as i64,
+                0,
+            );
+        }
+    }
+
+    /// A quarantined device due for a readmission probe, if any; claims the
+    /// probe slot (CAS on the probe clock) so concurrent submitters don't
+    /// flood a sick device.
+    fn probe_due(&self, interval: Duration) -> Option<usize> {
+        let now_ns = self.started.elapsed().as_nanos() as u64;
+        let interval_ns = interval.as_nanos() as u64;
+        for (i, h) in self.health.iter().enumerate() {
+            if !h.quarantined.load(Ordering::Acquire) {
+                continue;
+            }
+            let last = h.last_probe_ns.load(Ordering::Relaxed);
+            if now_ns.saturating_sub(last) >= interval_ns
+                && h.last_probe_ns
+                    .compare_exchange(last, now_ns, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return Some(i);
+            }
+        }
+        None
+    }
+
     /// Snapshot every device's counters.
     pub fn snapshot(&self) -> Vec<DeviceStat> {
         let wall = self.started.elapsed().as_nanos().max(1) as f64;
@@ -192,6 +340,8 @@ impl PoolStats {
                     stolen: c.stolen.load(Ordering::Relaxed),
                     utilization: (c.busy_ns.load(Ordering::Relaxed) as f64 / wall).min(1.0),
                     queue_depth: self.queues[i].len(),
+                    failures: self.health[i].failures.load(Ordering::Relaxed),
+                    quarantined: self.health[i].quarantined.load(Ordering::Acquire),
                 }
             })
             .collect()
@@ -207,6 +357,24 @@ impl PoolStats {
     }
 }
 
+/// Borrowed view of one submitted batch, shared by dispatch and retries.
+struct BatchRef<'a> {
+    xs: &'a [f32],
+    train_ts: &'a [usize],
+    conds: &'a [Cond],
+    guidance: f32,
+}
+
+/// Submitter-side bookkeeping for one in-flight shard (retry mode).
+struct ShardState {
+    start: usize,
+    end: usize,
+    attempt: u32,
+    queued_on: usize,
+    deadline: Instant,
+    done: bool,
+}
+
 /// Submission side shared by [`DevicePool`] and every [`PooledEps`] handle.
 struct PoolInner {
     queues: Vec<Sender<ShardTask>>,
@@ -214,6 +382,7 @@ struct PoolInner {
     dim: usize,
     devices: usize,
     rr: AtomicUsize,
+    cfg: PoolConfig,
 }
 
 impl PoolInner {
@@ -236,30 +405,112 @@ impl PoolInner {
         }
         let dispatch_span = crate::trace::begin();
 
-        // Shard and dispatch round-robin over the per-device queues.
-        let rows = shard_size(n, self.devices);
+        // Reshard over the devices that are currently healthy: a
+        // quarantined device costs throughput, never correctness. With all
+        // devices healthy (the no-fault steady state) this is exactly the
+        // historical split.
+        let healthy = self.stats.healthy_devices();
+        let active = if healthy == 0 { self.devices } else { healthy };
+        let rows = shard_size(n, active);
         let n_shards = n.div_ceil(rows);
-        let (rtx, rrx) = bounded::<(usize, Result<Vec<f32>>)>(n_shards);
+        let batch = BatchRef { xs, train_ts, conds, guidance };
+        match self.cfg.shard_timeout {
+            None => self.collect_legacy(&batch, rows, n_shards, out)?,
+            Some(timeout) => self.collect_with_retries(&batch, rows, n_shards, timeout, out)?,
+        }
+
+        // The dispatch span covers sharding, queueing and reassembly — the
+        // caller-visible latency of one merged device call.
+        crate::trace::complete(
+            dispatch_span,
+            crate::trace::Layer::Pool,
+            crate::trace::Name::Dispatch,
+            0,
+            n as i64,
+            n_shards as i64,
+        );
+        Ok(())
+    }
+
+    /// Round-robin device pick, skipping quarantined devices (and, given an
+    /// alternative, the device that just failed the shard). Falls back to
+    /// quarantined devices rather than stalling when none are healthy. With
+    /// every device healthy this reproduces the historical `rr % devices`
+    /// sequence exactly.
+    fn pick_device(&self, exclude: Option<usize>) -> usize {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        for off in 0..self.devices {
+            let dev = (start + off) % self.devices;
+            if Some(dev) != exclude && !self.stats.is_quarantined(dev) {
+                return dev;
+            }
+        }
+        for off in 0..self.devices {
+            let dev = (start + off) % self.devices;
+            if Some(dev) != exclude {
+                return dev;
+            }
+        }
+        start % self.devices
+    }
+
+    /// Initial dispatch target: a quarantined device due for a readmission
+    /// probe gets the shard (the probe *is* real work — on success the
+    /// device rejoins, on failure the retry path re-dispatches), otherwise
+    /// round-robin over healthy devices.
+    fn dispatch_device(&self) -> usize {
+        self.stats
+            .probe_due(self.cfg.probe_interval)
+            .unwrap_or_else(|| self.pick_device(None))
+    }
+
+    fn make_task(
+        &self,
+        batch: &BatchRef<'_>,
+        idx: usize,
+        span: (usize, usize),
+        attempt: u32,
+        rtx: &Sender<Reply>,
+    ) -> ShardTask {
+        let d = self.dim;
+        let (start, end) = span;
+        ShardTask {
+            x: batch.xs[start * d..end * d].to_vec(),
+            t: batch.train_ts[start..end].to_vec(),
+            conds: batch.conds[start..end].to_vec(),
+            guidance: batch.guidance,
+            shard: idx,
+            attempt,
+            reply: rtx.clone(),
+        }
+    }
+
+    /// Historical path (`shard_timeout: None`): block until every shard
+    /// replies; the first backend `Err` fails the whole batch immediately
+    /// (the caller sees it as a per-request failure, not a panic).
+    fn collect_legacy(
+        &self,
+        batch: &BatchRef<'_>,
+        rows: usize,
+        n_shards: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = batch.train_ts.len();
+        let d = self.dim;
+        let (rtx, rrx) = bounded::<Reply>(n_shards);
         let mut spans = Vec::with_capacity(n_shards);
         for (idx, start) in (0..n).step_by(rows).enumerate() {
             let end = (start + rows).min(n);
             spans.push((start, end));
-            let task = ShardTask {
-                x: xs[start * d..end * d].to_vec(),
-                t: train_ts[start..end].to_vec(),
-                conds: conds[start..end].to_vec(),
-                guidance,
-                shard: idx,
-                reply: rtx.clone(),
-            };
-            let q = self.rr.fetch_add(1, Ordering::Relaxed) % self.devices;
+            let task = self.make_task(batch, idx, (start, end), 0, &rtx);
+            let q = self.dispatch_device();
             self.queues[q].send(task).map_err(|_| anyhow!("device pool is down"))?;
         }
         drop(rtx);
 
         // Reassemble by shard index — completion order is irrelevant.
         for _ in 0..n_shards {
-            let (idx, res) = rrx
+            let (idx, _attempt, res) = rrx
                 .recv()
                 .ok_or_else(|| anyhow!("device pool dropped a shard reply"))?;
             let eps = res?;
@@ -272,16 +523,140 @@ impl PoolInner {
             );
             out[start * d..end * d].copy_from_slice(&eps);
         }
-        // The dispatch span covers sharding, queueing and reassembly — the
-        // caller-visible latency of one merged device call.
-        crate::trace::complete(
-            dispatch_span,
+        Ok(())
+    }
+
+    /// Fault-tolerant path (`shard_timeout: Some`): every shard has a
+    /// per-attempt reply deadline; a retryable error or a timeout
+    /// re-dispatches it (bounded by [`PoolConfig::max_retries`], with
+    /// exponential backoff, preferring a different healthy device). Stale
+    /// replies from superseded attempts are discarded, so a hung device's
+    /// eventual answer can never corrupt a re-dispatched shard.
+    fn collect_with_retries(
+        &self,
+        batch: &BatchRef<'_>,
+        rows: usize,
+        n_shards: usize,
+        timeout: Duration,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let n = batch.train_ts.len();
+        let d = self.dim;
+        // Capacity for every possible attempt's reply, so workers sending
+        // stale replies never block.
+        let cap = n_shards * (self.cfg.max_retries as usize + 1);
+        let (rtx, rrx) = bounded::<Reply>(cap);
+        let mut shards = Vec::with_capacity(n_shards);
+        for (idx, start) in (0..n).step_by(rows).enumerate() {
+            let end = (start + rows).min(n);
+            let task = self.make_task(batch, idx, (start, end), 0, &rtx);
+            let dev = self.dispatch_device();
+            self.queues[dev].send(task).map_err(|_| anyhow!("device pool is down"))?;
+            shards.push(ShardState {
+                start,
+                end,
+                attempt: 0,
+                queued_on: dev,
+                deadline: Instant::now() + timeout,
+                done: false,
+            });
+        }
+
+        let mut outstanding = n_shards;
+        while outstanding > 0 {
+            let now = Instant::now();
+            let tick = shards
+                .iter()
+                .filter(|s| !s.done)
+                .map(|s| s.deadline.saturating_duration_since(now))
+                .min()
+                .unwrap_or(timeout);
+            match rrx.recv_timeout(tick) {
+                Ok(Some((idx, attempt, res))) => {
+                    if shards[idx].done || attempt != shards[idx].attempt {
+                        continue; // stale reply from a superseded attempt
+                    }
+                    match res {
+                        Ok(eps) => {
+                            let (start, end) = (shards[idx].start, shards[idx].end);
+                            ensure!(
+                                eps.len() == (end - start) * d,
+                                "shard {idx}: got {} values, want {}",
+                                eps.len(),
+                                (end - start) * d
+                            );
+                            out[start * d..end * d].copy_from_slice(&eps);
+                            shards[idx].done = true;
+                            outstanding -= 1;
+                        }
+                        Err(e) => {
+                            self.retry_or_fail(batch, idx, &mut shards[idx], &rtx, timeout, e)?
+                        }
+                    }
+                }
+                // Master sender lives in this frame, so a closed channel
+                // means the pool was torn down under us.
+                Ok(None) => return Err(anyhow!("device pool dropped a shard reply")),
+                Err(()) => {
+                    // Tick expired: fail over every overdue shard.
+                    let now = Instant::now();
+                    for idx in 0..n_shards {
+                        if shards[idx].done || shards[idx].deadline > now {
+                            continue;
+                        }
+                        let dev = shards[idx].queued_on;
+                        self.stats.device_failed(dev, self.cfg.quarantine_after);
+                        let e = Error::retryable(format!(
+                            "pool shard {idx}: no reply from device {dev} within {timeout:?}"
+                        ));
+                        self.retry_or_fail(batch, idx, &mut shards[idx], &rtx, timeout, e)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-dispatch a failed shard if its error is retryable and attempts
+    /// remain; otherwise fail the batch with the classified error.
+    fn retry_or_fail(
+        &self,
+        batch: &BatchRef<'_>,
+        idx: usize,
+        state: &mut ShardState,
+        rtx: &Sender<Reply>,
+        timeout: Duration,
+        err: Error,
+    ) -> Result<()> {
+        let failed_on = state.queued_on;
+        if err.kind() != ErrorKind::Retryable || state.attempt >= self.cfg.max_retries {
+            let attempts = state.attempt + 1;
+            // Exhausting the retry budget is terminal — the layers above
+            // must not retry a shard the pool already gave up on.
+            let err = match err.kind() {
+                ErrorKind::Retryable => err.into_kind(ErrorKind::Terminal),
+                _ => err,
+            };
+            return Err(err.context(format!("pool shard {idx} failed after {attempts} attempt(s)")));
+        }
+        state.attempt += 1;
+        self.stats.retries.fetch_add(1, Ordering::Relaxed);
+        crate::trace::instant(
             crate::trace::Layer::Pool,
-            crate::trace::Name::Dispatch,
-            0,
-            n as i64,
-            n_shards as i64,
+            crate::trace::Name::Retry,
+            failed_on as u64,
+            idx as i64,
+            state.attempt as i64,
         );
+        let backoff = self.cfg.retry_backoff.saturating_mul(1u32 << (state.attempt - 1).min(10));
+        if backoff > Duration::ZERO {
+            std::thread::sleep(backoff);
+        }
+        let dev = self.pick_device(Some(failed_on));
+        let task = self.make_task(batch, idx, (state.start, state.end), state.attempt, rtx);
+        self.queues[dev].send(task).map_err(|_| anyhow!("device pool is down"))?;
+        state.queued_on = dev;
+        state.deadline = Instant::now() + timeout;
         Ok(())
     }
 }
@@ -315,7 +690,10 @@ impl DevicePool {
             started: Instant::now(),
             names,
             counters: (0..devices).map(|_| DeviceCounters::default()).collect(),
+            health: (0..devices).map(|_| DeviceHealth::default()).collect(),
             queues: txs.clone(),
+            retries: AtomicU64::new(0),
+            quarantine_events: AtomicU64::new(0),
         });
 
         // Workers warm their backend on their own thread (PJRT compilation
@@ -380,6 +758,7 @@ impl DevicePool {
             dim,
             devices,
             rr: AtomicUsize::new(0),
+            cfg,
         });
         Ok(DevicePool { inner, workers })
     }
@@ -448,7 +827,7 @@ fn run_worker(
         match queues[me].recv_timeout(wait) {
             Ok(Some(task)) => {
                 idle = 0;
-                exec_task(me, backend, task, false, stats);
+                exec_task(me, backend, task, false, stats, cfg);
                 continue;
             }
             Ok(None) => return, // pool shut down
@@ -466,7 +845,7 @@ fn run_worker(
             if let Some(task) = q.try_recv() {
                 idle = 0;
                 stole = true;
-                exec_task(me, backend, task, true, stats);
+                exec_task(me, backend, task, true, stats, cfg);
                 break;
             }
         }
@@ -482,6 +861,7 @@ fn exec_task(
     task: ShardTask,
     stolen: bool,
     stats: &PoolStats,
+    cfg: &PoolConfig,
 ) {
     let items = task.t.len() as u64;
     let exec_span = crate::trace::begin();
@@ -490,6 +870,8 @@ fn exec_task(
     // behind it would keep their reply senders alive forever and (without
     // stealing) deadlock every submitter. Surface the panic as the shard's
     // error instead — the submitter fails loudly and the worker lives on.
+    // Panics are retryable: the pool's retry path (when configured) moves
+    // the shard to a healthy device.
     let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         backend.execute(&EpsShard {
             xs: &task.x,
@@ -498,7 +880,25 @@ fn exec_task(
             guidance: task.guidance,
         })
     }))
-    .unwrap_or_else(|_| Err(anyhow!("pool device {me}: backend panicked executing a shard")));
+    .unwrap_or_else(|_| {
+        Err(Error::retryable(format!("pool device {me}: backend panicked executing a shard")))
+    });
+    // Optionally reject silent corruption as a retryable device failure.
+    let res = res.and_then(|eps| {
+        if cfg.validate_output && eps.iter().any(|v| !v.is_finite()) {
+            Err(Error::retryable(format!(
+                "pool device {me}: non-finite values in shard output"
+            )))
+        } else {
+            Ok(eps)
+        }
+    });
+    // Health is attributed to the executing device (a stolen shard's
+    // outcome credits/blames the thief, who actually ran it).
+    match &res {
+        Ok(_) => stats.device_ok(me),
+        Err(_) => stats.device_failed(me, cfg.quarantine_after),
+    }
     // Track = device index, so Perfetto shows one lane per device.
     crate::trace::complete(
         exec_span,
@@ -516,7 +916,7 @@ fn exec_task(
         c.stolen.fetch_add(1, Ordering::Relaxed);
     }
     // Submitter may have vanished (shutdown mid-flight); nothing to do then.
-    let _ = task.reply.send((task.shard, res));
+    let _ = task.reply.send((task.shard, task.attempt, res));
 }
 
 /// `EpsModel` handle sharding through a [`DevicePool`]. This is what the
@@ -550,6 +950,21 @@ impl EpsModel for PooledEps {
         self.inner
             .eps_batch(xs, train_ts, conds, guidance, out)
             .expect("device pool eps_batch failed");
+    }
+
+    // Fallible override: pool failures surface as classified errors, so
+    // the coordinator's round drivers fail the affected requests instead
+    // of panicking (the infallible `eps_batch` above keeps the historical
+    // loud-panic contract for direct solver users).
+    fn try_eps_batch(
+        &self,
+        xs: &[f32],
+        train_ts: &[usize],
+        conds: &[Cond],
+        guidance: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.inner.eps_batch(xs, train_ts, conds, guidance, out)
     }
 
     fn name(&self) -> &str {
@@ -808,5 +1223,219 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    // ---- fault-tolerance tests -------------------------------------------
+
+    use crate::runtime::fault::{FaultControl, FaultSpec, FaultyBackend};
+    use crate::util::error::ErrorKind;
+
+    /// Faulty in-process backend for pool device `device` under `spec`.
+    fn faulty(
+        model: Arc<GmmEps>,
+        device: usize,
+        spec: &FaultSpec,
+        control: &FaultControl,
+    ) -> Box<dyn EpsBackend> {
+        Box::new(FaultyBackend::new(
+            Box::new(InProcessBackend::new(model)),
+            device,
+            spec,
+            control.clone(),
+        ))
+    }
+
+    fn retry_cfg() -> PoolConfig {
+        PoolConfig {
+            shard_timeout: Some(Duration::from_secs(5)),
+            retry_backoff: Duration::from_micros(100),
+            // Stealing off: each injected fault fires on its scheduled
+            // device call, so retry counters are deterministic.
+            work_stealing: false,
+            ..PoolConfig::default()
+        }
+    }
+
+    #[test]
+    fn erroring_backend_propagates_err_instead_of_panicking() {
+        // Satellite regression: with the *default* config a backend `Err`
+        // must surface through `try_eps_batch` as a classified error — the
+        // historical `.expect` panic only remains on the infallible path.
+        struct ErrBackend;
+        impl EpsBackend for ErrBackend {
+            fn dim(&self) -> usize {
+                3
+            }
+            fn name(&self) -> String {
+                "err".into()
+            }
+            fn execute(&mut self, _shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+                Err(crate::util::error::Error::retryable("injected backend error"))
+            }
+        }
+        let pool = DevicePool::spawn(
+            vec![Box::new(ErrBackend), Box::new(ErrBackend)],
+            PoolConfig { work_stealing: false, ..PoolConfig::default() },
+        )
+        .unwrap();
+        let eps = pool.eps_handle("pooled");
+        let (xs, ts, conds) = batch(3, 8, 2);
+        let mut out = vec![0.0f32; 8 * 3];
+        let err = eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut out).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Retryable);
+        assert!(err.to_string().contains("injected backend error"), "{err}");
+        // The pool survives the failure: a later healthy call still works
+        // (devices stay up; only the batch failed).
+        let err2 = eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut out).unwrap_err();
+        assert!(err2.to_string().contains("injected backend error"));
+    }
+
+    #[test]
+    fn retries_reroute_around_an_erroring_device() {
+        let d = 4;
+        let model = gmm(d);
+        let spec = FaultSpec::parse("1:error").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>,
+            faulty(model.clone(), 1, &spec, &control),
+        ];
+        let pool = DevicePool::spawn(backends, retry_cfg()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 40; // 2 shards of 20 — one lands on the erroring device
+        let (xs, ts, conds) = batch(d, n, 5);
+        let mut via_pool = vec![0.0f32; n * d];
+        eps.try_eps_batch(&xs, &ts, &conds, 1.5, &mut via_pool).unwrap();
+        let mut direct = vec![0.0f32; n * d];
+        model.eps_batch(&xs, &ts, &conds, 1.5, &mut direct);
+        assert_eq!(via_pool, direct, "retried shards must still be bit-exact");
+        assert!(pool.stats().retries() >= 1, "expected at least one retry");
+    }
+
+    #[test]
+    fn repeated_failures_quarantine_and_probes_readmit() {
+        let d = 4;
+        let model = gmm(d);
+        // Device 1 errors on its first 3 calls, then recovers.
+        let spec = FaultSpec::parse("1:error@0..3").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>,
+            faulty(model.clone(), 1, &spec, &control),
+        ];
+        let cfg = PoolConfig {
+            work_stealing: false, // keep the per-device call schedule exact
+            quarantine_after: 2,
+            probe_interval: Duration::from_millis(5),
+            ..retry_cfg()
+        };
+        let pool = DevicePool::spawn(backends, cfg).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let stats = pool.stats();
+        let mut readmitted = false;
+        for i in 0..200u64 {
+            let n = 40;
+            let (xs, ts, conds) = batch(d, n, 100 + i);
+            let mut via_pool = vec![0.0f32; n * d];
+            eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut via_pool).unwrap();
+            let mut direct = vec![0.0f32; n * d];
+            model.eps_batch(&xs, &ts, &conds, 1.0, &mut direct);
+            assert_eq!(via_pool, direct, "batch {i} corrupted during failover");
+            if stats.quarantine_events() >= 1 && stats.healthy_devices() == 2 {
+                readmitted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            readmitted,
+            "device 1 was never quarantined + readmitted (events={}, healthy={})",
+            stats.quarantine_events(),
+            stats.healthy_devices()
+        );
+    }
+
+    #[test]
+    fn shard_timeout_rescues_a_hung_device() {
+        let d = 4;
+        let model = gmm(d);
+        // Device 0 hangs on its first call until cancelled.
+        let spec = FaultSpec::parse("0:hang@0").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            faulty(model.clone(), 0, &spec, &control),
+            Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>,
+        ];
+        let cfg = PoolConfig {
+            shard_timeout: Some(Duration::from_millis(40)),
+            work_stealing: false, // force the timeout path, not a steal
+            retry_backoff: Duration::from_micros(100),
+            ..PoolConfig::default()
+        };
+        let pool = DevicePool::spawn(backends, cfg).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 10; // 2 shards of 5
+        let (xs, ts, conds) = batch(d, n, 77);
+        let mut via_pool = vec![0.0f32; n * d];
+        let t0 = Instant::now();
+        eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut via_pool).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "bounded wait despite the hang");
+        let mut direct = vec![0.0f32; n * d];
+        model.eps_batch(&xs, &ts, &conds, 1.0, &mut direct);
+        assert_eq!(via_pool, direct);
+        assert!(pool.stats().retries() >= 1);
+        // Release the hung worker before the pool drop joins it.
+        control.cancel();
+        drop(pool);
+    }
+
+    #[test]
+    fn corrupt_output_is_detected_and_retried() {
+        let d = 5;
+        let model = gmm(d);
+        // Device 1 NaN-corrupts its first two calls.
+        let spec = FaultSpec::parse("1:corrupt@0..2").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>,
+            faulty(model.clone(), 1, &spec, &control),
+        ];
+        let cfg = PoolConfig { validate_output: true, ..retry_cfg() };
+        let pool = DevicePool::spawn(backends, cfg).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 40;
+        let (xs, ts, conds) = batch(d, n, 31);
+        let mut via_pool = vec![0.0f32; n * d];
+        eps.try_eps_batch(&xs, &ts, &conds, 2.0, &mut via_pool).unwrap();
+        assert!(via_pool.iter().all(|v| v.is_finite()), "corruption leaked through");
+        let mut direct = vec![0.0f32; n * d];
+        model.eps_batch(&xs, &ts, &conds, 2.0, &mut direct);
+        assert_eq!(via_pool, direct, "recovered output must be bit-exact");
+        assert!(pool.stats().retries() >= 1);
+        assert!(pool.stats().snapshot()[1].failures >= 1);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_terminally() {
+        let d = 3;
+        let model = gmm(d);
+        // Every device errors on every call — retries cannot help.
+        let spec = FaultSpec::parse("0:error,1:error").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            faulty(model.clone(), 0, &spec, &control),
+            faulty(model.clone(), 1, &spec, &control),
+        ];
+        let pool = DevicePool::spawn(backends, retry_cfg()).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let (xs, ts, conds) = batch(d, 10, 8);
+        let mut out = vec![0.0f32; 10 * d];
+        let err = eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut out).unwrap_err();
+        assert_eq!(
+            err.kind(),
+            ErrorKind::Terminal,
+            "an exhausted retry budget must not look retryable: {err}"
+        );
+        assert!(err.to_string().contains("failed after"), "{err}");
     }
 }

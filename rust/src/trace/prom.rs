@@ -162,6 +162,36 @@ pub fn render_with_events(snapshot: &MetricsSnapshot, events: &[TraceEvent]) -> 
         "Multi-fidelity coarse rounds (draft rounds + Parareal sweeps).",
         snapshot.coarse_rounds_total as f64,
     );
+    w.scalar(
+        "parataa_degraded_total",
+        "counter",
+        "Requests served by the sequential graceful-degradation path.",
+        snapshot.degraded_total as f64,
+    );
+    w.scalar(
+        "parataa_deadline_misses_total",
+        "counter",
+        "Requests failed because their deadline expired.",
+        snapshot.deadline_misses as f64,
+    );
+    w.scalar(
+        "parataa_shed_total",
+        "counter",
+        "Requests rejected outright by load shedding.",
+        snapshot.shed_total as f64,
+    );
+    w.scalar(
+        "parataa_retries_total",
+        "counter",
+        "Shard re-dispatches performed by the device pool.",
+        snapshot.retries_total as f64,
+    );
+    w.scalar(
+        "parataa_devices_quarantined",
+        "counter",
+        "Pool devices pulled from dispatch after repeated failures.",
+        snapshot.devices_quarantined as f64,
+    );
 
     // --- gauges -----------------------------------------------------------
     w.scalar(
@@ -499,6 +529,9 @@ mod tests {
         assert!(text.contains("parataa_requests_completed_total 2"), "{text}");
         assert!(text.contains("parataa_requests_failed_total 1"));
         assert!(text.contains("parataa_rounds_driven_total 1"));
+        assert!(text.contains("parataa_degraded_total 0"), "robustness counters render");
+        assert!(text.contains("parataa_deadline_misses_total 0"));
+        assert!(text.contains("parataa_retries_total 0"));
         assert!(text.contains("parataa_request_latency_ms{quantile=\"0.5\"}"));
         assert!(text.contains("# TYPE parataa_request_latency_ms summary"));
         assert!(text.contains("parataa_trace_events_total{layer=\"solver\"} 2"));

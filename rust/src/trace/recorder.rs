@@ -125,11 +125,22 @@ pub enum Name {
     /// Gram refresh, and the per-row correction (`a` = round index,
     /// `b` = active rows). Nested inside [`Name::Round`].
     RoundUpdate = 17,
+    /// Instant: the device pool re-dispatched a failed/timed-out shard
+    /// (`a` = shard index, `b` = retry attempt, track = original device).
+    Retry = 18,
+    /// Instant: a device crossed its consecutive-failure threshold and was
+    /// quarantined (`a` = consecutive failures; track = device), or was
+    /// readmitted after a successful probe (`a` = 0).
+    Quarantine = 19,
+    /// Instant: a request was degraded to the sequential DDIM fallback on
+    /// the intake thread (`a` = steps, `b` = reason code: 0 slots
+    /// saturated, 1 devices quarantined, 2 deadline pressure).
+    Degrade = 20,
 }
 
 impl Name {
     /// Every event name, in discriminant order.
-    pub const ALL: [Name; 18] = [
+    pub const ALL: [Name; 21] = [
         Name::Admit,
         Name::Round,
         Name::FrontAdvance,
@@ -148,6 +159,9 @@ impl Name {
         Name::CoarseRound,
         Name::RoundEval,
         Name::RoundUpdate,
+        Name::Retry,
+        Name::Quarantine,
+        Name::Degrade,
     ];
 
     /// Stable dotted label, e.g. `"solver.round"` without the layer —
@@ -172,6 +186,9 @@ impl Name {
             Name::CoarseRound => "coarse_round",
             Name::RoundEval => "round_eval",
             Name::RoundUpdate => "round_update",
+            Name::Retry => "retry",
+            Name::Quarantine => "quarantine",
+            Name::Degrade => "degrade",
         }
     }
 

@@ -2,25 +2,92 @@
 //! the registry — see `util/channel.rs`): a string-backed [`Error`] plus the
 //! `anyhow!` / `ensure!` / `bail!` / [`Context`] surface the crate builds on.
 //!
-//! The subset is intentionally tiny — errors here are terminal diagnostics
-//! (a missing artifact, a dead actor), not values programs branch on.
+//! Since the fault-tolerance layer, errors also carry an [`ErrorKind`] so
+//! retry policy and metrics classify failures structurally instead of
+//! string-matching: the device pool marks transient device failures
+//! [`ErrorKind::Retryable`], the coordinator marks expired requests
+//! [`ErrorKind::DeadlineExceeded`] and load-shed requests [`ErrorKind::Shed`],
+//! and everything else stays the historical [`ErrorKind::Terminal`].
+//! Context chaining ([`Error::context`]) preserves the kind.
 
 use std::fmt;
 
-/// String-backed error with accumulated context prefixes.
+/// Failure classification carried by every [`Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ErrorKind {
+    /// A transient failure: retrying the same work (possibly elsewhere) may
+    /// succeed. The device pool's retry policy only re-dispatches these.
+    Retryable,
+    /// A permanent failure (the historical default): retrying cannot help.
+    #[default]
+    Terminal,
+    /// The request's deadline expired before (or while) it was served.
+    DeadlineExceeded,
+    /// The request was rejected by load-shedding admission control.
+    Shed,
+}
+
+impl ErrorKind {
+    /// Stable lowercase label (used in metrics and log lines).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorKind::Retryable => "retryable",
+            ErrorKind::Terminal => "terminal",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+            ErrorKind::Shed => "shed",
+        }
+    }
+}
+
+/// String-backed error with accumulated context prefixes and a failure
+/// classification ([`ErrorKind`]).
+#[derive(Clone)]
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
-    /// Build an error from anything displayable.
+    /// Build a [`ErrorKind::Terminal`] error from anything displayable.
     pub fn msg<M: fmt::Display>(msg: M) -> Error {
-        Error { msg: msg.to_string() }
+        Error { msg: msg.to_string(), kind: ErrorKind::Terminal }
+    }
+
+    /// Build an error with an explicit classification.
+    pub fn with_kind<M: fmt::Display>(kind: ErrorKind, msg: M) -> Error {
+        Error { msg: msg.to_string(), kind }
+    }
+
+    /// A [`ErrorKind::Retryable`] error (transient device failure).
+    pub fn retryable<M: fmt::Display>(msg: M) -> Error {
+        Error::with_kind(ErrorKind::Retryable, msg)
+    }
+
+    /// A [`ErrorKind::DeadlineExceeded`] error.
+    pub fn deadline<M: fmt::Display>(msg: M) -> Error {
+        Error::with_kind(ErrorKind::DeadlineExceeded, msg)
+    }
+
+    /// A [`ErrorKind::Shed`] error (rejected by admission control).
+    pub fn shed<M: fmt::Display>(msg: M) -> Error {
+        Error::with_kind(ErrorKind::Shed, msg)
+    }
+
+    /// The failure classification.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Reclassify the error, keeping the message and context chain.
+    pub fn into_kind(mut self, kind: ErrorKind) -> Error {
+        self.kind = kind;
+        self
     }
 
     /// Prefix additional context, mirroring `anyhow::Error::context`.
+    /// The [`ErrorKind`] is preserved through the chain.
     pub fn context<M: fmt::Display>(self, ctx: M) -> Error {
-        Error { msg: format!("{ctx}: {}", self.msg) }
+        Error { msg: format!("{ctx}: {}", self.msg), kind: self.kind }
     }
 }
 
@@ -48,6 +115,11 @@ impl From<std::io::Error> for Error {
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Attach context to a fallible result, mirroring `anyhow::Context`.
+///
+/// The blanket impl over any displayable error necessarily produces a
+/// [`ErrorKind::Terminal`] error (a foreign error carries no kind); to chain
+/// context on a crate [`Error`] *without* losing its kind, use the inherent
+/// [`Error::context`] via `map_err(|e| e.context(...))`.
 pub trait Context<T> {
     /// Wrap the error with a `msg:` prefix.
     fn context<M: fmt::Display>(self, msg: M) -> Result<T>;
@@ -100,6 +172,7 @@ mod tests {
     fn macros_build_errors() {
         let e = anyhow!("bad {}", 42);
         assert_eq!(e.to_string(), "bad 42");
+        assert_eq!(e.kind(), ErrorKind::Terminal, "macro errors are terminal");
         assert_eq!(fails_when(false).unwrap(), 7);
         assert_eq!(fails_when(true).unwrap_err().to_string(), "condition was true");
     }
@@ -120,5 +193,39 @@ mod tests {
             Ok(())
         }
         assert!(io().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn kinds_classify_and_survive_context() {
+        assert_eq!(Error::msg("x").kind(), ErrorKind::Terminal);
+        assert_eq!(Error::retryable("x").kind(), ErrorKind::Retryable);
+        assert_eq!(Error::deadline("x").kind(), ErrorKind::DeadlineExceeded);
+        assert_eq!(Error::shed("x").kind(), ErrorKind::Shed);
+
+        // Inherent context chaining preserves the kind…
+        let e = Error::retryable("device 1 errored").context("shard 3");
+        assert_eq!(e.kind(), ErrorKind::Retryable);
+        assert_eq!(e.to_string(), "shard 3: device 1 errored");
+
+        // …and reclassification keeps the message chain.
+        let t = e.into_kind(ErrorKind::Terminal).context("retries exhausted");
+        assert_eq!(t.kind(), ErrorKind::Terminal);
+        assert!(t.to_string().starts_with("retries exhausted: shard 3"));
+    }
+
+    #[test]
+    fn kind_labels_are_stable() {
+        assert_eq!(ErrorKind::Retryable.label(), "retryable");
+        assert_eq!(ErrorKind::Terminal.label(), "terminal");
+        assert_eq!(ErrorKind::DeadlineExceeded.label(), "deadline_exceeded");
+        assert_eq!(ErrorKind::Shed.label(), "shed");
+    }
+
+    #[test]
+    fn errors_clone() {
+        let e = Error::shed("queue full").context("admit");
+        let c = e.clone();
+        assert_eq!(c.kind(), ErrorKind::Shed);
+        assert_eq!(c.to_string(), e.to_string());
     }
 }

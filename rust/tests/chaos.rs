@@ -1,0 +1,378 @@
+//! Chaos tests (ISSUE 9): the full coordinator stack driven over
+//! fault-injected device pools.
+//!
+//! Every test scripts a deterministic fault storm via
+//! [`parataa::runtime::FaultSpec`] and asserts the service-level
+//! invariants the robustness layer guarantees:
+//!
+//! - **conservation** — every admitted request resolves exactly once:
+//!   completed + failed == admitted, no handle hangs;
+//! - **bounded waits** — injected hangs are released by `shard_timeout`
+//!   retries, the hang safety cap, or [`FaultControl::cancel`], never by
+//!   test-harness timeout;
+//! - **slot restoration** — the slot budget returns to its idle value
+//!   after every storm (no leaked window rows);
+//! - **bitwise degradation** — requests served by the sequential fallback
+//!   produce exactly `sample_sequential`'s output;
+//! - **classified errors** — failures surface with the right
+//!   [`ErrorKind`], not as panics.
+
+use parataa::coordinator::{
+    Coordinator, CoordinatorConfig, RobustnessConfig, SampleRequest, SamplerSpec, ShedMode,
+};
+use parataa::model::gmm::GmmEps;
+use parataa::model::Cond;
+use parataa::runtime::{
+    DevicePool, EpsBackend, FaultControl, FaultSpec, FaultyBackend, InProcessBackend, PoolConfig,
+};
+use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs, SamplerKind};
+use parataa::solver::{sample_sequential, Problem};
+use parataa::util::error::ErrorKind;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn gmm() -> Arc<GmmEps> {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()))
+}
+
+/// A coordinator over `devices` fault-injected in-process backends with
+/// the pool's retry/quarantine path on (shard timeout, output validation,
+/// short hang cap). Returns the pool too: it must outlive the coordinator,
+/// and tests tear down in the order `drop(coord)` → `control.cancel()` →
+/// `drop(pool)` so hung workers release before the pool joins them.
+fn chaos_stack(
+    devices: usize,
+    spec: &str,
+    robustness: RobustnessConfig,
+) -> (Coordinator, DevicePool, FaultControl) {
+    let model = gmm();
+    let spec = FaultSpec::parse(spec).expect("test fault spec").with_seed(7);
+    let control = FaultControl::new();
+    let backends: Vec<Box<dyn EpsBackend>> = (0..devices)
+        .map(|dev| -> Box<dyn EpsBackend> {
+            let inner: Box<dyn EpsBackend> = Box::new(InProcessBackend::new(model.clone()));
+            Box::new(
+                FaultyBackend::new(inner, dev, &spec, control.clone())
+                    .with_hang_cap(Duration::from_millis(400)),
+            )
+        })
+        .collect();
+    let cfg = PoolConfig {
+        shard_timeout: Some(Duration::from_millis(150)),
+        validate_output: true,
+        work_stealing: false, // deterministic device routing for the storms
+        ..Default::default()
+    };
+    let pool = DevicePool::spawn(backends, cfg).expect("spawn chaos pool");
+    let stats = pool.stats();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let coord = Coordinator::start(
+        pooled,
+        CoordinatorConfig { workers: 2, drivers: 2, devices, robustness, ..Default::default() },
+    );
+    coord.attach_pool(stats);
+    (coord, pool, control)
+}
+
+fn req(seed: u64, steps: usize) -> SampleRequest {
+    let mut r = SampleRequest::parataa(
+        Cond::Class((seed % 8) as usize),
+        seed,
+        SamplerSpec::ddim(steps),
+    );
+    r.guidance = 2.0;
+    r
+}
+
+/// The sequential oracle on the bare analytic model (bitwise what the
+/// degraded path must produce — the pool layer is arithmetic-transparent).
+fn oracle(seed: u64, steps: usize) -> Vec<f32> {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    let coeffs = SamplerCoeffs::new(&ns, SamplerKind::Ddim, steps);
+    let model = gmm();
+    let problem = Problem::new(&coeffs, &*model, Cond::Class((seed % 8) as usize), seed);
+    sample_sequential(&problem, 2.0).xs.row(0).to_vec()
+}
+
+/// One scripted storm: run `n_req` requests through it, assert
+/// conservation, bounded wall-clock, and slot restoration. Returns
+/// (ok, failed, finite_samples).
+fn run_storm(spec: &str, n_req: usize) -> (usize, usize, bool) {
+    let (coord, pool, control) = chaos_stack(2, spec, RobustnessConfig::default());
+    let idle_slots = coord.slots_available();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_req).map(|i| coord.submit(req(i as u64, 16))).collect();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    let mut finite = true;
+    for h in handles {
+        match h.wait() {
+            Ok(r) => {
+                ok += 1;
+                finite &= r.sample.iter().all(|v| v.is_finite());
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "storm `{spec}` took {elapsed:?} — waits must stay bounded"
+    );
+    assert_eq!(ok + failed, n_req, "storm `{spec}`: every request resolves exactly once");
+    let snap = coord.metrics();
+    assert_eq!(
+        snap.completed + snap.failed,
+        n_req as u64,
+        "storm `{spec}`: metrics must conserve requests"
+    );
+    assert_eq!(
+        coord.slots_available(),
+        idle_slots,
+        "storm `{spec}`: all slots must return to the budget"
+    );
+    drop(coord);
+    control.cancel();
+    drop(pool);
+    (ok, failed, finite)
+}
+
+#[test]
+fn error_storm_is_absorbed_by_retries() {
+    // Device 1 errors on every shard from its 3rd call on; device 0 stays
+    // healthy, so bounded retry onto it must absorb the whole storm.
+    let (ok, failed, finite) = run_storm("1:error@2..", 8);
+    assert_eq!(failed, 0, "a healthy peer device must absorb an erroring one");
+    assert_eq!(ok, 8);
+    assert!(finite);
+}
+
+#[test]
+fn error_storm_quarantines_the_bad_device_and_counts_retries() {
+    let (coord, pool, control) = chaos_stack(2, "1:error@2..", RobustnessConfig::default());
+    let handles: Vec<_> = (0..8).map(|i| coord.submit(req(i as u64, 16))).collect();
+    for h in handles {
+        h.wait().expect("retries must absorb the erroring device");
+    }
+    let snap = coord.metrics();
+    assert!(snap.retries_total >= 1, "injected errors must be retried");
+    assert!(
+        snap.devices_quarantined >= 1,
+        "a persistently erroring device must be quarantined"
+    );
+    assert!(
+        snap.devices.iter().any(|d| d.quarantined),
+        "the pool snapshot must show the quarantined device"
+    );
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn slow_storm_preserves_output() {
+    // A straggler device (30 ms per shard, calls 2..8): slow but correct,
+    // so nothing should fail and no retries are *required* (the shard
+    // timeout at 150 ms is above the injected delay).
+    let (ok, failed, finite) = run_storm("1:slow=30@2..8", 6);
+    assert_eq!(failed, 0);
+    assert_eq!(ok, 6);
+    assert!(finite);
+}
+
+#[test]
+fn hang_storm_releases_via_timeout_and_quarantine() {
+    // Device 1 wedges on every call. The shard timeout re-dispatches its
+    // work to device 0 while the worker sits parked (released at teardown
+    // by the cancel, or by the 400 ms safety cap), and quarantine stops
+    // routing to it.
+    let (ok, failed, finite) = run_storm("1:hang@0..", 4);
+    assert_eq!(failed, 0, "hangs must be survived via timeout + healthy peer");
+    assert_eq!(ok, 4);
+    assert!(finite);
+}
+
+#[test]
+fn corrupt_storm_never_reaches_clients() {
+    // Device 1 NaN-corrupts every output from call 2 on. Output validation
+    // must convert the corruption into retryable failures — clients only
+    // ever see finite samples.
+    let (ok, failed, finite) = run_storm("1:corrupt@2..", 6);
+    assert_eq!(failed, 0);
+    assert_eq!(ok, 6);
+    assert!(finite, "NaN corruption must never surface in a served sample");
+}
+
+/// Satellite 1 regression: in the historical blocking pool mode (no
+/// `shard_timeout`), a backend `Err` must fail the affected requests with
+/// a classified error — not panic the round driver or wedge the service.
+#[test]
+fn erroring_backend_without_retry_fails_requests_cleanly() {
+    let model = gmm();
+    let spec = FaultSpec::parse("0:error").expect("spec");
+    let control = FaultControl::new();
+    let inner: Box<dyn EpsBackend> = Box::new(InProcessBackend::new(model));
+    let backends: Vec<Box<dyn EpsBackend>> =
+        vec![Box::new(FaultyBackend::new(inner, 0, &spec, control.clone()))];
+    // Deliberately the historical default config: no retries, no timeout.
+    let pool = DevicePool::spawn(backends, PoolConfig::default()).expect("spawn pool");
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    // No attach_pool: without pool stats the coordinator cannot see device
+    // health, so nothing sheds — the error path itself is under test.
+    let coord = Coordinator::start(
+        pooled,
+        CoordinatorConfig { workers: 1, drivers: 1, ..Default::default() },
+    );
+    let idle_slots = coord.slots_available();
+    for i in 0..3 {
+        let e = coord.submit(req(i, 8)).wait().expect_err("every round errors");
+        assert!(
+            matches!(e.kind(), ErrorKind::Retryable | ErrorKind::Terminal),
+            "failure must carry a classified kind, got {:?}",
+            e.kind()
+        );
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.failed, 3);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(coord.slots_available(), idle_slots, "failed solves must release slots");
+    drop(coord);
+    drop(pool);
+}
+
+#[test]
+fn degraded_responses_are_bitwise_sequential() {
+    // Watermark 0.0 sheds every admission; the default shed mode degrades
+    // to the sequential rollout, which must be bitwise the oracle.
+    let rb = RobustnessConfig { shed_watermark: Some(0.0), ..Default::default() };
+    let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
+    for seed in [0u64, 3, 5] {
+        let r = coord.sample(req(seed, 16)).expect("degraded requests complete");
+        assert!(r.degraded, "watermark 0.0 must degrade every request");
+        assert_eq!(r.rounds, 16, "degraded rounds == sequential steps");
+        assert_eq!(r.sample, oracle(seed, 16), "degraded output must be bitwise sequential");
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.degraded_total, 3);
+    assert_eq!(snap.failed, 0, "degradation is success, not failure");
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn fail_mode_shedding_rejects_with_shed_kind() {
+    let rb = RobustnessConfig { shed_watermark: Some(0.0), shed_mode: ShedMode::Fail };
+    let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
+    let idle_slots = coord.slots_available();
+    let e = coord.submit(req(0, 16)).wait().expect_err("fail mode rejects");
+    assert_eq!(e.kind(), ErrorKind::Shed);
+    assert_eq!(coord.metrics().shed_total, 1);
+    assert_eq!(coord.slots_available(), idle_slots);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn expired_deadline_rejected_at_admission_under_faults() {
+    let (coord, pool, control) = chaos_stack(2, "1:error@2..", RobustnessConfig::default());
+    let idle_slots = coord.slots_available();
+    let mut r = req(0, 16);
+    r.deadline_ms = Some(0); // already expired when admission sees it
+    let e = coord.submit(r).wait().expect_err("zero deadline cannot be met");
+    assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+    assert_eq!(coord.metrics().deadline_misses, 1);
+    assert_eq!(coord.slots_available(), idle_slots);
+    // The service keeps serving afterwards.
+    let ok = coord.sample(req(1, 16)).expect("service survives a deadline miss");
+    assert!(ok.sample.iter().all(|v| v.is_finite()));
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn mid_solve_deadline_expiry_fails_between_rounds() {
+    // Both devices straggle 40 ms per shard, so every parallel round costs
+    // ≥ 40 ms; a 30 ms deadline must expire after the first round — the
+    // per-round sweep fails the session with DeadlineExceeded.
+    let (coord, pool, control) =
+        chaos_stack(2, "0:slow=40@0.., 1:slow=40@0..", RobustnessConfig::default());
+    let idle_slots = coord.slots_available();
+    let mut r = req(0, 32);
+    r.deadline_ms = Some(30);
+    let t0 = Instant::now();
+    let e = coord.submit(r).wait().expect_err("deadline must expire mid-solve");
+    assert_eq!(e.kind(), ErrorKind::DeadlineExceeded);
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "expiry must be prompt, not after the full solve"
+    );
+    assert!(coord.metrics().deadline_misses >= 1);
+    assert_eq!(coord.slots_available(), idle_slots, "expired sessions release slots");
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+/// Satellite 3: `StreamHandle` consumers under shedding and deadline
+/// expiry — streams must terminate (never hang), errors must be
+/// classified, and slots must be released.
+#[test]
+fn stream_handles_terminate_under_shedding_and_deadlines() {
+    // Fail-mode shed: stream ends immediately, wait() carries Shed.
+    let rb = RobustnessConfig { shed_watermark: Some(0.0), shed_mode: ShedMode::Fail };
+    let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
+    let idle_slots = coord.slots_available();
+    let h = coord.submit_streaming(req(0, 16));
+    assert!(h.next_chunk().is_none(), "a shed stream must end, not hang");
+    assert_eq!(h.wait().expect_err("fail-mode shed rejects").kind(), ErrorKind::Shed);
+    assert_eq!(coord.slots_available(), idle_slots);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+
+    // Degrade-mode shed: exactly one full-trajectory chunk, then the
+    // stream ends and the response reports the degraded solve.
+    let rb = RobustnessConfig { shed_watermark: Some(0.0), ..Default::default() };
+    let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
+    let h = coord.submit_streaming(req(1, 16));
+    let chunk = h.next_chunk().expect("degraded stream delivers the trajectory");
+    assert_eq!(chunk.rows, 0..16);
+    assert_eq!(chunk.round, 0);
+    assert!(h.next_chunk().is_none(), "exactly one chunk, then stream end");
+    let resp = h.wait().expect("degraded stream completes");
+    assert!(resp.degraded);
+    assert_eq!(&chunk.states[..resp.sample.len()], &resp.sample[..]);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+
+    // Expired deadline: stream ends, wait() carries DeadlineExceeded.
+    let (coord, pool, control) = chaos_stack(2, "1:error@2..", RobustnessConfig::default());
+    let idle_slots = coord.slots_available();
+    let mut r = req(2, 16);
+    r.deadline_ms = Some(0);
+    let h = coord.submit_streaming(r);
+    assert!(h.next_chunk().is_none(), "an expired stream must end, not hang");
+    assert_eq!(
+        h.wait().expect_err("expired deadline rejects").kind(),
+        ErrorKind::DeadlineExceeded
+    );
+    assert_eq!(coord.slots_available(), idle_slots);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn faultless_wrapper_is_inert() {
+    // A spec targeting a device index the pool doesn't have: the wrapper
+    // must be a pure pass-through and the retry-mode pool must serve the
+    // load exactly like a healthy deployment.
+    let (ok, failed, finite) = run_storm("9:error@0..", 4);
+    assert_eq!((ok, failed), (4, 0));
+    assert!(finite);
+}
