@@ -51,7 +51,7 @@ use super::request::{PrefixChunk, SampleRequest, SampleResponse};
 use super::scheduler::{OwnedSlotGuard, SlotBudget};
 use crate::model::{Cond, EpsModel};
 use crate::schedule::{BetaSchedule, NoiseSchedule, SamplerCoeffs};
-use crate::solver::{init::init_from_trajectory, sample_sequential, Problem, SolverSession};
+use crate::solver::{init::init_from_trajectory, try_sample_sequential, Problem, SolverSession};
 use crate::trace::telemetry::{SessionTelemetry, TelemetryLog};
 use crate::trace::{self, Layer, Name};
 use crate::util::channel::{bounded, Receiver, Sender};
@@ -104,7 +104,7 @@ pub struct CoordinatorConfig {
 /// (a watermark, a request deadline) or only reachable under faults (an
 /// attached pool with every device quarantined), so the default
 /// configuration never changes the historical admission path.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct RobustnessConfig {
     /// Slot-budget occupancy fraction in `[0, 1]` at or above which new
     /// requests are shed (degraded or failed per `shed_mode`). `None`
@@ -112,6 +112,25 @@ pub struct RobustnessConfig {
     pub shed_watermark: Option<f64>,
     /// What to do with a shed request.
     pub shed_mode: ShedMode,
+    /// Pool-independent model for degraded sequential rollouts. When the
+    /// service degrades *because the pool is unhealthy* (every device
+    /// quarantined) or saturated, running the fallback through that same
+    /// pool would fail or add load — so where an in-process model exists
+    /// (GMM deployments), set it here and degraded requests bypass the
+    /// pool entirely. `None` falls back to the serving model via its
+    /// fallible path: a pool error then surfaces as a classified failure,
+    /// never a panic.
+    pub fallback_model: Option<Arc<dyn EpsModel>>,
+}
+
+impl std::fmt::Debug for RobustnessConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RobustnessConfig")
+            .field("shed_watermark", &self.shed_watermark)
+            .field("shed_mode", &self.shed_mode)
+            .field("fallback_model", &self.fallback_model.as_ref().map(|m| m.name().to_string()))
+            .finish()
+    }
 }
 
 /// What "shedding" an admitted-but-unservable request means.
@@ -119,7 +138,8 @@ pub struct RobustnessConfig {
 pub enum ShedMode {
     /// Graceful degradation (the default): serve a sequential rollout on
     /// the intake thread — slower, but correct (bitwise-equal to
-    /// [`sample_sequential`]) and off the saturated parallel path.
+    /// [`crate::solver::sample_sequential`]) and off the saturated
+    /// parallel path.
     #[default]
     DegradeSequential,
     /// Reject with an [`crate::util::error::ErrorKind::Shed`] error.
@@ -533,7 +553,16 @@ fn admit(
         match cfg.robustness.shed_mode {
             ShedMode::DegradeSequential => {
                 let out = PendingReply { reply, progress, enqueued };
-                return degrade_sequential(&req, out, in_flight, model, schedule, metrics, code);
+                return degrade_sequential(
+                    &req,
+                    out,
+                    in_flight,
+                    model,
+                    schedule,
+                    metrics,
+                    &cfg.robustness,
+                    code,
+                );
             }
             ShedMode::Fail => {
                 metrics.record_shed();
@@ -638,9 +667,16 @@ fn shed_reason(
 
 /// Graceful degradation: serve the request with a sequential rollout on
 /// the intake thread — slower, but correct (bitwise-equal to
-/// [`sample_sequential`] on a fresh, un-warm-started problem) and off the
-/// saturated or unhealthy parallel path. A streaming subscriber receives
-/// the whole trajectory as one chunk before the stream closes.
+/// [`crate::solver::sample_sequential`] on a fresh, un-warm-started
+/// problem) and off the
+/// saturated or unhealthy parallel path. The rollout runs on
+/// [`RobustnessConfig::fallback_model`] when one is configured (bypassing
+/// the pool entirely — essential when degradation triggered *because* the
+/// pool is unhealthy), else on the serving model's fallible path, where a
+/// pool error becomes a classified failure rather than a panic. A
+/// streaming subscriber receives the whole trajectory as one chunk before
+/// the stream closes.
+#[allow(clippy::too_many_arguments)] // admission context + shed policy ARE the signature
 fn degrade_sequential(
     req: &SampleRequest,
     out: PendingReply,
@@ -648,18 +684,33 @@ fn degrade_sequential(
     model: &dyn EpsModel,
     schedule: &NoiseSchedule,
     metrics: &Metrics,
+    rb: &RobustnessConfig,
     reason: i64,
 ) -> Admission {
     let PendingReply { reply, progress, enqueued } = out;
     let steps = req.sampler.steps;
     let coeffs = SamplerCoeffs::new(schedule, req.sampler.kind, steps);
-    let problem = Problem::new(&coeffs, model, req.cond.clone(), req.seed);
-    let seq = sample_sequential(&problem, req.guidance);
+    let deg_model: &dyn EpsModel = rb.fallback_model.as_deref().unwrap_or(model);
+    let problem = Problem::new(&coeffs, deg_model, req.cond.clone(), req.seed);
+    let seq = match try_sample_sequential(&problem, req.guidance) {
+        Ok(seq) => seq,
+        Err(e) => {
+            // The fallback itself failed (no pool-independent model and
+            // the pool is down): fail the request with the classified
+            // error — guard drop records the failure, the stream closes —
+            // instead of letting the pooled handle's panic path unwind
+            // the intake.
+            drop(guard);
+            drop(progress);
+            let _ = reply.send(Err(e.context("degraded sequential fallback failed")));
+            return Admission::Handled;
+        }
+    };
     trace::instant(Layer::Session, Name::Degrade, req.seed, steps as i64, reason);
     if let Some(tx) = &progress {
         // Every row freezes at once, so the stream contract collapses to a
         // single chunk tiling [0, steps) (round 0, like warm-start rows).
-        let d = model.dim();
+        let d = deg_model.dim();
         let mut states = Vec::with_capacity(steps * d);
         for r in 0..steps {
             states.extend_from_slice(seq.xs.row(r));
@@ -1541,6 +1592,7 @@ mod tests {
                 robustness: RobustnessConfig {
                     shed_watermark: Some(0.0),
                     shed_mode: ShedMode::Fail,
+                    ..Default::default()
                 },
                 ..Default::default()
             },
@@ -1581,6 +1633,106 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.prefix_chunks_sent, 1);
         assert_eq!(m.prefix_rows_streamed, 16);
+    }
+
+    /// Serving model whose fallible path fails every call — the shape of a
+    /// pooled handle over a fully-quarantined pool. The infallible path
+    /// panics so any degraded rollout that touches it is caught loudly.
+    struct FailingEps;
+    impl EpsModel for FailingEps {
+        fn dim(&self) -> usize {
+            8
+        }
+        fn eps_batch(
+            &self,
+            _xs: &[f32],
+            _ts: &[usize],
+            _conds: &[Cond],
+            _g: f32,
+            _out: &mut [f32],
+        ) {
+            panic!("degradation must use the fallible model path");
+        }
+        fn try_eps_batch(
+            &self,
+            _xs: &[f32],
+            _ts: &[usize],
+            _conds: &[Cond],
+            _g: f32,
+            _out: &mut [f32],
+        ) -> Result<()> {
+            Err(Error::retryable("every pool device is down"))
+        }
+        fn name(&self) -> &str {
+            "failing"
+        }
+    }
+
+    /// Review regression: a degraded rollout whose model fails (no
+    /// fallback configured, serving model unhealthy) must surface a
+    /// classified error from the intake thread — not unwind it through the
+    /// infallible panic path — and the service must keep answering.
+    #[test]
+    fn degrade_failure_is_classified_not_a_panic() {
+        use crate::util::error::ErrorKind;
+        let coord = Coordinator::start(
+            Arc::new(FailingEps),
+            CoordinatorConfig {
+                workers: 1,
+                robustness: RobustnessConfig {
+                    shed_watermark: Some(0.0), // degrade every request
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        for seed in 0..2u64 {
+            let err = coord.sample(basic_req(seed)).unwrap_err();
+            assert_eq!(err.kind(), ErrorKind::Retryable, "{err}");
+            assert!(
+                err.to_string().contains("degraded sequential fallback failed"),
+                "{err}"
+            );
+        }
+        let m = coord.metrics();
+        assert_eq!(m.failed, 2, "failed degradations must be counted");
+        assert_eq!(m.completed, 0);
+    }
+
+    /// Review regression: with a pool-independent fallback model
+    /// configured, degradation bypasses the (failing) serving model
+    /// entirely and still produces the bitwise sequential oracle.
+    #[test]
+    fn degrade_uses_fallback_model_when_configured() {
+        let fallback = gmm_model();
+        let coord = Coordinator::start(
+            Arc::new(FailingEps),
+            CoordinatorConfig {
+                workers: 1,
+                robustness: RobustnessConfig {
+                    shed_watermark: Some(0.0),
+                    fallback_model: Some(fallback.clone()),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let resp = coord.sample(basic_req(11)).unwrap();
+        assert!(resp.degraded);
+        assert!(resp.converged);
+        let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+        let coeffs = SamplerCoeffs::new(&ns, crate::schedule::SamplerKind::Ddim, 16);
+        let p = Problem::new(&coeffs, &*fallback, Cond::Class(1), 11);
+        let seq = crate::solver::sample_sequential(&p, 2.0);
+        assert_eq!(
+            resp.sample,
+            seq.xs.row(0).to_vec(),
+            "fallback rollout must match the oracle on the fallback model"
+        );
+        let m = coord.metrics();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.degraded_total, 1);
+        assert_eq!(m.failed, 0);
     }
 
     #[test]

@@ -14,9 +14,9 @@
 //! --drivers N (round-driver threads carrying the session run queue),
 //! --stream (incremental converged-prefix delivery, bitwise-verified),
 //! --adaptive-window (occupancy-driven window sizing), and the robustness
-//! knobs --inject-faults SPEC / --deadline-ms N / --shed-watermark F
-//! (deterministic chaos, request deadlines, graceful degradation — see
-//! docs/robustness.md).
+//! knobs --inject-faults SPEC / --deadline-ms N / --shed-watermark F /
+//! --shard-timeout-ms N (deterministic chaos, request deadlines, graceful
+//! degradation, per-attempt shard deadlines — see docs/robustness.md).
 //! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
 //! trained weights).
 
@@ -82,6 +82,10 @@ fn help() {
                        --inject-faults SPEC: deterministic fault injection\n\
                        behind the device pool, e.g. '1:error@4..' — activates\n\
                        the retry/quarantine path (see docs/robustness.md);\n\
+                       --shard-timeout-ms N: per-attempt shard execution\n\
+                       deadline activating the pool's retry/quarantine path\n\
+                       (defaults to 250 under --inject-faults; raise it for\n\
+                       real DiT/PJRT shards);\n\
                        --deadline-ms N: per-request end-to-end deadline,\n\
                        enforced at admission and between rounds;\n\
                        --shed-watermark F: above this slot-occupancy fraction\n\
@@ -188,26 +192,36 @@ fn cmd_sample(args: &Args) {
 ///
 /// With `--inject-faults` each backend is wrapped in a
 /// [`parataa::runtime::FaultyBackend`] applying the scheduled faults for
-/// its device index, and the pool runs the retry/quarantine path
-/// (`shard_timeout` + NaN output validation) so the injected faults
-/// surface as retries and quarantines rather than bad samples. Without the
-/// flag the configuration is the exact historical default.
+/// its device index. A `shard_timeout` (from `--shard-timeout-ms`, or the
+/// 250 ms chaos default under `--inject-faults`) runs the pool's
+/// retry/quarantine path with NaN output validation, so faults surface as
+/// retries and quarantines rather than bad samples. Without either flag
+/// the configuration is the exact historical default.
+///
+/// Also returns the pool-independent fallback model for degraded
+/// sequential rollouts where one exists (the analytic GMM; PJRT/DiT
+/// deployments have no in-process twin, so they degrade through the
+/// pooled handle's fallible path instead).
 fn build_pool(
     model_choice: parataa::figures::common::ModelChoice,
     devices: usize,
     faults: Option<(&parataa::runtime::FaultSpec, &parataa::runtime::FaultControl)>,
-) -> (parataa::runtime::DevicePool, f32) {
+    shard_timeout: Option<std::time::Duration>,
+) -> (
+    parataa::runtime::DevicePool,
+    f32,
+    Option<std::sync::Arc<dyn parataa::model::EpsModel>>,
+) {
     use parataa::figures::common::ModelChoice;
     use parataa::model::gmm::GmmEps;
     use parataa::runtime::{DevicePool, EpsBackend, FaultyBackend, InProcessBackend, PoolConfig};
     use parataa::schedule::{BetaSchedule, NoiseSchedule};
     use std::sync::Arc;
-    use std::time::Duration;
 
     let pool_cfg = |warm: Vec<usize>| {
         let mut cfg = PoolConfig { warm, ..Default::default() };
-        if faults.is_some() {
-            cfg.shard_timeout = Some(Duration::from_millis(250));
+        if let Some(t) = shard_timeout {
+            cfg.shard_timeout = Some(t);
             cfg.validate_output = true;
         }
         cfg
@@ -225,16 +239,17 @@ fn build_pool(
         ModelChoice::Gmm => {
             let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
             let model = Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()));
+            let fallback: Arc<dyn parataa::model::EpsModel> = model.clone();
             let pool = if faults.is_some() {
                 let backends: Vec<Box<dyn EpsBackend>> = (0..devices)
                     .map(|dev| wrap(Box::new(InProcessBackend::new(model.clone())), dev))
                     .collect();
                 DevicePool::spawn(backends, pool_cfg(Vec::new()))
             } else {
-                DevicePool::in_process(model, devices, PoolConfig::default())
+                DevicePool::in_process(model, devices, pool_cfg(Vec::new()))
             }
             .expect("spawn device pool");
-            (pool, 2.0)
+            (pool, 2.0, Some(fallback))
         }
         ModelChoice::Dit => {
             #[cfg(feature = "pjrt")]
@@ -248,7 +263,7 @@ fn build_pool(
                     backends.push(wrap(Box::new(b), dev));
                 }
                 let cfg = pool_cfg(parataa::runtime::EPS_BATCH_SIZES.to_vec());
-                (DevicePool::spawn(backends, cfg).expect("spawn device pool"), 5.0)
+                (DevicePool::spawn(backends, cfg).expect("spawn device pool"), 5.0, None)
             }
             #[cfg(not(feature = "pjrt"))]
             {
@@ -301,6 +316,16 @@ fn cmd_serve(args: &Args) {
     // One cancel token shared by every injected hang: cancelled after the
     // run so wedged worker threads release before the pool joins them.
     let fault_control = faults.as_ref().map(|_| FaultControl::new());
+    // Per-attempt shard execution deadline (activates the pool's
+    // retry/quarantine path). `--inject-faults` defaults it to 250 ms —
+    // right for the in-process chaos demo, far too tight for a real
+    // DiT/PJRT shard under load, hence the explicit override.
+    let shard_timeout_ms: Option<u64> = args
+        .get("shard-timeout-ms")
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --shard-timeout-ms '{v}'")));
+    let shard_timeout = shard_timeout_ms
+        .or(if faults.is_some() { Some(250) } else { None })
+        .map(std::time::Duration::from_millis);
 
     // Observability taps (ISSUE 6): --trace wants span events, and the
     // --prom-out exposition carries trace-derived histograms, so either
@@ -318,8 +343,12 @@ fn cmd_serve(args: &Args) {
     // Stack: backend pool -> coordinator round drivers. The drivers merge
     // the pending ε batches of ready sessions per round (no batcher layer:
     // merging happens deterministically at the round boundary).
-    let (pool, guidance) =
-        build_pool(model_choice, devices, faults.as_ref().zip(fault_control.as_ref()));
+    let (pool, guidance, fallback_model) = build_pool(
+        model_choice,
+        devices,
+        faults.as_ref().zip(fault_control.as_ref()),
+        shard_timeout,
+    );
     let pool_stats = pool.stats();
     let pooled = Arc::new(pool.eps_handle("pooled"));
     let coord = Coordinator::start(
@@ -329,7 +358,14 @@ fn cmd_serve(args: &Args) {
             drivers,
             devices,
             telemetry: telemetry.clone(),
-            robustness: RobustnessConfig { shed_watermark, ..Default::default() },
+            robustness: RobustnessConfig {
+                shed_watermark,
+                // Degraded rollouts bypass the pool where an in-process
+                // model exists — essential when degradation triggers
+                // because every pool device is quarantined.
+                fallback_model,
+                ..Default::default()
+            },
             ..Default::default()
         },
     );

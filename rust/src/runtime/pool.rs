@@ -20,7 +20,8 @@
 //!   exact calls the single-device path would make, so outputs are
 //!   bit-identical to the pre-pool runtime.
 //! - **Work stealing** — a straggler device only delays the shards it is
-//!   actively executing; queued shards migrate to idle peers.
+//!   actively executing; queued shards migrate to idle *healthy* peers
+//!   (quarantined or mid-failure-streak devices sit out the steal loop).
 
 use super::backend::{EpsBackend, EpsShard, InProcessBackend};
 use crate::model::{Cond, EpsModel};
@@ -46,12 +47,18 @@ pub struct PoolConfig {
     /// [`super::EPS_BATCH_SIZES`] so XLA compilation never lands on a
     /// request).
     pub warm: Vec<usize>,
-    /// Per-attempt shard reply deadline. `None` (default) keeps the
-    /// historical behavior: the submitter blocks until every shard replies
-    /// and a backend `Err` fails the batch immediately, with no retries.
-    /// `Some(t)` activates the fault-tolerant path: a shard that errors
-    /// (retryably) or produces no reply within `t` is re-dispatched, up to
-    /// [`PoolConfig::max_retries`] times, preferring healthy devices.
+    /// Per-attempt shard execution deadline. `None` (default) keeps the
+    /// historical behavior: the submitter blocks until every shard replies,
+    /// a backend `Err` fails the batch immediately with no retries, and the
+    /// health/quarantine machinery is fully inert — routing and shard
+    /// sizing stay identical to the pre-fault-tolerance pool even under
+    /// repeated backend errors. `Some(t)` activates the fault-tolerant
+    /// path: the clock starts when a worker dequeues the shard (queue wait
+    /// is bounded separately by the same `t`, but a queue-wait expiry
+    /// blames no device — a busy device is not a failing one); a shard
+    /// that errors retryably or produces no reply in time is
+    /// re-dispatched, up to [`PoolConfig::max_retries`] times, preferring
+    /// healthy devices other than the one that failed it.
     pub shard_timeout: Option<Duration>,
     /// Re-dispatch attempts per shard beyond the first (retry mode only).
     pub max_retries: u32,
@@ -100,8 +107,19 @@ pub fn shard_size(n: usize, devices: usize) -> usize {
     per_device.min(*super::EPS_BATCH_SIZES.last().unwrap()).max(1)
 }
 
-/// A shard reply: (shard index, dispatch attempt, result).
-type Reply = (usize, u32, Result<Vec<f32>>);
+/// Worker → submitter message. `Started` is the worker's start ack, sent
+/// only in retry mode (`shard_timeout: Some`) just before execution, so
+/// the submitter re-arms the shard's deadline to bound *execution* rather
+/// than queue wait. Both variants carry the executing device, so health
+/// attribution and retry exclusion follow the device that actually ran
+/// the shard — which, after a steal, is not the queue it was sent to.
+enum Reply {
+    /// Device `device` dequeued `attempt` of shard `shard` and is
+    /// executing it now.
+    Started { shard: usize, attempt: u32, device: usize },
+    /// Device `device` finished `attempt` of shard `shard`.
+    Done { shard: usize, attempt: u32, device: usize, result: Result<Vec<f32>> },
+}
 
 /// One queued sub-batch.
 struct ShardTask {
@@ -118,7 +136,9 @@ struct ShardTask {
 }
 
 /// Per-device health (lock-free; failures recorded by the executing worker,
-/// timeouts by the submitting thread).
+/// execution timeouts by the submitting thread against the device that
+/// acked the shard's start — never against a queue a shard merely sat in).
+/// Only written in retry mode; with `shard_timeout: None` it stays zeroed.
 #[derive(Debug, Default)]
 struct DeviceHealth {
     /// Consecutive failures since the last success.
@@ -304,6 +324,17 @@ impl PoolStats {
         }
     }
 
+    /// Whether `device` may steal work from peers right now. A quarantined
+    /// device must not touch healthy queues, and a device with a live
+    /// failure streak has to redeem itself on its own queue (or a probe)
+    /// first — a failing device is usually the idlest one in the pool, so
+    /// ungated it would steal healthy work the most aggressively and burn
+    /// retry budget failing it.
+    fn may_steal(&self, device: usize) -> bool {
+        let h = &self.health[device];
+        !h.quarantined.load(Ordering::Acquire) && h.consecutive.load(Ordering::Relaxed) == 0
+    }
+
     /// A quarantined device due for a readmission probe, if any; claims the
     /// probe slot (CAS on the probe clock) so concurrent submitters don't
     /// flood a sick device.
@@ -370,8 +401,20 @@ struct ShardState {
     start: usize,
     end: usize,
     attempt: u32,
+    /// Queue the current attempt was dispatched to — NOT necessarily the
+    /// executor (stealing moves shards); used only for diagnostics and
+    /// the still-queued retry exclusion.
     queued_on: usize,
+    /// Device that acked this attempt's start, once known. Health blame
+    /// and retry exclusion use this, never `queued_on`.
+    started_on: Option<usize>,
+    /// Current attempt's deadline: submit + timeout while queued (bounds
+    /// queue wait, blamelessly), re-armed to dequeue + timeout by the
+    /// start ack (bounds execution, blaming the executor).
     deadline: Instant,
+    /// Scheduled re-dispatch: (not-before instant, device to avoid).
+    /// Folded into the recv tick — backoff never sleeps the collector.
+    pending_retry: Option<(Instant, Option<usize>)>,
     done: bool,
 }
 
@@ -509,29 +552,38 @@ impl PoolInner {
         drop(rtx);
 
         // Reassemble by shard index — completion order is irrelevant.
-        for _ in 0..n_shards {
-            let (idx, _attempt, res) = rrx
-                .recv()
-                .ok_or_else(|| anyhow!("device pool dropped a shard reply"))?;
-            let eps = res?;
-            let (start, end) = spans[idx];
-            ensure!(
-                eps.len() == (end - start) * d,
-                "shard {idx}: got {} values, want {}",
-                eps.len(),
-                (end - start) * d
-            );
-            out[start * d..end * d].copy_from_slice(&eps);
+        let mut remaining = n_shards;
+        while remaining > 0 {
+            match rrx.recv() {
+                Some(Reply::Done { shard: idx, result, .. }) => {
+                    let eps = result?;
+                    let (start, end) = spans[idx];
+                    ensure!(
+                        eps.len() == (end - start) * d,
+                        "shard {idx}: got {} values, want {}",
+                        eps.len(),
+                        (end - start) * d
+                    );
+                    out[start * d..end * d].copy_from_slice(&eps);
+                    remaining -= 1;
+                }
+                // Start acks are never sent in legacy mode; tolerate them
+                // defensively rather than miscounting replies.
+                Some(Reply::Started { .. }) => {}
+                None => return Err(anyhow!("device pool dropped a shard reply")),
+            }
         }
         Ok(())
     }
 
     /// Fault-tolerant path (`shard_timeout: Some`): every shard has a
-    /// per-attempt reply deadline; a retryable error or a timeout
-    /// re-dispatches it (bounded by [`PoolConfig::max_retries`], with
-    /// exponential backoff, preferring a different healthy device). Stale
-    /// replies from superseded attempts are discarded, so a hung device's
-    /// eventual answer can never corrupt a re-dispatched shard.
+    /// per-attempt execution deadline, armed for queue wait at dispatch
+    /// and re-armed by the worker's start ack; a retryable error or a
+    /// timeout re-dispatches it (bounded by [`PoolConfig::max_retries`],
+    /// with exponential backoff folded into the wait tick, preferring a
+    /// healthy device other than the one that failed it). Stale replies
+    /// from superseded attempts are discarded, so a hung device's eventual
+    /// answer can never corrupt a re-dispatched shard.
     fn collect_with_retries(
         &self,
         batch: &BatchRef<'_>,
@@ -542,9 +594,9 @@ impl PoolInner {
     ) -> Result<()> {
         let n = batch.train_ts.len();
         let d = self.dim;
-        // Capacity for every possible attempt's reply, so workers sending
-        // stale replies never block.
-        let cap = n_shards * (self.cfg.max_retries as usize + 1);
+        // Capacity for every possible attempt's start ack + reply, so
+        // workers sending stale messages never block.
+        let cap = n_shards * (self.cfg.max_retries as usize + 1) * 2;
         let (rtx, rrx) = bounded::<Reply>(cap);
         let mut shards = Vec::with_capacity(n_shards);
         for (idx, start) in (0..n).step_by(rows).enumerate() {
@@ -557,26 +609,54 @@ impl PoolInner {
                 end,
                 attempt: 0,
                 queued_on: dev,
+                started_on: None,
                 deadline: Instant::now() + timeout,
+                pending_retry: None,
                 done: false,
             });
         }
 
         let mut outstanding = n_shards;
         while outstanding > 0 {
+            // Launch any backed-off retries whose not-before has passed.
             let now = Instant::now();
+            for idx in 0..n_shards {
+                if let Some((not_before, avoid)) = shards[idx].pending_retry {
+                    if not_before <= now {
+                        shards[idx].pending_retry = None;
+                        self.dispatch_attempt(batch, idx, &mut shards[idx], &rtx, timeout, avoid)?;
+                    }
+                }
+            }
+            // Next wake-up: the earliest deadline or retry not-before among
+            // live shards — one shard's backoff never stalls the others.
             let tick = shards
                 .iter()
                 .filter(|s| !s.done)
-                .map(|s| s.deadline.saturating_duration_since(now))
+                .map(|s| match s.pending_retry {
+                    Some((not_before, _)) => not_before.saturating_duration_since(now),
+                    None => s.deadline.saturating_duration_since(now),
+                })
                 .min()
                 .unwrap_or(timeout);
             match rrx.recv_timeout(tick) {
-                Ok(Some((idx, attempt, res))) => {
+                Ok(Some(Reply::Started { shard: idx, attempt, device })) => {
+                    let s = &mut shards[idx];
+                    if !s.done && attempt == s.attempt {
+                        // Execution begins now: re-arm the deadline so
+                        // `timeout` bounds execution rather than queue
+                        // wait, and remember the executor — a later
+                        // timeout or error is attributed to it, not to
+                        // the queue the shard was dispatched to.
+                        s.started_on = Some(device);
+                        s.deadline = Instant::now() + timeout;
+                    }
+                }
+                Ok(Some(Reply::Done { shard: idx, attempt, device, result })) => {
                     if shards[idx].done || attempt != shards[idx].attempt {
                         continue; // stale reply from a superseded attempt
                     }
-                    match res {
+                    match result {
                         Ok(eps) => {
                             let (start, end) = (shards[idx].start, shards[idx].end);
                             ensure!(
@@ -589,9 +669,7 @@ impl PoolInner {
                             shards[idx].done = true;
                             outstanding -= 1;
                         }
-                        Err(e) => {
-                            self.retry_or_fail(batch, idx, &mut shards[idx], &rtx, timeout, e)?
-                        }
+                        Err(e) => self.retry_or_fail(idx, &mut shards[idx], Some(device), e)?,
                     }
                 }
                 // Master sender lives in this frame, so a closed channel
@@ -601,15 +679,31 @@ impl PoolInner {
                     // Tick expired: fail over every overdue shard.
                     let now = Instant::now();
                     for idx in 0..n_shards {
-                        if shards[idx].done || shards[idx].deadline > now {
+                        if shards[idx].done
+                            || shards[idx].pending_retry.is_some()
+                            || shards[idx].deadline > now
+                        {
                             continue;
                         }
-                        let dev = shards[idx].queued_on;
-                        self.stats.device_failed(dev, self.cfg.quarantine_after);
+                        // Blame the executor only if it acked the start. A
+                        // shard still sitting in a queue timed out *waiting*
+                        // — re-dispatch it elsewhere, but feed no device's
+                        // quarantine streak: a busy device is not a failing
+                        // one.
+                        let (avoid, what) = match shards[idx].started_on {
+                            Some(dev) => {
+                                self.stats.device_failed(dev, self.cfg.quarantine_after);
+                                (Some(dev), format!("no result from device {dev}"))
+                            }
+                            None => (
+                                Some(shards[idx].queued_on),
+                                format!("still queued on device {}", shards[idx].queued_on),
+                            ),
+                        };
                         let e = Error::retryable(format!(
-                            "pool shard {idx}: no reply from device {dev} within {timeout:?}"
+                            "pool shard {idx}: {what} within {timeout:?}"
                         ));
-                        self.retry_or_fail(batch, idx, &mut shards[idx], &rtx, timeout, e)?;
+                        self.retry_or_fail(idx, &mut shards[idx], avoid, e)?;
                     }
                 }
             }
@@ -617,18 +711,18 @@ impl PoolInner {
         Ok(())
     }
 
-    /// Re-dispatch a failed shard if its error is retryable and attempts
-    /// remain; otherwise fail the batch with the classified error.
+    /// Schedule a failed shard for re-dispatch if its error is retryable
+    /// and attempts remain; otherwise fail the batch with the classified
+    /// error. The re-dispatch itself happens in the collection loop once
+    /// the backoff not-before passes — nothing sleeps here, so other
+    /// shards' replies and deadlines keep being serviced.
     fn retry_or_fail(
         &self,
-        batch: &BatchRef<'_>,
         idx: usize,
         state: &mut ShardState,
-        rtx: &Sender<Reply>,
-        timeout: Duration,
+        avoid: Option<usize>,
         err: Error,
     ) -> Result<()> {
-        let failed_on = state.queued_on;
         if err.kind() != ErrorKind::Retryable || state.attempt >= self.cfg.max_retries {
             let attempts = state.attempt + 1;
             // Exhausting the retry budget is terminal — the layers above
@@ -644,18 +738,33 @@ impl PoolInner {
         crate::trace::instant(
             crate::trace::Layer::Pool,
             crate::trace::Name::Retry,
-            failed_on as u64,
+            avoid.unwrap_or(state.queued_on) as u64,
             idx as i64,
             state.attempt as i64,
         );
         let backoff = self.cfg.retry_backoff.saturating_mul(1u32 << (state.attempt - 1).min(10));
-        if backoff > Duration::ZERO {
-            std::thread::sleep(backoff);
-        }
-        let dev = self.pick_device(Some(failed_on));
+        state.pending_retry = Some((Instant::now() + backoff, avoid));
+        Ok(())
+    }
+
+    /// Send the current attempt of shard `idx` to a device, avoiding the
+    /// device blamed for the previous attempt when an alternative exists.
+    /// Arms the queue-wait deadline; the worker's start ack re-arms it for
+    /// execution.
+    fn dispatch_attempt(
+        &self,
+        batch: &BatchRef<'_>,
+        idx: usize,
+        state: &mut ShardState,
+        rtx: &Sender<Reply>,
+        timeout: Duration,
+        avoid: Option<usize>,
+    ) -> Result<()> {
+        let dev = self.pick_device(avoid);
         let task = self.make_task(batch, idx, (state.start, state.end), state.attempt, rtx);
         self.queues[dev].send(task).map_err(|_| anyhow!("device pool is down"))?;
         state.queued_on = dev;
+        state.started_on = None;
         state.deadline = Instant::now() + timeout;
         Ok(())
     }
@@ -833,7 +942,12 @@ fn run_worker(
             Ok(None) => return, // pool shut down
             Err(()) => {}
         }
-        if !cfg.work_stealing {
+        // A quarantined or mid-failure-streak device must not poach healthy
+        // queues: a permanently-failing device is the idlest in the pool,
+        // so ungated it would steal the most aggressively and fail every
+        // shard it touches. It still drains its own queue (probes land
+        // there) and rejoins the steal rotation on its next success.
+        if !cfg.work_stealing || !stats.may_steal(me) {
             idle = idle.saturating_add(1);
             continue;
         }
@@ -864,6 +978,17 @@ fn exec_task(
     cfg: &PoolConfig,
 ) {
     let items = task.t.len() as u64;
+    let retry_mode = cfg.shard_timeout.is_some();
+    if retry_mode {
+        // Start ack: the submitter re-arms the shard's deadline so
+        // `shard_timeout` bounds execution rather than queue wait, and
+        // records this device as the executor for blame/exclusion.
+        let _ = task.reply.send(Reply::Started {
+            shard: task.shard,
+            attempt: task.attempt,
+            device: me,
+        });
+    }
     let exec_span = crate::trace::begin();
     let t0 = Instant::now();
     // Contain backend panics: if the worker unwound here, shards queued
@@ -894,10 +1019,15 @@ fn exec_task(
         }
     });
     // Health is attributed to the executing device (a stolen shard's
-    // outcome credits/blames the thief, who actually ran it).
-    match &res {
-        Ok(_) => stats.device_ok(me),
-        Err(_) => stats.device_failed(me, cfg.quarantine_after),
+    // outcome credits/blames the thief, who actually ran it) — but only in
+    // retry mode: with `shard_timeout: None` the health machinery is fully
+    // inert, so legacy-mode routing and shard sizing stay identical to the
+    // pre-fault-tolerance pool even under repeated backend errors.
+    if retry_mode {
+        match &res {
+            Ok(_) => stats.device_ok(me),
+            Err(_) => stats.device_failed(me, cfg.quarantine_after),
+        }
     }
     // Track = device index, so Perfetto shows one lane per device.
     crate::trace::complete(
@@ -916,7 +1046,12 @@ fn exec_task(
         c.stolen.fetch_add(1, Ordering::Relaxed);
     }
     // Submitter may have vanished (shutdown mid-flight); nothing to do then.
-    let _ = task.reply.send((task.shard, task.attempt, res));
+    let _ = task.reply.send(Reply::Done {
+        shard: task.shard,
+        attempt: task.attempt,
+        device: me,
+        result: res,
+    });
 }
 
 /// `EpsModel` handle sharding through a [`DevicePool`]. This is what the
@@ -1437,5 +1572,134 @@ mod tests {
             "an exhausted retry budget must not look retryable: {err}"
         );
         assert!(err.to_string().contains("failed after"), "{err}");
+    }
+
+    #[test]
+    fn sick_device_cannot_steal_work_into_terminal_failure() {
+        // Review regression: with stealing ON, a permanently-failing device
+        // is always idle, so ungated it steals from the healthy queue the
+        // most aggressively — and because retry exclusion used to track the
+        // *queue* a shard was sent to rather than the device that executed
+        // it, a stolen shard's retry could land straight back on the sick
+        // device until the budget ran out. The steal gate (no live failure
+        // streak) plus executor-based exclusion must make every batch
+        // succeed deterministically.
+        let d = 4;
+        let model = gmm(d);
+        let spec = FaultSpec::parse("1:error").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![
+            Box::new(InProcessBackend::new(model.clone())) as Box<dyn EpsBackend>,
+            faulty(model.clone(), 1, &spec, &control),
+        ];
+        let cfg = PoolConfig { work_stealing: true, ..retry_cfg() };
+        let pool = DevicePool::spawn(backends, cfg).unwrap();
+        let eps = pool.eps_handle("pooled");
+        for i in 0..50u64 {
+            let n = 40; // 2 shards of 20
+            let (xs, ts, conds) = batch(d, n, 300 + i);
+            let mut via_pool = vec![0.0f32; n * d];
+            eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut via_pool)
+                .unwrap_or_else(|e| panic!("batch {i} failed terminally: {e}"));
+            let mut direct = vec![0.0f32; n * d];
+            model.eps_batch(&xs, &ts, &conds, 1.0, &mut direct);
+            assert_eq!(via_pool, direct, "batch {i} corrupted during failover");
+        }
+        let stats = pool.stats().snapshot();
+        assert!(stats[1].failures >= 1, "fault never fired: {stats:?}");
+        // The sick device never succeeds, so its failure streak never
+        // resets: after its first failure the steal gate locks it out of
+        // healthy queues for good — at most one pre-failure steal.
+        assert!(
+            stats[1].stolen <= 1,
+            "failing device kept stealing healthy work: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn queue_wait_timeouts_do_not_blame_a_busy_device() {
+        // Review regression: the per-attempt deadline used to start at
+        // submission and blame `queued_on`, so a shard that merely waited
+        // behind a slow peer fed a healthy device's quarantine streak. Now
+        // the clock re-arms at the worker's start ack and only the device
+        // that actually acked execution is blamed. One device, one slow
+        // first call: shard 0 times out *executing* (1 blame), shard 1 and
+        // every re-dispatch time out *queued* (0 blames).
+        let d = 4;
+        let model = gmm(d);
+        let spec = FaultSpec::parse("0:slow=300@0").unwrap();
+        let control = FaultControl::new();
+        let backends = vec![faulty(model.clone(), 0, &spec, &control)];
+        let cfg = PoolConfig {
+            shard_timeout: Some(Duration::from_millis(100)),
+            retry_backoff: Duration::from_micros(100),
+            // Queue-wait expiries retry without blame until the slow call
+            // drains; give them budget so the batch still succeeds.
+            max_retries: 8,
+            work_stealing: false,
+            ..PoolConfig::default()
+        };
+        let pool = DevicePool::spawn(backends, cfg).unwrap();
+        let eps = pool.eps_handle("pooled");
+        let n = 200; // shard_size(200, 1) = 100 -> 2 shards
+        let (xs, ts, conds) = batch(d, n, 41);
+        let mut via_pool = vec![0.0f32; n * d];
+        eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut via_pool).unwrap();
+        let mut direct = vec![0.0f32; n * d];
+        model.eps_batch(&xs, &ts, &conds, 1.0, &mut direct);
+        assert_eq!(via_pool, direct);
+        let stats = pool.stats();
+        assert_eq!(
+            stats.snapshot()[0].failures,
+            1,
+            "exactly the started-then-overdue attempt may be blamed: {:?}",
+            stats.snapshot()
+        );
+        assert_eq!(
+            stats.quarantine_events(),
+            0,
+            "a busy device must never be quarantined for its backlog"
+        );
+        assert_eq!(stats.healthy_devices(), 1);
+    }
+
+    #[test]
+    fn legacy_mode_health_machinery_is_inert() {
+        // Review regression: `shard_timeout: None` promises the historical
+        // pool, but health used to be recorded anyway, so repeated backend
+        // errors could quarantine a device and change shard sizing and
+        // routing. Legacy mode must not count failures at all.
+        struct ErrBackend;
+        impl EpsBackend for ErrBackend {
+            fn dim(&self) -> usize {
+                3
+            }
+            fn name(&self) -> String {
+                "err".into()
+            }
+            fn execute(&mut self, _shard: &EpsShard<'_>) -> Result<Vec<f32>> {
+                Err(Error::retryable("injected backend error"))
+            }
+        }
+        let pool = DevicePool::spawn(
+            vec![Box::new(ErrBackend), Box::new(ErrBackend)],
+            PoolConfig { work_stealing: false, ..PoolConfig::default() },
+        )
+        .unwrap();
+        let eps = pool.eps_handle("pooled");
+        let (xs, ts, conds) = batch(3, 8, 2);
+        let mut out = vec![0.0f32; 8 * 3];
+        // Far more failed batches than the default quarantine_after = 3.
+        for _ in 0..6 {
+            let _ = eps.try_eps_batch(&xs, &ts, &conds, 1.0, &mut out).unwrap_err();
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.healthy_devices(), 2, "legacy mode must never quarantine");
+        assert_eq!(stats.quarantine_events(), 0);
+        assert!(
+            stats.snapshot().iter().all(|s| s.failures == 0),
+            "legacy mode must not record device health: {:?}",
+            stats.snapshot()
+        );
     }
 }

@@ -35,7 +35,7 @@ pub mod window_ctrl;
 pub mod workspace;
 
 pub use driver::{solve, IterationRecord, SolveResult};
-pub use sequential::sample_sequential;
+pub use sequential::{sample_sequential, try_sample_sequential};
 pub use session::{EpsBatch, FrontAdvance, RoundOutcome, SolverSession};
 pub use strategy::{DraftRefineConfig, PararealConfig, SolveStrategy};
 pub use window_ctrl::{AdaptiveWindow, WindowController, WindowPolicy};

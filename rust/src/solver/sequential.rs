@@ -7,6 +7,7 @@
 use super::Problem;
 use crate::equations::States;
 use crate::model::Cond;
+use crate::util::error::Result;
 
 /// Result of a sequential rollout.
 pub struct SequentialResult {
@@ -17,7 +18,19 @@ pub struct SequentialResult {
 }
 
 /// Roll out eq. (6) from x_T = ξ_T down to x_0, one ε_θ call per step.
+///
+/// Panics if the model fails — the historical contract for direct solver
+/// users over infallible models. Callers that need to survive a failing
+/// model (e.g. the coordinator's degraded-sequential fallback) use
+/// [`try_sample_sequential`].
 pub fn sample_sequential(problem: &Problem, guidance: f32) -> SequentialResult {
+    try_sample_sequential(problem, guidance).expect("sequential rollout: model failed")
+}
+
+/// Fallible twin of [`sample_sequential`]: identical rollout (bitwise —
+/// the default `try_eps_batch` wraps `eps_batch`), but a model error
+/// surfaces as a classified `Err` instead of a panic.
+pub fn try_sample_sequential(problem: &Problem, guidance: f32) -> Result<SequentialResult> {
     let coeffs = problem.coeffs;
     let model = problem.model;
     let t_count = coeffs.steps;
@@ -31,7 +44,7 @@ pub fn sample_sequential(problem: &Problem, guidance: f32) -> SequentialResult {
         // ε_θ(x_t, τ_{t-1}) — a single-item "batch": the serial baseline
         // pays one full device round-trip per step, which is exactly the
         // cost structure the paper parallelizes away.
-        model.eps_batch(xs.row(t), &[coeffs.train_t[t]], &conds, guidance, &mut eps);
+        model.try_eps_batch(xs.row(t), &[coeffs.train_t[t]], &conds, guidance, &mut eps)?;
         let a = coeffs.a[t] as f32;
         let b = coeffs.b[t] as f32;
         let c = coeffs.c[t - 1] as f32;
@@ -43,7 +56,7 @@ pub fn sample_sequential(problem: &Problem, guidance: f32) -> SequentialResult {
             x_prev[i] = a * x_t[i] + b * eps[i] + c * xi_row[i];
         }
     }
-    SequentialResult { xs, nfe: t_count }
+    Ok(SequentialResult { xs, nfe: t_count })
 }
 
 #[cfg(test)]

@@ -263,13 +263,66 @@ fn degraded_responses_are_bitwise_sequential() {
 
 #[test]
 fn fail_mode_shedding_rejects_with_shed_kind() {
-    let rb = RobustnessConfig { shed_watermark: Some(0.0), shed_mode: ShedMode::Fail };
+    let rb = RobustnessConfig {
+        shed_watermark: Some(0.0),
+        shed_mode: ShedMode::Fail,
+        ..Default::default()
+    };
     let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
     let idle_slots = coord.slots_available();
     let e = coord.submit(req(0, 16)).wait().expect_err("fail mode rejects");
     assert_eq!(e.kind(), ErrorKind::Shed);
     assert_eq!(coord.metrics().shed_total, 1);
     assert_eq!(coord.slots_available(), idle_slots);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+/// Review regression: when *every* pool device is quarantined, degraded
+/// requests must be served by the pool-independent
+/// `RobustnessConfig::fallback_model` — not routed back through the dead
+/// pool, where the infallible pooled handle used to panic the intake
+/// thread and turn "graceful degradation" into failures.
+#[test]
+fn all_devices_dead_degrades_via_fallback_model() {
+    let rb = RobustnessConfig { fallback_model: Some(gmm()), ..Default::default() };
+    let (coord, pool, control) = chaos_stack(2, "0:error,1:error", rb);
+    // Early requests burn their retry budgets and fail terminally while
+    // the pool quarantines both devices; once the no-healthy-devices
+    // trigger fires, admission degrades onto the fallback model and
+    // requests succeed bitwise. Readmission probes keep failing, so the
+    // pool never recovers — degraded service is the steady state.
+    let t0 = Instant::now();
+    let mut degraded_ok = 0u64;
+    let mut seed = 0u64;
+    while degraded_ok < 3 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "service never reached the degraded steady state \
+             (degraded_ok={degraded_ok} after {seed} requests)"
+        );
+        match coord.sample(req(seed, 16)) {
+            Ok(r) => {
+                assert!(r.degraded, "with every device dead, success must mean degraded");
+                assert_eq!(
+                    r.sample,
+                    oracle(seed, 16),
+                    "fallback rollout must be bitwise the sequential oracle"
+                );
+                degraded_ok += 1;
+            }
+            Err(e) => assert!(
+                matches!(e.kind(), ErrorKind::Terminal | ErrorKind::Retryable),
+                "pre-quarantine failures must stay classified, got {:?}: {e}",
+                e.kind()
+            ),
+        }
+        seed += 1;
+    }
+    let snap = coord.metrics();
+    assert!(snap.degraded_total >= 3);
+    assert_eq!(snap.completed + snap.failed, seed, "every request resolves exactly once");
     drop(coord);
     control.cancel();
     drop(pool);
@@ -323,7 +376,11 @@ fn mid_solve_deadline_expiry_fails_between_rounds() {
 #[test]
 fn stream_handles_terminate_under_shedding_and_deadlines() {
     // Fail-mode shed: stream ends immediately, wait() carries Shed.
-    let rb = RobustnessConfig { shed_watermark: Some(0.0), shed_mode: ShedMode::Fail };
+    let rb = RobustnessConfig {
+        shed_watermark: Some(0.0),
+        shed_mode: ShedMode::Fail,
+        ..Default::default()
+    };
     let (coord, pool, control) = chaos_stack(2, "1:error@1000000..", rb);
     let idle_slots = coord.slots_available();
     let h = coord.submit_streaming(req(0, 16));
