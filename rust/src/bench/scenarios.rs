@@ -246,6 +246,13 @@ pub fn registry() -> Vec<ScenarioDef> {
             run: coord_chaos_serve,
         },
         ScenarioDef {
+            group: "coordinator",
+            name: "serve_http",
+            about: "HTTP/SSE front at 2x gate overload: wire latency + 429 shed rate",
+            quick: true,
+            run: coord_serve_http,
+        },
+        ScenarioDef {
             group: "cache",
             name: "warm_start",
             about: "trajectory-cache warm-start round/latency savings",
@@ -1231,6 +1238,100 @@ fn coord_chaos_serve(opts: &BenchOpts) -> ScenarioReport {
     sc
 }
 
+/// The HTTP/SSE front under 2× gate overload: twice as many concurrent
+/// clients as the fair gate admits into service, one of them rate-limited
+/// to surface the 429 path. The headline is the *wire* latency
+/// distribution (parse + admission + fair queue + solve + serialization)
+/// and the shed/429 rate; the coordinator-only `serve_load` scenario is
+/// the baseline the transport overhead reads against.
+fn coord_serve_http(opts: &BenchOpts) -> ScenarioReport {
+    use crate::serve::{client, HttpConfig, HttpServer, TenantRegistry};
+
+    let mut sc = ScenarioReport::default();
+    let model = gmm_model();
+    let devices = 2usize;
+    let pool = DevicePool::in_process(model, devices, PoolConfig::default())
+        .expect("spawn device pool");
+    let pool_stats = pool.stats();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let coord = Arc::new(Coordinator::start(
+        pooled,
+        CoordinatorConfig { workers: 4, drivers: 2, devices, ..Default::default() },
+    ));
+    coord.attach_pool(pool_stats);
+
+    let gate_capacity = 4usize;
+    let clients = gate_capacity * 2; // 2× overload at the fair gate
+    let reqs_per_client: usize = if opts.quick { 2 } else { 6 };
+    // `capped` exhausts its burst immediately (no refill on bench time
+    // scales): every request past the first is a 429.
+    let tenants = Arc::new(
+        TenantRegistry::from_spec(Some("main:weight=2;capped:rps=0.001,burst=1"))
+            .expect("static tenant spec"),
+    );
+    let server = HttpServer::start(
+        Arc::clone(&coord),
+        tenants,
+        "127.0.0.1:0",
+        HttpConfig { gate_capacity, accept_threads: clients, ..Default::default() },
+    )
+    .expect("start bench http server");
+    let addr = server.local_addr();
+
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let tenant = if c == 0 { "capped" } else { "main" };
+                let mut ok = 0u64;
+                let mut throttled = 0u64;
+                for j in 0..reqs_per_client {
+                    let body = format!(
+                        r#"{{"seed": {}, "sampler": {{"steps": 25}}, "cond": {{"class": {}}}, "guidance": 2.0}}"#,
+                        c * 100 + j,
+                        (c + j) % 8
+                    );
+                    match client::post_json(addr, "/v1/sample", Some(tenant), &body) {
+                        Ok(r) if r.status == 200 => ok += 1,
+                        Ok(r) if r.status == 429 => throttled += 1,
+                        Ok(r) => panic!("bench request got {}: {}", r.status, r.body),
+                        Err(e) => panic!("bench request transport error: {e}"),
+                    }
+                }
+                (ok, throttled)
+            })
+        })
+        .collect();
+    let mut ok = 0u64;
+    let mut throttled = 0u64;
+    for w in workers {
+        let (o, t) = w.join().expect("bench client thread");
+        ok += o;
+        throttled += t;
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let total = (clients * reqs_per_client) as f64;
+
+    sc.push(
+        "throughput_rps",
+        Metric::higher(ok as f64 / wall.as_secs_f64().max(1e-9), "req/s"),
+    );
+    sc.push("latency_ms_p50", Metric::lower(snap.latency_ms_p50, "ms"));
+    sc.push("latency_ms_p95", Metric::lower(snap.latency_ms_p95, "ms"));
+    sc.push("latency_ms_p99", Metric::lower(snap.latency_ms_p99, "ms"));
+    sc.push("http_200", Metric::info(ok as f64, "req"));
+    sc.push("http_429", Metric::info(throttled as f64, "req"));
+    sc.push("shed_429_rate", Metric::info(throttled as f64 / total, "frac"));
+    sc.push("overload_factor", Metric::info(2.0, "x"));
+    sc.push("completed", Metric::info(snap.completed as f64, "req"));
+    sc.push("failed", Metric::info(snap.failed as f64, "req"));
+    sc.devices = snap.devices.iter().map(|s| s.to_json()).collect();
+    drop(server); // join the accept pool first ...
+    drop(coord); // ... then the drivers, before the pool unwinds
+    sc
+}
+
 // --- cache ----------------------------------------------------------------
 
 /// Warm-start savings: for each pair, solve a cold request (populates the
@@ -1372,6 +1473,23 @@ mod tests {
             "the erroring device must have triggered at least one retry"
         );
         assert_eq!(chaos.devices.len(), 2);
+        let http = &report.groups["coordinator"]["serve_http"];
+        assert_eq!(
+            http.metrics["failed"].value, 0.0,
+            "every admitted HTTP request must complete (429s never reach the coordinator)"
+        );
+        assert!(http.metrics["http_200"].value > 0.0);
+        assert!(
+            http.metrics["http_429"].value >= 1.0,
+            "the rate-capped tenant must collect at least one 429 at 2× overload"
+        );
+        assert!(http.metrics["latency_ms_p95"].value > 0.0);
+        assert_eq!(
+            http.metrics["http_200"].value,
+            http.metrics["completed"].value,
+            "HTTP 200s must equal coordinator completions"
+        );
+        assert_eq!(http.devices.len(), 2);
         let aw = &report.groups["solver"]["adaptive_window"];
         assert!(aw.metrics["fixed_nfe"].value > 0.0);
         assert!(aw.metrics["adaptive_nfe"].value > 0.0);

@@ -59,6 +59,9 @@ struct Inner {
     deadline_misses: u64,
     /// Requests rejected outright by load shedding (no degraded fallback).
     shed: u64,
+    /// Requests failed because the client abandoned them (a dropped SSE
+    /// connection cancelling the session at a round boundary).
+    cancelled: u64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -121,6 +124,10 @@ pub struct MetricsSnapshot {
     pub deadline_misses: u64,
     /// Requests rejected outright by load shedding.
     pub shed_total: u64,
+    /// Requests failed because the client abandoned them (client-disconnect
+    /// propagation: a dropped SSE stream cancels its session). These also
+    /// count in `failed`.
+    pub cancelled_total: u64,
     /// Shard re-dispatches performed by the attached device pool
     /// (0 without a pool or with retries disabled).
     pub retries_total: u64,
@@ -188,6 +195,12 @@ impl Metrics {
     /// alongside [`record_failure`](Self::record_failure)).
     pub fn record_shed(&self) {
         self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Record one request cancelled by its client (the failure itself is
+    /// recorded by the session guard; this counts the *cause*).
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
     }
 
     /// Healthy (non-quarantined) devices in the attached pool — the
@@ -342,6 +355,7 @@ impl Metrics {
             degraded_total: m.degraded,
             deadline_misses: m.deadline_misses,
             shed_total: m.shed,
+            cancelled_total: m.cancelled,
             retries_total: pool.as_ref().map(|p| p.retries()).unwrap_or(0),
             devices_quarantined: pool
                 .as_ref()
@@ -392,6 +406,7 @@ impl MetricsSnapshot {
             ("degraded_total", Json::Num(self.degraded_total as f64)),
             ("deadline_misses", Json::Num(self.deadline_misses as f64)),
             ("shed_total", Json::Num(self.shed_total as f64)),
+            ("cancelled_total", Json::Num(self.cancelled_total as f64)),
             ("retries_total", Json::Num(self.retries_total as f64)),
             (
                 "devices_quarantined",
@@ -447,15 +462,17 @@ impl MetricsSnapshot {
                 self.first_prefix_ms_p95,
             ));
         }
-        if self.degraded_total + self.deadline_misses + self.shed_total + self.retries_total
+        if self.degraded_total + self.deadline_misses + self.shed_total + self.cancelled_total
+            + self.retries_total
             + self.devices_quarantined
             > 0
         {
             out.push_str(&format!(
-                "\n  robustness: degraded={} deadline misses={} shed={} | pool retries={} quarantines={}",
+                "\n  robustness: degraded={} deadline misses={} shed={} cancelled={} | pool retries={} quarantines={}",
                 self.degraded_total,
                 self.deadline_misses,
                 self.shed_total,
+                self.cancelled_total,
                 self.retries_total,
                 self.devices_quarantined,
             ));
@@ -586,10 +603,13 @@ mod tests {
         m.deadline_miss();
         m.record_failure();
         m.record_shed();
+        m.record_failure();
+        m.record_cancelled();
         let s = m.snapshot();
         assert_eq!(s.degraded_total, 1);
         assert_eq!(s.deadline_misses, 1);
         assert_eq!(s.shed_total, 1);
+        assert_eq!(s.cancelled_total, 1);
         assert_eq!(s.retries_total, 0, "no pool attached");
         assert_eq!(s.devices_quarantined, 0);
         assert!(s.report().contains("robustness:"), "report: {}", s.report());
@@ -597,6 +617,7 @@ mod tests {
         assert_eq!(j.get("degraded_total").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(j.get("deadline_misses").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(j.get("shed_total").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("cancelled_total").and_then(|v| v.as_f64()), Some(1.0));
         assert_eq!(j.get("retries_total").and_then(|v| v.as_f64()), Some(0.0));
         assert!(m.pool_healthy_devices().is_none(), "no pool attached");
     }

@@ -41,5 +41,6 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{PrefixChunk, SampleRequest, SampleResponse, SamplerSpec};
 pub use scheduler::{OwnedSlotGuard, SlotBudget};
 pub use server::{
-    Coordinator, CoordinatorConfig, ResponseHandle, RobustnessConfig, ShedMode, StreamHandle,
+    CancelToken, Coordinator, CoordinatorConfig, ResponseHandle, RobustnessConfig, ShedMode,
+    StreamHandle,
 };

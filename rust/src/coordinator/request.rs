@@ -8,7 +8,7 @@ use std::time::Duration;
 
 /// Which sequential algorithm (and how many steps) the request wants to
 /// reproduce in parallel.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SamplerSpec {
     /// Sequential sampler family (DDIM / DDPM).
     pub kind: SamplerKind,
@@ -32,7 +32,12 @@ impl SamplerSpec {
 }
 
 /// One sampling request.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field (floats bitwise-by-value), which is
+/// what the HTTP wire codec's round-trip property tests pin: a request
+/// serialized by [`crate::serve::wire::request_to_json`] and re-parsed
+/// must compare equal.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SampleRequest {
     /// Condition ("class" or "prompt embedding").
     pub cond: Cond,

@@ -56,6 +56,7 @@ use crate::trace::telemetry::{SessionTelemetry, TelemetryLog};
 use crate::trace::{self, Layer, Name};
 use crate::util::channel::{bounded, Receiver, Sender};
 use crate::util::error::{anyhow, Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -170,6 +171,37 @@ struct Job {
     /// Converged-prefix subscription (`None` for plain submissions).
     progress: Option<Sender<PrefixChunk>>,
     enqueued: Instant,
+    /// Client-disconnect propagation (see [`CancelToken`]).
+    cancel: CancelToken,
+}
+
+/// Cooperative cancellation flag shared between a request's handle and its
+/// in-flight session. Setting it ([`cancel`](Self::cancel)) does not
+/// interrupt a round in progress — a merged device call is never torn
+/// apart mid-flight — but the intake (at admission) and the round drivers
+/// (at every round boundary, the only places a live session is owned)
+/// check it and fail the request with an
+/// [`ErrorKind::Cancelled`](crate::util::error::ErrorKind::Cancelled)
+/// error, releasing its slots. The HTTP front sets it when an SSE client
+/// disconnects mid-stream, so abandoned solves stop consuming devices.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent; observed at round boundaries).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
 }
 
 /// Session accounting with panic safety. Created at the top of admission;
@@ -235,6 +267,8 @@ struct ActiveSession {
     /// Absolute deadline (admission time + `req.deadline_ms`), checked by
     /// the round drivers between rounds; `None` = infinitely patient.
     deadline: Option<Instant>,
+    /// Client-disconnect flag, checked alongside the deadline.
+    cancel: CancelToken,
     /// Window-row slots held for the session's whole lifetime. Declared
     /// before `in_flight` so a plain drop releases budget first, then
     /// clears the gauge the shutdown path waits on.
@@ -306,9 +340,27 @@ impl ResponseHandle {
 pub struct StreamHandle {
     chunks: Receiver<PrefixChunk>,
     response: ResponseHandle,
+    cancel: CancelToken,
 }
 
 impl StreamHandle {
+    /// Cancel the request: the session fails with a classified
+    /// [`ErrorKind::Cancelled`](crate::util::error::ErrorKind::Cancelled)
+    /// error at the next round boundary (or at admission if it has not
+    /// started), releasing its slots. The chunk stream still closes and
+    /// [`wait`](Self::wait) still resolves — cancellation never leaves a
+    /// hanging handle. The HTTP front calls this when an SSE client
+    /// disconnects mid-stream.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clone of the request's [`CancelToken`] (usable after the handle
+    /// is consumed by [`wait`](Self::wait)).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
     /// Block for the next converged-prefix chunk; `None` once the request
     /// finalized (successfully or not) and no chunks remain.
     pub fn next_chunk(&self) -> Option<PrefixChunk> {
@@ -434,7 +486,13 @@ impl Coordinator {
     /// Enqueue a request (blocking if the queue is full — backpressure).
     pub fn submit(&self, req: SampleRequest) -> ResponseHandle {
         let (rtx, rrx) = bounded(1);
-        let job = Job { req, reply: rtx, progress: None, enqueued: Instant::now() };
+        let job = Job {
+            req,
+            reply: rtx,
+            progress: None,
+            enqueued: Instant::now(),
+            cancel: CancelToken::new(),
+        };
         if self.tx.send(job).is_err() {
             panic!("coordinator is down");
         }
@@ -454,11 +512,18 @@ impl Coordinator {
         // ≤ steps chunks can ever be sent (each covers ≥ 1 of the steps
         // rows), so this capacity makes `try_send` infallible in practice.
         let (ptx, prx) = bounded(req.sampler.steps.max(1) + 1);
-        let job = Job { req, reply: rtx, progress: Some(ptx), enqueued: Instant::now() };
+        let cancel = CancelToken::new();
+        let job = Job {
+            req,
+            reply: rtx,
+            progress: Some(ptx),
+            enqueued: Instant::now(),
+            cancel: cancel.clone(),
+        };
         if self.tx.send(job).is_err() {
             panic!("coordinator is down");
         }
-        StreamHandle { chunks: prx, response: ResponseHandle { rx: rrx } }
+        StreamHandle { chunks: prx, response: ResponseHandle { rx: rrx }, cancel }
     }
 
     /// Convenience: submit and wait.
@@ -523,7 +588,7 @@ fn admit(
     metrics: &Arc<Metrics>,
     cfg: &CoordinatorConfig,
 ) -> Admission {
-    let Job { req, reply, progress, enqueued } = job;
+    let Job { req, reply, progress, enqueued, cancel } = job;
     // The admit span's track id is only known once the session exists, so
     // start deferred and complete against its trace id below.
     let admit_span = trace::begin();
@@ -544,6 +609,16 @@ fn admit(
             req.deadline_ms.unwrap_or(0),
             enqueued.elapsed().as_secs_f64() * 1e3,
         ))));
+        return Admission::Handled;
+    }
+
+    // Already abandoned while queued (e.g. the HTTP client disconnected):
+    // no point building a session nobody will read.
+    if cancel.is_cancelled() {
+        metrics.record_cancelled();
+        drop(in_flight);
+        drop(progress);
+        let _ = reply.send(Err(Error::cancelled("request cancelled before admission")));
         return Admission::Handled;
     }
 
@@ -618,6 +693,7 @@ fn admit(
         progress,
         chunks_sent: 0,
         deadline,
+        cancel,
         slots,
         in_flight,
     }))
@@ -844,6 +920,17 @@ fn drive_round(
     while i < round.len() {
         if round[i].session.is_done() {
             finalize(round.swap_remove(i), cache, metrics, cfg);
+        } else if round[i].cancel.is_cancelled() {
+            metrics.record_cancelled();
+            let s = round.swap_remove(i);
+            let rounds_run = s.session.iterations();
+            // As with deadline expiry below: drop everything but the reply
+            // first, so the guard's failure count and the freed slots are
+            // settled before the error is observable.
+            let ActiveSession { reply, .. } = s;
+            let _ = reply.send(Err(Error::cancelled(format!(
+                "cancelled by the client after {rounds_run} parallel round(s)"
+            ))));
         } else if round[i].deadline_expired(now) {
             metrics.deadline_miss();
             let s = round.swap_remove(i);
@@ -1043,6 +1130,7 @@ fn finalize(
         progress,
         chunks_sent: _,
         deadline: _,
+        cancel: _,
         slots,
         mut in_flight,
     } = active;
@@ -1749,6 +1837,32 @@ mod tests {
         let r2 = coord.sample(near).unwrap();
         assert!(r2.warm_started);
         assert!(r2.rounds <= r1.rounds, "warm {} vs cold {}", r2.rounds, r1.rounds);
+    }
+
+    /// Client-disconnect propagation: a cancelled streaming request fails
+    /// with a classified `Cancelled` error at a round boundary (never a
+    /// hang), its stream closes, its slots return to the budget, and the
+    /// cancellation is counted. Cancelling before any round has run is the
+    /// deterministic case — the first boundary check always sees the flag.
+    #[test]
+    fn cancelled_stream_fails_classified_and_releases_slots() {
+        use crate::util::error::ErrorKind;
+        let coord = Coordinator::start(gmm_model(), CoordinatorConfig::default());
+        let idle_slots = coord.slots_available();
+        let h = coord.submit_streaming(basic_req(41));
+        h.cancel();
+        // The stream must terminate (possibly after a chunk or two raced
+        // in ahead of the boundary check), then the response resolves.
+        while h.next_chunk().is_some() {}
+        let err = h.wait().expect_err("a cancelled request must fail");
+        assert_eq!(err.kind(), ErrorKind::Cancelled, "{err}");
+        let snap = coord.metrics();
+        assert_eq!(snap.cancelled_total, 1);
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.failed, 1, "cancellation counts as a failure");
+        assert_eq!(coord.slots_available(), idle_slots, "cancelled sessions free slots");
+        // The service keeps serving afterwards.
+        assert!(coord.sample(basic_req(42)).unwrap().converged);
     }
 
     #[test]

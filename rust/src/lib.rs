@@ -63,6 +63,10 @@ pub mod model;
 #[deny(missing_docs)]
 pub mod runtime;
 pub mod schedule;
+// The HTTP front is a public wire contract (docs/serving.md documents it
+// verbatim): hold it to the serving-layer doc bar.
+#[deny(missing_docs)]
+pub mod serve;
 #[deny(clippy::perf)]
 pub mod solver;
 // The observability layer is a contract later perf work measures against;

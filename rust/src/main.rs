@@ -16,7 +16,9 @@
 //! --adaptive-window (occupancy-driven window sizing), and the robustness
 //! knobs --inject-faults SPEC / --deadline-ms N / --shed-watermark F /
 //! --shard-timeout-ms N (deterministic chaos, request deadlines, graceful
-//! degradation, per-attempt shard deadlines — see docs/robustness.md).
+//! degradation, per-attempt shard deadlines — see docs/robustness.md), and
+//! the HTTP front --http ADDR / --tenants SPEC / --http-for-ms N
+//! (multi-tenant HTTP/SSE serving — see docs/serving.md).
 //! DiT scenarios need the `pjrt` feature plus `make artifacts` (PJRT HLO +
 //! trained weights).
 
@@ -90,7 +92,14 @@ fn help() {
                        enforced at admission and between rounds;\n\
                        --shed-watermark F: above this slot-occupancy fraction\n\
                        new requests degrade to a bitwise-exact sequential\n\
-                       solve instead of queueing)\n\
+                       solve instead of queueing;\n\
+                       --http ADDR: serve over HTTP/SSE instead of synthetic\n\
+                       load (POST /v1/sample, POST /v1/sample/stream,\n\
+                       GET /metrics, GET /healthz — see docs/serving.md);\n\
+                       --tenants SPEC: per-tenant quotas/weights/classes,\n\
+                       e.g. 'acme:weight=3,rps=10;bulk:class=batch';\n\
+                       --http-for-ms N: serve N ms then exit with the report;\n\
+                       --http-gate N: max requests concurrently in service)\n\
            bench       perf-scenario sweep -> BENCH_repro.json (see docs/bench.md)\n\
                        (--quick: CI smoke subset; --out FILE; --only SUBSTR;\n\
                        --threads N: session parallelism for the hot-loop\n\
@@ -277,6 +286,9 @@ fn cmd_serve(args: &Args) {
     use parataa::coordinator::{
         Coordinator, CoordinatorConfig, RobustnessConfig, SampleRequest, SamplerSpec,
     };
+    if args.get("http").is_some() {
+        return cmd_serve_http(args);
+    }
     use parataa::figures::common::ModelChoice;
     use parataa::model::Cond;
     use parataa::runtime::{FaultControl, FaultSpec};
@@ -467,6 +479,111 @@ fn cmd_serve(args: &Args) {
     if let Some(control) = &fault_control {
         control.cancel(); // ... then release scripted hangs so the pool's
                           // worker threads return and join on drop.
+    }
+}
+
+/// `serve --http ADDR`: expose the coordinator over the HTTP/SSE front
+/// (`POST /v1/sample`, `POST /v1/sample/stream`, `GET /metrics`,
+/// `GET /healthz` — see docs/serving.md) instead of generating synthetic
+/// load. `--tenants SPEC` switches admission to configured mode
+/// (per-tenant quotas, weights, and priority classes; unknown tenants are
+/// refused 403); without it any presented tenant is accepted unlimited.
+/// `--http-for-ms N` serves for N ms then shuts down gracefully and
+/// prints the metrics report — the CI http-smoke uses this; without it
+/// the server runs until the process is killed.
+fn cmd_serve_http(args: &Args) {
+    use parataa::coordinator::{Coordinator, CoordinatorConfig, RobustnessConfig};
+    use parataa::figures::common::ModelChoice;
+    use parataa::runtime::{FaultControl, FaultSpec};
+    use parataa::serve::{HttpConfig, HttpServer, TenantRegistry};
+    use std::sync::Arc;
+
+    let addr = args.get("http").expect("--http ADDR").to_string();
+    let model_choice = ModelChoice::parse(&args.get_or("model", "gmm"));
+    let devices = args.usize_or("devices", 1).max(1);
+    let workers = args.usize_or("workers", 4);
+    let drivers = args.usize_or("drivers", 2).max(1);
+    let shed_watermark: Option<f64> = args
+        .get("shed-watermark")
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --shed-watermark '{v}'")));
+    let faults: Option<FaultSpec> = args.get("inject-faults").map(|spec| {
+        FaultSpec::parse(spec)
+            .unwrap_or_else(|e| panic!("bad --inject-faults: {e}"))
+            .with_seed(args.u64_or("seed", 0))
+    });
+    let fault_control = faults.as_ref().map(|_| FaultControl::new());
+    let shard_timeout = args
+        .get("shard-timeout-ms")
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --shard-timeout-ms '{v}'")))
+        .or(if faults.is_some() { Some(250) } else { None })
+        .map(std::time::Duration::from_millis);
+
+    let tenants = Arc::new(
+        TenantRegistry::from_spec(args.get("tenants"))
+            .unwrap_or_else(|e| panic!("bad --tenants: {e}")),
+    );
+    let http_cfg = HttpConfig {
+        gate_capacity: args.usize_or("http-gate", HttpConfig::default().gate_capacity),
+        accept_threads: args
+            .usize_or("http-accept", HttpConfig::default().accept_threads)
+            .max(1),
+        ..Default::default()
+    };
+
+    let (pool, _guidance, fallback_model) = build_pool(
+        model_choice,
+        devices,
+        faults.as_ref().zip(fault_control.as_ref()),
+        shard_timeout,
+    );
+    let pool_stats = pool.stats();
+    let pooled = Arc::new(pool.eps_handle("pooled"));
+    let coord = Arc::new(Coordinator::start(
+        pooled,
+        CoordinatorConfig {
+            workers,
+            drivers,
+            devices,
+            robustness: RobustnessConfig {
+                shed_watermark,
+                fallback_model,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    ));
+    coord.attach_pool(pool_stats);
+
+    let server = HttpServer::start(Arc::clone(&coord), Arc::clone(&tenants), &addr, http_cfg)
+        .unwrap_or_else(|e| panic!("http server: {e}"));
+    // The bound address resolves ':0'; scripts scrape this line.
+    println!("listening http://{}", server.local_addr());
+    eprintln!(
+        "serving {} over HTTP on {} ({devices} device(s), {drivers} driver(s), tenants: {})",
+        model_choice.label(),
+        server.local_addr(),
+        if args.get("tenants").is_some() { "configured" } else { "open" },
+    );
+
+    match args.get("http-for-ms") {
+        Some(v) => {
+            let ms: u64 = v.parse().unwrap_or_else(|_| panic!("bad --http-for-ms '{v}'"));
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        None => loop {
+            // Serve until killed: accept threads carry all the work.
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+    }
+    drop(server); // stop accepting, drain in-service requests, join pool
+    if args.has_flag("json") {
+        println!("{}", coord.metrics().to_json());
+    } else {
+        println!("{}", coord.metrics().report());
+    }
+    drop(coord);
+    if let Some(control) = &fault_control {
+        control.cancel();
     }
 }
 

@@ -1,0 +1,211 @@
+//! Minimal loopback HTTP client for exercising [`super::http::HttpServer`]
+//! from tests, the bench harness, and the CI smoke script — *not* a
+//! general-purpose client. One-shot requests send `Connection: close` and
+//! read to EOF; [`SseConn`] holds the socket open to consume
+//! `text/event-stream` frames one at a time (and to *drop* mid-stream,
+//! which is how the disconnect-propagation tests simulate a vanished
+//! client).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::util::json::{parse, Json};
+
+/// How long a client read may block before the test is declared hung.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A parsed one-shot response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    /// Numeric status code (200, 429, ...).
+    pub status: u16,
+    /// Headers with lowercased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Response body, assumed UTF-8.
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// First header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json, String> {
+        parse(&self.body)
+    }
+}
+
+fn read_to_eof(stream: &mut TcpStream) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).map_err(|e| format!("read: {e}"))?;
+    Ok(out)
+}
+
+fn parse_response(raw: &[u8]) -> Result<HttpResponse, String> {
+    let text = String::from_utf8_lossy(raw);
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| format!("no header terminator in response: {text:?}"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line: {status_line:?}"))?;
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(n, v)| (n.to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+/// Send one request (with `Connection: close`) and read the full
+/// response. `headers` are extra request headers, e.g.
+/// `[("X-Parataa-Tenant", "acme")]`.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &str,
+) -> Result<HttpResponse, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: parataa\r\nConnection: close\r\n");
+    for (name, value) in headers {
+        req.push_str(&format!("{name}: {value}\r\n"));
+    }
+    if !body.is_empty() || method == "POST" {
+        req.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    }
+    req.push_str("\r\n");
+    req.push_str(body);
+    stream.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))?;
+    parse_response(&read_to_eof(&mut stream)?)
+}
+
+/// `GET path` convenience.
+pub fn get(addr: SocketAddr, path: &str) -> Result<HttpResponse, String> {
+    request(addr, "GET", path, &[], "")
+}
+
+/// `POST path` with a JSON body and optional tenant header.
+pub fn post_json(
+    addr: SocketAddr,
+    path: &str,
+    tenant: Option<&str>,
+    body: &str,
+) -> Result<HttpResponse, String> {
+    let mut headers: Vec<(&str, &str)> = vec![("Content-Type", "application/json")];
+    if let Some(t) = tenant {
+        headers.push(("X-Parataa-Tenant", t));
+    }
+    request(addr, "POST", path, &headers, body)
+}
+
+/// One Server-Sent Event as framed by the serving front: an `event:`
+/// name and a single `data:` line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SseEvent {
+    /// Event name: `chunk`, `done`, or `error`.
+    pub event: String,
+    /// The event's JSON payload, verbatim.
+    pub data: String,
+}
+
+/// An open `POST /v1/sample/stream` connection. Read frames with
+/// [`next_event`](Self::next_event); *drop* the connection mid-stream to
+/// simulate a client disconnect (the server must then cancel the
+/// session).
+pub struct SseConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl SseConn {
+    /// Open a streaming request and consume the response head. Errors if
+    /// the server answers anything but `200` + `text/event-stream`.
+    pub fn open(
+        addr: SocketAddr,
+        tenant: Option<&str>,
+        body: &str,
+    ) -> Result<SseConn, String> {
+        let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_read_timeout(Some(CLIENT_READ_TIMEOUT));
+        let _ = stream.set_nodelay(true);
+        let mut req = String::from("POST /v1/sample/stream HTTP/1.1\r\nHost: parataa\r\n");
+        if let Some(t) = tenant {
+            req.push_str(&format!("X-Parataa-Tenant: {t}\r\n"));
+        }
+        req.push_str(&format!("Content-Length: {}\r\n\r\n{body}", body.len()));
+        stream.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))?;
+
+        let mut conn = SseConn { stream, buf: Vec::new() };
+        let head_end = conn.read_until(b"\r\n\r\n")?;
+        let head = String::from_utf8_lossy(&conn.buf[..head_end]).to_string();
+        conn.buf.drain(..head_end + 4);
+        let status = head.split(' ').nth(1).unwrap_or("");
+        if status != "200" {
+            return Err(format!("stream refused: {head:?} body {:?}", conn.drain_text()));
+        }
+        if !head.to_ascii_lowercase().contains("text/event-stream") {
+            return Err(format!("not an SSE response: {head:?}"));
+        }
+        Ok(conn)
+    }
+
+    fn read_until(&mut self, needle: &[u8]) -> Result<usize, String> {
+        loop {
+            if let Some(pos) =
+                self.buf.windows(needle.len()).position(|w| w == needle)
+            {
+                return Ok(pos);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err("eof".to_string()),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => return Err(format!("read: {e}")),
+            }
+        }
+    }
+
+    fn drain_text(&mut self) -> String {
+        let mut rest = Vec::new();
+        let _ = self.stream.read_to_end(&mut rest);
+        self.buf.extend_from_slice(&rest);
+        String::from_utf8_lossy(&self.buf).to_string()
+    }
+
+    /// Block for the next frame; `None` once the server closes the
+    /// stream (after `done`/`error`).
+    pub fn next_event(&mut self) -> Option<SseEvent> {
+        let frame_end = self.read_until(b"\n\n").ok()?;
+        let frame = String::from_utf8_lossy(&self.buf[..frame_end]).to_string();
+        self.buf.drain(..frame_end + 2);
+        let mut event = String::new();
+        let mut data = String::new();
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = v.to_string();
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = v.to_string();
+            }
+        }
+        Some(SseEvent { event, data })
+    }
+
+    /// Collect every remaining frame until the server closes the stream.
+    pub fn collect(mut self) -> Vec<SseEvent> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next_event() {
+            out.push(e);
+        }
+        out
+    }
+}

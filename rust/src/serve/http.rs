@@ -1,0 +1,764 @@
+//! Zero-dependency HTTP/1.1 front for the coordinator.
+//!
+//! A small accept pool (`N` threads sharing one `TcpListener` via
+//! `try_clone`) serves connections *inline* — concurrency is bounded by
+//! the pool size, and per-request concurrency into the coordinator is
+//! bounded again by the [`FairGate`]. The request parser is hand-rolled
+//! and hostile-input-safe: header and body sizes are capped, socket reads
+//! carry a timeout (slow-loris → 408), and every malformed input maps to
+//! a *classified* [`ParseError`] → 4xx — never a panic, never a leaked
+//! coordinator slot (admission happens only after a body parses).
+//!
+//! Routes (full wire reference in `docs/serving.md`):
+//!
+//! | route                    | behaviour                                    |
+//! |--------------------------|----------------------------------------------|
+//! | `POST /v1/sample`        | JSON body → [`SampleRequest`] → one JSON response |
+//! | `POST /v1/sample/stream` | same body; converged-prefix [`PrefixChunk`]s as SSE |
+//! | `GET /metrics`           | Prometheus text (coordinator + per-tenant)   |
+//! | `GET /healthz`           | device-health-aware liveness                 |
+//!
+//! Headers: `X-Parataa-Tenant` selects the tenant (quota + fair-share
+//! class); `X-Parataa-Deadline-Ms` overrides the body's `deadline_ms`
+//! (PR 9's deadline path — expiry is a 504). Over-quota tenants get 429 +
+//! `Retry-After`; coordinator shedding ([`ErrorKind::Shed`]) also maps to
+//! 429. A client that disconnects mid-SSE cancels its session
+//! ([`StreamHandle::cancel`]) at the next round boundary, freeing its
+//! slots for other tenants.
+
+use std::io::{ErrorKind as IoErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::serve::tenant::{AdmitError, FairGate, Priority, TenantRegistry};
+use crate::serve::wire;
+use crate::trace::prom;
+use crate::util::error::{Error, ErrorKind};
+use crate::util::json::{obj, parse, Json};
+
+/// Tenant-selection header (case-insensitive on the wire).
+pub const TENANT_HEADER: &str = "x-parataa-tenant";
+/// Deadline-override header: milliseconds from receipt, as an integer.
+pub const DEADLINE_HEADER: &str = "x-parataa-deadline-ms";
+
+/// HTTP front configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Accept-pool size = max concurrently served connections.
+    pub accept_threads: usize,
+    /// Cap on the request line + headers (431 beyond it).
+    pub max_header_bytes: usize,
+    /// Cap on a request body (413 beyond it, before reading it).
+    pub max_body_bytes: usize,
+    /// Socket read timeout: a connection idle mid-request this long is a
+    /// slow-loris and gets 408.
+    pub read_timeout: Duration,
+    /// Max requests concurrently *in service* at the coordinator (the
+    /// fair gate's capacity); excess queue in weighted-fair order.
+    pub gate_capacity: usize,
+    /// Anti-starvation bound: a waiting batch request is served after at
+    /// most this many consecutive interactive grants.
+    pub batch_every: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            accept_threads: 4,
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            read_timeout: Duration::from_millis(2_000),
+            gate_capacity: 8,
+            batch_every: 4,
+        }
+    }
+}
+
+// --- request parsing ------------------------------------------------------
+
+/// Classified request-parse failures; each maps to one 4xx/5xx status
+/// ([`ParseError::status`]) and the table in `docs/robustness.md`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    /// The connection closed cleanly before a request started (no reply).
+    Closed,
+    /// Malformed request line (`METHOD SP TARGET SP VERSION`).
+    BadRequestLine,
+    /// A header line without a `:` separator, or a non-UTF-8 prefix.
+    BadHeader,
+    /// Request line + headers exceeded the configured cap (431).
+    HeadersTooLarge,
+    /// `Content-Length` exceeded the configured cap (413).
+    BodyTooLarge,
+    /// `Content-Length` was present but not a non-negative integer (400).
+    BadContentLength,
+    /// Not HTTP/1.0 or HTTP/1.1 (505).
+    UnsupportedVersion,
+    /// `Transfer-Encoding: chunked` — unimplemented by design (501).
+    UnsupportedTransferEncoding,
+    /// The socket idled past the read timeout mid-request (408).
+    Timeout,
+    /// Any other socket error mid-request (connection is dropped).
+    Io(String),
+}
+
+impl ParseError {
+    /// The HTTP status + reason this parse failure is answered with.
+    /// `Closed` and `Io` get no reply (the peer is gone).
+    pub fn status(&self) -> (u16, &'static str) {
+        match self {
+            ParseError::Closed | ParseError::Io(_) => (0, ""),
+            ParseError::BadRequestLine | ParseError::BadHeader | ParseError::BadContentLength => {
+                (400, "Bad Request")
+            }
+            ParseError::HeadersTooLarge => (431, "Request Header Fields Too Large"),
+            ParseError::BodyTooLarge => (413, "Content Too Large"),
+            ParseError::UnsupportedVersion => (505, "HTTP Version Not Supported"),
+            ParseError::UnsupportedTransferEncoding => (501, "Not Implemented"),
+            ParseError::Timeout => (408, "Request Timeout"),
+        }
+    }
+}
+
+/// A parsed request: method, target, lowercased headers, raw body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request method, verbatim (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target (path only; no query parsing — none is needed).
+    pub path: String,
+    /// Headers with lowercased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Raw body bytes (empty without `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// `Connection: close` requested (HTTP/1.1 defaults to keep-alive).
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Buffered connection reader. The buffer persists *across* requests on
+/// one connection, so pipelined requests (several in one TCP segment) are
+/// served in order without losing bytes.
+struct ConnReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ConnReader {
+    fn new(stream: TcpStream) -> ConnReader {
+        ConnReader { stream, buf: Vec::new() }
+    }
+
+    /// Pull more bytes off the socket; `Closed` on EOF, `Timeout` on an
+    /// expired read timeout.
+    fn fill(&mut self) -> Result<(), ParseError> {
+        let mut chunk = [0u8; 4096];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => Err(ParseError::Closed),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e) if e.kind() == IoErrorKind::WouldBlock || e.kind() == IoErrorKind::TimedOut => {
+                Err(ParseError::Timeout)
+            }
+            Err(e) => Err(ParseError::Io(e.to_string())),
+        }
+    }
+
+    /// Read and parse one request, enforcing the caps in `cfg`. The
+    /// "clean EOF" case (peer closed between requests) is `Closed` only
+    /// if no bytes of the next request had arrived; a mid-request EOF is
+    /// `BadRequestLine` (truncated).
+    fn read_request(&mut self, cfg: &HttpConfig) -> Result<Request, ParseError> {
+        // Accumulate until the blank line ending the header block.
+        let head_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos;
+            }
+            if self.buf.len() > cfg.max_header_bytes {
+                return Err(ParseError::HeadersTooLarge);
+            }
+            match self.fill() {
+                Ok(()) => {}
+                Err(ParseError::Closed) if self.buf.is_empty() => return Err(ParseError::Closed),
+                Err(ParseError::Closed) => return Err(ParseError::BadRequestLine),
+                Err(e) => return Err(e),
+            }
+        };
+        if head_end > cfg.max_header_bytes {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        let head = match std::str::from_utf8(&self.buf[..head_end]) {
+            Ok(h) => h.to_string(),
+            Err(_) => return Err(ParseError::BadHeader),
+        };
+        self.buf.drain(..head_end + 4);
+
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+        {
+            (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => (m, p, v),
+            _ => return Err(ParseError::BadRequestLine),
+        };
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(ParseError::UnsupportedVersion);
+        }
+        let mut headers = Vec::new();
+        for line in lines {
+            let (name, value) = line.split_once(':').ok_or(ParseError::BadHeader)?;
+            if name.is_empty() || name.contains(' ') {
+                return Err(ParseError::BadHeader);
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let req_head = Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers,
+            body: Vec::new(),
+        };
+        if req_head
+            .header("transfer-encoding")
+            .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+        {
+            return Err(ParseError::UnsupportedTransferEncoding);
+        }
+        let body_len = match req_head.header("content-length") {
+            None => 0usize,
+            Some(v) => v.trim().parse::<usize>().map_err(|_| ParseError::BadContentLength)?,
+        };
+        if body_len > cfg.max_body_bytes {
+            return Err(ParseError::BodyTooLarge);
+        }
+        while self.buf.len() < body_len {
+            match self.fill() {
+                Ok(()) => {}
+                Err(ParseError::Closed) => return Err(ParseError::BadRequestLine),
+                Err(e) => return Err(e),
+            }
+        }
+        let body = self.buf.drain(..body_len).collect();
+        Ok(Request { body, ..req_head })
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+// --- responses ------------------------------------------------------------
+
+fn error_body(message: &str, kind: Option<&str>) -> String {
+    let mut pairs = vec![("error", Json::Str(message.to_string()))];
+    if let Some(k) = kind {
+        pairs.push(("kind", Json::Str(k.to_string())));
+    }
+    obj(pairs).to_string()
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    for (name, value) in extra_headers {
+        out.push_str(&format!("{name}: {value}\r\n"));
+    }
+    out.push_str("\r\n");
+    out.push_str(body);
+    stream.write_all(out.as_bytes())
+}
+
+fn write_json(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<()> {
+    write_response(stream, status, reason, "application/json", extra, body)
+}
+
+/// Map a classified coordinator error to its HTTP status (the
+/// `docs/robustness.md` table): Shed→429, DeadlineExceeded→504,
+/// Retryable→503, Cancelled→499 (nginx convention), Terminal→500.
+pub fn status_for_error(kind: ErrorKind) -> (u16, &'static str) {
+    match kind {
+        ErrorKind::Shed => (429, "Too Many Requests"),
+        ErrorKind::DeadlineExceeded => (504, "Gateway Timeout"),
+        ErrorKind::Retryable => (503, "Service Unavailable"),
+        ErrorKind::Cancelled => (499, "Client Closed Request"),
+        ErrorKind::Terminal => (500, "Internal Server Error"),
+    }
+}
+
+// --- server ---------------------------------------------------------------
+
+/// The running HTTP front. Dropping it stops accepting, closes the fair
+/// gate (queued requests get `None` → 503), and joins the accept pool;
+/// requests already in service drain first.
+pub struct HttpServer {
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    gate: Arc<FairGate>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+struct ServeCtx {
+    coord: Arc<Coordinator>,
+    tenants: Arc<TenantRegistry>,
+    gate: Arc<FairGate>,
+    cfg: HttpConfig,
+    epoch: Instant,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving `coord`
+    /// under `tenants`' admission policy.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        tenants: Arc<TenantRegistry>,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer, Error> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::msg(format!("bind {addr}: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| Error::msg(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(FairGate::new(cfg.gate_capacity, cfg.batch_every));
+        let ctx = Arc::new(ServeCtx {
+            coord,
+            tenants,
+            gate: Arc::clone(&gate),
+            cfg: cfg.clone(),
+            epoch: Instant::now(),
+            stop: Arc::clone(&stop),
+        });
+        let mut threads = Vec::with_capacity(cfg.accept_threads.max(1));
+        for i in 0..cfg.accept_threads.max(1) {
+            let listener = listener
+                .try_clone()
+                .map_err(|e| Error::msg(format!("clone listener: {e}")))?;
+            let ctx = Arc::clone(&ctx);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("http-accept-{i}"))
+                    .spawn(move || accept_loop(listener, ctx))
+                    .map_err(|e| Error::msg(format!("spawn accept thread: {e}")))?,
+            );
+        }
+        Ok(HttpServer { local_addr, stop, gate, threads })
+    }
+
+    /// The bound address (resolves `:0` to the kernel-chosen port).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.gate.close();
+        // One dummy connection per accept thread unblocks its accept().
+        for _ in 0..self.threads.len() {
+            let _ = TcpStream::connect(self.local_addr);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<ServeCtx>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if ctx.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if ctx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+        let _ = stream.set_nodelay(true);
+        serve_connection(stream, &ctx);
+    }
+}
+
+/// Serve one connection: a keep-alive loop over `read_request`, so
+/// pipelined requests on one socket are answered in order. Any parse
+/// error is answered (when a reply is possible) and closes the
+/// connection, as does SSE, `Connection: close`, or server shutdown.
+fn serve_connection(stream: TcpStream, ctx: &ServeCtx) {
+    let mut reader = ConnReader::new(stream);
+    loop {
+        if ctx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        let req = match reader.read_request(&ctx.cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                let (status, reason) = e.status();
+                if status != 0 {
+                    let _ = write_json(
+                        &mut reader.stream,
+                        status,
+                        reason,
+                        &[("Connection", "close".to_string())],
+                        &error_body(&format!("{e:?}"), None),
+                    );
+                }
+                return;
+            }
+        };
+        let close_after = req.wants_close();
+        match route(&mut reader.stream, &req, ctx) {
+            RouteOutcome::KeepAlive => {}
+            RouteOutcome::Close => return,
+        }
+        if close_after {
+            return;
+        }
+    }
+}
+
+enum RouteOutcome {
+    KeepAlive,
+    Close,
+}
+
+fn route(stream: &mut TcpStream, req: &Request, ctx: &ServeCtx) -> RouteOutcome {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/sample") => handle_sample(stream, req, ctx, false),
+        ("POST", "/v1/sample/stream") => handle_sample(stream, req, ctx, true),
+        ("GET", "/metrics") => {
+            let mut text = prom::render(&ctx.coord.metrics());
+            ctx.tenants.render_prom(&mut text);
+            let _ = write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &[],
+                &text,
+            );
+            RouteOutcome::KeepAlive
+        }
+        ("GET", "/healthz") => {
+            let snap = ctx.coord.metrics();
+            let quarantined = snap.devices.iter().filter(|d| d.quarantined).count();
+            let healthy = snap.devices.is_empty() || quarantined < snap.devices.len();
+            let body = obj(vec![
+                ("status", Json::Str(if healthy { "ok" } else { "degraded" }.to_string())),
+                ("devices", Json::Num(snap.devices.len() as f64)),
+                ("devices_quarantined", Json::Num(quarantined as f64)),
+                ("sessions_in_flight", Json::Num(snap.sessions_in_flight as f64)),
+            ])
+            .to_string();
+            let (status, reason) =
+                if healthy { (200, "OK") } else { (503, "Service Unavailable") };
+            let _ = write_json(stream, status, reason, &[], &body);
+            RouteOutcome::KeepAlive
+        }
+        (_, "/v1/sample") | (_, "/v1/sample/stream") => {
+            let _ = write_json(
+                stream,
+                405,
+                "Method Not Allowed",
+                &[("Allow", "POST".to_string())],
+                &error_body("use POST", None),
+            );
+            RouteOutcome::KeepAlive
+        }
+        (_, "/metrics") | (_, "/healthz") => {
+            let _ = write_json(
+                stream,
+                405,
+                "Method Not Allowed",
+                &[("Allow", "GET".to_string())],
+                &error_body("use GET", None),
+            );
+            RouteOutcome::KeepAlive
+        }
+        _ => {
+            let _ = write_json(stream, 404, "Not Found", &[], &error_body("no such route", None));
+            RouteOutcome::KeepAlive
+        }
+    }
+}
+
+/// Admission + solve for both `/v1/sample` and `/v1/sample/stream`.
+fn handle_sample(
+    stream: &mut TcpStream,
+    req: &Request,
+    ctx: &ServeCtx,
+    streaming: bool,
+) -> RouteOutcome {
+    // 1. Tenant admission (token bucket) — before any parsing work.
+    let now_ns = ctx.epoch.elapsed().as_nanos() as u64;
+    let (tenant, weight, priority) = match ctx.tenants.admit(req.header(TENANT_HEADER), now_ns) {
+        Ok(t) => t,
+        Err(AdmitError::UnknownTenant(name)) => {
+            let _ = write_json(
+                stream,
+                403,
+                "Forbidden",
+                &[],
+                &error_body(&format!("unknown tenant `{name}`"), None),
+            );
+            return RouteOutcome::KeepAlive;
+        }
+        Err(AdmitError::OverQuota(retry_after)) => {
+            let secs = if retry_after.is_finite() { retry_after.ceil().max(1.0) } else { 3600.0 };
+            let _ = write_json(
+                stream,
+                429,
+                "Too Many Requests",
+                &[("Retry-After", format!("{}", secs as u64))],
+                &error_body("tenant over rate quota", Some("shed")),
+            );
+            return RouteOutcome::KeepAlive;
+        }
+    };
+
+    // 2. Body → SampleRequest (400 on any malformed field).
+    let fail = |s: &mut TcpStream, msg: &str| {
+        let _ = write_json(s, 400, "Bad Request", &[], &error_body(msg, None));
+        RouteOutcome::KeepAlive
+    };
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return fail(stream, "body is not UTF-8"),
+    };
+    let json = match parse(body) {
+        Ok(j) => j,
+        Err(e) => return fail(stream, &format!("invalid JSON: {e}")),
+    };
+    let mut sample_req = match wire::request_from_json(&json) {
+        Ok(r) => r,
+        Err(e) => return fail(stream, &e),
+    };
+    if let Some(v) = req.header(DEADLINE_HEADER) {
+        match v.trim().parse::<u64>() {
+            Ok(ms) => sample_req.deadline_ms = Some(ms),
+            Err(_) => return fail(stream, "x-parataa-deadline-ms must be an integer"),
+        }
+    }
+
+    // 3. Fair-share gate: block here (not in the coordinator's queue) so
+    //    the grant order is weighted-fair across tenants.
+    let permit = match ctx.gate.acquire(tenant, weight, priority) {
+        Some(p) => p,
+        None => {
+            ctx.tenants.record_outcome(tenant, false);
+            let _ = write_json(
+                stream,
+                503,
+                "Service Unavailable",
+                &[("Connection", "close".to_string())],
+                &error_body("server shutting down", None),
+            );
+            return RouteOutcome::Close;
+        }
+    };
+
+    // 4. Solve, holding the permit for the request's full service time.
+    let outcome = if streaming {
+        stream_sample(stream, ctx, sample_req, tenant)
+    } else {
+        let result = ctx.coord.submit(sample_req).wait();
+        match result {
+            Ok(resp) => {
+                ctx.tenants.record_outcome(tenant, true);
+                let _ =
+                    write_json(stream, 200, "OK", &[], &wire::response_to_json(&resp).to_string());
+                RouteOutcome::KeepAlive
+            }
+            Err(e) => {
+                ctx.tenants.record_outcome(tenant, false);
+                let (status, reason) = status_for_error(e.kind());
+                let mut extra: Vec<(&str, String)> = Vec::new();
+                if e.kind() == ErrorKind::Shed {
+                    extra.push(("Retry-After", "1".to_string()));
+                }
+                let _ = write_json(
+                    stream,
+                    status,
+                    reason,
+                    &extra,
+                    &error_body(&e.to_string(), Some(e.kind().label())),
+                );
+                RouteOutcome::KeepAlive
+            }
+        }
+    };
+    drop(permit);
+    outcome
+}
+
+/// Serve one streaming request as Server-Sent Events. Framing:
+/// `event: chunk` per converged-prefix advance, then exactly one of
+/// `event: done` (the full response) or `event: error`. A failed socket
+/// write means the client is gone: the session is cancelled, the chunk
+/// stream drained, and the terminal result awaited so slot accounting
+/// stays exact. SSE responses always close the connection.
+fn stream_sample(
+    stream: &mut TcpStream,
+    ctx: &ServeCtx,
+    sample_req: crate::coordinator::SampleRequest,
+    tenant: usize,
+) -> RouteOutcome {
+    let handle = ctx.coord.submit_streaming(sample_req);
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n";
+    let mut client_alive = stream.write_all(head.as_bytes()).is_ok();
+    while let Some(chunk) = handle.next_chunk() {
+        if client_alive {
+            let frame = format!("event: chunk\ndata: {}\n\n", wire::chunk_to_json(&chunk));
+            client_alive = stream.write_all(frame.as_bytes()).is_ok();
+            if !client_alive {
+                // Client disconnect: cancel, then keep draining so the
+                // terminal result below reflects the cancellation.
+                handle.cancel();
+            }
+        }
+    }
+    match handle.wait() {
+        Ok(resp) => {
+            ctx.tenants.record_outcome(tenant, true);
+            if client_alive {
+                let frame = format!("event: done\ndata: {}\n\n", wire::response_to_json(&resp));
+                let _ = stream.write_all(frame.as_bytes());
+            }
+        }
+        Err(e) => {
+            ctx.tenants.record_outcome(tenant, false);
+            if client_alive {
+                let frame = format!(
+                    "event: error\ndata: {}\n\n",
+                    error_body(&e.to_string(), Some(e.kind().label()))
+                );
+                let _ = stream.write_all(frame.as_bytes());
+            }
+        }
+    }
+    RouteOutcome::Close
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HttpConfig {
+        HttpConfig::default()
+    }
+
+    /// Feed a raw byte stream through the parser via a real socket pair.
+    fn parse_raw(raw: &[u8]) -> Result<Request, ParseError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        client.write_all(raw).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        ConnReader::new(server).read_request(&cfg())
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_lowercases_headers() {
+        let req = parse_raw(
+            b"POST /v1/sample HTTP/1.1\r\nHost: x\r\nX-Parataa-Tenant: acme\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("POST", "/v1/sample"));
+        assert_eq!(req.header("x-parataa-tenant"), Some("acme"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn classifies_malformed_inputs() {
+        for (raw, want) in [
+            (&b"GARBAGE\r\n\r\n"[..], ParseError::BadRequestLine),
+            (&b"GET / HTTP/2.0\r\n\r\n"[..], ParseError::UnsupportedVersion),
+            (&b"GET / HTTP/1.1\r\nNoColonHere\r\n\r\n"[..], ParseError::BadHeader),
+            (
+                &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+                ParseError::BadContentLength,
+            ),
+            (
+                &b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..],
+                ParseError::UnsupportedTransferEncoding,
+            ),
+            (&b"GET / HTTP/1.1\r\nTrunc"[..], ParseError::BadRequestLine),
+            (&b""[..], ParseError::Closed),
+        ] {
+            assert_eq!(parse_raw(raw), Err(want), "raw: {:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn parse_errors_map_to_documented_statuses() {
+        assert_eq!(ParseError::BadRequestLine.status().0, 400);
+        assert_eq!(ParseError::HeadersTooLarge.status().0, 431);
+        assert_eq!(ParseError::BodyTooLarge.status().0, 413);
+        assert_eq!(ParseError::Timeout.status().0, 408);
+        assert_eq!(ParseError::UnsupportedVersion.status().0, 505);
+        assert_eq!(ParseError::UnsupportedTransferEncoding.status().0, 501);
+        assert_eq!(ParseError::Closed.status().0, 0, "clean EOF gets no reply");
+    }
+
+    #[test]
+    fn error_kinds_map_to_documented_statuses() {
+        assert_eq!(status_for_error(ErrorKind::Shed).0, 429);
+        assert_eq!(status_for_error(ErrorKind::DeadlineExceeded).0, 504);
+        assert_eq!(status_for_error(ErrorKind::Retryable).0, 503);
+        assert_eq!(status_for_error(ErrorKind::Cancelled).0, 499);
+        assert_eq!(status_for_error(ErrorKind::Terminal).0, 500);
+    }
+
+    #[test]
+    fn pipelined_requests_stay_buffered() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        client
+            .write_all(b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n")
+            .unwrap();
+        let mut reader = ConnReader::new(server);
+        assert_eq!(reader.read_request(&cfg()).unwrap().path, "/healthz");
+        assert_eq!(reader.read_request(&cfg()).unwrap().path, "/metrics");
+    }
+}

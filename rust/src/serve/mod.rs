@@ -1,0 +1,36 @@
+//! HTTP/SSE serving front with multi-tenant admission control — the L4
+//! transport layer over the [`crate::coordinator`].
+//!
+//! The coordinator (L3) turns many concurrent sampling requests into
+//! merged per-round device batches; this layer puts a wire protocol in
+//! front of it so heterogeneous *tenants* can share one deployment:
+//!
+//! - [`wire`]   — `SampleRequest`/`SampleResponse`/`PrefixChunk` ⇄ JSON,
+//!   bit-exact for every float that crosses it (the transport adds zero
+//!   numeric surface — pinned by the parity oracle in
+//!   `tests/http_protocol.rs`);
+//! - [`tenant`] — admission control: the `--tenants` spec grammar,
+//!   per-tenant token buckets (quota → 429 + `Retry-After`), weighted
+//!   fair queueing with interactive/batch priority classes, and
+//!   per-tenant outcome counters;
+//! - [`http`]   — the zero-dependency HTTP/1.1 server: a small accept
+//!   pool, a hostile-input-safe hand-rolled parser (classified 4xx,
+//!   never a panic), `POST /v1/sample`, `POST /v1/sample/stream`
+//!   (converged-prefix chunks as Server-Sent Events), `GET /metrics`
+//!   (Prometheus text) and `GET /healthz`, with client-disconnect
+//!   propagation into [`crate::coordinator::CancelToken`];
+//! - [`client`] — the minimal loopback client the protocol/fairness
+//!   tests, bench scenarios, and CI smoke drive the server with.
+//!
+//! See `docs/serving.md` for the endpoint reference, tenant spec
+//! grammar, SSE framing, and curl examples.
+
+pub mod client;
+pub mod http;
+pub mod tenant;
+pub mod wire;
+
+pub use http::{HttpConfig, HttpServer, ParseError, Request};
+pub use tenant::{
+    parse_tenant_spec, FairGate, FairQueue, Priority, TenantConfig, TenantRegistry, TokenBucket,
+};

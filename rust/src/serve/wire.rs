@@ -1,0 +1,491 @@
+//! JSON wire codec for the HTTP front: [`SampleRequest`] /
+//! [`SampleResponse`] / [`PrefixChunk`] ⇄ [`Json`].
+//!
+//! The codec is the *only* numeric surface the transport adds, so it must
+//! add nothing: a request serialized by [`request_to_json`] and re-parsed
+//! by [`request_from_json`] compares equal field-for-field (floats
+//! bitwise), and a served sample rendered by [`response_to_json`] decodes
+//! to bit-identical `f32`s. Both properties hold because every `f32`
+//! crossing the wire is widened to `f64` (exact), printed with Rust's
+//! shortest-round-trip float formatting (exact), and narrowed back (exact
+//! — the value *is* an `f32`); they are pinned by the round-trip and
+//! parity-oracle suites in `tests/http_protocol.rs`. Integral fields ride
+//! as JSON numbers and are exact up to 2^53 (an IEEE-double mantissa);
+//! seeds above that are rejected at encode time rather than silently
+//! rounded.
+//!
+//! Request schema (all fields except `seed` and `sampler.steps` optional,
+//! defaulting to [`SampleRequest::parataa`]'s values — see
+//! `docs/serving.md` for the full grammar and curl examples):
+//!
+//! ```json
+//! {
+//!   "cond": "uncond" | {"class": 3} | {"weights": [0.1, 0.9]},
+//!   "seed": 7,
+//!   "sampler": {"kind": "ddim" | "ddpm" | {"eta": 0.3}, "steps": 25},
+//!   "guidance": 2.0,
+//!   "method": "taa" | "fp" | "aa" | "aa+",
+//!   "k": 4, "m": 3, "window": 8, "max_rounds": 64,
+//!   "use_trajectory_cache": false,
+//!   "window_policy": "fixed" | {"adaptive": {"min_window": 3, ...}},
+//!   "strategy": "plain" | {"draft_refine": {...}} | {"parareal": {...}},
+//!   "parallelism": 1,
+//!   "deadline_ms": 500
+//! }
+//! ```
+
+use crate::coordinator::{PrefixChunk, SampleRequest, SampleResponse, SamplerSpec};
+use crate::model::Cond;
+use crate::schedule::SamplerKind;
+use crate::solver::{
+    AdaptiveWindow, DraftRefineConfig, Method, PararealConfig, SolveStrategy, WindowPolicy,
+};
+use crate::util::json::{arr_f32, obj, Json};
+
+/// Largest integer exactly representable in a JSON number (2^53).
+const MAX_EXACT_INT: u64 = 1 << 53;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<Option<usize>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| format!("`{key}` must be a non-negative integer")),
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v.as_f64().map(Some).ok_or_else(|| format!("`{key}` must be a number")),
+    }
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<Option<bool>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(format!("`{key}` must be a boolean")),
+    }
+}
+
+// --- encode ---------------------------------------------------------------
+
+fn cond_to_json(c: &Cond) -> Json {
+    match c {
+        Cond::Uncond => Json::Str("uncond".to_string()),
+        Cond::Class(i) => obj(vec![("class", num(*i as f64))]),
+        Cond::Weights(w) => obj(vec![("weights", arr_f32(w))]),
+    }
+}
+
+fn sampler_to_json(s: &SamplerSpec) -> Json {
+    let kind = match s.kind {
+        SamplerKind::Ddim => Json::Str("ddim".to_string()),
+        SamplerKind::Ddpm => Json::Str("ddpm".to_string()),
+        SamplerKind::Eta(e) => obj(vec![("eta", num(e))]),
+    };
+    obj(vec![("kind", kind), ("steps", num(s.steps as f64))])
+}
+
+fn method_label(m: Method) -> &'static str {
+    match m {
+        Method::FixedPoint => "fp",
+        Method::AndersonStd => "aa",
+        Method::AndersonUpperTri => "aa+",
+        Method::Taa => "taa",
+    }
+}
+
+fn window_policy_to_json(p: &WindowPolicy) -> Json {
+    match p {
+        WindowPolicy::Fixed => Json::Str("fixed".to_string()),
+        WindowPolicy::Adaptive(a) => obj(vec![(
+            "adaptive",
+            obj(vec![
+                ("min_window", num(a.min_window as f64)),
+                ("max_window", num(a.max_window as f64)),
+                ("step", num(a.step as f64)),
+                ("high_occupancy", num(a.high_occupancy)),
+                ("grow_velocity", num(a.grow_velocity)),
+            ]),
+        )]),
+    }
+}
+
+fn strategy_to_json(s: &SolveStrategy) -> Json {
+    match s {
+        SolveStrategy::PlainTaa => Json::Str("plain".to_string()),
+        SolveStrategy::DraftRefine(c) => obj(vec![(
+            "draft_refine",
+            obj(vec![
+                ("coarse_steps", num(c.coarse_steps as f64)),
+                ("coarse_tol", num(c.coarse_tol)),
+                ("max_draft_rounds", num(c.max_draft_rounds as f64)),
+            ]),
+        )]),
+        SolveStrategy::Parareal(c) => {
+            obj(vec![("parareal", obj(vec![("stride", num(c.stride as f64))]))])
+        }
+    }
+}
+
+/// Serialize a request to its wire JSON (the exact form
+/// [`request_from_json`] re-parses bitwise). Fails only on a seed above
+/// 2^53, which a JSON number cannot carry exactly.
+pub fn request_to_json(req: &SampleRequest) -> Result<Json, String> {
+    if req.seed > MAX_EXACT_INT {
+        return Err(format!("seed {} exceeds 2^53 (not exact in JSON)", req.seed));
+    }
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("cond", cond_to_json(&req.cond)),
+        ("seed", num(req.seed as f64)),
+        ("sampler", sampler_to_json(&req.sampler)),
+        ("guidance", num(req.guidance as f64)),
+        ("method", Json::Str(method_label(req.method).to_string())),
+        ("m", num(req.m as f64)),
+        ("use_trajectory_cache", Json::Bool(req.use_trajectory_cache)),
+        ("window_policy", window_policy_to_json(&req.window_policy)),
+        ("strategy", strategy_to_json(&req.strategy)),
+        ("parallelism", num(req.parallelism as f64)),
+    ];
+    if let Some(k) = req.k {
+        pairs.push(("k", num(k as f64)));
+    }
+    if let Some(w) = req.window {
+        pairs.push(("window", num(w as f64)));
+    }
+    if let Some(r) = req.max_rounds {
+        pairs.push(("max_rounds", num(r as f64)));
+    }
+    if let Some(ms) = req.deadline_ms {
+        if ms > MAX_EXACT_INT {
+            return Err(format!("deadline_ms {ms} exceeds 2^53 (not exact in JSON)"));
+        }
+        pairs.push(("deadline_ms", num(ms as f64)));
+    }
+    Ok(obj(pairs))
+}
+
+// --- decode ---------------------------------------------------------------
+
+fn cond_from_json(j: &Json) -> Result<Cond, String> {
+    match j {
+        Json::Str(s) if s == "uncond" => Ok(Cond::Uncond),
+        Json::Obj(_) => {
+            if let Some(c) = j.get("class") {
+                return c
+                    .as_usize()
+                    .map(Cond::Class)
+                    .ok_or_else(|| "`cond.class` must be a non-negative integer".to_string());
+            }
+            if let Some(w) = j.get("weights") {
+                let w = w
+                    .as_f32_vec()
+                    .ok_or_else(|| "`cond.weights` must be an array of numbers".to_string())?;
+                if w.is_empty() {
+                    return Err("`cond.weights` must be non-empty".to_string());
+                }
+                if w.iter().any(|x| !x.is_finite()) {
+                    return Err("`cond.weights` must be finite".to_string());
+                }
+                return Ok(Cond::Weights(w));
+            }
+            Err("`cond` object needs `class` or `weights`".to_string())
+        }
+        _ => Err("`cond` must be \"uncond\", {\"class\": n} or {\"weights\": [...]}".to_string()),
+    }
+}
+
+fn sampler_from_json(j: &Json) -> Result<SamplerSpec, String> {
+    let steps = get_usize(j, "steps")?.ok_or("`sampler.steps` is required")?;
+    if steps == 0 || steps > 10_000 {
+        return Err(format!("`sampler.steps` must be in [1, 10000], got {steps}"));
+    }
+    let kind = match j.get("kind") {
+        None | Some(Json::Null) => SamplerKind::Ddim,
+        Some(Json::Str(s)) => match s.as_str() {
+            "ddim" => SamplerKind::Ddim,
+            "ddpm" => SamplerKind::Ddpm,
+            other => return Err(format!("unknown sampler kind `{other}`")),
+        },
+        Some(k) => {
+            let eta = get_f64(k, "eta")?
+                .ok_or("`sampler.kind` must be \"ddim\", \"ddpm\" or {\"eta\": x}")?;
+            if !(0.0..=1.0).contains(&eta) {
+                return Err(format!("`sampler.kind.eta` must be in [0, 1], got {eta}"));
+            }
+            SamplerKind::Eta(eta)
+        }
+    };
+    Ok(SamplerSpec { kind, steps })
+}
+
+fn method_from_json(j: &Json) -> Result<Method, String> {
+    match j.as_str() {
+        Some("fp") => Ok(Method::FixedPoint),
+        Some("aa") => Ok(Method::AndersonStd),
+        Some("aa+") => Ok(Method::AndersonUpperTri),
+        Some("taa") => Ok(Method::Taa),
+        _ => Err("`method` must be \"fp\", \"aa\", \"aa+\" or \"taa\"".to_string()),
+    }
+}
+
+fn window_policy_from_json(j: &Json) -> Result<WindowPolicy, String> {
+    match j {
+        Json::Str(s) if s == "fixed" => Ok(WindowPolicy::Fixed),
+        Json::Obj(_) => {
+            let a = j.get("adaptive").ok_or("`window_policy` object needs `adaptive`")?;
+            let min_window =
+                get_usize(a, "min_window")?.ok_or("`adaptive.min_window` is required")?;
+            let max_window =
+                get_usize(a, "max_window")?.ok_or("`adaptive.max_window` is required")?;
+            if min_window == 0 || max_window < min_window {
+                return Err(format!(
+                    "adaptive window bounds must satisfy 1 <= min ({min_window}) <= max ({max_window})"
+                ));
+            }
+            Ok(WindowPolicy::Adaptive(AdaptiveWindow {
+                min_window,
+                max_window,
+                step: get_usize(a, "step")?.unwrap_or(1).max(1),
+                high_occupancy: get_f64(a, "high_occupancy")?.unwrap_or(0.85),
+                grow_velocity: get_f64(a, "grow_velocity")?.unwrap_or(0.25),
+            }))
+        }
+        _ => Err("`window_policy` must be \"fixed\" or {\"adaptive\": {...}}".to_string()),
+    }
+}
+
+fn strategy_from_json(j: &Json) -> Result<SolveStrategy, String> {
+    match j {
+        Json::Str(s) if s == "plain" => Ok(SolveStrategy::PlainTaa),
+        Json::Obj(_) => {
+            if let Some(c) = j.get("draft_refine") {
+                return Ok(SolveStrategy::DraftRefine(DraftRefineConfig {
+                    coarse_steps: get_usize(c, "coarse_steps")?.unwrap_or(0),
+                    coarse_tol: get_f64(c, "coarse_tol")?.unwrap_or(0.0),
+                    max_draft_rounds: get_usize(c, "max_draft_rounds")?.unwrap_or(0),
+                }));
+            }
+            if let Some(c) = j.get("parareal") {
+                return Ok(SolveStrategy::Parareal(PararealConfig {
+                    stride: get_usize(c, "stride")?.unwrap_or(0),
+                }));
+            }
+            Err("`strategy` object needs `draft_refine` or `parareal`".to_string())
+        }
+        _ => Err(
+            "`strategy` must be \"plain\", {\"draft_refine\": {...}} or {\"parareal\": {...}}"
+                .to_string(),
+        ),
+    }
+}
+
+/// Parse a wire-JSON request body into a [`SampleRequest`]. Missing
+/// optional fields take [`SampleRequest::parataa`]'s defaults; any
+/// malformed field yields a human-readable error (→ HTTP 400), never a
+/// panic.
+pub fn request_from_json(j: &Json) -> Result<SampleRequest, String> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err("request body must be a JSON object".to_string());
+    }
+    let seed_f = get_f64(j, "seed")?.ok_or("`seed` is required")?;
+    if seed_f < 0.0 || seed_f.fract() != 0.0 || seed_f > MAX_EXACT_INT as f64 {
+        return Err(format!("`seed` must be an integer in [0, 2^53], got {seed_f}"));
+    }
+    let seed = seed_f as u64;
+    let sampler =
+        sampler_from_json(j.get("sampler").ok_or("`sampler` is required")?)?;
+    let cond = match j.get("cond") {
+        None | Some(Json::Null) => Cond::Uncond,
+        Some(c) => cond_from_json(c)?,
+    };
+    let mut req = SampleRequest::parataa(cond, seed, sampler);
+    if let Some(g) = get_f64(j, "guidance")? {
+        if !g.is_finite() {
+            return Err("`guidance` must be finite".to_string());
+        }
+        req.guidance = g as f32;
+    }
+    if let Some(m) = j.get("method") {
+        req.method = method_from_json(m)?;
+    }
+    if let Some(k) = get_usize(j, "k")? {
+        req.k = Some(k);
+    }
+    if let Some(m) = get_usize(j, "m")? {
+        if m == 0 {
+            return Err("`m` must be >= 1".to_string());
+        }
+        req.m = m;
+    }
+    if let Some(w) = get_usize(j, "window")? {
+        req.window = Some(w);
+    }
+    if let Some(r) = get_usize(j, "max_rounds")? {
+        req.max_rounds = Some(r);
+    }
+    if let Some(b) = get_bool(j, "use_trajectory_cache")? {
+        req.use_trajectory_cache = b;
+    }
+    if let Some(p) = j.get("window_policy") {
+        req.window_policy = window_policy_from_json(p)?;
+    }
+    if let Some(s) = j.get("strategy") {
+        req.strategy = strategy_from_json(s)?;
+    }
+    if let Some(p) = get_usize(j, "parallelism")? {
+        if p == 0 || p > 64 {
+            return Err(format!("`parallelism` must be in [1, 64], got {p}"));
+        }
+        req.parallelism = p;
+    }
+    if let Some(ms) = get_f64(j, "deadline_ms")? {
+        if ms < 0.0 || ms.fract() != 0.0 || ms > MAX_EXACT_INT as f64 {
+            return Err(format!("`deadline_ms` must be an integer in [0, 2^53], got {ms}"));
+        }
+        req.deadline_ms = Some(ms as u64);
+    }
+    Ok(req)
+}
+
+// --- responses ------------------------------------------------------------
+
+/// Serialize a served response (the `POST /v1/sample` 200 body and the SSE
+/// `done` event payload). The `sample` floats decode bit-identically.
+pub fn response_to_json(r: &SampleResponse) -> Json {
+    obj(vec![
+        ("sample", arr_f32(&r.sample)),
+        ("rounds", num(r.rounds as f64)),
+        ("nfe", num(r.nfe as f64)),
+        ("converged", Json::Bool(r.converged)),
+        ("warm_started", Json::Bool(r.warm_started)),
+        ("degraded", Json::Bool(r.degraded)),
+        ("latency_ms", num(r.latency.as_secs_f64() * 1e3)),
+    ])
+}
+
+/// Serialize one streaming prefix chunk (the SSE `chunk` event payload).
+/// `residuals` may carry `NaN` for warm-started rows; the JSON writer maps
+/// non-finite numbers to `null`.
+pub fn chunk_to_json(c: &PrefixChunk) -> Json {
+    obj(vec![
+        ("rows_start", num(c.rows.start as f64)),
+        ("rows_end", num(c.rows.end as f64)),
+        ("round", num(c.round as f64)),
+        ("states", arr_f32(&c.states)),
+        (
+            "residuals",
+            Json::Arr(c.residuals.iter().map(|r| Json::Num(*r)).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn roundtrip(req: &SampleRequest) -> SampleRequest {
+        let text = request_to_json(req).expect("encode").to_string();
+        request_from_json(&parse(&text).expect("self-encoded JSON parses")).expect("decode")
+    }
+
+    #[test]
+    fn default_request_roundtrips() {
+        let req = SampleRequest::parataa(Cond::Class(3), 7, SamplerSpec::ddim(25));
+        assert_eq!(roundtrip(&req), req);
+    }
+
+    #[test]
+    fn fully_populated_request_roundtrips() {
+        let mut req = SampleRequest::parataa(
+            Cond::Weights(vec![0.25, 0.5, 0.25]),
+            (1 << 53) - 1,
+            SamplerSpec { kind: SamplerKind::Eta(0.37), steps: 40 },
+        );
+        req.guidance = 7.125;
+        req.method = Method::AndersonUpperTri;
+        req.k = Some(6);
+        req.m = 5;
+        req.window = Some(10);
+        req.max_rounds = Some(99);
+        req.use_trajectory_cache = true;
+        req.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(40));
+        req.strategy = SolveStrategy::DraftRefine(DraftRefineConfig {
+            coarse_steps: 8,
+            coarse_tol: 1e-3,
+            max_draft_rounds: 11,
+        });
+        req.parallelism = 4;
+        req.deadline_ms = Some(1500);
+        assert_eq!(roundtrip(&req), req);
+    }
+
+    #[test]
+    fn minimal_body_takes_parataa_defaults() {
+        let j = parse(r#"{"seed": 3, "sampler": {"steps": 16}}"#).unwrap();
+        let req = request_from_json(&j).unwrap();
+        assert_eq!(req, SampleRequest::parataa(Cond::Uncond, 3, SamplerSpec::ddim(16)));
+    }
+
+    #[test]
+    fn malformed_bodies_are_classified_errors() {
+        for (body, needle) in [
+            (r#"[1, 2]"#, "object"),
+            (r#"{"sampler": {"steps": 16}}"#, "`seed`"),
+            (r#"{"seed": 1}"#, "`sampler`"),
+            (r#"{"seed": 1, "sampler": {"steps": 0}}"#, "steps"),
+            (r#"{"seed": 1.5, "sampler": {"steps": 8}}"#, "`seed`"),
+            (r#"{"seed": 1, "sampler": {"steps": 8}, "method": "newton"}"#, "method"),
+            (r#"{"seed": 1, "sampler": {"steps": 8}, "cond": {"weights": []}}"#, "weights"),
+            (r#"{"seed": 1, "sampler": {"steps": 8}, "parallelism": 0}"#, "parallelism"),
+            (r#"{"seed": 1, "sampler": {"steps": 8}, "deadline_ms": -4}"#, "deadline_ms"),
+        ] {
+            let j = parse(body).expect("test bodies are syntactically valid JSON");
+            let err = request_from_json(&j).expect_err(body);
+            assert!(err.contains(needle), "error for {body} should mention {needle}: {err}");
+        }
+    }
+
+    #[test]
+    fn response_sample_roundtrips_bitwise() {
+        let resp = SampleResponse {
+            sample: vec![0.1, -2.5e-8, 3.25, f32::MIN_POSITIVE],
+            rounds: 9,
+            nfe: 120,
+            converged: true,
+            warm_started: false,
+            degraded: false,
+            latency: std::time::Duration::from_millis(12),
+        };
+        let j = parse(&response_to_json(&resp).to_string()).unwrap();
+        let back = j.get("sample").and_then(|s| s.as_f32_vec()).unwrap();
+        let bits: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = resp.sample.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want, "the wire must add zero numeric surface");
+        assert_eq!(j.get("rounds").and_then(|v| v.as_usize()), Some(9));
+    }
+
+    #[test]
+    fn chunk_json_carries_rows_and_nan_residuals_as_null() {
+        let c = PrefixChunk {
+            rows: 3..5,
+            states: vec![1.0; 4],
+            residuals: vec![f64::NAN, 0.25],
+            round: 2,
+        };
+        let j = parse(&chunk_to_json(&c).to_string()).unwrap();
+        assert_eq!(j.get("rows_start").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("rows_end").and_then(|v| v.as_usize()), Some(5));
+        let res = j.get("residuals").and_then(|r| r.as_arr()).unwrap();
+        assert!(matches!(res[0], Json::Null), "NaN residual rides as null");
+        assert_eq!(res[1].as_f64(), Some(0.25));
+    }
+}

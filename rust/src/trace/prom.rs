@@ -181,6 +181,12 @@ pub fn render_with_events(snapshot: &MetricsSnapshot, events: &[TraceEvent]) -> 
         snapshot.shed_total as f64,
     );
     w.scalar(
+        "parataa_cancelled_total",
+        "counter",
+        "Requests cancelled by their clients (disconnect propagation).",
+        snapshot.cancelled_total as f64,
+    );
+    w.scalar(
         "parataa_retries_total",
         "counter",
         "Shard re-dispatches performed by the device pool.",
@@ -531,6 +537,7 @@ mod tests {
         assert!(text.contains("parataa_rounds_driven_total 1"));
         assert!(text.contains("parataa_degraded_total 0"), "robustness counters render");
         assert!(text.contains("parataa_deadline_misses_total 0"));
+        assert!(text.contains("parataa_cancelled_total 0"));
         assert!(text.contains("parataa_retries_total 0"));
         assert!(text.contains("parataa_request_latency_ms{quantile=\"0.5\"}"));
         assert!(text.contains("# TYPE parataa_request_latency_ms summary"));

@@ -25,6 +25,9 @@ pub enum ErrorKind {
     DeadlineExceeded,
     /// The request was rejected by load-shedding admission control.
     Shed,
+    /// The client abandoned the request (e.g. a dropped SSE connection):
+    /// the coordinator cancelled the session at the next round boundary.
+    Cancelled,
 }
 
 impl ErrorKind {
@@ -35,6 +38,7 @@ impl ErrorKind {
             ErrorKind::Terminal => "terminal",
             ErrorKind::DeadlineExceeded => "deadline_exceeded",
             ErrorKind::Shed => "shed",
+            ErrorKind::Cancelled => "cancelled",
         }
     }
 }
@@ -71,6 +75,11 @@ impl Error {
     /// A [`ErrorKind::Shed`] error (rejected by admission control).
     pub fn shed<M: fmt::Display>(msg: M) -> Error {
         Error::with_kind(ErrorKind::Shed, msg)
+    }
+
+    /// A [`ErrorKind::Cancelled`] error (abandoned by the client).
+    pub fn cancelled<M: fmt::Display>(msg: M) -> Error {
+        Error::with_kind(ErrorKind::Cancelled, msg)
     }
 
     /// The failure classification.
@@ -201,6 +210,7 @@ mod tests {
         assert_eq!(Error::retryable("x").kind(), ErrorKind::Retryable);
         assert_eq!(Error::deadline("x").kind(), ErrorKind::DeadlineExceeded);
         assert_eq!(Error::shed("x").kind(), ErrorKind::Shed);
+        assert_eq!(Error::cancelled("x").kind(), ErrorKind::Cancelled);
 
         // Inherent context chaining preserves the kind…
         let e = Error::retryable("device 1 errored").context("shard 3");
@@ -219,6 +229,7 @@ mod tests {
         assert_eq!(ErrorKind::Terminal.label(), "terminal");
         assert_eq!(ErrorKind::DeadlineExceeded.label(), "deadline_exceeded");
         assert_eq!(ErrorKind::Shed.label(), "shed");
+        assert_eq!(ErrorKind::Cancelled.label(), "cancelled");
     }
 
     #[test]

@@ -433,3 +433,163 @@ fn faultless_wrapper_is_inert() {
     assert_eq!((ok, failed), (4, 0));
     assert!(finite);
 }
+
+// --- chaos over HTTP (ISSUE 10) -------------------------------------------
+//
+// The same fault-injected stacks, but driven through the serving front:
+// the transport must surface classified statuses (never a hung socket),
+// conserve every admitted request in the metrics, and propagate client
+// disconnects into session cancellation.
+
+/// Wrap a chaos stack in the HTTP front. Teardown order matters and is
+/// the caller's job: drop(server) → drop(coord Arc) → control.cancel() →
+/// drop(pool).
+fn http_chaos_stack(
+    devices: usize,
+    spec: &str,
+    robustness: RobustnessConfig,
+) -> (parataa::serve::HttpServer, Arc<Coordinator>, DevicePool, FaultControl) {
+    let (coord, pool, control) = chaos_stack(devices, spec, robustness);
+    let coord = Arc::new(coord);
+    let server = parataa::serve::HttpServer::start(
+        Arc::clone(&coord),
+        Arc::new(parataa::serve::TenantRegistry::open()),
+        "127.0.0.1:0",
+        parataa::serve::HttpConfig { accept_threads: 6, ..Default::default() },
+    )
+    .expect("start http front over chaos pool");
+    (server, coord, pool, control)
+}
+
+fn wire_body(seed: u64, steps: usize) -> String {
+    parataa::serve::wire::request_to_json(&req(seed, steps)).expect("encode").to_string()
+}
+
+#[test]
+fn http_front_over_a_chaotic_pool_conserves_requests_and_slots() {
+    // Device 1 errors from its 3rd shard on: the retry path re-dispatches
+    // to device 0, so most requests succeed; any failure must surface as
+    // a classified 5xx, and accounting must balance exactly.
+    let (server, coord, pool, control) =
+        http_chaos_stack(2, "1:error@2..", RobustnessConfig::default());
+    let addr = server.local_addr();
+    let idle_slots = coord.slots_available();
+    let n_req = 16usize;
+    let workers: Vec<_> = (0..n_req)
+        .map(|i| {
+            let tenant = if i % 2 == 0 { "even" } else { "odd" };
+            std::thread::spawn(move || {
+                let body = wire_body(i as u64, 16);
+                parataa::serve::client::post_json(addr, "/v1/sample", Some(tenant), &body)
+                    .expect("transport must answer even when the solve fails")
+                    .status
+            })
+        })
+        .collect();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    for w in workers {
+        match w.join().expect("client thread") {
+            200 => ok += 1,
+            429 | 500 | 503 | 504 => failed += 1,
+            other => panic!("unclassified status {other} out of a chaos run"),
+        }
+    }
+    assert_eq!(ok + failed, n_req as u64, "every request got exactly one answer");
+    let snap = coord.metrics();
+    assert_eq!(
+        snap.completed + snap.failed,
+        n_req as u64,
+        "metrics must conserve requests across the HTTP front"
+    );
+    assert_eq!(snap.completed, ok, "HTTP 200s must equal completed solves");
+    assert_eq!(snap.sessions_in_flight, 0);
+    assert_eq!(coord.slots_available(), idle_slots, "slots must return after the storm");
+    drop(server);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn sse_streams_terminate_under_fault_storms() {
+    // Hang + error storm behind the stream path: every stream must reach
+    // a terminal frame (`done` or `error`) — no socket may hang open.
+    let (server, coord, pool, control) =
+        http_chaos_stack(2, "0:slow=40@0..,1:error@3..", RobustnessConfig::default());
+    let addr = server.local_addr();
+    let streams: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let conn = parataa::serve::client::SseConn::open(
+                    addr,
+                    Some("sse"),
+                    &wire_body(20 + i, 16),
+                )
+                .expect("stream opens");
+                conn.collect()
+            })
+        })
+        .collect();
+    for (i, s) in streams.into_iter().enumerate() {
+        let events = s.join().expect("stream consumer");
+        let last = events.last().unwrap_or_else(|| panic!("stream {i} emitted nothing"));
+        assert!(
+            last.event == "done" || last.event == "error",
+            "stream {i} ended without a terminal frame: {events:?}"
+        );
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.completed + snap.failed, 4, "streams must be conserved");
+    assert_eq!(snap.sessions_in_flight, 0);
+    drop(server);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}
+
+#[test]
+fn mid_stream_client_disconnect_cancels_the_session_and_frees_slots() {
+    // A deliberately long solve (96 steps, window 4, fixed-point: the
+    // front advances a few rows per round → dozens of rounds and chunk
+    // writes), so the disconnect lands long before completion.
+    let (server, coord, pool, control) =
+        http_chaos_stack(2, "9:error@0..", RobustnessConfig::default());
+    let addr = server.local_addr();
+    let idle_slots = coord.slots_available();
+    let mut r = req(3, 96);
+    r.window = Some(4);
+    r.method = parataa::solver::Method::FixedPoint;
+    let body = parataa::serve::wire::request_to_json(&r).expect("encode").to_string();
+    let mut conn = parataa::serve::client::SseConn::open(addr, Some("dropper"), &body)
+        .expect("stream opens");
+    let first = conn.next_event().expect("at least one chunk before the drop");
+    assert_eq!(first.event, "chunk");
+    // Vanish mid-stream: dropping the connection closes the socket with
+    // unread data queued, so the server's next SSE write fails and must
+    // cancel the session.
+    drop(conn);
+    let t0 = Instant::now();
+    loop {
+        let snap = coord.metrics();
+        if snap.cancelled_total == 1 && snap.sessions_in_flight == 0 {
+            assert_eq!(snap.failed, 1, "a cancelled session is a failed request");
+            assert_eq!(snap.completed, 0);
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "disconnect was never propagated: {snap:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(coord.slots_available(), idle_slots, "cancelled sessions release slots");
+    // The freed capacity is immediately serviceable.
+    let ok = parataa::serve::client::post_json(addr, "/v1/sample", None, &wire_body(4, 12))
+        .expect("service alive after disconnect");
+    assert_eq!(ok.status, 200);
+    drop(server);
+    drop(coord);
+    control.cancel();
+    drop(pool);
+}

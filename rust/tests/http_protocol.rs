@@ -1,0 +1,373 @@
+//! HTTP protocol property tests (ISSUE 10): the serving front driven with
+//! hostile, malformed, and well-formed wire input.
+//!
+//! Invariants pinned here:
+//!
+//! - **classified rejection** — every malformed request maps to a
+//!   documented 4xx/5xx (or a clean connection drop), never a panic and
+//!   never a leaked coordinator slot (`sessions_in_flight` returns to 0
+//!   and the service still answers afterwards);
+//! - **wire transparency** — a `SampleRequest` survives
+//!   `request_to_json` → text → `request_from_json` field-for-field
+//!   (floats bitwise), across ≥ 64 randomized requests;
+//! - **parity oracle** — a sample served over HTTP is bit-identical to
+//!   the same request submitted directly to the same coordinator: the
+//!   transport adds zero numeric surface;
+//! - **SSE framing** — the stream is `chunk`* then exactly one
+//!   `done`/`error`; chunks tile the trajectory back to row 0 and at
+//!   least one arrives strictly before completion.
+
+use parataa::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SamplerSpec};
+use parataa::model::gmm::GmmEps;
+use parataa::model::Cond;
+use parataa::schedule::{BetaSchedule, NoiseSchedule, SamplerKind};
+use parataa::serve::client::{self, SseConn};
+use parataa::serve::wire;
+use parataa::serve::{HttpConfig, HttpServer, TenantRegistry};
+use parataa::solver::{
+    AdaptiveWindow, DraftRefineConfig, Method, PararealConfig, SolveStrategy, WindowPolicy,
+};
+use parataa::util::json::parse;
+use parataa::util::proplite::{f32_in, forall, size_in};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn gmm() -> Arc<GmmEps> {
+    let ns = NoiseSchedule::new(BetaSchedule::Linear, 1000);
+    Arc::new(GmmEps::sd_analog(ns.alpha_bars.clone()))
+}
+
+/// Server + coordinator with caps small enough to exercise 413/431/408
+/// cheaply. Field order is the teardown order: server joins its accept
+/// pool first, then the coordinator (its last `Arc` ref) drains.
+struct Stack {
+    server: HttpServer,
+    coord: Arc<Coordinator>,
+}
+
+fn stack() -> Stack {
+    let coord = Arc::new(Coordinator::start(
+        gmm(),
+        CoordinatorConfig { workers: 2, drivers: 2, ..Default::default() },
+    ));
+    let cfg = HttpConfig {
+        max_header_bytes: 2 * 1024,
+        max_body_bytes: 16 * 1024,
+        read_timeout: Duration::from_millis(150),
+        ..Default::default()
+    };
+    let server = HttpServer::start(
+        Arc::clone(&coord),
+        Arc::new(TenantRegistry::open()),
+        "127.0.0.1:0",
+        cfg,
+    )
+    .expect("start http server");
+    Stack { server, coord }
+}
+
+fn body(seed: u64, steps: usize) -> String {
+    format!(r#"{{"seed": {seed}, "sampler": {{"steps": {steps}}}, "cond": {{"class": 1}}}}"#)
+}
+
+/// Send raw bytes, half-close, read whatever comes back.
+fn send_raw(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = s.write_all(raw);
+    let _ = s.shutdown(std::net::Shutdown::Write);
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    String::from_utf8_lossy(&out).to_string()
+}
+
+fn status_of(response: &str) -> Option<u16> {
+    response.strip_prefix("HTTP/1.1 ")?.split(' ').next()?.parse().ok()
+}
+
+#[test]
+fn malformed_requests_are_classified_and_leak_nothing() {
+    let st = stack();
+    let addr = st.server.local_addr();
+    // Statuses a hostile byte stream may legitimately earn. Anything else
+    // (a 200, a 5xx other than 505/501, no parseable status line on a
+    // non-empty reply) fails the property.
+    const CLASSIFIED: &[u16] = &[400, 408, 413, 431, 501, 505, 404, 405];
+    forall("malformed_http_is_classified", 64, |rng, case| {
+        let raw: Vec<u8> = match rng.below(8) {
+            // Pure fuzz: random bytes, random length (kept under the
+            // header cap so the case can't stall on a huge send).
+            0 => (0..size_in(rng, 1, 512)).map(|_| rng.next_u64() as u8).collect(),
+            // Truncated request line / headers (mid-request EOF).
+            1 => b"POST /v1/sample HTTP/1.1\r\nContent-Le".to_vec(),
+            // Bad version.
+            2 => b"GET /healthz HTTP/9.9\r\n\r\n".to_vec(),
+            // Header without a colon.
+            3 => b"GET /healthz HTTP/1.1\r\nBadHeader\r\n\r\n".to_vec(),
+            // Unparseable Content-Length.
+            4 => b"POST /v1/sample HTTP/1.1\r\nContent-Length: 12abc\r\n\r\n".to_vec(),
+            // Chunked transfer encoding (501 by design).
+            5 => b"POST /v1/sample HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+            // Declared body over the cap (413, body never read).
+            6 => b"POST /v1/sample HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n".to_vec(),
+            // Header block over the cap (431).
+            _ => {
+                let mut r = b"GET /healthz HTTP/1.1\r\n".to_vec();
+                for i in 0..200 {
+                    r.extend_from_slice(format!("X-Pad-{i}: {}\r\n", "y".repeat(64)).as_bytes());
+                }
+                r.extend_from_slice(b"\r\n");
+                r
+            }
+        };
+        let reply = send_raw(addr, &raw);
+        if reply.is_empty() {
+            // A connection drop with no reply is acceptable only for pure
+            // fuzz input (it may have read as a clean close).
+            return Ok(());
+        }
+        let status = status_of(&reply)
+            .ok_or_else(|| format!("case {case}: unparseable reply {reply:?}"))?;
+        if !CLASSIFIED.contains(&status) {
+            return Err(format!("case {case}: unclassified status {status} for {raw:?}"));
+        }
+        Ok(())
+    });
+    // Nothing leaked: the service still answers, and no session slot is
+    // held by any of the rejected requests.
+    let ok = client::post_json(addr, "/v1/sample", None, &body(1, 8)).expect("service alive");
+    assert_eq!(ok.status, 200, "service must survive the malformed storm: {}", ok.body);
+    let m = st.coord.metrics();
+    assert_eq!(m.sessions_in_flight, 0, "a malformed request leaked a session slot");
+    assert_eq!(m.failed, 0, "malformed requests must be rejected before admission");
+}
+
+#[test]
+fn well_formed_requests_roundtrip_bitwise() {
+    forall("request_json_roundtrip", 64, |rng, case| {
+        let steps = size_in(rng, 2, 60);
+        let cond = match rng.below(3) {
+            0 => Cond::Uncond,
+            1 => Cond::Class(rng.below(8) as usize),
+            _ => Cond::Weights((0..size_in(rng, 1, 6)).map(|_| rng.next_f32()).collect()),
+        };
+        let kind = match rng.below(3) {
+            0 => SamplerKind::Ddim,
+            1 => SamplerKind::Ddpm,
+            _ => SamplerKind::Eta(rng.next_f64()),
+        };
+        let mut req =
+            SampleRequest::parataa(cond, rng.next_u64() >> 12, SamplerSpec { kind, steps });
+        req.guidance = f32_in(rng, 0.0, 12.0);
+        req.method = [Method::FixedPoint, Method::AndersonStd, Method::AndersonUpperTri, Method::Taa]
+            [rng.below(4) as usize];
+        if rng.below(2) == 0 {
+            req.k = Some(size_in(rng, 1, 6));
+        }
+        req.m = size_in(rng, 1, 6);
+        if rng.below(2) == 0 {
+            req.window = Some(size_in(rng, 1, steps));
+        }
+        if rng.below(2) == 0 {
+            req.max_rounds = Some(size_in(rng, 1, 200));
+        }
+        req.use_trajectory_cache = rng.below(2) == 0;
+        if rng.below(2) == 0 {
+            req.window_policy = WindowPolicy::Adaptive(AdaptiveWindow::for_steps(steps));
+        }
+        req.strategy = match rng.below(3) {
+            0 => SolveStrategy::PlainTaa,
+            1 => SolveStrategy::DraftRefine(DraftRefineConfig {
+                coarse_steps: size_in(rng, 1, steps),
+                coarse_tol: rng.next_f64(),
+                max_draft_rounds: size_in(rng, 1, 20),
+            }),
+            _ => SolveStrategy::Parareal(PararealConfig { stride: size_in(rng, 1, 8) }),
+        };
+        req.parallelism = size_in(rng, 1, 8);
+        if rng.below(2) == 0 {
+            req.deadline_ms = Some(rng.next_u64() >> 14);
+        }
+
+        let text = wire::request_to_json(&req)
+            .map_err(|e| format!("case {case}: encode: {e}"))?
+            .to_string();
+        let json =
+            parse(&text).map_err(|e| format!("case {case}: self-encoded JSON rejected: {e}"))?;
+        let back = wire::request_from_json(&json)
+            .map_err(|e| format!("case {case}: decode: {e} (wire {text})"))?;
+        if back != req {
+            return Err(format!("case {case}: roundtrip drift:\n  {req:?}\n  {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn http_sample_is_bitwise_identical_to_direct_submit() {
+    let st = stack();
+    let addr = st.server.local_addr();
+    for (i, method) in
+        [Method::Taa, Method::FixedPoint, Method::AndersonUpperTri].iter().enumerate()
+    {
+        let mut req = SampleRequest::parataa(
+            Cond::Class(1 + i),
+            90 + i as u64,
+            SamplerSpec::ddim(12),
+        );
+        req.guidance = 2.0;
+        req.method = *method;
+        let direct = st.coord.submit(req.clone()).wait().expect("direct solve");
+        let wire_body = wire::request_to_json(&req).unwrap().to_string();
+        let resp = client::post_json(addr, "/v1/sample", Some("oracle"), &wire_body)
+            .expect("http solve");
+        assert_eq!(resp.status, 200, "http solve failed: {}", resp.body);
+        let json = resp.json().expect("response json");
+        let served: Vec<u32> = json
+            .get("sample")
+            .and_then(|s| s.as_f32_vec())
+            .expect("sample array")
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let want: Vec<u32> = direct.sample.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(served, want, "HTTP transport changed the sample bits ({method:?})");
+        assert_eq!(json.get("rounds").and_then(|v| v.as_usize()), Some(direct.rounds));
+        assert_eq!(json.get("nfe").and_then(|v| v.as_usize()), Some(direct.nfe));
+    }
+}
+
+#[test]
+fn sse_stream_tiles_the_trajectory_and_finishes_with_done() {
+    let st = stack();
+    let steps = 16;
+    let conn = SseConn::open(st.server.local_addr(), Some("sse"), &body(7, steps))
+        .expect("open sse stream");
+    let events = conn.collect();
+    assert!(!events.is_empty(), "stream produced no events");
+    let done_at = events.iter().position(|e| e.event == "done").expect("no done event");
+    assert_eq!(done_at, events.len() - 1, "done must be the final frame");
+    let chunks = &events[..done_at];
+    assert!(!chunks.is_empty(), "no chunk arrived before completion");
+    assert!(chunks.iter().all(|e| e.event == "chunk"), "unexpected frame kind: {events:?}");
+    let done = parse(&events[done_at].data).expect("done payload json");
+    assert_eq!(done.get("converged").map(|v| matches!(v, parataa::util::json::Json::Bool(true))), Some(true));
+    // Chunks tile the trajectory from the noise row back to the sample row.
+    let mut expect_end = steps;
+    for e in chunks {
+        let j = parse(&e.data).expect("chunk json");
+        let start = j.get("rows_start").and_then(|v| v.as_usize()).unwrap();
+        let end = j.get("rows_end").and_then(|v| v.as_usize()).unwrap();
+        assert_eq!(end, expect_end, "chunk gap/overlap");
+        expect_end = start;
+    }
+    assert_eq!(expect_end, 0, "stream never reached the sample row");
+    // And the streamed run is conserved in the metrics.
+    let m = st.coord.metrics();
+    assert_eq!((m.completed, m.sessions_in_flight), (1, 0));
+}
+
+#[test]
+fn pipelined_requests_are_each_answered() {
+    let st = stack();
+    let mut s = TcpStream::connect(st.server.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Two requests in one segment; the second asks to close so the reply
+    // stream has a definite end.
+    s.write_all(
+        b"GET /healthz HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n",
+    )
+    .unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    assert_eq!(
+        out.matches("HTTP/1.1 200 OK").count(),
+        2,
+        "both pipelined requests must be answered: {out:?}"
+    );
+}
+
+#[test]
+fn slow_loris_is_timed_out_with_408() {
+    let st = stack();
+    let mut s = TcpStream::connect(st.server.local_addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // Send half a request line and stall (no half-close: the socket stays
+    // open, only idle). The 150 ms read timeout must classify this.
+    s.write_all(b"POST /v1/sample HT").unwrap();
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    let reply = String::from_utf8_lossy(&out);
+    assert_eq!(status_of(&reply), Some(408), "slow-loris reply: {reply:?}");
+}
+
+#[test]
+fn routes_unknown_and_wrong_method_are_404_405() {
+    let st = stack();
+    let addr = st.server.local_addr();
+    assert_eq!(client::get(addr, "/nope").unwrap().status, 404);
+    let r = client::get(addr, "/v1/sample").unwrap();
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("allow"), Some("POST"));
+    assert_eq!(client::request(addr, "POST", "/metrics", &[], "").unwrap().status, 405);
+}
+
+#[test]
+fn bad_json_bodies_are_400_with_a_reason() {
+    let st = stack();
+    let addr = st.server.local_addr();
+    for bad in [
+        "not json at all",
+        r#"{"seed": 1}"#,
+        r#"{"seed": -3, "sampler": {"steps": 8}}"#,
+        r#"{"seed": 1, "sampler": {"steps": 8}, "method": "newton"}"#,
+    ] {
+        let r = client::post_json(addr, "/v1/sample", None, bad).unwrap();
+        assert_eq!(r.status, 400, "body {bad:?} got {}: {}", r.status, r.body);
+        assert!(r.json().unwrap().get("error").is_some(), "400 body must carry `error`");
+    }
+    assert_eq!(st.coord.metrics().sessions_in_flight, 0);
+}
+
+#[test]
+fn deadline_header_wires_into_the_deadline_path_as_504() {
+    let st = stack();
+    let r = client::request(
+        st.server.local_addr(),
+        "POST",
+        "/v1/sample",
+        &[("X-Parataa-Deadline-Ms", "0")],
+        &body(3, 8),
+    )
+    .unwrap();
+    assert_eq!(r.status, 504, "an already-expired deadline must be 504: {}", r.body);
+    assert_eq!(
+        r.json().unwrap().get("kind").and_then(|k| k.as_str().map(str::to_string)),
+        Some("deadline_exceeded".to_string())
+    );
+}
+
+#[test]
+fn metrics_endpoint_serves_valid_prometheus_text() {
+    let st = stack();
+    let addr = st.server.local_addr();
+    let ok = client::post_json(addr, "/v1/sample", Some("acme"), &body(2, 8)).unwrap();
+    assert_eq!(ok.status, 200);
+    let m = client::get(addr, "/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    let samples = parataa::trace::prom::validate(&m.body).expect("exposition must validate");
+    assert!(samples > 10, "suspiciously few samples: {samples}");
+    assert!(
+        m.body.contains("parataa_tenant_requests_total{tenant=\"acme\",outcome=\"completed\"} 1"),
+        "per-tenant breakdown missing:\n{}",
+        m.body
+    );
+    let h = client::get(addr, "/healthz").unwrap();
+    assert_eq!(h.status, 200);
+    assert_eq!(
+        h.json().unwrap().get("status").and_then(|s| s.as_str().map(str::to_string)),
+        Some("ok".to_string())
+    );
+}
